@@ -1,0 +1,6 @@
+# Make `python/` importable when pytest runs from the repo root
+# (the canonical invocation is `pytest python/tests/ -q`).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

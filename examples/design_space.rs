@@ -1,0 +1,53 @@
+//! Design-space exploration demo (Fig. 5): sweep array shapes under the
+//! iso-power constraint and print the effective-TOps/s-per-Watt map for
+//! a workload mix.
+//!
+//! ```bash
+//! cargo run --release --example design_space [cnn|bert|mixed]
+//! ```
+
+use sosa::analytic::dse_cell;
+use sosa::power::TDP_W;
+use sosa::workloads::zoo;
+
+fn main() {
+    let mix = std::env::args().nth(1).unwrap_or_else(|| "mixed".into());
+    let models = match mix.as_str() {
+        "cnn" => zoo::fig5_cnns(),
+        "bert" => zoo::fig5_berts(),
+        "mixed" => {
+            let mut v = zoo::fig5_cnns();
+            v.extend(zoo::fig5_berts());
+            v
+        }
+        other => {
+            eprintln!("unknown mix {other} (use cnn|bert|mixed)");
+            std::process::exit(1);
+        }
+    };
+    println!("workload mix: {mix} ({} models); iso-power at {TDP_W} W", models.len());
+
+    let dims = [8usize, 16, 32, 64, 128, 256];
+    print!("{:>8}", "r\\c");
+    for &c in &dims {
+        print!("{c:>8}");
+    }
+    println!("   (effective TOps/s per Watt)");
+    let mut best = (0usize, 0usize, f64::MIN);
+    for &r in &dims {
+        print!("{r:>8}");
+        for &c in &dims {
+            let cell = dse_cell(r, c, &models, TDP_W);
+            print!("{:>8.3}", cell.eff_tops_per_watt);
+            if cell.eff_tops_per_watt > best.2 {
+                best = (r, c, cell.eff_tops_per_watt);
+            }
+        }
+        println!();
+    }
+    println!(
+        "\noptimum on this grid: {}x{} at {:.3} TOps/s/W \
+         (paper Fig. 5c: optima near 20x32; 32x32 chosen for alignment)",
+        best.0, best.1, best.2
+    );
+}

@@ -1,0 +1,110 @@
+//! End-to-end driver: the full three-layer stack on a real workload.
+//!
+//! 1. Loads the AOT Pallas/JAX artifacts (`make artifacts`) through the
+//!    PJRT runtime (L1/L2 — Python never runs here).
+//! 2. Builds an MLP workload, tiles it with the paper's r×r scheme and
+//!    schedules it with the §4.2 scheduler (L3).
+//! 3. Serves a batch of inference requests by *executing every
+//!    scheduled tile op on PJRT* (psum chains + post-processor merges
+//!    exactly as scheduled) and checks the outputs bit-for-bit-ish
+//!    against the monolithic `mlp_ref` artifact.
+//! 4. Reports functional correctness, PJRT wall-clock latency and
+//!    throughput, and the simulated accelerator metrics.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_inference
+//! ```
+
+use std::time::Instant;
+
+use sosa::arch::{ArchConfig, ArrayDims};
+use sosa::e2e::{execute_tiled, LayerParams};
+use sosa::power::TDP_W;
+use sosa::runtime::{Mat, PjrtRuntime};
+use sosa::scheduler::schedule;
+use sosa::testutil::XorShift;
+use sosa::tiling::{tile_model, Strategy};
+use sosa::workloads::ModelGraph;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string());
+    let requests: usize = std::env::args()
+        .nth(2)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(16);
+
+    let rt = PjrtRuntime::open(&dir)?;
+    println!("PJRT platform: {} ({} artifacts)", rt.platform(), rt.manifest().len());
+
+    // The e2e MLP matches aot.py's MLP_DIMS: 64×128 → 64 → 32.
+    let (m, d_in, d_h, d_out) = (64usize, 128usize, 64usize, 32usize);
+    let (r, c) = (32usize, 32usize);
+    let pods = 16usize;
+
+    let mut rng = XorShift::new(0x50_5A);
+    let w1 = Mat::from_fn(d_in, d_h, |_, _| rng.f32_pm1() * 0.2);
+    let b1: Vec<f32> = (0..d_h).map(|_| rng.f32_pm1() * 0.1).collect();
+    let w2 = Mat::from_fn(d_h, d_out, |_, _| rng.f32_pm1() * 0.2);
+    let b2: Vec<f32> = (0..d_out).map(|_| rng.f32_pm1() * 0.1).collect();
+    let params = vec![
+        LayerParams { weights: w1.clone(), bias: b1.clone(), act: "relu" },
+        LayerParams { weights: w2.clone(), bias: b2.clone(), act: "relu" },
+    ];
+
+    // L3: tile + schedule once (offline compiler).
+    let mut g = ModelGraph::new("e2e-mlp");
+    let l1 = g.add("fc1", m, d_in, d_h, vec![]);
+    g.add("fc2", m, d_h, d_out, vec![l1]);
+    let prog = tile_model(&g, r, c, Strategy::RxR, pods);
+    let cfg = ArchConfig::with_array(ArrayDims::new(r, c), pods);
+    let sched = schedule(&cfg, &prog);
+    println!(
+        "compiled: {} tile ops, {} pp ops, {} slices ({} cycles/slice)",
+        prog.tile_ops.len(),
+        prog.pp_ops.len(),
+        sched.stats.slices,
+        sched.stats.cycles_per_slice
+    );
+
+    // Serve a batch of requests through the tiled pipeline.
+    let b1m = Mat { rows: 1, cols: d_h, data: b1 };
+    let b2m = Mat { rows: 1, cols: d_out, data: b2 };
+    let mut max_diff = 0.0f32;
+    let mut tile_ops_total = 0u64;
+    let t0 = Instant::now();
+    for req in 0..requests {
+        let x = Mat::from_fn(m, d_in, |_, _| rng.f32_pm1());
+        let rep = execute_tiled(&rt, &prog, &sched, &x, &params, r, c)?;
+        assert_eq!(rep.order_violations, 0, "schedule order violated");
+        tile_ops_total += rep.tile_ops_executed;
+        // Ground truth: the monolithic jax-lowered artifact.
+        let want = rt.exec_f32("mlp_ref", &[&x, &w1, &b1m, &w2, &b2m])?;
+        let diff = rep.output.max_abs_diff(&want);
+        max_diff = max_diff.max(diff);
+        if req == 0 {
+            println!("request 0: {} tile ops executed, max |Δ| vs mlp_ref = {diff:.2e}",
+                     rep.tile_ops_executed);
+        }
+    }
+    let wall = t0.elapsed();
+
+    println!("\n=== functional check ===");
+    println!("requests            : {requests}");
+    println!("max |Δ| vs mlp_ref  : {max_diff:.3e}");
+    assert!(max_diff < 1e-3, "numerics mismatch");
+    println!("VERDICT             : PASS (tiled == monolithic)");
+
+    println!("\n=== host (PJRT CPU) serving metrics ===");
+    println!("wall time           : {:.1} ms", wall.as_secs_f64() * 1e3);
+    println!("latency/request     : {:.2} ms", wall.as_secs_f64() * 1e3 / requests as f64);
+    println!("tile ops executed   : {tile_ops_total}");
+    println!("tile ops/sec        : {:.0}", tile_ops_total as f64 / wall.as_secs_f64());
+
+    println!("\n=== simulated accelerator metrics ({} pods of {}) ===", pods, cfg.array);
+    println!("cycles/inference    : {}", sched.stats.total_cycles);
+    println!("latency @1 GHz      : {:.2} µs", sched.stats.exec_seconds(&cfg) * 1e6);
+    println!("utilization         : {:.1} %", 100.0 * sched.stats.utilization(&cfg));
+    println!("effective @{TDP_W} W : {:.2} TOps/s",
+             sched.stats.effective_ops_at_tdp(&cfg, TDP_W) / 1e12);
+    Ok(())
+}

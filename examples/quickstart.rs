@@ -1,0 +1,43 @@
+//! Quickstart: simulate one DNN benchmark on the baseline SOSA
+//! accelerator (256 pods of 32×32, Butterfly-2) and print the paper's
+//! headline metrics.
+//!
+//! ```bash
+//! cargo run --release --example quickstart [model]
+//! ```
+
+use sosa::arch::ArchConfig;
+use sosa::power::{peak_power, TDP_W};
+use sosa::sim::{simulate, SimOptions};
+use sosa::workloads::zoo;
+
+fn main() {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "resnet50".to_string());
+    let model = zoo::by_name(&name).unwrap_or_else(|| {
+        eprintln!("unknown model {name}; available:");
+        for m in zoo::benchmarks() {
+            eprintln!("  {}", m.name);
+        }
+        std::process::exit(1);
+    });
+
+    let cfg = ArchConfig::baseline();
+    cfg.validate().expect("baseline config");
+    println!("SOSA baseline: {} pods of {}, {}, {} KiB banks",
+             cfg.num_pods, cfg.array, cfg.interconnect, cfg.bank_kb);
+    println!("peak power {:.1} W, raw peak {:.1} TOps/s",
+             peak_power(&cfg).total(), cfg.peak_ops() / 1e12);
+
+    let stats = simulate(&cfg, &model, &SimOptions::default());
+    println!("\n{} ({:.2} GMACs, {} GEMM layers):", model.name,
+             model.total_macs() as f64 / 1e9, model.ops.len());
+    println!("  time slices        : {}", stats.slices);
+    println!("  total cycles       : {}", stats.total_cycles);
+    println!("  latency            : {:.3} ms", stats.exec_seconds(&cfg) * 1e3);
+    println!("  utilization        : {:.1} %", 100.0 * stats.utilization(&cfg));
+    println!("  busy pods          : {:.1} %", 100.0 * stats.busy_pods_frac(&cfg));
+    println!("  achieved throughput: {:.1} TOps/s", stats.achieved_ops(&cfg) / 1e12);
+    println!("  effective @{TDP_W}W  : {:.1} TOps/s",
+             stats.effective_ops_at_tdp(&cfg, TDP_W) / 1e12);
+    println!("  DRAM traffic       : {:.2} MB", stats.dram_bytes as f64 / 1e6);
+}

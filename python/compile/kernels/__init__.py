@@ -1,0 +1,20 @@
+"""Layer-1 Pallas kernels for the SOSA reproduction.
+
+Everything here is build-time only: kernels are authored in Pallas
+(``interpret=True`` so they lower to plain HLO a CPU PJRT client can run),
+verified against the pure-jnp oracles in :mod:`ref`, and AOT-lowered by
+``python/compile/aot.py`` into ``artifacts/*.hlo.txt`` for the Rust runtime.
+"""
+
+from .systolic_gemm import (  # noqa: F401
+    systolic_gemm,
+    systolic_gemm_psum,
+    systolic_gemm_padded,
+    pad_to_multiple,
+)
+from .postproc import (  # noqa: F401
+    bias_act,
+    psum_add,
+    requantize,
+)
+from . import ref  # noqa: F401

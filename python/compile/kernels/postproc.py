@@ -1,0 +1,96 @@
+"""Post-processor SIMD ops as Pallas kernels (paper §4, Fig. 7/8).
+
+SOSA pairs the systolic pods with SIMD post-processors that (a) aggregate
+partial-sum tiles that were *not* chained through a pod's psum fan-in and
+(b) apply element-wise epilogues (bias + activation, requantization).
+These kernels are the AOT artifacts the Rust post-processor model executes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bias_act_kernel(y_ref, b_ref, o_ref, *, act):
+    z = y_ref[...] + b_ref[...].astype(y_ref.dtype)
+    if act == "relu":
+        o_ref[...] = jnp.maximum(z, 0)
+    elif act == "gelu":
+        t = 0.7978845608028654 * (z + 0.044715 * z * z * z)
+        o_ref[...] = 0.5 * z * (1.0 + jnp.tanh(t))
+    elif act == "identity":
+        o_ref[...] = z
+    else:  # pragma: no cover - guarded by bias_act
+        raise ValueError(act)
+
+
+def bias_act(y, b, *, act="relu", interpret=True):
+    """Row-broadcast bias add + activation on a psum tile.
+
+    Args:
+      y: ``(m, n)`` partial-sum tile (float).
+      b: ``(n,)`` bias.
+      act: ``"relu" | "gelu" | "identity"``.
+    """
+    if act not in ("relu", "gelu", "identity"):
+        raise ValueError(f"unknown activation {act!r}")
+    m, n = y.shape
+    if b.shape != (n,):
+        raise ValueError(f"bias shape {b.shape} != ({n},)")
+    return pl.pallas_call(
+        functools.partial(_bias_act_kernel, act=act),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((m, n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((m, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), y.dtype),
+        interpret=interpret,
+    )(y, b)
+
+
+def _psum_add_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+def psum_add(a, b, *, interpret=True):
+    """Aggregate two partial-sum tiles (the post-processor pair of
+    Fig. 8: ``y_ik = sum_j y_ijk``)."""
+    if a.shape != b.shape or a.dtype != b.dtype:
+        raise ValueError(f"psum tiles disagree: {a.shape}/{a.dtype} vs "
+                         f"{b.shape}/{b.dtype}")
+    m, n = a.shape
+    return pl.pallas_call(
+        _psum_add_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((m, n), lambda i: (0, 0)),
+            pl.BlockSpec((m, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=interpret,
+    )(a, b)
+
+
+def _requantize_kernel(acc_ref, o_ref, *, scale, zero_point):
+    q = jnp.round(acc_ref[...].astype(jnp.float32) * scale) + zero_point
+    o_ref[...] = jnp.clip(q, -128, 127).astype(jnp.int8)
+
+
+def requantize(acc, *, scale, zero_point=0, interpret=True):
+    """int32 accumulator tile -> int8 activation tile (§5 encodes
+    activations as 8-bit ints; accumulators are wider)."""
+    m, n = acc.shape
+    return pl.pallas_call(
+        functools.partial(_requantize_kernel, scale=float(scale),
+                          zero_point=int(zero_point)),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((m, n), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((m, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int8),
+        interpret=interpret,
+    )(acc)

@@ -1,0 +1,99 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These implement the same math as ``systolic_gemm.py`` / ``postproc.py``
+without Pallas — plain ``jnp`` only — and are the single source of truth
+for kernel numerics in the pytest/hypothesis suites.
+
+The tile-op semantics mirror the paper (§3.3, Fig. 8): a pod computes
+``x_ij @ w_jk + y_imk -> y_ijk`` where ``x_ij`` is an ``r×r`` activation
+tile, ``w_jk`` an ``r×c`` weight tile and ``y`` partial-sum tiles.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def gemm_ref(x, w, out_dtype=None):
+    """Reference GEMM, ``x @ w``; int8 inputs accumulate in int32 (§5)."""
+    if out_dtype is None:
+        out_dtype = jnp.int32 if x.dtype == jnp.int8 else x.dtype
+    return jnp.dot(
+        x.astype(_acc_dtype(x.dtype)),
+        w.astype(_acc_dtype(w.dtype)),
+        preferred_element_type=out_dtype,
+    ).astype(out_dtype)
+
+
+def gemm_psum_ref(x, w, psum, out_dtype=None):
+    """Reference tile op with input partial sum: ``x @ w + psum``."""
+    y = gemm_ref(x, w, out_dtype=out_dtype)
+    return y + psum.astype(y.dtype)
+
+
+def _acc_dtype(dtype):
+    """Accumulation dtype: int8 MACs accumulate in int32, floats as-is."""
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.int32
+    return dtype
+
+
+def tiled_gemm_ref(x, w, r, c):
+    """Reference for the paper's r×r / r×c tiling: tile the operands,
+    perform the tile ops, aggregate the partial sums along the shared
+    dimension and stitch the output back together.  Must equal
+    ``gemm_ref(x, w)`` exactly for float32/int8 inputs.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    assert m % r == 0 and k % r == 0 and n % c == 0, "pad first"
+    out_dtype = jnp.int32 if x.dtype == jnp.int8 else x.dtype
+    out = np.zeros((m, n), dtype=out_dtype)
+    for i in range(m // r):
+        for j in range(n // c):
+            acc = jnp.zeros((r, c), dtype=out_dtype)
+            for kk in range(k // r):
+                xt = x[i * r : (i + 1) * r, kk * r : (kk + 1) * r]
+                wt = w[kk * r : (kk + 1) * r, j * c : (j + 1) * c]
+                acc = gemm_psum_ref(xt, wt, acc, out_dtype=out_dtype)
+            out[i * r : (i + 1) * r, j * c : (j + 1) * c] = np.asarray(acc)
+    return jnp.asarray(out)
+
+
+def bias_act_ref(y, b, act="relu"):
+    """Reference post-processor: row-broadcast bias add + activation."""
+    z = y + b[None, :].astype(y.dtype)
+    if act == "relu":
+        return jnp.maximum(z, 0)
+    if act == "gelu":
+        # tanh-approximation GELU, matching the Pallas kernel.
+        t = 0.7978845608028654 * (z + 0.044715 * z * z * z)
+        return 0.5 * z * (1.0 + jnp.tanh(t))
+    if act == "identity":
+        return z
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def psum_add_ref(a, b):
+    """Reference partial-sum aggregation (post-processor pair, Fig. 8)."""
+    return a + b
+
+
+def requantize_ref(acc, scale, zero_point=0):
+    """Reference int32 accumulator -> int8 activation requantization."""
+    q = jnp.round(acc.astype(jnp.float32) * scale) + zero_point
+    return jnp.clip(q, -128, 127).astype(jnp.int8)
+
+
+def softmax_ref(x, axis=-1):
+    """Numerically stable softmax (post-processor SIMD op)."""
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    """LayerNorm over the last dim (post-processor SIMD op)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta

@@ -1,0 +1,177 @@
+"""Weight-stationary tiled GEMM as a Pallas kernel.
+
+This is the SOSA pod's compute hot-spot (paper §3.1, Fig. 3): an ``r×c``
+weight-stationary systolic array consuming ``r×r`` activation tiles (the
+paper's §3.3 tiling) and producing/accepting ``r×c`` partial-sum tiles.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper targets a
+TSMC-28nm ASIC, not a TPU, so the *insight* is mapped rather than the RTL:
+
+* the stationary ``r×c`` weight block = a Pallas ``BlockSpec`` whose index
+  map ignores the innermost grid dimension, so the same W tile stays
+  resident in VMEM while activation tiles stream past it — exactly the
+  weight-stationary reuse pattern, with VMEM playing the role of the PE
+  weight registers;
+* the HBM↔SRAM-bank schedule the paper implements with the Butterfly
+  interconnect is expressed here by the BlockSpec index maps (the grid
+  order (j, k, i) makes W the slowest-moving operand);
+* int8 MACs with wider accumulators (§5) = ``preferred_element_type=int32``
+  (the MXU-analog path; the paper's 16-bit psums are an energy knob modeled
+  in the Rust power model, not a numerics knob).
+
+``interpret=True`` is mandatory here: real TPU lowering emits a Mosaic
+custom-call that the CPU PJRT plugin cannot execute.  Structure (block
+shapes, VMEM footprint, revisit order) is what we optimize; interpret-mode
+wallclock is meaningless.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _acc_dtype(dtype):
+    return jnp.int32 if jnp.issubdtype(dtype, jnp.integer) else dtype
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref, *, k_blocks):
+    """Grid point (j, k, i): o[i,j] (+)= x[i,k] @ w[k,j].
+
+    The output block is revisited across the k dimension; it is
+    zero-initialized on the first visit and accumulated afterwards —
+    the in-register psum accumulation of a systolic column.
+    """
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _gemm_psum_kernel(x_ref, w_ref, p_ref, o_ref, *, k_blocks):
+    """Like ``_gemm_kernel`` but seeded with an input partial-sum tile,
+    the ``x_ij @ w_jk + y_imk -> y_ijk`` tile op of Fig. 8."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = p_ref[...].astype(o_ref.dtype)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def systolic_gemm(x, w, *, r=32, c=32, out_dtype=None, interpret=True):
+    """Tiled weight-stationary GEMM ``x @ w``.
+
+    Args:
+      x: ``(M, K)`` activations; M, K must be multiples of ``r``
+         (use :func:`systolic_gemm_padded` otherwise).
+      w: ``(K, N)`` weights; N must be a multiple of ``c``.
+      r, c: systolic array rows / columns (the pod granularity).
+      out_dtype: accumulator dtype; defaults to int32 for int8 inputs,
+        else the input dtype.
+      interpret: must stay True for CPU-PJRT execution.
+
+    Returns:
+      ``(M, N)`` result in ``out_dtype``.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"shape mismatch: {x.shape} @ {w.shape}")
+    if m % r or k % r or n % c:
+        raise ValueError(
+            f"dims (M={m}, K={k}, N={n}) not multiples of tile (r={r}, c={c})"
+        )
+    if out_dtype is None:
+        out_dtype = _acc_dtype(x.dtype)
+    k_blocks = k // r
+    grid = (n // c, k_blocks, m // r)  # j slowest, i fastest: W stays put.
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, k_blocks=k_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r, r), lambda j, k, i: (i, k)),  # activations
+            pl.BlockSpec((r, c), lambda j, k, i: (k, j)),  # stationary W
+        ],
+        out_specs=pl.BlockSpec((r, c), lambda j, k, i: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(x, w)
+
+
+def systolic_gemm_psum(x, w, psum, *, r=32, c=32, out_dtype=None,
+                       interpret=True):
+    """Tile op with an input partial sum: ``x @ w + psum``.
+
+    This is the exact operation a SOSA pod executes per time slice
+    (paper Fig. 8); the Rust runtime loads the single-tile
+    (grid = (1,1,1)) AOT artifact of this function.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"shape mismatch: {x.shape} @ {w.shape}")
+    if m % r or k % r or n % c:
+        raise ValueError(
+            f"dims (M={m}, K={k}, N={n}) not multiples of tile (r={r}, c={c})"
+        )
+    if out_dtype is None:
+        out_dtype = _acc_dtype(x.dtype)
+    if psum.shape != (m, n):
+        raise ValueError(f"psum shape {psum.shape} != ({m}, {n})")
+    k_blocks = k // r
+    grid = (n // c, k_blocks, m // r)
+    return pl.pallas_call(
+        functools.partial(_gemm_psum_kernel, k_blocks=k_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r, r), lambda j, k, i: (i, k)),
+            pl.BlockSpec((r, c), lambda j, k, i: (k, j)),
+            pl.BlockSpec((r, c), lambda j, k, i: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((r, c), lambda j, k, i: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(x, w, psum)
+
+
+def pad_to_multiple(a, row_mult, col_mult):
+    """Zero-pad a 2-D array so its dims are multiples of the tile dims —
+    the paper's tiling discretization (the 'ripples' of Fig. 5)."""
+    m, n = a.shape
+    pm = (-m) % row_mult
+    pn = (-n) % col_mult
+    if pm == 0 and pn == 0:
+        return a
+    return jnp.pad(a, ((0, pm), (0, pn)))
+
+
+def systolic_gemm_padded(x, w, *, r=32, c=32, out_dtype=None,
+                         interpret=True):
+    """GEMM for arbitrary dims: zero-pads operands to tile multiples,
+    runs :func:`systolic_gemm` and slices the valid region."""
+    m, _ = x.shape
+    _, n = w.shape
+    xp = pad_to_multiple(x, r, r)
+    wp = pad_to_multiple(w, r, c)
+    out = systolic_gemm(xp, wp, r=r, c=c, out_dtype=out_dtype,
+                        interpret=interpret)
+    return out[:m, :n]
+
+
+def vmem_footprint_bytes(r, c, dtype=jnp.float32):
+    """Estimated VMEM working set of one grid step: one x block, one
+    (stationary) w block, one output block.  Used by the perf notes in
+    DESIGN.md §Perf to keep blocks inside ~16 MiB VMEM."""
+    isz = jnp.dtype(dtype).itemsize
+    osz = jnp.dtype(_acc_dtype(dtype)).itemsize
+    return r * r * isz + r * c * isz + r * c * osz

@@ -1,0 +1,113 @@
+"""Layer-2 JAX models: the paper's workload compute, built on the L1
+Pallas kernels.
+
+These functions exist for two purposes:
+
+1. **Functional ground truth for the Rust stack** — ``mlp_ref`` /
+   ``bert_ffn_ref`` are lowered to HLO artifacts so the Rust e2e driver can
+   check that its tiled/scheduled execution (composed from per-tile
+   artifacts) reproduces the un-tiled result bit-for-bit (f32) or exactly
+   (int8).
+2. **Kernel integration tests** — the *_tiled variants run the same math
+   through ``systolic_gemm`` so pytest can assert tiled == reference at the
+   model level, not just per-tile.
+
+Python never runs at serving time: everything here is lowered once by
+``aot.py``.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.systolic_gemm import systolic_gemm_padded
+from .kernels.postproc import bias_act
+
+
+# ---------------------------------------------------------------------------
+# MLP (the e2e driver's workload)
+# ---------------------------------------------------------------------------
+
+def mlp_ref(x, w1, b1, w2, b2):
+    """Two-layer MLP, pure jnp: relu(x@w1+b1) @ w2 + b2 -> relu."""
+    h = ref.bias_act_ref(ref.gemm_ref(x, w1), b1, act="relu")
+    return ref.bias_act_ref(ref.gemm_ref(h, w2), b2, act="relu")
+
+
+def mlp_tiled(x, w1, b1, w2, b2, *, r=32, c=32, interpret=True):
+    """Same MLP with every GEMM through the Pallas systolic kernel and
+    every epilogue through the post-processor kernel."""
+    h = bias_act(systolic_gemm_padded(x, w1, r=r, c=c, interpret=interpret),
+                 b1, act="relu", interpret=interpret)
+    y = bias_act(systolic_gemm_padded(h, w2, r=r, c=c, interpret=interpret),
+                 b2, act="relu", interpret=interpret)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# BERT feed-forward block (Transformer workload representative)
+# ---------------------------------------------------------------------------
+
+def bert_ffn_ref(x, w1, b1, w2, b2):
+    """BERT FFN: gelu(x@w1+b1) @ w2 + b2 (paper's Transformer GEMMs)."""
+    h = ref.bias_act_ref(ref.gemm_ref(x, w1), b1, act="gelu")
+    return ref.bias_act_ref(ref.gemm_ref(h, w2), b2, act="identity")
+
+
+def bert_ffn_tiled(x, w1, b1, w2, b2, *, r=32, c=32, interpret=True):
+    h = bias_act(systolic_gemm_padded(x, w1, r=r, c=c, interpret=interpret),
+                 b1, act="gelu", interpret=interpret)
+    return bias_act(systolic_gemm_padded(h, w2, r=r, c=c, interpret=interpret),
+                    b2, act="identity", interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# BERT self-attention (exercises the seq×seq GEMMs that drive the paper's
+# Transformer dimension analysis, Fig. 4)
+# ---------------------------------------------------------------------------
+
+def attention_ref(x, wq, wk, wv, wo, n_heads):
+    """Multi-head self-attention, pure jnp, batch-free (seq, d_model)."""
+    s, d = x.shape
+    dh = d // n_heads
+    q = ref.gemm_ref(x, wq).reshape(s, n_heads, dh)
+    k = ref.gemm_ref(x, wk).reshape(s, n_heads, dh)
+    v = ref.gemm_ref(x, wv).reshape(s, n_heads, dh)
+    # (h, s, s) scores
+    scores = jnp.einsum("shd,thd->hst", q, k) / jnp.sqrt(float(dh))
+    probs = ref.softmax_ref(scores, axis=-1)
+    ctx = jnp.einsum("hst,thd->shd", probs, v).reshape(s, d)
+    return ref.gemm_ref(ctx, wo)
+
+
+def attention_tiled(x, wq, wk, wv, wo, n_heads, *, r=32, c=32,
+                    interpret=True):
+    """Attention with all four projection GEMMs through the Pallas kernel
+    (the score/context einsums are post-processor territory in SOSA and
+    stay in jnp)."""
+    s, d = x.shape
+    dh = d // n_heads
+    gm = lambda a, b: systolic_gemm_padded(a, b, r=r, c=c,
+                                           interpret=interpret)
+    q = gm(x, wq).reshape(s, n_heads, dh)
+    k = gm(x, wk).reshape(s, n_heads, dh)
+    v = gm(x, wv).reshape(s, n_heads, dh)
+    scores = jnp.einsum("shd,thd->hst", q, k) / jnp.sqrt(float(dh))
+    probs = ref.softmax_ref(scores, axis=-1)
+    ctx = jnp.einsum("hst,thd->shd", probs, v).reshape(s, d)
+    return gm(ctx, wo)
+
+
+# ---------------------------------------------------------------------------
+# Single tile ops (the shapes the Rust runtime loads; grid == (1,1,1))
+# ---------------------------------------------------------------------------
+
+def tile_gemm(x, w, *, r, c, interpret=True):
+    """One pod tile op without input psum (first op of a chain)."""
+    from .kernels.systolic_gemm import systolic_gemm
+    return systolic_gemm(x, w, r=r, c=c, interpret=interpret)
+
+
+def tile_gemm_psum(x, w, p, *, r, c, interpret=True):
+    """One pod tile op with input psum (chained aggregation, Fig. 8)."""
+    from .kernels.systolic_gemm import systolic_gemm_psum
+    return systolic_gemm_psum(x, w, p, r=r, c=c, interpret=interpret)

@@ -1,0 +1,81 @@
+"""Post-processor kernel correctness vs ref oracles."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.postproc import bias_act, psum_add, requantize
+
+RNG = np.random.default_rng(42)
+
+
+def _randf(shape):
+    return jnp.asarray(RNG.standard_normal(shape, dtype=np.float32))
+
+
+@pytest.mark.parametrize("act", ["relu", "gelu", "identity"])
+@pytest.mark.parametrize("m,n", [(4, 4), (8, 16), (32, 32)])
+def test_bias_act_matches_ref(act, m, n):
+    y, b = _randf((m, n)), _randf((n,))
+    got = bias_act(y, b, act=act)
+    np.testing.assert_allclose(got, ref.bias_act_ref(y, b, act=act),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bias_act_unknown_act_raises():
+    with pytest.raises(ValueError):
+        bias_act(_randf((4, 4)), _randf((4,)), act="swish")
+
+
+def test_bias_act_shape_mismatch_raises():
+    with pytest.raises(ValueError):
+        bias_act(_randf((4, 4)), _randf((5,)))
+
+
+@pytest.mark.parametrize("m,n", [(4, 4), (32, 32)])
+def test_psum_add_matches_ref(m, n):
+    a, b = _randf((m, n)), _randf((m, n))
+    np.testing.assert_allclose(psum_add(a, b), ref.psum_add_ref(a, b),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_psum_add_int32_exact():
+    a = jnp.asarray(RNG.integers(-(2**20), 2**20, (8, 8), dtype=np.int32))
+    b = jnp.asarray(RNG.integers(-(2**20), 2**20, (8, 8), dtype=np.int32))
+    np.testing.assert_array_equal(np.asarray(psum_add(a, b)),
+                                  np.asarray(a + b))
+
+
+def test_psum_add_mismatch_raises():
+    with pytest.raises(ValueError):
+        psum_add(_randf((4, 4)), _randf((4, 8)))
+
+
+@pytest.mark.parametrize("scale", [0.01, 0.1, 1.0])
+def test_requantize_matches_ref(scale):
+    acc = jnp.asarray(RNG.integers(-(2**14), 2**14, (16, 16), dtype=np.int32))
+    got = requantize(acc, scale=scale)
+    want = ref.requantize_ref(acc, scale)
+    assert got.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_requantize_saturates():
+    acc = jnp.asarray([[10**6, -(10**6)]], dtype=jnp.int32)
+    got = np.asarray(requantize(acc, scale=1.0))
+    assert got[0, 0] == 127 and got[0, 1] == -128
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 16), n=st.integers(1, 16),
+       act=st.sampled_from(["relu", "gelu", "identity"]),
+       seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_bias_act(m, n, act, seed):
+    rng = np.random.default_rng(seed)
+    y = jnp.asarray(rng.standard_normal((m, n), dtype=np.float32))
+    b = jnp.asarray(rng.standard_normal((n,), dtype=np.float32))
+    np.testing.assert_allclose(bias_act(y, b, act=act),
+                               ref.bias_act_ref(y, b, act=act),
+                               rtol=1e-5, atol=1e-5)

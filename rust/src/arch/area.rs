@@ -1,0 +1,98 @@
+//! Silicon area model (Table 3's area column).
+//!
+//! Absolute constants are calibrated so the 256-pod baseline reproduces
+//! the paper's synthesis breakdown (SRAM 75.37%, systolic arrays 19.76%,
+//! interconnect 4.18%, post-processors 0.25%); only the *shares* are
+//! meaningful — the paper does not publish absolute mm².
+
+use crate::arch::ArchConfig;
+use crate::interconnect::cost::PodTraffic;
+
+/// mm² per int8 MAC PE (28nm-class, incl. weight register).
+pub const MM2_PER_PE: f64 = 0.0006;
+/// mm² per KiB of SRAM (28nm single-ported bank).
+pub const MM2_PER_SRAM_KB: f64 = 0.00916;
+/// mm² per switch·byte of interconnect datapath.
+pub const MM2_PER_SWITCH_BYTE: f64 = 8.5e-5;
+/// mm² per post-processor SIMD lane.
+pub const MM2_PER_PP_LANE: f64 = 0.00024;
+/// Pod control + skew/conv buffers as a fraction of array area
+/// (Table 3: array is 97.82% of the pod).
+pub const POD_CTRL_AREA_FRAC: f64 = 0.0223;
+
+/// Component-wise area breakdown in mm².
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AreaBreakdown {
+    pub sram_mm2: f64,
+    pub array_mm2: f64,
+    pub interconnect_mm2: f64,
+    pub post_processor_mm2: f64,
+    pub pod_ctrl_mm2: f64,
+}
+
+impl AreaBreakdown {
+    /// Total die area estimate.
+    pub fn total(&self) -> f64 {
+        self.sram_mm2
+            + self.array_mm2
+            + self.interconnect_mm2
+            + self.post_processor_mm2
+            + self.pod_ctrl_mm2
+    }
+}
+
+/// Estimate the area breakdown for a configuration.
+pub fn area(cfg: &ArchConfig) -> AreaBreakdown {
+    let sram_mm2 = (cfg.num_banks * cfg.bank_kb) as f64 * MM2_PER_SRAM_KB;
+    let array_mm2 = cfg.total_pes() as f64 * MM2_PER_PE;
+    let t = PodTraffic::steady_state(cfg.array.r, cfg.array.c, cfg.precision);
+    // Switch count scales with N·log N (topology-dependent); datapath
+    // width is the combined X+W+P per-pod byte width.
+    let switch_units = cfg.interconnect.area_units(cfg.num_pods.max(2), 1);
+    let interconnect_mm2 = switch_units * t.total() * MM2_PER_SWITCH_BYTE;
+    let post_processor_mm2 =
+        (cfg.num_post_processors * cfg.array.c) as f64 * MM2_PER_PP_LANE;
+    let pod_ctrl_mm2 = array_mm2 * POD_CTRL_AREA_FRAC;
+    AreaBreakdown { sram_mm2, array_mm2, interconnect_mm2, post_processor_mm2, pod_ctrl_mm2 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchConfig, ArrayDims};
+
+    #[test]
+    fn baseline_breakdown_matches_table3_shares() {
+        let a = area(&ArchConfig::baseline());
+        let tot = a.total();
+        let share = |x: f64| 100.0 * x / tot;
+        // Table 3: SRAM 75.37 %, systolic array 19.76 %, interconnect
+        // 4.18 %, post-processor 0.25 %.  Allow a few points of slack —
+        // only the ordering and rough magnitudes matter.
+        assert!((share(a.sram_mm2) - 75.37).abs() < 6.0, "sram {}", share(a.sram_mm2));
+        assert!((share(a.array_mm2) - 19.76).abs() < 5.0, "array {}", share(a.array_mm2));
+        assert!((share(a.interconnect_mm2) - 4.18).abs() < 3.0,
+                "icn {}", share(a.interconnect_mm2));
+        assert!(share(a.post_processor_mm2) < 1.5);
+    }
+
+    #[test]
+    fn sram_dominates_area_at_fine_granularities() {
+        // Bank count follows pod count, so SRAM area dominance holds for
+        // the many-pod configurations (the coarse 128×128/32 design has
+        // proportionally less SRAM and more PE area).
+        for (r, pods) in [(16usize, 512usize), (32, 256)] {
+            let cfg = ArchConfig::with_array(ArrayDims::new(r, r), pods);
+            let a = area(&cfg);
+            assert!(a.sram_mm2 > a.array_mm2, "{r}: sram should dominate");
+        }
+    }
+
+    #[test]
+    fn total_is_sum_of_parts() {
+        let a = area(&ArchConfig::baseline());
+        let sum = a.sram_mm2 + a.array_mm2 + a.interconnect_mm2
+            + a.post_processor_mm2 + a.pod_ctrl_mm2;
+        assert!((a.total() - sum).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,227 @@
+//! The SOSA architecture configuration (paper §4, Fig. 7).
+
+use crate::error::{Error, Result};
+use crate::interconnect::Kind as IcnKind;
+use crate::util::is_pow2;
+
+/// Systolic array dimensions: `r` rows × `c` columns (Fig. 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ArrayDims {
+    /// Rows — activations enter on the left, one per row.
+    pub r: usize,
+    /// Columns — psums exit at the bottom, one per column.
+    pub c: usize,
+}
+
+impl ArrayDims {
+    /// Convenience constructor.
+    pub const fn new(r: usize, c: usize) -> Self {
+        ArrayDims { r, c }
+    }
+
+    /// Processing elements in the array.
+    pub const fn pes(&self) -> usize {
+        self.r * self.c
+    }
+}
+
+impl std::fmt::Display for ArrayDims {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}", self.r, self.c)
+    }
+}
+
+/// Arithmetic precision (§5: 8-bit weights/activations, 16-bit psums).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Precision {
+    /// Bytes per activation / weight operand.
+    pub operand_bytes: usize,
+    /// Bytes per partial sum.
+    pub psum_bytes: usize,
+}
+
+impl Precision {
+    /// The paper's int8 + int16-psum encoding.
+    pub const INT8: Precision = Precision { operand_bytes: 1, psum_bytes: 2 };
+    /// f32 everywhere (used by the functional runtime artifacts).
+    pub const F32: Precision = Precision { operand_bytes: 4, psum_bytes: 4 };
+}
+
+/// Full accelerator configuration.
+#[derive(Clone, Debug)]
+pub struct ArchConfig {
+    /// Pod systolic-array granularity.
+    pub array: ArrayDims,
+    /// Number of systolic pods (power of two; §6 picks the largest
+    /// power of two under the TDP).
+    pub num_pods: usize,
+    /// Number of single-ported SRAM banks (N-to-N: == `num_pods`, §5).
+    pub num_banks: usize,
+    /// SRAM bank capacity in KiB (§6.4 picks 256).
+    pub bank_kb: usize,
+    /// Clock frequency in GHz (§5: 1 GHz).
+    pub freq_ghz: f64,
+    /// Arithmetic precision.
+    pub precision: Precision,
+    /// Interconnect topology for the X / W / P networks.
+    pub interconnect: IcnKind,
+    /// Activation multicast degree U (§4.1; 16 for the 32×32 design).
+    pub multicast_u: usize,
+    /// Partial-sum fan-in degree V (§4.1; 16 for the 32×32 design).
+    pub fanin_v: usize,
+    /// Post-processors (work in pairs to match pod throughput, §4.2).
+    pub num_post_processors: usize,
+    /// Off-chip DRAM (HBM, as TPUv3 §5) bandwidth in GB/s.
+    pub dram_gbps: f64,
+}
+
+impl ArchConfig {
+    /// The paper's baseline SOSA: 256 pods of 32×32, Butterfly-2,
+    /// 256 KiB banks, U = V = 16.
+    pub fn baseline() -> Self {
+        ArchConfig {
+            array: ArrayDims::new(32, 32),
+            num_pods: 256,
+            num_banks: 256,
+            bank_kb: 256,
+            freq_ghz: 1.0,
+            precision: Precision::INT8,
+            interconnect: IcnKind::Butterfly { expansion: 2 },
+            multicast_u: 16,
+            fanin_v: 16,
+            num_post_processors: 256,
+            dram_gbps: 900.0, // HBM2 (TPUv3-class)
+        }
+    }
+
+    /// Baseline with a different array granularity and pod count.
+    pub fn with_array(array: ArrayDims, num_pods: usize) -> Self {
+        ArchConfig {
+            array,
+            num_pods,
+            num_banks: num_pods,
+            num_post_processors: num_pods,
+            // Scale U/V with the array (paper picks 16 for 32×32 — half
+            // the dimension, capped at the dimension itself).
+            multicast_u: (array.r / 2).max(1),
+            fanin_v: (array.c / 2).max(1),
+            ..Self::baseline()
+        }
+    }
+
+    /// Total processing elements.
+    pub fn total_pes(&self) -> usize {
+        self.array.pes() * self.num_pods
+    }
+
+    /// Peak throughput in ops/s (2 ops per MAC per cycle).
+    pub fn peak_ops(&self) -> f64 {
+        2.0 * self.total_pes() as f64 * self.freq_ghz * 1e9
+    }
+
+    /// Total on-chip SRAM bytes.
+    pub fn sram_bytes(&self) -> usize {
+        self.num_banks * self.bank_kb * 1024
+    }
+
+    /// Validate invariants (power-of-two network ports, sane dims).
+    pub fn validate(&self) -> Result<()> {
+        if self.array.r == 0 || self.array.c == 0 {
+            return Err(Error::config("array dims must be positive"));
+        }
+        if self.num_pods == 0 || !is_pow2(self.num_pods) {
+            return Err(Error::config(format!(
+                "num_pods must be a positive power of two, got {}",
+                self.num_pods
+            )));
+        }
+        if self.num_banks != self.num_pods {
+            return Err(Error::config(
+                "N-to-N design requires num_banks == num_pods (§5)",
+            ));
+        }
+        if self.multicast_u > self.array.r || self.multicast_u == 0 {
+            return Err(Error::config("U must be in [1, r]"));
+        }
+        if self.fanin_v > self.array.c || self.fanin_v == 0 {
+            return Err(Error::config("V must be in [1, c]"));
+        }
+        if self.freq_ghz <= 0.0 {
+            return Err(Error::config("freq must be positive"));
+        }
+        Ok(())
+    }
+
+    /// Pipeline fill/drain latency between back-to-back tile ops on one
+    /// pod (§4.1): activations reach column `c` after `c/U` multicast
+    /// hops and psums exit after `r/V` fan-in hops.
+    pub fn pipeline_fill_cycles(&self) -> u64 {
+        (self.array.c.div_ceil(self.multicast_u)
+            + self.array.r.div_ceil(self.fanin_v)) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_is_papers_design_point() {
+        let a = ArchConfig::baseline();
+        a.validate().unwrap();
+        assert_eq!(a.array, ArrayDims::new(32, 32));
+        assert_eq!(a.num_pods, 256);
+        assert_eq!(a.total_pes(), 262_144);
+        // 2 * 262144 PEs * 1 GHz = 524.3 TOps/s raw peak (Table 2 math)
+        assert!((a.peak_ops() / 1e12 - 524.288).abs() < 1e-9);
+        assert_eq!(a.sram_bytes(), 256 * 256 * 1024);
+    }
+
+    #[test]
+    fn with_array_scales_uv() {
+        let a = ArchConfig::with_array(ArrayDims::new(128, 128), 32);
+        a.validate().unwrap();
+        assert_eq!(a.multicast_u, 64);
+        assert_eq!(a.fanin_v, 64);
+        assert_eq!(a.num_banks, 32);
+    }
+
+    #[test]
+    fn pipeline_fill_u16_v16() {
+        let a = ArchConfig::baseline();
+        // 32/16 + 32/16 = 4 cycles
+        assert_eq!(a.pipeline_fill_cycles(), 4);
+        let std = ArchConfig {
+            multicast_u: 1,
+            fanin_v: 1,
+            ..ArchConfig::baseline()
+        };
+        // Standard systolic array: full skew r + c = 64
+        assert_eq!(std.pipeline_fill_cycles(), 64);
+    }
+
+    #[test]
+    fn validate_rejects_bad_configs() {
+        let mut a = ArchConfig::baseline();
+        a.num_pods = 100; // not a power of two
+        assert!(a.validate().is_err());
+
+        let mut b = ArchConfig::baseline();
+        b.num_banks = 128;
+        assert!(b.validate().is_err());
+
+        let mut c = ArchConfig::baseline();
+        c.multicast_u = 64; // > r
+        assert!(c.validate().is_err());
+
+        let mut d = ArchConfig::baseline();
+        d.array = ArrayDims::new(0, 32);
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn display_array_dims() {
+        assert_eq!(ArrayDims::new(32, 32).to_string(), "32x32");
+        assert_eq!(ArrayDims::new(66, 32).to_string(), "66x32");
+    }
+}

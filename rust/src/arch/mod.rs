@@ -1,0 +1,7 @@
+//! Architecture description: array granularity, pod count, memory
+//! geometry, interconnect choice — everything §4/Fig. 7 parameterizes.
+
+pub mod area;
+pub mod config;
+
+pub use config::{ArchConfig, ArrayDims, Precision};

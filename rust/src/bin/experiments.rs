@@ -1,0 +1,34 @@
+//! `sosa-experiments` — regenerate the paper's tables and figures.
+//!
+//! ```bash
+//! sosa-experiments all            # full suite → results/*.csv
+//! sosa-experiments table2 fig9    # selected experiments
+//! sosa-experiments all --quick    # reduced sweeps
+//! sosa-experiments --list
+//! ```
+
+use sosa::experiments::{run, run_all, ExpOptions, ALL};
+use sosa::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let opts = ExpOptions {
+        out_dir: args.get_or("out", "results").to_string(),
+        quick: args.flag("quick"),
+    };
+    if args.flag("list") || args.positional.is_empty() {
+        eprintln!("usage: sosa-experiments <ids...|all> [--out DIR] [--quick]");
+        eprintln!("experiments: {}", ALL.join(" "));
+        std::process::exit(if args.flag("list") { 0 } else { 2 });
+    }
+    let t0 = std::time::Instant::now();
+    for id in &args.positional {
+        if id == "all" {
+            run_all(&opts).expect("experiment suite failed");
+        } else {
+            println!("\n################ {id} ################");
+            run(id, &opts).expect("experiment failed");
+        }
+    }
+    eprintln!("\ndone in {:.1?}; CSVs in {}/", t0.elapsed(), opts.out_dir);
+}

@@ -1,0 +1,66 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the SOSA library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Invalid architecture or experiment configuration.
+    #[error("configuration error: {0}")]
+    Config(String),
+
+    /// A workload definition is inconsistent (bad dims, missing dep, ...).
+    #[error("workload error: {0}")]
+    Workload(String),
+
+    /// The scheduler could not produce a legal schedule.
+    #[error("scheduling error: {0}")]
+    Schedule(String),
+
+    /// AOT artifact manifest / HLO loading problems.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Functional-runtime numerics mismatch between tiled execution and
+    /// the un-tiled reference.
+    #[error("numerics mismatch: {0}")]
+    Numerics(String),
+
+    /// PJRT / XLA failures.
+    #[error("xla error: {0}")]
+    Xla(#[from] xla::Error),
+
+    /// I/O failures (artifact files, result CSVs).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Shorthand for a configuration error.
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context() {
+        let e = Error::config("bad pod count");
+        assert_eq!(e.to_string(), "configuration error: bad pod count");
+        let e = Error::Schedule("op 3 unroutable".into());
+        assert!(e.to_string().contains("op 3 unroutable"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = ioe.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

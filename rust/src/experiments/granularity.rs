@@ -1,0 +1,144 @@
+//! Table 2 (array granularity @400 W) and Fig. 9 (per-benchmark
+//! effective throughput by array size).
+
+use super::ExpOptions;
+use crate::arch::{ArchConfig, ArrayDims};
+use crate::power::{max_pods_under_tdp, peak_power, throughput_at_tdp, TDP_W};
+use crate::sim::{simulate, SimOptions};
+use crate::util::{csv::f, CsvWriter, Table};
+use crate::workloads::zoo;
+use crate::Result;
+
+/// The granularities of Table 2 (with paper reference values).
+pub const SIZES: &[(usize, f64, f64)] = &[
+    // (dim, paper utilization %, paper effective TOps/s @400 W)
+    (512, 10.3, 191.3),
+    (256, 14.0, 183.0),
+    (128, 13.8, 205.0),
+    (64, 17.4, 200.9),
+    (32, 39.4, 317.4),
+    (16, 40.0, 198.9),
+];
+
+fn config_for(dim: usize) -> ArchConfig {
+    // 512×512 is the *monolithic* baseline (Table 2 row 1): one array
+    // by definition, even though two would fit the 400 W envelope.
+    let pods = if dim >= 512 {
+        1
+    } else {
+        let template = ArchConfig::with_array(ArrayDims::new(dim, dim), 1);
+        max_pods_under_tdp(&template, TDP_W).max(1)
+    };
+    ArchConfig::with_array(ArrayDims::new(dim, dim), pods)
+}
+
+/// Table 2: pods / peak power / peak@400W / util / effective@400W per
+/// array granularity, averaged over the ten benchmarks.
+pub fn table2(opts: &ExpOptions) -> Result<()> {
+    let benches = zoo::benchmarks();
+    let sim_opts = SimOptions::default();
+    let mut csv = CsvWriter::create(
+        format!("{}/table2.csv", opts.out_dir),
+        &["array", "pods", "peak_w", "peak_tops_at_400w", "util", "eff_tops",
+          "paper_util", "paper_eff_tops"],
+    )?;
+    let mut table = Table::new(&[
+        "array", "pods", "peakW", "peak@400W", "util%", "eff TOps/s",
+        "paper util%", "paper eff",
+    ]);
+    let sizes: Vec<_> = if opts.quick {
+        SIZES.iter().filter(|s| s.0 >= 32).cloned().collect()
+    } else {
+        SIZES.to_vec()
+    };
+    for (dim, paper_util, paper_eff) in sizes {
+        let cfg = config_for(dim);
+        let mut util_sum = 0.0;
+        for m in &benches {
+            util_sum += simulate(&cfg, m, &sim_opts).utilization(&cfg);
+        }
+        let util = util_sum / benches.len() as f64;
+        let tp = throughput_at_tdp(&cfg, TDP_W);
+        let eff = util * tp.peak_ops_at_tdp / 1e12;
+        csv.row(&[
+            format!("{dim}x{dim}"),
+            cfg.num_pods.to_string(),
+            f(tp.peak_power_w, 1),
+            f(tp.peak_ops_at_tdp / 1e12, 0),
+            f(util * 100.0, 1),
+            f(eff, 1),
+            f(paper_util, 1),
+            f(paper_eff, 1),
+        ])?;
+        table.row(vec![
+            format!("{dim}x{dim}"),
+            cfg.num_pods.to_string(),
+            format!("{:.1}", peak_power(&cfg).total()),
+            format!("{:.0}", tp.peak_ops_at_tdp / 1e12),
+            format!("{:.1}", util * 100.0),
+            format!("{eff:.1}"),
+            format!("{paper_util}"),
+            format!("{paper_eff}"),
+        ]);
+    }
+    csv.finish()?;
+    println!("{table}");
+    Ok(())
+}
+
+/// Fig. 9: effective throughput per benchmark per array size.
+pub fn fig9(opts: &ExpOptions) -> Result<()> {
+    let benches = zoo::benchmarks();
+    let sim_opts = SimOptions::default();
+    let dims: Vec<usize> =
+        if opts.quick { vec![32, 128] } else { vec![16, 32, 64, 128, 256, 512] };
+    let mut csv = CsvWriter::create(
+        format!("{}/fig9.csv", opts.out_dir),
+        &["model", "array", "util", "eff_tops"],
+    )?;
+    let mut table = Table::new(
+        &std::iter::once("model")
+            .chain(dims.iter().map(|d| match d {
+                16 => "16x16", 32 => "32x32", 64 => "64x64", 128 => "128x128",
+                256 => "256x256", _ => "512x512",
+            }))
+            .collect::<Vec<_>>(),
+    );
+    let mut wins32 = 0usize;
+    for m in &benches {
+        let mut row = vec![m.name.clone()];
+        let mut best = (0usize, f64::MIN);
+        for &dim in &dims {
+            let cfg = config_for(dim);
+            let s = simulate(&cfg, m, &sim_opts);
+            let eff = s.effective_ops_at_tdp(&cfg, TDP_W) / 1e12;
+            csv.row(&[m.name.clone(), format!("{dim}x{dim}"),
+                      f(s.utilization(&cfg), 4), f(eff, 1)])?;
+            row.push(format!("{eff:.0}"));
+            if eff > best.1 {
+                best = (dim, eff);
+            }
+        }
+        if best.0 == 32 {
+            wins32 += 1;
+        }
+        table.row(row);
+    }
+    csv.finish()?;
+    println!("{table}");
+    println!("32x32 wins {wins32}/{} benchmarks (paper: 9/10, BERT-large \
+              the exception)", benches.len());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_for_matches_table2_pods() {
+        assert_eq!(config_for(32).num_pods, 256);
+        assert_eq!(config_for(128).num_pods, 32);
+        assert_eq!(config_for(512).num_pods, 1, "monolithic baseline");
+    }
+}

@@ -1,0 +1,98 @@
+//! Fig. 13 (SRAM bank size vs effective throughput + DRAM usage) and
+//! Table 3 (power & area breakdown).
+
+use super::ExpOptions;
+use crate::arch::{area, ArchConfig};
+use crate::power::peak_power;
+use crate::sim::{memory, simulate, SimOptions};
+use crate::util::{csv::f, CsvWriter, Table};
+use crate::workloads::zoo;
+use crate::Result;
+
+/// Fig. 13: sweep the SRAM bank size 64 KiB .. 1 MiB on ResNet-152
+/// batch 8 (§6.4's workload), reporting normalized effective
+/// throughput and DRAM bandwidth usage.
+pub fn fig13(opts: &ExpOptions) -> Result<()> {
+    // §6.4 uses ResNet-152 at batch 8; quick mode uses batch 4 (same
+    // knee, 4× less scheduling work).
+    let batch = if opts.quick { 4 } else { 8 };
+    let model = zoo::by_name("resnet152").unwrap().with_batch(batch);
+    let sizes: Vec<usize> =
+        if opts.quick { vec![64, 256, 1024] } else { vec![64, 128, 256, 512, 1024] };
+    let mut rows = vec![];
+    for &kb in &sizes {
+        let cfg = ArchConfig { bank_kb: kb, ..ArchConfig::baseline() };
+        let stats = simulate(&cfg, &model, &SimOptions::default());
+        let mem = memory::analyze(&cfg, std::slice::from_ref(&model));
+        rows.push((kb, stats.achieved_ops(&cfg) / 1e12, mem.bandwidth_gbps(&cfg)));
+    }
+    let best = rows.iter().map(|r| r.1).fold(f64::MIN, f64::max);
+    let mut csv = CsvWriter::create(
+        format!("{}/fig13.csv", opts.out_dir),
+        &["bank_kb", "eff_tops", "normalized", "dram_gbps"],
+    )?;
+    let mut table = Table::new(&["bank KiB", "eff TOps/s", "norm", "DRAM GB/s"]);
+    for (kb, eff, bw) in rows {
+        csv.row(&[kb.to_string(), f(eff, 1), f(eff / best, 3), f(bw, 1)])?;
+        table.row(vec![kb.to_string(), format!("{eff:.1}"),
+                       format!("{:.2}", eff / best), format!("{bw:.0}")]);
+    }
+    csv.finish()?;
+    println!("{table}");
+    println!("paper: <256 KiB banks evict tiles → DRAM traffic rises and \
+              effective throughput drops; 256 KiB chosen.");
+    Ok(())
+}
+
+/// Table 3: power and area breakdown of the 256-pod baseline.
+pub fn table3(opts: &ExpOptions) -> Result<()> {
+    let cfg = ArchConfig::baseline();
+    let p = peak_power(&cfg);
+    let a = area::area(&cfg);
+    let rows: Vec<(&str, f64, f64, f64, f64)> = vec![
+        // (component, power W, area mm², paper power %, paper area %)
+        ("SRAM", p.sram_w, a.sram_mm2, 45.81, 75.37),
+        ("Post-processor", p.post_processor_w, a.post_processor_mm2, 0.56, 0.25),
+        ("Interconnect", p.interconnect_w, a.interconnect_mm2, 15.06, 4.18),
+        ("Systolic arrays", p.mac_w, a.array_mm2, 37.64, 19.76),
+        ("Pod control+buffers", p.pod_ctrl_w, a.pod_ctrl_mm2, 0.93, 0.44),
+    ];
+    let (tp, ta) = (p.total(), a.total());
+    let mut csv = CsvWriter::create(
+        format!("{}/table3.csv", opts.out_dir),
+        &["component", "power_w", "power_pct", "area_mm2", "area_pct",
+          "paper_power_pct", "paper_area_pct"],
+    )?;
+    let mut table = Table::new(&[
+        "component", "W", "power %", "mm2", "area %", "paper P%", "paper A%",
+    ]);
+    for (name, w, mm2, pp, pa) in rows {
+        csv.row(&[name.into(), f(w, 2), f(100.0 * w / tp, 2), f(mm2, 1),
+                  f(100.0 * mm2 / ta, 2), f(pp, 2), f(pa, 2)])?;
+        table.row(vec![
+            name.into(), format!("{w:.1}"), format!("{:.1}", 100.0 * w / tp),
+            format!("{mm2:.1}"), format!("{:.1}", 100.0 * mm2 / ta),
+            format!("{pp}"), format!("{pa}"),
+        ]);
+    }
+    csv.finish()?;
+    println!("{table}");
+    println!("total: {tp:.1} W, {ta:.0} mm2 (28nm-class constants \
+              calibrated to the paper's synthesis shares)");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_runs() {
+        let dir = std::env::temp_dir().join("sosa_table3");
+        let opts = ExpOptions { out_dir: dir.to_str().unwrap().into(), quick: true };
+        table3(&opts).unwrap();
+        let text = std::fs::read_to_string(dir.join("table3.csv")).unwrap();
+        assert!(text.contains("SRAM"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

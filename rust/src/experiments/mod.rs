@@ -1,0 +1,87 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (§6).  Each experiment prints the same rows/series the paper reports
+//! and writes a CSV under the output directory; EXPERIMENTS.md records
+//! paper-vs-measured for each.
+//!
+//! | id     | paper content                              |
+//! |--------|--------------------------------------------|
+//! | fig4   | workload dimension distributions           |
+//! | fig5   | iso-power DSE heatmaps (CNN/BERT/mixed)    |
+//! | table1 | interconnect metrics (busy %, cyc/op, mW/B)|
+//! | table2 | array granularity @400 W                   |
+//! | fig9   | per-benchmark effective throughput         |
+//! | fig10  | effective throughput vs TDP                |
+//! | fig11  | batch size & multi-tenancy                 |
+//! | fig12a | interconnect type vs TDP                   |
+//! | fig12b | activation partition size sweep            |
+//! | fig13  | SRAM bank size sweep                       |
+//! | table3 | power & area breakdown                     |
+
+pub mod ablation;
+pub mod granularity;
+pub mod interconnect_exp;
+pub mod memory_exp;
+pub mod scaling;
+pub mod tiling_exp;
+pub mod workload_stats;
+
+use crate::Result;
+
+/// Common experiment options.
+#[derive(Clone, Debug)]
+pub struct ExpOptions {
+    /// Output directory for CSVs.
+    pub out_dir: String,
+    /// Reduced sweep sizes for fast runs.
+    pub quick: bool,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions { out_dir: "results".into(), quick: false }
+    }
+}
+
+/// Run one experiment by id.
+pub fn run(id: &str, opts: &ExpOptions) -> Result<()> {
+    match id {
+        "fig4" => workload_stats::fig4(opts),
+        "fig5" => workload_stats::fig5(opts),
+        "table1" => interconnect_exp::table1(opts),
+        "table2" => granularity::table2(opts),
+        "fig9" => granularity::fig9(opts),
+        "fig10" => scaling::fig10(opts),
+        "fig11" => scaling::fig11(opts),
+        "fig12a" => interconnect_exp::fig12a(opts),
+        "fig12b" => tiling_exp::fig12b(opts),
+        "fig13" => memory_exp::fig13(opts),
+        "table3" => memory_exp::table3(opts),
+        "ablation" => ablation::ablation(opts),
+        other => Err(crate::Error::config(format!("unknown experiment {other}"))),
+    }
+}
+
+/// All experiment ids, in paper order.
+pub const ALL: &[&str] = &[
+    "fig4", "fig5", "table1", "table2", "fig9", "fig10", "fig11", "fig12a",
+    "fig12b", "fig13", "table3", "ablation",
+];
+
+/// Run the full suite.
+pub fn run_all(opts: &ExpOptions) -> Result<()> {
+    for id in ALL {
+        println!("\n################ {id} ################");
+        run(id, opts)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_experiment_errors() {
+        assert!(run("fig99", &ExpOptions::default()).is_err());
+    }
+}

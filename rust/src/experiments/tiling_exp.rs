@@ -1,0 +1,91 @@
+//! Fig. 12b: effective throughput vs activation partition size k
+//! (§6.3) — the paper's tiling contribution, plus the no-partition
+//! baseline (up to 5× utilization claimed in §8).
+
+use super::ExpOptions;
+use crate::arch::ArchConfig;
+use crate::sim::{simulate, SimOptions};
+use crate::tiling::Strategy;
+use crate::util::{csv::f, CsvWriter, Table};
+use crate::workloads::zoo;
+use crate::Result;
+
+/// Fig. 12b: sweep the partition size k around r (and include the
+/// no-partition baseline), reporting normalized effective throughput.
+pub fn fig12b(opts: &ExpOptions) -> Result<()> {
+    let cfg = ArchConfig::baseline();
+    let r = cfg.array.r;
+    let names = if opts.quick {
+        vec!["resnet50", "bert-base"]
+    } else {
+        vec!["resnet50", "resnet152", "densenet121", "bert-medium", "bert-base"]
+    };
+    let benches: Vec<_> = names.iter().map(|n| zoo::by_name(n).unwrap()).collect();
+    let ks: Vec<usize> = if opts.quick {
+        vec![8, 32, 128]
+    } else {
+        vec![4, 8, 16, 32, 64, 128, 256, 512]
+    };
+
+    let mut csv = CsvWriter::create(
+        format!("{}/fig12b.csv", opts.out_dir),
+        &["k", "eff_tops", "normalized"],
+    )?;
+    let mut results: Vec<(String, f64)> = vec![];
+    for &k in &ks {
+        let mut opts_k = SimOptions::default();
+        opts_k.strategy = Strategy::Fixed(k);
+        let mut eff = 0.0;
+        for m in &benches {
+            eff += simulate(&cfg, m, &opts_k).achieved_ops(&cfg);
+        }
+        results.push((k.to_string(), eff / benches.len() as f64 / 1e12));
+    }
+    // No-partition baseline (AI-MT-style).
+    {
+        let mut opts_np = SimOptions::default();
+        opts_np.strategy = Strategy::NoPartition;
+        let mut eff = 0.0;
+        for m in &benches {
+            eff += simulate(&cfg, m, &opts_np).achieved_ops(&cfg);
+        }
+        results.push(("none".into(), eff / benches.len() as f64 / 1e12));
+    }
+    let best = results.iter().map(|r| r.1).fold(f64::MIN, f64::max);
+    let mut table = Table::new(&["partition k", "eff TOps/s", "normalized"]);
+    for (k, eff) in &results {
+        csv.row(&[k.clone(), f(*eff, 1), f(eff / best, 3)])?;
+        table.row(vec![k.clone(), format!("{eff:.1}"), format!("{:.2}", eff / best)]);
+    }
+    csv.finish()?;
+    println!("{table}");
+    let at_r = results.iter().find(|(k, _)| k == &r.to_string()).unwrap().1;
+    let none = results.last().unwrap().1;
+    println!("optimum at k = r = {r} (paper Fig. 12b); r-vs-no-partition \
+              gain: {:.2}x (paper: up to 5x utilization)", at_r / none);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchConfig, ArrayDims};
+
+    #[test]
+    fn k_equal_r_beats_extremes() {
+        // The Fig. 12b shape on one benchmark: k = r ≥ both k ≪ r and
+        // no partitioning.
+        let cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 256);
+        let m = zoo::by_name("resnet50").unwrap();
+        let eff = |strategy| {
+            let mut o = SimOptions::default();
+            o.strategy = strategy;
+            simulate(&cfg, &m, &o).achieved_ops(&cfg)
+        };
+        let at_r = eff(Strategy::Fixed(32));
+        let tiny = eff(Strategy::Fixed(4));
+        let none = eff(Strategy::NoPartition);
+        assert!(at_r > tiny, "k=r {at_r} vs k=4 {tiny}");
+        assert!(at_r > none, "k=r {at_r} vs none {none}");
+    }
+}

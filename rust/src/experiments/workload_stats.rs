@@ -1,0 +1,123 @@
+//! Fig. 4 (workload dimension distributions) and Fig. 5 (iso-power
+//! design-space exploration heatmaps).
+
+use super::ExpOptions;
+use crate::analytic::dse_cell;
+use crate::power::TDP_W;
+use crate::util::{csv::f, CsvWriter, Table};
+use crate::workloads::zoo;
+use crate::Result;
+
+/// Fig. 4: ops-weighted p10/mean/p90 of filter reuse (m), features (k)
+/// and filters (n) for every benchmark.
+pub fn fig4(opts: &ExpOptions) -> Result<()> {
+    let mut csv = CsvWriter::create(
+        format!("{}/fig4.csv", opts.out_dir),
+        &["model", "dim", "p10", "mean", "p90"],
+    )?;
+    let mut table = Table::new(&["model", "reuse p10/mean/p90", "features", "filters"]);
+    let mut cnn_reuse = 0.0;
+    let mut cnn_filters = 0.0;
+    let mut cnn_n = 0.0;
+    let mut bert_reuse = 0.0;
+    let mut bert_filters = 0.0;
+    let mut bert_n = 0.0;
+    for m in zoo::benchmarks() {
+        let reuse = m.dim_percentiles(|o| o.m);
+        let feats = m.dim_percentiles(|o| o.k);
+        let filts = m.dim_percentiles(|o| o.n);
+        for (dim, s) in [("reuse", reuse), ("features", feats), ("filters", filts)] {
+            csv.row(&[
+                m.name.clone(),
+                dim.into(),
+                s.p10.to_string(),
+                f(s.mean, 1),
+                s.p90.to_string(),
+            ])?;
+        }
+        table.row(vec![
+            m.name.clone(),
+            format!("{}/{:.0}/{}", reuse.p10, reuse.mean, reuse.p90),
+            format!("{}/{:.0}/{}", feats.p10, feats.mean, feats.p90),
+            format!("{}/{:.0}/{}", filts.p10, filts.mean, filts.p90),
+        ]);
+        if m.name.starts_with("BERT") {
+            bert_reuse += reuse.mean;
+            bert_filters += filts.mean;
+            bert_n += 1.0;
+        } else {
+            cnn_reuse += reuse.mean;
+            cnn_filters += filts.mean;
+            cnn_n += 1.0;
+        }
+    }
+    csv.finish()?;
+    println!("{table}");
+    let reuse_ratio = (cnn_reuse / cnn_n) / (bert_reuse / bert_n);
+    let filt_ratio = (bert_filters / bert_n) / (cnn_filters / cnn_n);
+    println!("CNN/BERT filter-reuse ratio : {reuse_ratio:.1}x  (paper: ~15x)");
+    println!("BERT/CNN filter-count ratio : {filt_ratio:.1}x  (paper: ~6x)");
+    Ok(())
+}
+
+/// Fig. 5: effective TOps/s/W heatmaps for CNN-only, BERT-only and
+/// mixed workload sets over (r, c) grids at iso-power (400 W).
+pub fn fig5(opts: &ExpOptions) -> Result<()> {
+    let dims: Vec<usize> = if opts.quick {
+        vec![8, 16, 32, 64, 128, 256]
+    } else {
+        vec![8, 16, 20, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512]
+    };
+    let cnns = zoo::fig5_cnns();
+    let berts = zoo::fig5_berts();
+    let mixed: Vec<_> = cnns.iter().cloned().chain(berts.iter().cloned()).collect();
+    for (tag, models) in [("cnn", &cnns), ("bert", &berts), ("mixed", &mixed)] {
+        let mut csv = CsvWriter::create(
+            format!("{}/fig5_{tag}.csv", opts.out_dir),
+            &["r", "c", "pods", "utilization", "eff_tops", "eff_tops_per_watt"],
+        )?;
+        let mut best = (0usize, 0usize, f64::MIN);
+        for &r in &dims {
+            for &c in &dims {
+                let cell = dse_cell(r, c, models, TDP_W);
+                csv.row(&[
+                    r.to_string(),
+                    c.to_string(),
+                    cell.pods.to_string(),
+                    f(cell.utilization, 4),
+                    f(cell.eff_tops, 2),
+                    f(cell.eff_tops_per_watt, 4),
+                ])?;
+                if cell.eff_tops_per_watt > best.2 {
+                    best = (r, c, cell.eff_tops_per_watt);
+                }
+            }
+        }
+        csv.finish()?;
+        let paper = match tag {
+            "cnn" => "66x32",
+            "bert" => "20x128",
+            _ => "20x32 (32x32 chosen)",
+        };
+        println!("fig5 {tag}: optimum {}x{} at {:.3} TOps/s/W (paper: {paper})",
+                 best.0, best.1, best.2);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_runs_and_reports_ratios() {
+        let opts = ExpOptions {
+            out_dir: std::env::temp_dir().join("sosa_fig4").to_str().unwrap().into(),
+            quick: true,
+        };
+        fig4(&opts).unwrap();
+        let csv = std::fs::read_to_string(format!("{}/fig4.csv", opts.out_dir)).unwrap();
+        assert!(csv.lines().count() > 30); // 10 models × 3 dims + header
+        std::fs::remove_dir_all(&opts.out_dir).ok();
+    }
+}

@@ -1,0 +1,248 @@
+//! Benes network (§3.2): rearrangeably non-blocking — *every* partial
+//! permutation is routable given global route computation — augmented
+//! with a copy network [38] for full multicast.  The price is latency:
+//! (2·log₂N − 1) switching stages plus log₂N copy stages, which Fig. 12a
+//! shows becoming exposed as pods scale (the tile-op compute time stops
+//! covering the round trip).
+//!
+//! Because rearrangeability guarantees routability for any set of
+//! connections with per-port exclusivity, the feasibility check reduces
+//! to port-occupancy bookkeeping: distinct sources (single-ported banks)
+//! and distinct destinations.  We additionally *verify* the
+//! rearrangeability claim in tests with an actual looping-algorithm
+//! route construction for permutations.
+
+use super::Fabric;
+
+/// Benes fabric (port-exclusivity model; see module docs).
+pub struct Benes {
+    ports: usize,
+    dst_owner: Vec<u32>,
+    log: Vec<u32>,
+}
+
+impl Benes {
+    /// New N-port Benes network.
+    pub fn new(ports: usize) -> Self {
+        Benes { ports, dst_owner: vec![0; ports], log: vec![] }
+    }
+}
+
+impl Fabric for Benes {
+    fn ports(&self) -> usize {
+        self.ports
+    }
+
+    fn begin_slice(&mut self) {
+        self.dst_owner.iter_mut().for_each(|d| *d = 0);
+        self.log.clear();
+    }
+
+    fn try_connect(&mut self, src: usize, dst: usize) -> bool {
+        debug_assert!(src < self.ports && dst < self.ports);
+        let cur = self.dst_owner[dst];
+        if cur != 0 {
+            return cur == src as u32 + 1; // multicast legs are idempotent
+        }
+        self.dst_owner[dst] = src as u32 + 1;
+        self.log.push(dst as u32);
+        true
+    }
+
+    fn checkpoint(&self) -> usize {
+        self.log.len()
+    }
+
+    fn rollback(&mut self, at: usize) {
+        while self.log.len() > at {
+            let dst = self.log.pop().unwrap();
+            self.dst_owner[dst as usize] = 0;
+        }
+    }
+}
+
+/// Looping-algorithm route construction for an N-port Benes network —
+/// proves constructively that a full permutation is routable (used by
+/// tests to back the model's "always routable" assumption).
+///
+/// Returns the outer-stage switch settings (`true` = crossed) for the
+/// first and last stage plus the two recursive sub-permutations, or the
+/// full set of per-stage settings flattened for verification.
+pub fn benes_route_permutation(perm: &[usize]) -> Option<Vec<Vec<bool>>> {
+    let n = perm.len();
+    if n == 1 {
+        return Some(vec![]);
+    }
+    if !n.is_power_of_two() {
+        return None;
+    }
+    // Validate permutation.
+    let mut seen = vec![false; n];
+    for &d in perm {
+        if d >= n || seen[d] {
+            return None;
+        }
+        seen[d] = true;
+    }
+    route_rec(perm).map(|stages| stages)
+}
+
+fn route_rec(perm: &[usize]) -> Option<Vec<Vec<bool>>> {
+    let n = perm.len();
+    if n == 2 {
+        // Single 2×2 switch.
+        return Some(vec![vec![perm[0] == 1]]);
+    }
+    let half = n / 2;
+    // Looping algorithm: 2-color the constraint graph so that the two
+    // inputs of each ingress switch and the two outputs of each egress
+    // switch take different subnetworks.
+    let mut in_color = vec![usize::MAX; n]; // subnetwork per input
+    let inv = {
+        let mut inv = vec![0usize; n];
+        for (i, &d) in perm.iter().enumerate() {
+            inv[d] = i;
+        }
+        inv
+    };
+    for start in 0..n {
+        if in_color[start] != usize::MAX {
+            continue;
+        }
+        // Walk the constraint cycle: ingress-pair edges (i, i^1) force
+        // opposite colors; egress-pair edges (perm[i], perm[i]^1) force
+        // their source inputs to opposite colors.  Cycles alternate the
+        // two edge types, so this one-directional walk 2-colors them.
+        let mut v = start;
+        let mut cv = 0usize;
+        loop {
+            if in_color[v] != usize::MAX {
+                break; // cycle closed
+            }
+            in_color[v] = cv;
+            let p = v ^ 1; // ingress partner: opposite subnetwork
+            if in_color[p] != usize::MAX {
+                break;
+            }
+            in_color[p] = 1 - cv;
+            // Egress sibling of p's destination: its source must take
+            // the opposite of p's color, i.e. `cv` again.
+            v = inv[perm[p] ^ 1];
+            // cv unchanged: color(v) = 1 - color(p) = cv
+        }
+    }
+    // Validate the 2-coloring against both constraint families — the
+    // routability proof for this permutation.
+    for i in (0..n).step_by(2) {
+        if in_color[i] == in_color[i + 1] {
+            return None;
+        }
+    }
+    for o in (0..n).step_by(2) {
+        if in_color[inv[o]] == in_color[inv[o + 1]] {
+            return None;
+        }
+    }
+    // Build sub-permutations. Input i goes to subnetwork in_color[i] at
+    // sub-port i/2; it must emerge at sub-port perm[i]/2.
+    let mut sub = [vec![usize::MAX; half], vec![usize::MAX; half]];
+    let mut first = vec![false; half];
+    let mut last = vec![false; half];
+    for i in 0..n {
+        let color = in_color[i];
+        debug_assert!(color <= 1);
+        sub[color][i / 2] = perm[i] / 2;
+        if i % 2 != color {
+            first[i / 2] = true; // ingress switch crossed for this pair
+        }
+        if perm[i] % 2 != color {
+            last[perm[i] / 2] = true;
+        }
+    }
+    if sub[0].iter().any(|&v| v == usize::MAX) || sub[1].iter().any(|&v| v == usize::MAX) {
+        return None; // coloring failed (shouldn't happen)
+    }
+    let s0 = route_rec(&sub[0])?;
+    let s1 = route_rec(&sub[1])?;
+    let mut out = vec![first];
+    // Interleave sub-network stages for bookkeeping (structure is only
+    // used to confirm success, not simulated cycle by cycle).
+    for (a, b) in s0.into_iter().zip(s1.into_iter()) {
+        let mut merged = a;
+        merged.extend(b);
+        out.push(merged);
+    }
+    out.push(last);
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::XorShift;
+
+    #[test]
+    fn model_accepts_any_partial_permutation() {
+        let mut b = Benes::new(64);
+        let mut rng = XorShift::new(5);
+        for _ in 0..20 {
+            b.begin_slice();
+            let mut perm: Vec<usize> = (0..64).collect();
+            rng.shuffle(&mut perm);
+            for i in 0..32 {
+                assert!(b.try_connect(i, perm[i]));
+            }
+        }
+    }
+
+    #[test]
+    fn destination_exclusive_multicast_idempotent() {
+        let mut b = Benes::new(8);
+        b.begin_slice();
+        assert!(b.try_connect(0, 3));
+        assert!(b.try_connect(0, 4), "multicast via copy network");
+        assert!(!b.try_connect(1, 3));
+    }
+
+    #[test]
+    fn looping_algorithm_routes_identity_and_reversal() {
+        let id: Vec<usize> = (0..8).collect();
+        assert!(benes_route_permutation(&id).is_some());
+        let rev: Vec<usize> = (0..8).rev().collect();
+        assert!(benes_route_permutation(&rev).is_some());
+    }
+
+    #[test]
+    fn looping_algorithm_routes_random_permutations() {
+        // Constructive proof behind the model: every random permutation
+        // must be routable on a Benes network.
+        let mut rng = XorShift::new(11);
+        for n in [4usize, 8, 16, 32, 64] {
+            for _ in 0..20 {
+                let mut perm: Vec<usize> = (0..n).collect();
+                rng.shuffle(&mut perm);
+                assert!(
+                    benes_route_permutation(&perm).is_some(),
+                    "perm {perm:?} must route on Benes"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn looping_rejects_non_permutations() {
+        assert!(benes_route_permutation(&[0, 0, 1, 2]).is_none());
+        assert!(benes_route_permutation(&[0, 1, 2]).is_none()); // not pow2
+        assert!(benes_route_permutation(&[4, 1, 2, 3]).is_none()); // oob
+    }
+
+    #[test]
+    fn rollback() {
+        let mut b = Benes::new(8);
+        b.begin_slice();
+        let cp = b.checkpoint();
+        assert!(b.try_connect(0, 1));
+        b.rollback(cp);
+        assert!(b.try_connect(2, 1), "dst freed after rollback");
+    }
+}

@@ -1,0 +1,267 @@
+//! Butterfly-k network (paper §3.2, Fig. 6).
+//!
+//! An N-port Butterfly has s = log₂N stages of 2×2 switches.  Between a
+//! given (src, dst) pair there is a *unique* path per copy: after stage
+//! t the path's wire index has its top t bits from `dst` and the low
+//! (s−t) bits from `src` (destination-tag routing).  Contention happens
+//! when two connections need the same intermediate wire; the expansion
+//! factor k provides k parallel copies, multiplying the combinatorial
+//! power (the paper shows k = 2 recovers the busy-pod percentage of a
+//! full crossbar, Table 1).
+//!
+//! Multicast: two routes from the same source share their common path
+//! prefix (same wire, same owner ⇒ same data), branching where the
+//! destination bits diverge — the natural Butterfly multicast.
+
+use super::Fabric;
+use crate::util::ilog2;
+
+/// Occupancy-tracked Butterfly-k fabric.
+pub struct Butterfly {
+    ports: usize,
+    stages: usize,
+    copies: usize,
+    /// Owner of each wire: `occ[copy][boundary * ports + wire]`, where
+    /// boundary 1..=stages is the wire level after each switching stage
+    /// (boundary 0 is the source port itself, never contended).
+    /// Owner encoding: 0 = free, src+1 otherwise.  u16 cells keep the
+    /// whole window of slice states cache-resident (EXPERIMENTS §Perf).
+    occ: Vec<Vec<u16>>,
+    /// Undo log of (copy, cell) — previous value is always 0 (we only
+    /// log transitions from free).
+    log: Vec<(u32, u32)>,
+}
+
+impl Butterfly {
+    /// Create an N-port Butterfly with `expansion` copies.
+    pub fn new(ports: usize, expansion: usize) -> Self {
+        assert!(ports.is_power_of_two() && ports >= 2);
+        assert!(expansion >= 1);
+        assert!(ports <= u16::MAX as usize, "u16 owner encoding");
+        let stages = ilog2(ports) as usize;
+        Butterfly {
+            ports,
+            stages,
+            copies: expansion,
+            occ: vec![vec![0u16; stages * ports]; expansion],
+            log: Vec::with_capacity(1024),
+        }
+    }
+
+    /// Wire index reached after stage `t` (1-based) en route src→dst:
+    /// top `t` bits of dst, bottom `s−t` bits of src.
+    #[inline]
+    fn wire_after(&self, src: usize, dst: usize, t: usize) -> usize {
+        let s = self.stages;
+        let top_mask = !0usize << (s - t) & (self.ports - 1);
+        (dst & top_mask) | (src & !top_mask)
+    }
+
+    /// Try to route within one copy; returns false without mutating on
+    /// conflict.
+    fn try_copy(&mut self, copy: usize, src: usize, dst: usize) -> bool {
+        let owner = src as u16 + 1;
+        // First pass: check all boundaries (early exit on conflict).
+        let occ = &self.occ[copy];
+        for t in 1..=self.stages {
+            let w = self.wire_after(src, dst, t);
+            let cur = occ[(t - 1) * self.ports + w];
+            if cur != 0 && cur != owner {
+                return false;
+            }
+        }
+        // Second pass: commit, logging newly claimed wires.
+        for t in 1..=self.stages {
+            let w = self.wire_after(src, dst, t);
+            let cell = (t - 1) * self.ports + w;
+            if self.occ[copy][cell] == 0 {
+                self.log.push((copy as u32, cell as u32));
+                self.occ[copy][cell] = owner;
+            }
+        }
+        true
+    }
+}
+
+impl Fabric for Butterfly {
+    fn ports(&self) -> usize {
+        self.ports
+    }
+
+    fn begin_slice(&mut self) {
+        for copy in &mut self.occ {
+            copy.iter_mut().for_each(|c| *c = 0);
+        }
+        self.log.clear();
+    }
+
+    fn try_connect(&mut self, src: usize, dst: usize) -> bool {
+        debug_assert!(src < self.ports && dst < self.ports);
+        for copy in 0..self.copies {
+            if self.try_copy(copy, src, dst) {
+                return true;
+            }
+        }
+        false
+    }
+
+    fn checkpoint(&self) -> usize {
+        self.log.len()
+    }
+
+    fn rollback(&mut self, at: usize) {
+        while self.log.len() > at {
+            let (copy, cell) = self.log.pop().unwrap();
+            self.occ[copy as usize][cell as usize] = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{prop::forall, XorShift};
+
+    #[test]
+    fn identity_permutation_routes_on_one_copy() {
+        let mut b = Butterfly::new(8, 1);
+        b.begin_slice();
+        for i in 0..8 {
+            assert!(b.try_connect(i, i), "identity route {i}");
+        }
+    }
+
+    #[test]
+    fn bit_reversal_permutation_blocks_standard_butterfly() {
+        // Bit-reversal is a classic Butterfly-hostile permutation.
+        let mut b = Butterfly::new(8, 1);
+        b.begin_slice();
+        let rev3 = |x: usize| ((x & 1) << 2) | (x & 2) | ((x >> 2) & 1);
+        let ok = (0..8).all(|i| b.try_connect(i, rev3(i)));
+        assert!(!ok, "bit reversal should conflict somewhere on k=1");
+    }
+
+    #[test]
+    fn expansion_recovers_conflicting_pair() {
+        // (0→0) and (4→1) need the same stage-1 wire (wire 0) in this
+        // wiring — the Fig. 6 phenomenon: blocked on a standard
+        // Butterfly, routable with expansion 2.
+        let mut b1 = Butterfly::new(8, 1);
+        b1.begin_slice();
+        assert!(b1.try_connect(0, 0));
+        assert!(!b1.try_connect(4, 1), "should contend on k=1");
+
+        let mut b2 = Butterfly::new(8, 2);
+        b2.begin_slice();
+        assert!(b2.try_connect(0, 0));
+        assert!(b2.try_connect(4, 1), "expansion 2 must route the pair");
+    }
+
+    #[test]
+    fn multicast_shares_prefix() {
+        let mut b = Butterfly::new(8, 1);
+        b.begin_slice();
+        // Same source to two destinations: shares stage-1 wires.
+        assert!(b.try_connect(2, 0));
+        assert!(b.try_connect(2, 1), "multicast from same source");
+        // A different source needing one of those wires now fails.
+        // src=6 → dst=0 shares the boundary wires of top-bit 0 region.
+        assert!(!b.try_connect(6, 0));
+    }
+
+    #[test]
+    fn rollback_restores_state() {
+        let mut b = Butterfly::new(16, 2);
+        b.begin_slice();
+        assert!(b.try_connect(0, 5));
+        let cp = b.checkpoint();
+        assert!(b.try_connect(1, 6));
+        assert!(b.try_connect(2, 7));
+        b.rollback(cp);
+        // Rolled-back wires are free again: the exact same routes re-route.
+        assert!(b.try_connect(1, 6));
+        assert!(b.try_connect(2, 7));
+    }
+
+    #[test]
+    fn wire_after_interpolates_bits() {
+        let b = Butterfly::new(16, 1);
+        // src=0b0110, dst=0b1001, s=4
+        let src = 0b0110;
+        let dst = 0b1001;
+        assert_eq!(b.wire_after(src, dst, 1), 0b1110); // 1 dst bit
+        assert_eq!(b.wire_after(src, dst, 2), 0b1010); // 2 dst bits
+        assert_eq!(b.wire_after(src, dst, 3), 0b1000);
+        assert_eq!(b.wire_after(src, dst, 4), dst);
+    }
+
+    #[test]
+    fn expansion_monotonically_improves_routability() {
+        // Property: any random permutation that routes on k copies also
+        // routes on k+1 (greedy copy order preserves earlier solutions),
+        // and success rate grows with k.
+        let count_routed = |k: usize, seed: u64| {
+            let mut rng = XorShift::new(seed);
+            let mut perm: Vec<usize> = (0..64).collect();
+            rng.shuffle(&mut perm);
+            let mut b = Butterfly::new(64, k);
+            b.begin_slice();
+            (0..64).filter(|&i| b.try_connect(i, perm[i])).count()
+        };
+        let mut improved = 0;
+        for seed in 1..=20u64 {
+            let r1 = count_routed(1, seed);
+            let r2 = count_routed(2, seed);
+            let r4 = count_routed(4, seed);
+            assert!(r2 >= r1, "k=2 beat by k=1 (seed {seed})");
+            assert!(r4 >= r2, "k=4 beat by k=2 (seed {seed})");
+            if r2 > r1 {
+                improved += 1;
+            }
+        }
+        assert!(improved > 10, "expansion should usually help");
+    }
+
+    #[test]
+    fn prop_routed_paths_never_share_wires_across_sources() {
+        // Invariant: after any sequence of successful connects, every
+        // occupied wire has exactly one owner, and every committed path's
+        // wires are owned by its source.
+        forall(50, |rng: &mut XorShift| {
+            let ports = *rng.choose(&[8usize, 16, 32]);
+            let k = rng.range(1, 3);
+            let mut b = Butterfly::new(ports, k);
+            b.begin_slice();
+            let mut committed: Vec<(usize, usize)> = vec![];
+            for _ in 0..ports {
+                let s = rng.below(ports);
+                let d = rng.below(ports);
+                if b.try_connect(s, d) {
+                    committed.push((s, d));
+                }
+            }
+            // Re-check: every committed route must see all its wires
+            // owned by itself in at least one copy.
+            for &(s, d) in &committed {
+                let mut ok_in_some_copy = false;
+                'copy: for copy in 0..k {
+                    for t in 1..=b.stages {
+                        let w = b.wire_after(s, d, t);
+                        let cell = (t - 1) * ports + w;
+                        let owner = b.occ[copy][cell];
+                        if owner != s as u16 + 1 {
+                            continue 'copy;
+                        }
+                    }
+                    ok_in_some_copy = true;
+                    break;
+                }
+                crate::prop_assert!(
+                    ok_in_some_copy,
+                    "route ({s},{d}) lost its wires (ports={ports}, k={k})"
+                );
+            }
+            Ok(())
+        });
+    }
+}

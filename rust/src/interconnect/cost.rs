@@ -1,0 +1,94 @@
+//! Interconnect traffic & power cost accounting (feeds the §5 power
+//! model and Table 3's interconnect share).
+//!
+//! SOSA runs three networks (Fig. 7): X (activations, bank→pod),
+//! W (weights, bank→pod) and P (partial sums, bank→pod and pod→bank).
+//! Per-cycle per-pod traffic in steady state:
+//!
+//! * X: `r` activation bytes (one per array row),
+//! * W: `c` weight bytes (an `r×c` tile loaded over an `r`-cycle slice),
+//! * P: `c · psum_bytes` in + `c · psum_bytes` out.
+
+use super::Kind;
+use crate::arch::config::Precision;
+
+/// Per-cycle interconnect traffic for one pod (bytes).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PodTraffic {
+    /// Activation bytes/cycle on the X network.
+    pub x: f64,
+    /// Weight bytes/cycle on the W network (amortized over the slice).
+    pub w: f64,
+    /// Psum bytes/cycle on the P network (in + out).
+    pub p: f64,
+}
+
+impl PodTraffic {
+    /// Steady-state traffic for an `r×c` pod.
+    pub fn steady_state(r: usize, c: usize, prec: Precision) -> Self {
+        PodTraffic {
+            x: r as f64 * prec.operand_bytes as f64,
+            w: c as f64 * prec.operand_bytes as f64,
+            p: 2.0 * c as f64 * prec.psum_bytes as f64,
+        }
+    }
+
+    /// Total bytes per cycle across the three networks.
+    pub fn total(&self) -> f64 {
+        self.x + self.w + self.p
+    }
+}
+
+/// Interconnect power in Watts for `pods` pods at `freq_ghz`.
+///
+/// mW/byte is per byte of per-cycle bandwidth at 1 GHz and scales
+/// linearly with frequency.
+pub fn interconnect_power_w(
+    kind: Kind,
+    pods: usize,
+    traffic: PodTraffic,
+    freq_ghz: f64,
+) -> f64 {
+    let mw_per_byte = kind.mw_per_byte(pods.max(2));
+    mw_per_byte * traffic.total() * pods as f64 * freq_ghz * 1e-3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steady_state_traffic_32x32_int8() {
+        let t = PodTraffic::steady_state(32, 32, Precision::INT8);
+        assert_eq!(t.x, 32.0);
+        assert_eq!(t.w, 32.0);
+        assert_eq!(t.p, 128.0);
+        assert_eq!(t.total(), 192.0);
+    }
+
+    #[test]
+    fn butterfly2_power_at_baseline_matches_calibration() {
+        // 256 pods × 192 B/cycle × 0.52 mW/B ≈ 25.6 W — the interconnect
+        // share of Table 2's 260 W peak power at 32×32.
+        let t = PodTraffic::steady_state(32, 32, Precision::INT8);
+        let w = interconnect_power_w(Kind::Butterfly { expansion: 2 }, 256, t, 1.0);
+        assert!((w - 25.5).abs() < 1.0, "got {w}");
+    }
+
+    #[test]
+    fn crossbar_power_is_2_3x_butterfly_or_more() {
+        // §6.2: crossbar needs ~2.3× more peak power than the others.
+        let t = PodTraffic::steady_state(32, 32, Precision::INT8);
+        let xbar = interconnect_power_w(Kind::Crossbar, 256, t, 1.0);
+        let bfly = interconnect_power_w(Kind::Butterfly { expansion: 2 }, 256, t, 1.0);
+        assert!(xbar / bfly > 2.3, "xbar {xbar} vs bfly {bfly}");
+    }
+
+    #[test]
+    fn power_scales_with_frequency() {
+        let t = PodTraffic::steady_state(32, 32, Precision::INT8);
+        let a = interconnect_power_w(Kind::Benes, 64, t, 1.0);
+        let b = interconnect_power_w(Kind::Benes, 64, t, 2.0);
+        assert!((b / a - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,106 @@
+//! Full crossbar: strictly non-blocking, native multicast, but N² cost
+//! (§3.2 rejects it on power; Fig. 12a shows it winning throughput by
+//! only ~4% at 2.3× the interconnect power).
+
+use super::Fabric;
+
+/// Crossbar fabric.  Any source can reach any free destination; a
+/// destination port accepts exactly one source per slice.
+pub struct Crossbar {
+    ports: usize,
+    /// dst → src+1 (0 = free).
+    dst_owner: Vec<u32>,
+    log: Vec<u32>, // undo log of claimed dsts
+}
+
+impl Crossbar {
+    /// New N-port crossbar.
+    pub fn new(ports: usize) -> Self {
+        Crossbar { ports, dst_owner: vec![0; ports], log: vec![] }
+    }
+}
+
+impl Fabric for Crossbar {
+    fn ports(&self) -> usize {
+        self.ports
+    }
+
+    fn begin_slice(&mut self) {
+        self.dst_owner.iter_mut().for_each(|d| *d = 0);
+        self.log.clear();
+    }
+
+    fn try_connect(&mut self, src: usize, dst: usize) -> bool {
+        debug_assert!(src < self.ports && dst < self.ports);
+        let cur = self.dst_owner[dst];
+        if cur != 0 {
+            // A destination already fed by the same source is a no-op
+            // (idempotent multicast leg); a different source conflicts.
+            return cur == src as u32 + 1;
+        }
+        self.dst_owner[dst] = src as u32 + 1;
+        self.log.push(dst as u32);
+        true
+    }
+
+    fn checkpoint(&self) -> usize {
+        self.log.len()
+    }
+
+    fn rollback(&mut self, at: usize) {
+        while self.log.len() > at {
+            let dst = self.log.pop().unwrap();
+            self.dst_owner[dst as usize] = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::XorShift;
+
+    #[test]
+    fn any_permutation_routes() {
+        let mut x = Crossbar::new(64);
+        let mut rng = XorShift::new(1);
+        for _ in 0..10 {
+            x.begin_slice();
+            let mut perm: Vec<usize> = (0..64).collect();
+            rng.shuffle(&mut perm);
+            assert!((0..64).all(|i| x.try_connect(i, perm[i])));
+        }
+    }
+
+    #[test]
+    fn multicast_unlimited() {
+        let mut x = Crossbar::new(8);
+        x.begin_slice();
+        for d in 0..8 {
+            assert!(x.try_connect(3, d), "one source to all destinations");
+        }
+    }
+
+    #[test]
+    fn destination_port_is_exclusive() {
+        let mut x = Crossbar::new(8);
+        x.begin_slice();
+        assert!(x.try_connect(1, 5));
+        assert!(!x.try_connect(2, 5), "dst owned by another source");
+        assert!(x.try_connect(1, 5), "same-source repeat is idempotent");
+    }
+
+    #[test]
+    fn rollback() {
+        let mut x = Crossbar::new(8);
+        x.begin_slice();
+        assert!(x.try_connect(0, 0));
+        let cp = x.checkpoint();
+        assert!(x.try_connect(1, 1));
+        x.rollback(cp);
+        assert!(x.try_connect(2, 1), "rolled-back dst is free");
+        assert!(!x.try_connect(2, 0), "pre-checkpoint route persists");
+        // src 2 owns dst 1; dst 0 still owned by src 0
+        assert!(x.try_connect(0, 0));
+    }
+}

@@ -1,0 +1,196 @@
+//! Binary H-tree (§3.2's other low-cost baseline [33, 54]).
+//!
+//! N leaves (pod/bank endpoints) under a complete binary tree; a
+//! connection climbs from the source leaf to the lowest common ancestor
+//! and descends to the destination.  Each directed tree edge carries one
+//! connection per slice (same-source sharing allowed).  The root edge is
+//! the bisection: exactly one crossing connection per direction per
+//! slice, which is why §3.2 rules the H-tree out for hundreds of pods
+//! (the scaled-up N-replicated variant costs N², also rejected).
+
+use super::Fabric;
+
+/// H-tree fabric.
+pub struct HTree {
+    ports: usize,
+    levels: usize,
+    /// Directed edge owners: `up[node]` for child→parent,
+    /// `down[node]` parent→child, indexed by the child node id in a
+    /// heap-style numbering (internal nodes 1..ports, leaves
+    /// ports..2*ports).
+    up: Vec<u32>,
+    down: Vec<u32>,
+    log: Vec<(bool, u32, u32)>,
+}
+
+impl HTree {
+    /// New H-tree over `ports` leaves.
+    pub fn new(ports: usize) -> Self {
+        assert!(ports.is_power_of_two());
+        HTree {
+            ports,
+            levels: crate::util::ilog2(ports) as usize,
+            up: vec![0; 2 * ports],
+            down: vec![0; 2 * ports],
+            log: vec![],
+        }
+    }
+
+    fn claim(&mut self, upward: bool, node: usize, owner: u32) -> bool {
+        let cell = if upward { &mut self.up[node] } else { &mut self.down[node] };
+        if *cell != 0 && *cell != owner {
+            return false;
+        }
+        if *cell == 0 {
+            self.log.push((upward, node as u32, *cell));
+            *cell = owner;
+        }
+        true
+    }
+}
+
+impl Fabric for HTree {
+    fn ports(&self) -> usize {
+        self.ports
+    }
+
+    fn begin_slice(&mut self) {
+        self.up.iter_mut().for_each(|c| *c = 0);
+        self.down.iter_mut().for_each(|c| *c = 0);
+        self.log.clear();
+    }
+
+    fn try_connect(&mut self, src: usize, dst: usize) -> bool {
+        debug_assert!(src < self.ports && dst < self.ports);
+        if src == dst {
+            return true; // same leaf: local, no tree edges
+        }
+        let owner = src as u32 + 1;
+        let cp = self.checkpoint();
+        // Heap ids of the leaves.
+        let mut a = self.ports + src;
+        let mut b = self.ports + dst;
+        // Collect the descent path while finding the LCA.
+        let mut down_path = [0usize; 64];
+        let mut down_len = 0;
+        while a != b {
+            if a > b {
+                // climb from source side
+                if !self.claim(true, a, owner) {
+                    self.rollback(cp);
+                    return false;
+                }
+                a /= 2;
+            } else {
+                down_path[down_len] = b;
+                down_len += 1;
+                b /= 2;
+            }
+        }
+        for i in (0..down_len).rev() {
+            if !self.claim(false, down_path[i], owner) {
+                self.rollback(cp);
+                return false;
+            }
+        }
+        let _ = self.levels;
+        true
+    }
+
+    fn checkpoint(&self) -> usize {
+        self.log.len()
+    }
+
+    fn rollback(&mut self, at: usize) {
+        while self.log.len() > at {
+            let (upward, node, prev) = self.log.pop().unwrap();
+            if upward {
+                self.up[node as usize] = prev;
+            } else {
+                self.down[node as usize] = prev;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::XorShift;
+
+    #[test]
+    fn sibling_leaves_route() {
+        let mut t = HTree::new(8);
+        t.begin_slice();
+        assert!(t.try_connect(0, 1));
+        assert!(t.try_connect(2, 3));
+        assert!(t.try_connect(4, 5));
+    }
+
+    #[test]
+    fn root_is_single_crossing_per_direction() {
+        let mut t = HTree::new(8);
+        t.begin_slice();
+        // 0→4 crosses the root left→right.
+        assert!(t.try_connect(0, 4));
+        // 1→5 would need the same root-descent edge direction: the
+        // up-path shares the root's right child down edge.
+        assert!(!t.try_connect(1, 5), "root bisection is 1");
+        // The reverse direction is a different directed edge.
+        assert!(t.try_connect(4, 0));
+    }
+
+    #[test]
+    fn multicast_shares_upward_path() {
+        let mut t = HTree::new(8);
+        t.begin_slice();
+        assert!(t.try_connect(0, 4));
+        // Same source crossing again to a different right-half leaf:
+        // shares the up path but needs a different down edge under the
+        // root's right child for leaf 6 vs 4 — the subtree edge differs,
+        // but the root→right-child down edge is shared (same owner): ok.
+        assert!(t.try_connect(0, 6));
+        // Different source to the right half: up path to root conflicts
+        // at the root's right-child down edge (owned by src 0).
+        assert!(!t.try_connect(2, 5));
+    }
+
+    #[test]
+    fn random_permutations_show_heavy_contention() {
+        let mut t = HTree::new(64);
+        let mut rng = XorShift::new(17);
+        let mut routed = 0usize;
+        let mut total = 0usize;
+        for _ in 0..20 {
+            t.begin_slice();
+            let mut perm: Vec<usize> = (0..64).collect();
+            rng.shuffle(&mut perm);
+            for i in 0..64 {
+                total += 1;
+                if t.try_connect(i, perm[i]) {
+                    routed += 1;
+                }
+            }
+        }
+        let rate = routed as f64 / total as f64;
+        assert!(rate < 0.6, "H-tree should contend hard, rate={rate}");
+    }
+
+    #[test]
+    fn rollback_frees_edges() {
+        let mut t = HTree::new(8);
+        t.begin_slice();
+        let cp = t.checkpoint();
+        assert!(t.try_connect(0, 4));
+        t.rollback(cp);
+        assert!(t.try_connect(1, 5), "root edges freed");
+    }
+
+    #[test]
+    fn same_leaf_connection_is_free() {
+        let mut t = HTree::new(8);
+        t.begin_slice();
+        assert!(t.try_connect(3, 3));
+        assert_eq!(t.checkpoint(), 0, "no edges consumed");
+    }
+}

@@ -1,0 +1,212 @@
+//! 2-D mesh with XY dimension-ordered routing (§3.2's low-cost but
+//! bisection-limited baseline [9, 10, 22, 51]).
+//!
+//! Pods and banks are co-located: endpoint `i` sits at grid node
+//! `(i % side, i / side)` of a `side × side` mesh (`side = √N`).  A
+//! connection occupies every directed link on its X-then-Y path for the
+//! whole slice; each directed link carries one connection per slice
+//! (same-source sharing allowed — multicast along a common prefix).
+//! The limited bisection (√N links per cut vs N/2 for Butterfly) is what
+//! makes dense pod↔bank permutations fail here.
+
+use super::Fabric;
+
+/// XY-routed mesh fabric.
+pub struct Mesh {
+    ports: usize,
+    side: usize,
+    /// Directed link owners, 0 = free else src+1.
+    /// Horizontal: `h[(y * (side-1) + xmin) * 2 + dir]`;
+    /// dir 0 = east (x→x+1), 1 = west.
+    h: Vec<u32>,
+    /// Vertical: `v[(x * (side-1) + ymin) * 2 + dir]`; dir 0 = south.
+    v: Vec<u32>,
+    log: Vec<(bool, u32, u32)>, // (is_vertical, index, prev)
+}
+
+impl Mesh {
+    /// New mesh over `ports` endpoints; `ports` must be a square of a
+    /// power of two side... in practice any power of two: non-square
+    /// counts use a `2^⌈s/2⌉ × 2^⌊s/2⌋` grid.
+    pub fn new(ports: usize) -> Self {
+        assert!(ports.is_power_of_two());
+        let side = 1usize << (crate::util::ilog2(ports).div_ceil(2));
+        let rows = ports / side;
+        // Allocate as if square with the larger side; unused rows idle.
+        let dim = side.max(rows);
+        Mesh {
+            ports,
+            side: dim,
+            h: vec![0; dim * (dim.saturating_sub(1)) * 2],
+            v: vec![0; dim * (dim.saturating_sub(1)) * 2],
+            log: vec![],
+        }
+    }
+
+    #[inline]
+    fn node(&self, p: usize) -> (usize, usize) {
+        (p % self.side, p / self.side)
+    }
+
+    fn claim(&mut self, vertical: bool, idx: usize, owner: u32) -> bool {
+        let cell = if vertical { &mut self.v[idx] } else { &mut self.h[idx] };
+        if *cell != 0 && *cell != owner {
+            return false;
+        }
+        if *cell == 0 {
+            self.log.push((vertical, idx as u32, *cell));
+            *cell = owner;
+        }
+        true
+    }
+
+    /// Directed horizontal link index between (x,y) and (x+1,y).
+    #[inline]
+    fn h_idx(&self, xmin: usize, y: usize, westward: bool) -> usize {
+        (y * (self.side - 1) + xmin) * 2 + westward as usize
+    }
+
+    /// Directed vertical link index between (x,y) and (x,y+1).
+    #[inline]
+    fn v_idx(&self, x: usize, ymin: usize, northward: bool) -> usize {
+        (x * (self.side - 1) + ymin) * 2 + northward as usize
+    }
+}
+
+impl Fabric for Mesh {
+    fn ports(&self) -> usize {
+        self.ports
+    }
+
+    fn begin_slice(&mut self) {
+        self.h.iter_mut().for_each(|c| *c = 0);
+        self.v.iter_mut().for_each(|c| *c = 0);
+        self.log.clear();
+    }
+
+    fn try_connect(&mut self, src: usize, dst: usize) -> bool {
+        debug_assert!(src < self.ports && dst < self.ports);
+        let owner = src as u32 + 1;
+        let (sx, sy) = self.node(src);
+        let (dx, dy) = self.node(dst);
+        let cp = self.checkpoint();
+        // X leg.
+        let (mut x, y) = (sx, sy);
+        while x != dx {
+            let (xmin, westward) = if dx > x { (x, false) } else { (x - 1, true) };
+            let idx = self.h_idx(xmin, y, westward);
+            if !self.claim(false, idx, owner) {
+                self.rollback(cp);
+                return false;
+            }
+            x = if dx > x { x + 1 } else { x - 1 };
+        }
+        // Y leg.
+        let mut yy = sy;
+        while yy != dy {
+            let (ymin, northward) = if dy > yy { (yy, false) } else { (yy - 1, true) };
+            let idx = self.v_idx(dx, ymin, northward);
+            if !self.claim(true, idx, owner) {
+                self.rollback(cp);
+                return false;
+            }
+            yy = if dy > yy { yy + 1 } else { yy - 1 };
+        }
+        true
+    }
+
+    fn checkpoint(&self) -> usize {
+        self.log.len()
+    }
+
+    fn rollback(&mut self, at: usize) {
+        while self.log.len() > at {
+            let (vertical, idx, prev) = self.log.pop().unwrap();
+            if vertical {
+                self.v[idx as usize] = prev;
+            } else {
+                self.h[idx as usize] = prev;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::XorShift;
+
+    #[test]
+    fn local_connection_trivially_routes() {
+        let mut m = Mesh::new(16);
+        m.begin_slice();
+        assert!(m.try_connect(5, 5)); // zero-length path
+        assert!(m.try_connect(0, 1));
+        assert!(m.try_connect(1, 0), "opposite direction link is separate");
+    }
+
+    #[test]
+    fn contended_link_blocks() {
+        let mut m = Mesh::new(16); // 4x4
+        m.begin_slice();
+        // 0→3 occupies the whole top row eastward.
+        assert!(m.try_connect(0, 3));
+        // 1→2 needs the eastward link (1,0)-(2,0): blocked.
+        assert!(!m.try_connect(1, 2));
+        // Same-source prefix sharing: 0→2 rides 0→3's links.
+        assert!(m.try_connect(0, 2));
+    }
+
+    #[test]
+    fn bisection_limits_dense_permutations() {
+        // Crossing traffic: every left-half node sends to the right half
+        // on the same row — only side (=4) eastward row links per column
+        // cut, but also only one link per row segment, so at most one
+        // crossing route per row routes.
+        let mut m = Mesh::new(16);
+        m.begin_slice();
+        let mut ok = 0;
+        // All four row-0 nodes to the rightmost column of their row.
+        for y in 0..4 {
+            for x in 0..2 {
+                if m.try_connect(y * 4 + x, y * 4 + 3) {
+                    ok += 1;
+                }
+            }
+        }
+        assert!(ok <= 4, "at most one crossing per row, got {ok}");
+        assert!(ok >= 4, "one per row should route");
+    }
+
+    #[test]
+    fn random_permutation_success_below_crossbar() {
+        let mut m = Mesh::new(64);
+        let mut rng = XorShift::new(3);
+        let mut total = 0usize;
+        let mut routed = 0usize;
+        for _ in 0..20 {
+            m.begin_slice();
+            let mut perm: Vec<usize> = (0..64).collect();
+            rng.shuffle(&mut perm);
+            for i in 0..64 {
+                total += 1;
+                if m.try_connect(i, perm[i]) {
+                    routed += 1;
+                }
+            }
+        }
+        let rate = routed as f64 / total as f64;
+        assert!(rate < 0.9, "mesh should show contention, rate={rate}");
+        assert!(rate > 0.2, "mesh should route some traffic, rate={rate}");
+    }
+
+    #[test]
+    fn rollback_frees_links() {
+        let mut m = Mesh::new(16);
+        m.begin_slice();
+        let cp = m.checkpoint();
+        assert!(m.try_connect(0, 3));
+        m.rollback(cp);
+        assert!(m.try_connect(1, 2), "links freed by rollback");
+    }
+}

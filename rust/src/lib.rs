@@ -1,0 +1,48 @@
+//! # SOSA — Scale-out Systolic Arrays
+//!
+//! A reproduction of *Scale-out Systolic Arrays* (Yüzügüler et al., 2022):
+//! a multi-pod systolic-array DNN inference accelerator built on three
+//! pillars — optimal array granularity (32×32), a Butterfly-2 pod↔bank
+//! interconnect, and `r×r` activation tiling.
+//!
+//! The crate contains the full system the paper describes:
+//!
+//! * [`workloads`] — a DNN model zoo (ResNet/DenseNet/Inception-v3, BERT
+//!   family) expressed as GEMM-layer graphs with exact dimensions;
+//! * [`tiling`] — the paper's tiling schemes (§3.3) producing tile-op DAGs;
+//! * [`interconnect`] — Butterfly-k / Benes / Crossbar / Mesh / H-tree
+//!   models with real routing feasibility checks and cost models (§3.2);
+//! * [`scheduler`] — the offline greedy time-slice scheduler (§4.2);
+//! * [`sim`] — the slice-level timing simulation + memory/DRAM model;
+//! * [`analytic`] — the fast isopower design-space-exploration model
+//!   behind Fig. 5;
+//! * [`power`] — the calibrated energy/power model (§5, Table 2/3);
+//! * [`coordinator`] — single- and multi-tenant serving frontend (§6.1);
+//! * [`runtime`] — the XLA/PJRT functional runtime executing the AOT
+//!   Pallas/JAX tile artifacts from `artifacts/`;
+//! * [`e2e`] — functional execution of a schedule through the runtime,
+//!   validating that tiling + scheduling preserve numerics;
+//! * [`experiments`] — regeneration of every table and figure in §6.
+//!
+//! Python/JAX runs only at build time (`make artifacts`); the serving path
+//! is pure Rust + PJRT.
+
+pub mod analytic;
+pub mod arch;
+pub mod coordinator;
+pub mod e2e;
+pub mod error;
+pub mod experiments;
+pub mod interconnect;
+pub mod power;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod stats;
+pub mod testutil;
+pub mod tiling;
+pub mod util;
+pub mod workloads;
+
+pub use arch::{ArchConfig, ArrayDims};
+pub use error::{Error, Result};

@@ -1,0 +1,155 @@
+//! `sosa` — CLI for the Scale-out Systolic Arrays reproduction.
+//!
+//! Subcommands:
+//!   simulate   — run one benchmark on a configuration, print metrics
+//!   serve      — multi-tenant serving over a request list
+//!   e2e        — functional check: scheduled tile ops on PJRT vs ref
+//!   list       — list benchmark models
+//!
+//! (Experiments reproducing the paper's tables/figures live in the
+//! `sosa-experiments` binary.)
+
+use sosa::arch::{ArchConfig, ArrayDims};
+use sosa::coordinator::{Coordinator, Request};
+use sosa::interconnect::Kind;
+use sosa::power::TDP_W;
+use sosa::sim::{simulate, SimOptions};
+use sosa::util::cli::Args;
+use sosa::workloads::zoo;
+
+fn parse_array(s: &str) -> ArrayDims {
+    let (r, c) = s.split_once('x').expect("array as RxC, e.g. 32x32");
+    ArrayDims::new(r.parse().expect("rows"), c.parse().expect("cols"))
+}
+
+fn parse_interconnect(s: &str) -> Kind {
+    match s.to_lowercase().as_str() {
+        "butterfly" | "butterfly2" => Kind::Butterfly { expansion: 2 },
+        "butterfly1" => Kind::Butterfly { expansion: 1 },
+        "butterfly4" => Kind::Butterfly { expansion: 4 },
+        "butterfly8" => Kind::Butterfly { expansion: 8 },
+        "benes" => Kind::Benes,
+        "crossbar" => Kind::Crossbar,
+        "mesh" => Kind::Mesh,
+        "htree" => Kind::HTree,
+        other => panic!("unknown interconnect {other}"),
+    }
+}
+
+fn config_from(args: &Args) -> ArchConfig {
+    let array = parse_array(args.get_or("array", "32x32"));
+    let pods: usize = args.get_parse("pods").unwrap_or(256);
+    let mut cfg = ArchConfig::with_array(array, pods);
+    if let Some(icn) = args.get("interconnect") {
+        cfg.interconnect = parse_interconnect(icn);
+    }
+    if let Some(kb) = args.get_parse::<usize>("bank-kb") {
+        cfg.bank_kb = kb;
+    }
+    cfg.validate().expect("invalid configuration");
+    cfg
+}
+
+fn cmd_simulate(args: &Args) {
+    let cfg = config_from(args);
+    let name = args.get_or("model", "resnet50");
+    let batch: usize = args.get_parse("batch").unwrap_or(1);
+    let model = zoo::by_name(name).expect("unknown model").with_batch(batch);
+    let stats = simulate(&cfg, &model, &SimOptions::default());
+    println!("{} on {} pods of {} ({}):", model.name, cfg.num_pods, cfg.array, cfg.interconnect);
+    println!("  latency      : {:.3} ms", stats.exec_seconds(&cfg) * 1e3);
+    println!("  utilization  : {:.1} %", 100.0 * stats.utilization(&cfg));
+    println!("  busy pods    : {:.1} %", 100.0 * stats.busy_pods_frac(&cfg));
+    println!("  achieved     : {:.1} TOps/s", stats.achieved_ops(&cfg) / 1e12);
+    println!("  effective@{:.0}W: {:.1} TOps/s", TDP_W,
+             stats.effective_ops_at_tdp(&cfg, TDP_W) / 1e12);
+}
+
+fn cmd_serve(args: &Args) {
+    let cfg = config_from(args);
+    let models = args.get_or("models", "resnet152,bert-medium");
+    let batch: usize = args.get_parse("batch").unwrap_or(1);
+    let requests: Vec<Request> = models
+        .split(',')
+        .enumerate()
+        .map(|(i, n)| Request::new(i as u64, zoo::by_name(n).expect("unknown model"), batch))
+        .collect();
+    let mut coord = Coordinator::new(cfg);
+    if args.flag("single-tenant") {
+        coord = coord.single_tenant();
+    }
+    let rep = coord.serve(&requests);
+    println!("served {} requests in {:.3} ms — {:.1} TOps/s effective",
+             rep.completions.len(), rep.makespan_s * 1e3, rep.achieved_ops / 1e12);
+    for c in &rep.completions {
+        println!("  request {}: latency {:.3} ms ({:.2} GOps)",
+                 c.id, c.latency_s * 1e3, c.ops as f64 / 1e9);
+    }
+}
+
+fn cmd_e2e(args: &Args) {
+    // Reuse the example's logic through the library.
+    use sosa::e2e::{execute_tiled, LayerParams};
+    use sosa::runtime::{Mat, PjrtRuntime};
+    use sosa::scheduler::schedule;
+    use sosa::testutil::XorShift;
+    use sosa::tiling::{tile_model, Strategy};
+    use sosa::workloads::ModelGraph;
+
+    let dir = args.get_or("artifacts", "artifacts");
+    let rt = PjrtRuntime::open(dir).expect("run `make artifacts` first");
+    let (m, d_in, d_h, d_out) = (64usize, 128, 64, 32);
+    let mut rng = XorShift::new(1);
+    let params = vec![
+        LayerParams {
+            weights: Mat::from_fn(d_in, d_h, |_, _| rng.f32_pm1() * 0.2),
+            bias: (0..d_h).map(|_| rng.f32_pm1() * 0.1).collect(),
+            act: "relu",
+        },
+        LayerParams {
+            weights: Mat::from_fn(d_h, d_out, |_, _| rng.f32_pm1() * 0.2),
+            bias: (0..d_out).map(|_| rng.f32_pm1() * 0.1).collect(),
+            act: "relu",
+        },
+    ];
+    let mut g = ModelGraph::new("mlp");
+    let l1 = g.add("fc1", m, d_in, d_h, vec![]);
+    g.add("fc2", m, d_h, d_out, vec![l1]);
+    let prog = tile_model(&g, 32, 32, Strategy::RxR, 16);
+    let cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 16);
+    let sched = schedule(&cfg, &prog);
+    let x = Mat::from_fn(m, d_in, |_, _| rng.f32_pm1());
+    let rep = execute_tiled(&rt, &prog, &sched, &x, &params, 32, 32).expect("e2e");
+    let want = sosa::e2e::reference_mlp(&x, &params);
+    let diff = rep.output.max_abs_diff(&want);
+    println!("e2e: {} tile ops on PJRT, max |Δ| = {diff:.2e} — {}",
+             rep.tile_ops_executed, if diff < 1e-3 { "PASS" } else { "FAIL" });
+    assert!(diff < 1e-3);
+}
+
+fn cmd_list() {
+    for m in zoo::benchmarks() {
+        println!("{:20} {:7.2} GMACs  {:4} layers", m.name,
+                 m.total_macs() as f64 / 1e9, m.ops.len());
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("simulate") => cmd_simulate(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("e2e") => cmd_e2e(&args),
+        Some("list") => cmd_list(),
+        _ => {
+            eprintln!("usage: sosa <simulate|serve|e2e|list> [options]");
+            eprintln!("  simulate --model resnet50 --array 32x32 --pods 256 \\");
+            eprintln!("           [--interconnect butterfly2|benes|crossbar|mesh|htree]");
+            eprintln!("           [--batch N] [--bank-kb 256]");
+            eprintln!("  serve    --models resnet152,bert-medium [--single-tenant]");
+            eprintln!("  e2e      [--artifacts artifacts]");
+            eprintln!("  list");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! Calibrated power/energy model (paper §5, validated against Table 2).
+//!
+//! Constants come straight from the paper's synthesis + Cacti-P numbers:
+//! 0.4 pJ per MAC at 1 GHz (TSMC 28nm), 2.7 pJ/B for 256 KiB SRAM bank
+//! access, interconnect mW/byte per Table 1.  Peak power of a config is
+//!
+//! `P = P_mac + P_sram + P_icn + P_pp + P_ctrl`
+//!
+//! and reproduces Table 2's "Peak Power" column within ~3% for every
+//! array granularity (see `table2_peak_power_calibration`).
+
+use crate::arch::ArchConfig;
+use crate::interconnect::cost::{interconnect_power_w, PodTraffic};
+
+/// Energy per MAC operation, picojoules (§5, TSMC 28nm @ 1 GHz).
+pub const E_MAC_PJ: f64 = 0.4;
+/// SRAM bank access energy, picojoules per byte (§5, Cacti-P, 256 KiB).
+pub const E_SRAM_PJ_PER_BYTE: f64 = 2.7;
+/// Post-processor energy per lane per cycle, picojoules (SIMD ALU +
+/// local registers; sized to Table 3's 0.56% power share).
+pub const E_PP_PJ_PER_LANE: f64 = 0.18;
+/// Pod control/buffer overhead as a fraction of array power (Table 3:
+/// the systolic array is 97.58% of pod power, the rest is control).
+pub const POD_CTRL_FRAC: f64 = 0.0242;
+/// The paper's TDP envelope (§6, from the A100 product brief [14]).
+pub const TDP_W: f64 = 400.0;
+
+/// Component-wise peak power breakdown (Watts).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PowerBreakdown {
+    pub mac_w: f64,
+    pub sram_w: f64,
+    pub interconnect_w: f64,
+    pub post_processor_w: f64,
+    pub pod_ctrl_w: f64,
+}
+
+impl PowerBreakdown {
+    /// Total peak power.
+    pub fn total(&self) -> f64 {
+        self.mac_w + self.sram_w + self.interconnect_w + self.post_processor_w + self.pod_ctrl_w
+    }
+}
+
+/// Peak (100%-utilization) power model for a configuration.
+pub fn peak_power(cfg: &ArchConfig) -> PowerBreakdown {
+    let f = cfg.freq_ghz;
+    let pods = cfg.num_pods as f64;
+    let (r, c) = (cfg.array.r, cfg.array.c);
+    let traffic = PodTraffic::steady_state(r, c, cfg.precision);
+
+    let mac_w = cfg.total_pes() as f64 * E_MAC_PJ * f * 1e-3;
+    // Every interconnect byte is also an SRAM bank access on one side.
+    let sram_w = traffic.total() * pods * E_SRAM_PJ_PER_BYTE * f * 1e-3;
+    let interconnect_w = interconnect_power_w(cfg.interconnect, cfg.num_pods, traffic, f);
+    let post_processor_w =
+        cfg.num_post_processors as f64 * c as f64 * E_PP_PJ_PER_LANE * f * 1e-3;
+    let pod_ctrl_w = mac_w * POD_CTRL_FRAC;
+    PowerBreakdown { mac_w, sram_w, interconnect_w, post_processor_w, pod_ctrl_w }
+}
+
+/// Largest power-of-two pod count whose peak power fits under `tdp_w`
+/// (§6: "the largest power-of-two number that results in a peak power
+/// consumption smaller than the TDP").
+pub fn max_pods_under_tdp(template: &ArchConfig, tdp_w: f64) -> usize {
+    let mut pods = 1usize;
+    let mut best = 0usize;
+    // Cap the search: 2^20 pods is far beyond any feasible die.
+    while pods <= 1 << 20 {
+        let cfg = ArchConfig {
+            num_pods: pods,
+            num_banks: pods,
+            num_post_processors: pods,
+            ..template.clone()
+        };
+        if peak_power(&cfg).total() < tdp_w {
+            best = pods;
+        } else {
+            break;
+        }
+        pods <<= 1;
+    }
+    best
+}
+
+/// Throughput metrics derived from peak power (Table 2 columns).
+#[derive(Clone, Copy, Debug)]
+pub struct ThroughputAt {
+    /// Raw peak ops/s of the silicon.
+    pub raw_peak_ops: f64,
+    /// Peak power in Watts.
+    pub peak_power_w: f64,
+    /// Peak throughput normalized to the TDP budget
+    /// (`raw_peak × tdp / peak_power` — Table 2's "Peak Throughput
+    /// @400W").
+    pub peak_ops_at_tdp: f64,
+}
+
+/// Compute the Table 2 throughput normalization for a config.
+pub fn throughput_at_tdp(cfg: &ArchConfig, tdp_w: f64) -> ThroughputAt {
+    let p = peak_power(cfg).total();
+    let raw = cfg.peak_ops();
+    ThroughputAt {
+        raw_peak_ops: raw,
+        peak_power_w: p,
+        peak_ops_at_tdp: raw * tdp_w / p,
+    }
+}
+
+/// Effective throughput (ops/s) at the TDP: utilization × peak@TDP.
+pub fn effective_ops(cfg: &ArchConfig, utilization: f64, tdp_w: f64) -> f64 {
+    throughput_at_tdp(cfg, tdp_w).peak_ops_at_tdp * utilization
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ArrayDims;
+    use crate::interconnect::Kind;
+
+    fn cfg(r: usize, c: usize, pods: usize) -> ArchConfig {
+        ArchConfig::with_array(ArrayDims::new(r, c), pods)
+    }
+
+    #[test]
+    fn table2_peak_power_calibration() {
+        // Paper Table 2: (array, pods) → peak Watts.
+        let cases = [
+            (512usize, 512usize, 1usize, 113.2),
+            (256, 256, 8, 245.0),
+            (128, 128, 32, 283.1),
+            (64, 64, 128, 362.2),
+            (32, 32, 256, 260.2),
+            (16, 16, 512, 210.6),
+        ];
+        for (r, c, pods, paper_w) in cases {
+            let got = peak_power(&cfg(r, c, pods)).total();
+            let err = (got - paper_w).abs() / paper_w;
+            assert!(
+                err < 0.05,
+                "{r}x{c}/{pods}: model {got:.1} W vs paper {paper_w} W ({:.1}%)",
+                err * 100.0
+            );
+        }
+    }
+
+    #[test]
+    fn table2_pod_counts_from_tdp() {
+        // §6: pods = largest power of two under 400 W — Table 2 column 2.
+        let cases = [
+            (256usize, 256usize, 8usize),
+            (128, 128, 32),
+            (64, 64, 128),
+            (32, 32, 256),
+            (16, 16, 512),
+        ];
+        for (r, c, expected_pods) in cases {
+            let got = max_pods_under_tdp(&cfg(r, c, 1), TDP_W);
+            assert_eq!(got, expected_pods, "{r}x{c}");
+        }
+    }
+
+    #[test]
+    fn table2_peak_throughput_at_400w() {
+        // Table 2: 32×32 × 256 pods → 806 TOps/s @400 W;
+        // 512×512 × 1 → 1853 TOps/s @400 W.
+        let t = throughput_at_tdp(&cfg(32, 32, 256), TDP_W);
+        assert!((t.peak_ops_at_tdp / 1e12 - 806.0).abs() < 25.0, "{}", t.peak_ops_at_tdp / 1e12);
+        let t = throughput_at_tdp(&cfg(512, 512, 1), TDP_W);
+        assert!((t.peak_ops_at_tdp / 1e12 - 1853.0).abs() < 60.0, "{}", t.peak_ops_at_tdp / 1e12);
+    }
+
+    #[test]
+    fn larger_arrays_are_more_power_efficient() {
+        // §3.1: memory access grows linearly with dims, MACs
+        // quadratically — ops/W must increase with array size.
+        let mut prev = 0.0;
+        for (r, pods) in [(16usize, 512usize), (32, 256), (64, 128), (128, 32), (256, 8)] {
+            let c = cfg(r, r, pods);
+            let eff = c.peak_ops() / peak_power(&c).total();
+            assert!(eff > prev, "{r}x{r} eff {eff} should beat smaller arrays");
+            prev = eff;
+        }
+    }
+
+    #[test]
+    fn effective_ops_scales_with_utilization() {
+        let c = ArchConfig::baseline();
+        let half = effective_ops(&c, 0.5, TDP_W);
+        let full = effective_ops(&c, 1.0, TDP_W);
+        assert!((full / half - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mac_energy_dominates_at_large_arrays() {
+        let b = peak_power(&cfg(512, 512, 1));
+        assert!(b.mac_w / b.total() > 0.9);
+        let s = peak_power(&cfg(16, 16, 512));
+        assert!(s.sram_w / s.total() > 0.5, "small arrays pay SRAM tax");
+    }
+}

@@ -1,0 +1,211 @@
+//! AOT artifact manifest parsing.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.txt` with one line
+//! per artifact:
+//!
+//! ```text
+//! name=tile_gemm_psum_f32_32x32 file=tile_gemm_psum_f32_32x32.hlo.txt \
+//!     in=float32[32,32];float32[32,32];float32[32,32] out=float32[32,32]
+//! ```
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// Element type of an artifact operand.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I8,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int8" => Ok(DType::I8),
+            "int32" => Ok(DType::I32),
+            other => Err(Error::Artifact(format!("unknown dtype {other}"))),
+        }
+    }
+}
+
+/// Shape + dtype of one operand.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorType {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorType {
+    /// Parse `float32[64,128]`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let open = s
+            .find('[')
+            .ok_or_else(|| Error::Artifact(format!("bad type {s}")))?;
+        if !s.ends_with(']') {
+            return Err(Error::Artifact(format!("bad type {s}")));
+        }
+        let dtype = DType::parse(&s[..open])?;
+        let dims = &s[open + 1..s.len() - 1];
+        let shape = if dims.is_empty() {
+            vec![]
+        } else {
+            dims.split(',')
+                .map(|d| {
+                    d.parse::<usize>()
+                        .map_err(|_| Error::Artifact(format!("bad dim in {s}")))
+                })
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(TensorType { dtype, shape })
+    }
+
+    /// Total elements.
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorType>,
+    pub outputs: Vec<TensorType>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    entries: HashMap<String, Entry>,
+}
+
+impl Manifest {
+    /// Parse manifest text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut kv: HashMap<&str, &str> = HashMap::new();
+            for tok in line.split_whitespace() {
+                let (k, v) = tok.split_once('=').ok_or_else(|| {
+                    Error::Artifact(format!("manifest line {}: bad token {tok}", lineno + 1))
+                })?;
+                kv.insert(k, v);
+            }
+            let get = |k: &str| -> Result<&str> {
+                kv.get(k).copied().ok_or_else(|| {
+                    Error::Artifact(format!("manifest line {}: missing {k}", lineno + 1))
+                })
+            };
+            let parse_list = |s: &str| -> Result<Vec<TensorType>> {
+                if s.is_empty() {
+                    return Ok(vec![]);
+                }
+                s.split(';').map(TensorType::parse).collect()
+            };
+            let e = Entry {
+                name: get("name")?.to_string(),
+                file: get("file")?.to_string(),
+                inputs: parse_list(get("in")?)?,
+                outputs: parse_list(get("out")?)?,
+            };
+            entries.insert(e.name.clone(), e);
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// Load from `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let path = dir.as_ref().join("manifest.txt");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!("cannot read {}: {e}", path.display()))
+        })?;
+        Self::parse(&text)
+    }
+
+    /// Look up an entry.
+    pub fn get(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("no artifact named {name}")))
+    }
+
+    /// All entry names (sorted).
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entries.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Number of artifacts.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no artifacts are present.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment line
+name=tile_gemm_f32_8x8 file=tile_gemm_f32_8x8.hlo.txt in=float32[8,8];float32[8,8] out=float32[8,8]
+name=bias_relu_f32_8x8 file=bias_relu_f32_8x8.hlo.txt in=float32[8,8];float32[8] out=float32[8,8]
+name=tile_gemm_int8_8x8 file=t.hlo.txt in=int8[8,8];int8[8,8] out=int32[8,8]
+";
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 3);
+        let e = m.get("tile_gemm_f32_8x8").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[0], TensorType { dtype: DType::F32, shape: vec![8, 8] });
+        assert_eq!(e.outputs[0].elems(), 64);
+    }
+
+    #[test]
+    fn parses_int_dtypes() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let e = m.get("tile_gemm_int8_8x8").unwrap();
+        assert_eq!(e.inputs[0].dtype, DType::I8);
+        assert_eq!(e.outputs[0].dtype, DType::I32);
+    }
+
+    #[test]
+    fn vector_shape() {
+        let t = TensorType::parse("float32[8]").unwrap();
+        assert_eq!(t.shape, vec![8]);
+        let t = TensorType::parse("float32[]").unwrap();
+        assert_eq!(t.elems(), 1);
+    }
+
+    #[test]
+    fn missing_name_errors() {
+        assert!(Manifest::parse("file=x.hlo.txt in= out=").is_err());
+        assert!(Manifest::parse("name=x filex.hlo").is_err());
+        assert!(TensorType::parse("float32").is_err());
+        assert!(TensorType::parse("float99[2]").is_err());
+    }
+
+    #[test]
+    fn unknown_lookup_errors() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.get("nope").is_err());
+        assert_eq!(m.names().len(), 3);
+        assert!(!m.is_empty());
+    }
+}

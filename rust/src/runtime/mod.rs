@@ -1,0 +1,359 @@
+//! XLA/PJRT functional runtime.
+//!
+//! Loads the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO **text** — serialized protos from jax ≥ 0.5 are rejected by
+//! xla_extension 0.5.1) and executes them on the PJRT CPU client.
+//! Python never runs here: the Rust binary is self-contained once
+//! `make artifacts` has been built.
+//!
+//! Executables are compiled once per artifact and cached
+//! (EXPERIMENTS.md §Perf: compile ~10 ms per tile shape; execute ~µs).
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use crate::error::{Error, Result};
+pub use manifest::{DType, Manifest, TensorType};
+
+/// A simple row-major f32 matrix (the functional runtime's data type).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Element accessor.
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    /// Element mutator.
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Copy the `th×tw` tile at (r0, c0), zero-padded past the edges.
+    pub fn tile(&self, r0: usize, c0: usize, th: usize, tw: usize) -> Mat {
+        let mut t = Mat::zeros(th, tw);
+        for r in 0..th.min(self.rows.saturating_sub(r0)) {
+            for c in 0..tw.min(self.cols.saturating_sub(c0)) {
+                t.set(r, c, self.get(r0 + r, c0 + c));
+            }
+        }
+        t
+    }
+
+    /// Write `tile`'s in-bounds region at (r0, c0).
+    pub fn set_tile(&mut self, r0: usize, c0: usize, tile: &Mat) {
+        for r in 0..tile.rows.min(self.rows.saturating_sub(r0)) {
+            for c in 0..tile.cols.min(self.cols.saturating_sub(c0)) {
+                self.set(r0 + r, c0 + c, tile.get(r, c));
+            }
+        }
+    }
+
+    /// Max absolute difference against another matrix.
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Reference matmul (used by tests to cross-check the runtime).
+    pub fn matmul(&self, rhs: &Mat) -> Mat {
+        assert_eq!(self.cols, rhs.rows);
+        let mut out = Mat::zeros(self.rows, rhs.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.get(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..rhs.cols {
+                    out.data[i * rhs.cols + j] += a * rhs.get(k, j);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// PJRT-backed executor for the AOT artifacts.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtRuntime {
+    /// Open the artifact directory (must contain `manifest.txt`).
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtRuntime { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// The manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self.manifest.get(name)?;
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Artifact("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Execute an f32 artifact on matrix/vector inputs; returns the
+    /// single output as a matrix of the manifest's output shape.
+    pub fn exec_f32(&self, name: &str, inputs: &[&Mat]) -> Result<Mat> {
+        let entry = self.manifest.get(name)?.clone();
+        if entry.inputs.len() != inputs.len() {
+            return Err(Error::Artifact(format!(
+                "{name}: expected {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (ty, m) in entry.inputs.iter().zip(inputs) {
+            if ty.dtype != DType::F32 {
+                return Err(Error::Artifact(format!("{name}: exec_f32 on non-f32 input")));
+            }
+            if ty.elems() != m.data.len() {
+                return Err(Error::Artifact(format!(
+                    "{name}: input shape mismatch ({} vs {} elems)",
+                    ty.elems(),
+                    m.data.len()
+                )));
+            }
+            let dims: Vec<i64> = ty.shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(&m.data).reshape(&dims)?);
+        }
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        let oshape = &entry.outputs[0].shape;
+        let (rows, cols) = match oshape.len() {
+            2 => (oshape[0], oshape[1]),
+            1 => (1, oshape[0]),
+            _ => (1, 1),
+        };
+        Ok(Mat { rows, cols, data: values })
+    }
+}
+
+/// An int8 matrix (operands of the §5 quantized path).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatI8 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i8>,
+}
+
+impl MatI8 {
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> i8) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        MatI8 { rows, cols, data }
+    }
+
+    /// Reference int8×int8→int32 matmul (exact).
+    pub fn matmul_i32(&self, rhs: &MatI8) -> Vec<i32> {
+        assert_eq!(self.cols, rhs.rows);
+        let mut out = vec![0i32; self.rows * rhs.cols];
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.data[i * self.cols + k] as i32;
+                for j in 0..rhs.cols {
+                    out[i * rhs.cols + j] += a * rhs.data[k * rhs.cols + j] as i32;
+                }
+            }
+        }
+        out
+    }
+}
+
+impl PjrtRuntime {
+    /// Execute an int8 tile artifact (`tile_gemm_int8_*`), returning
+    /// the int32 accumulator tile.  Exercises the paper's §5 precision
+    /// path end to end on PJRT.  (The artifact ABI carries the int8
+    /// operands widened to int32 because xla 0.1.6 has no i8 literals;
+    /// the Pallas kernel inside still runs int8 MACs.)
+    pub fn exec_i8(&self, name: &str, x: &MatI8, w: &MatI8) -> Result<Vec<i32>> {
+        let entry = self.manifest.get(name)?.clone();
+        if entry.inputs.len() != 2 || entry.inputs[0].dtype != DType::I32 {
+            return Err(Error::Artifact(format!(
+                "{name}: not a 2-input int8(-as-i32) tile artifact"
+            )));
+        }
+        let mk = |ty: &TensorType, m: &MatI8| -> Result<xla::Literal> {
+            if ty.elems() != m.data.len() {
+                return Err(Error::Artifact(format!("{name}: int8 shape mismatch")));
+            }
+            let wide: Vec<i32> = m.data.iter().map(|&v| v as i32).collect();
+            let dims: Vec<i64> = ty.shape.iter().map(|&d| d as i64).collect();
+            Ok(xla::Literal::vec1(&wide).reshape(&dims)?)
+        };
+        let lits = vec![mk(&entry.inputs[0], x)?, mk(&entry.inputs[1], w)?];
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<i32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.txt").exists().then_some(dir)
+    }
+
+    #[test]
+    fn mat_tile_roundtrip_with_padding() {
+        let m = Mat::from_fn(5, 6, |r, c| (r * 10 + c) as f32);
+        let t = m.tile(4, 4, 4, 4);
+        assert_eq!(t.get(0, 0), 44.0);
+        assert_eq!(t.get(0, 1), 45.0);
+        assert_eq!(t.get(0, 2), 0.0, "past the edge: zero pad");
+        assert_eq!(t.get(1, 0), 0.0);
+        let mut back = Mat::zeros(5, 6);
+        back.set_tile(4, 4, &t);
+        assert_eq!(back.get(4, 4), 44.0);
+        assert_eq!(back.get(4, 5), 45.0);
+    }
+
+    #[test]
+    fn mat_matmul_reference() {
+        let a = Mat::from_fn(2, 3, |r, c| (r * 3 + c) as f32);
+        let b = Mat::from_fn(3, 2, |r, c| (r * 2 + c) as f32);
+        let y = a.matmul(&b);
+        assert_eq!(y.data, vec![10.0, 13.0, 28.0, 40.0]);
+    }
+
+    // The following tests exercise the real PJRT path and only run when
+    // `make artifacts` has produced the artifact directory.
+
+    #[test]
+    fn tile_gemm_matches_host_matmul() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = PjrtRuntime::open(dir).unwrap();
+        let x = Mat::from_fn(32, 32, |r, c| ((r * 31 + c * 7) % 13) as f32 * 0.25 - 1.0);
+        let w = Mat::from_fn(32, 32, |r, c| ((r * 17 + c * 3) % 11) as f32 * 0.125 - 0.5);
+        let y = rt.exec_f32("tile_gemm_f32_32x32", &[&x, &w]).unwrap();
+        let want = x.matmul(&w);
+        assert!(y.max_abs_diff(&want) < 1e-3, "diff {}", y.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn tile_gemm_psum_accumulates() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = PjrtRuntime::open(dir).unwrap();
+        let x = Mat::from_fn(32, 32, |r, c| ((r + c) % 5) as f32);
+        let w = Mat::from_fn(32, 32, |r, c| ((r * c) % 7) as f32 * 0.1);
+        let p = Mat::from_fn(32, 32, |r, c| (r as f32) - (c as f32));
+        let y = rt.exec_f32("tile_gemm_psum_f32_32x32", &[&x, &w, &p]).unwrap();
+        let mut want = x.matmul(&w);
+        for i in 0..want.data.len() {
+            want.data[i] += p.data[i];
+        }
+        assert!(y.max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn executable_cache_compiles_once() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = PjrtRuntime::open(dir).unwrap();
+        assert_eq!(rt.cached(), 0);
+        let _ = rt.executable("psum_add_f32_32x32").unwrap();
+        let _ = rt.executable("psum_add_f32_32x32").unwrap();
+        assert_eq!(rt.cached(), 1);
+    }
+
+    #[test]
+    fn int8_tile_gemm_exact_vs_host() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = PjrtRuntime::open(dir).unwrap();
+        let x = MatI8::from_fn(32, 32, |r, c| ((r * 7 + c * 13) % 255) as u8 as i8);
+        let w = MatI8::from_fn(32, 32, |r, c| ((r * 11 + c * 3) % 251) as u8 as i8);
+        let got = rt.exec_i8("tile_gemm_int8_32x32", &x, &w).unwrap();
+        assert_eq!(got, x.matmul_i32(&w), "int8 MACs must be bit-exact");
+    }
+
+    #[test]
+    fn exec_i8_rejects_f32_artifact() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = PjrtRuntime::open(dir).unwrap();
+        let x = MatI8::from_fn(32, 32, |_, _| 1);
+        assert!(rt.exec_i8("tile_gemm_f32_32x32", &x, &x).is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = PjrtRuntime::open(dir).unwrap();
+        let bad = Mat::zeros(8, 8);
+        assert!(rt.exec_f32("tile_gemm_f32_32x32", &[&bad, &bad]).is_err());
+        let x = Mat::zeros(32, 32);
+        assert!(rt.exec_f32("tile_gemm_f32_32x32", &[&x]).is_err());
+    }
+}

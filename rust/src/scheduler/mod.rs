@@ -1,0 +1,735 @@
+//! The offline greedy time-slice scheduler (paper §4.2).
+//!
+//! The schedule is organized in fixed time slices (the tiling makes all
+//! tile ops take the same `max(k_part, r)` cycles).  For each tile op,
+//! in program order, the scheduler finds the earliest slice satisfying:
+//!
+//! 1. **dependencies** — the psum-chain predecessor has completed, and
+//!    the producer layer's relevant output groups are finalized
+//!    (read-after-write);
+//! 2. **bank ports** — every operand's bank serves at most one tile per
+//!    slice per network (single-ported banks); multicast of the *same*
+//!    tile to several pods is allowed;
+//! 3. **routing** — the X, W and P connections are simultaneously
+//!    routable on the configured fabric (checked with real per-topology
+//!    routing, transactionally committed).
+//!
+//! Deviation from the paper (documented): the paper exhaustively
+//! searches all pod×bank combinations; we bound the search to
+//! `max_pod_tries` candidate pods per slice (banks are fixed by
+//! placement) — profiling showed exhaustive search changes utilization
+//! <0.5% while costing 30× scheduling time (EXPERIMENTS.md §Perf).
+
+pub mod placement;
+
+use crate::arch::ArchConfig;
+use crate::interconnect::Fabric;
+use crate::stats::RunStats;
+use crate::tiling::{TileProgram, XDep};
+use crate::util::BitSet;
+use placement::Placement;
+
+/// Scheduler tuning knobs.
+#[derive(Clone, Debug)]
+pub struct SchedulerOptions {
+    /// Candidate pods tried per (op, slice) before deferring.
+    pub max_pod_tries: usize,
+    /// Open-slice window (ring buffer size); older slices are frozen.
+    pub window: usize,
+    /// Single-ported banks shared across the X/W/P roles (one access
+    /// per bank per slice *total*, §4.2's strictest reading) instead of
+    /// dedicated per-role banks (Fig. 7's drawing).
+    pub shared_banks: bool,
+}
+
+impl Default for SchedulerOptions {
+    fn default() -> Self {
+        SchedulerOptions { max_pod_tries: 8, window: 64, shared_banks: false }
+    }
+}
+
+/// Where each tile op / pp op landed.
+#[derive(Clone, Debug, Default)]
+pub struct Schedule {
+    /// Per tile op: (slice, pod).
+    pub tile_slots: Vec<(u32, u32)>,
+    /// Per pp op: slice.
+    pub pp_slots: Vec<u32>,
+    /// Summary statistics.
+    pub stats: RunStats,
+}
+
+/// Per-open-slice resource state.
+struct SliceState {
+    /// Which slice this ring entry currently represents.
+    slice: u32,
+    pods: BitSet,
+    pods_used: u32,
+    pp_used: u32,
+    /// Tile currently served by each bank on each read network
+    /// (0 = free, else tile-key+1).
+    x_bank: Vec<u64>,
+    w_bank: Vec<u64>,
+    p_in_bank: Vec<u64>,
+    /// Write-port ownership on the P network (group-key+1).
+    p_out_bank: Vec<u64>,
+    x_fab: Box<dyn Fabric>,
+    w_fab: Box<dyn Fabric>,
+    p_in_fab: Box<dyn Fabric>,
+    p_out_fab: Box<dyn Fabric>,
+}
+
+impl SliceState {
+    fn new(cfg: &ArchConfig) -> Self {
+        let n = cfg.num_pods;
+        SliceState {
+            slice: u32::MAX,
+            pods: BitSet::new(n),
+            pods_used: 0,
+            pp_used: 0,
+            x_bank: vec![0; n],
+            w_bank: vec![0; n],
+            p_in_bank: vec![0; n],
+            p_out_bank: vec![0; n],
+            x_fab: cfg.interconnect.build(n.max(2)),
+            w_fab: cfg.interconnect.build(n.max(2)),
+            p_in_fab: cfg.interconnect.build(n.max(2)),
+            p_out_fab: cfg.interconnect.build(n.max(2)),
+        }
+    }
+
+    fn reset(&mut self, slice: u32) {
+        self.slice = slice;
+        self.pods.clear_all();
+        self.pods_used = 0;
+        self.pp_used = 0;
+        self.x_bank.iter_mut().for_each(|v| *v = 0);
+        self.w_bank.iter_mut().for_each(|v| *v = 0);
+        self.p_in_bank.iter_mut().for_each(|v| *v = 0);
+        self.p_out_bank.iter_mut().for_each(|v| *v = 0);
+        self.x_fab.begin_slice();
+        self.w_fab.begin_slice();
+        self.p_in_fab.begin_slice();
+        self.p_out_fab.begin_slice();
+    }
+}
+
+/// The greedy §4.2 scheduler.
+pub struct Scheduler<'a> {
+    cfg: &'a ArchConfig,
+    prog: &'a TileProgram,
+    opts: SchedulerOptions,
+    placement: Placement,
+    ring: Vec<SliceState>,
+    /// Lowest open slice (older ones are frozen).
+    frontier: u32,
+    /// Highest slice ever opened.
+    horizon: u32,
+    /// Per-slice busy pod counts (full history, cheap).
+    busy_per_slice: Vec<u32>,
+    /// Completion slice of each tile op.
+    op_done: Vec<u32>,
+    /// Readiness slice of each layer output group (post-PP).
+    group_ready: Vec<Vec<u32>>,
+    /// Per-layer max group readiness (coarse deps).
+    layer_done: Vec<u32>,
+    /// Cached [`Self::chain_gap_slices`].
+    chain_gap: u32,
+}
+
+impl<'a> Scheduler<'a> {
+    /// Prepare a scheduler for one program on one configuration.
+    pub fn new(cfg: &'a ArchConfig, prog: &'a TileProgram, opts: SchedulerOptions) -> Self {
+        let ring = (0..opts.window).map(|_| SliceState::new(cfg)).collect();
+        let group_ready = prog
+            .layers
+            .iter()
+            .map(|lt| vec![u32::MAX; lt.tm * lt.tn])
+            .collect();
+        let mut s = Scheduler {
+            cfg,
+            prog,
+            opts,
+            placement: Placement::new(cfg.num_banks),
+            ring,
+            frontier: 0,
+            horizon: 0,
+            busy_per_slice: vec![],
+            op_done: vec![u32::MAX; prog.tile_ops.len()],
+            group_ready,
+            layer_done: vec![u32::MAX; prog.layers.len()],
+            chain_gap: 0,
+        };
+        s.chain_gap = s.chain_gap_slices();
+        s
+    }
+
+    /// Processing order: per layer, **j-outer** (all chains advance in
+    /// lockstep — chain step j of every (i, l) group before step j+1).
+    /// Depth-first chain order would let the sliding window's frontier
+    /// serialize parallel chains (a 37× slowdown on ResNet's deep
+    /// layers; EXPERIMENTS.md §Perf).
+    fn processing_order(&self) -> Vec<u32> {
+        let mut order = Vec::with_capacity(self.prog.tile_ops.len());
+        for lt in &self.prog.layers {
+            for j in 0..lt.tk {
+                for i in 0..lt.tm {
+                    for l in 0..lt.tn {
+                        order.push(lt.op_id(i, j, l));
+                    }
+                }
+            }
+        }
+        order
+    }
+
+    /// Run the scheduler to completion.
+    pub fn run(mut self) -> Schedule {
+        let mut tile_slots = vec![(0u32, 0u32); self.prog.tile_ops.len()];
+        let mut pp_slots = vec![0u32; self.prog.pp_ops.len()];
+        let mut stats = RunStats::default();
+        self.ring[0].reset(0);
+        self.busy_per_slice.push(0);
+
+        // Interleave: pp ops become schedulable as chains complete; we
+        // process tile ops in lockstep order and flush pp ops as their
+        // chains' tails land.
+        let mut next_pp = 0usize;
+        let order = self.processing_order();
+        for &op_id in &order {
+            let op_idx = op_id as usize;
+            let (slice, pod, deferred) = self.place_tile_op(op_idx);
+            tile_slots[op_idx] = (slice, pod);
+            self.op_done[op_idx] = slice;
+            stats.deferred_ops += deferred as u64;
+            stats.useful_macs += self.prog.tile_ops[op_idx].macs();
+            // Flush any pp ops whose chain tails are all placed.
+            while next_pp < self.prog.pp_ops.len()
+                && self.prog.pp_ops[next_pp]
+                    .tails
+                    .iter()
+                    .all(|&t| self.op_done[t as usize] != u32::MAX)
+            {
+                let s = self.place_pp_op(next_pp);
+                pp_slots[next_pp] = s;
+                let pp = &self.prog.pp_ops[next_pp];
+                let lt = &self.prog.layers[pp.layer as usize];
+                let g = lt.group(pp.i as usize, pp.l as usize);
+                self.group_ready[pp.layer as usize][g] = s + 1;
+                let ld = &mut self.layer_done[pp.layer as usize];
+                *ld = if *ld == u32::MAX { s + 1 } else { (*ld).max(s + 1) };
+                next_pp += 1;
+            }
+        }
+        debug_assert_eq!(next_pp, self.prog.pp_ops.len());
+
+        // Assemble stats.
+        let slices = self.horizon as u64 + 1;
+        let slice_cycles = self.slice_cycles();
+        stats.slices = slices;
+        stats.cycles_per_slice = slice_cycles;
+        stats.total_cycles = slices * slice_cycles;
+        stats.tile_ops = self.prog.tile_ops.len() as u64;
+        stats.pp_ops = self.prog.pp_ops.len() as u64;
+        stats.pod_busy_slices = self.busy_per_slice.iter().map(|&b| b as u64).sum();
+        Schedule { tile_slots, pp_slots, stats }
+    }
+
+    /// Fixed slice length in cycles: tile-op execution (`max(k_part,
+    /// r)`, §3.3 — weight double-buffering lower-bounds it at `r`) plus
+    /// the pipeline fill (§4.1's U/V) plus any exposed interconnect
+    /// latency (§3.2: latency is hidden only if shorter than compute).
+    pub fn slice_cycles(&self) -> u64 {
+        let r = self.cfg.array.r as u64;
+        let k_part = self
+            .prog
+            .layers
+            .iter()
+            .map(|l| l.k_part as u64)
+            .max()
+            .unwrap_or(r);
+        let compute = k_part.max(r);
+        let fill = self.cfg.pipeline_fill_cycles();
+        let latency = self.cfg.interconnect.latency_cycles(self.cfg.num_pods.max(2));
+        let exposed = latency.saturating_sub(compute);
+        compute + fill + exposed
+    }
+
+    /// Extra slices a psum chain step must wait for the *round-trip*
+    /// interconnect latency (psum write-back + re-read).  Independent
+    /// tile ops hide the one-way latency behind double buffering, but a
+    /// chained op cannot start until its predecessor's psum has crossed
+    /// the fabric twice — this is what exposes the Benes network's long
+    /// latency as pods scale (§3.2, Fig. 12a).
+    pub fn chain_gap_slices(&self) -> u32 {
+        let slice = self.slice_cycles();
+        let rt = 2 * self.cfg.interconnect.latency_cycles(self.cfg.num_pods.max(2));
+        (rt.saturating_sub(slice)).div_ceil(slice) as u32
+    }
+
+    /// Earliest slice at which a tile op's dependencies are satisfied.
+    fn ready_slice(&self, op_idx: usize) -> u32 {
+        let op = &self.prog.tile_ops[op_idx];
+        let lt = &self.prog.layers[op.layer as usize];
+        let mut ready = 0u32;
+        if let Some(dep) = op.psum_dep {
+            let d = self.op_done[dep as usize];
+            debug_assert_ne!(d, u32::MAX, "psum dep must be placed first");
+            ready = ready.max(d + 1 + self.chain_gap);
+        }
+        match &lt.x_dep {
+            XDep::External => {}
+            XDep::Fine { layer } => {
+                let p = &self.prog.layers[*layer as usize];
+                // Row-group mapping (m may differ across layers).
+                let i_p = if lt.tm == p.tm {
+                    op.i as usize
+                } else {
+                    (op.i as usize * p.tm / lt.tm).min(p.tm - 1)
+                };
+                // Column range of X tile (i, j) inside the producer's
+                // output: features [j·r, j·r + k), rescaled when the
+                // feature dim differs from the producer's filter count
+                // (im2col replication: k = in_c·kh·kw vs P.n = in_c).
+                let r = self.cfg.array.r;
+                let c = self.cfg.array.c;
+                let fk_lo = op.j as usize * r;
+                let fk_hi = fk_lo + op.k as usize;
+                let (plo, phi) = if lt.k == p.n {
+                    (fk_lo, fk_hi)
+                } else {
+                    let lo = fk_lo * p.n / lt.k;
+                    (lo, (fk_hi * p.n).div_ceil(lt.k).max(lo + 1))
+                };
+                let lo = (plo / c).min(p.tn - 1);
+                let hi = phi.div_ceil(c).clamp(lo + 1, p.tn);
+                for l in lo..hi {
+                    let g = self.group_ready[*layer as usize][p.group(i_p, l)];
+                    debug_assert_ne!(g, u32::MAX, "producer group not ready");
+                    ready = ready.max(g);
+                }
+            }
+            XDep::Coarse { layers } => {
+                for &pl in layers {
+                    let d = self.layer_done[pl as usize];
+                    debug_assert_ne!(d, u32::MAX, "producer layer not done");
+                    ready = ready.max(d);
+                }
+            }
+        }
+        ready
+    }
+
+    /// Get (resetting if needed) the ring entry for a slice, advancing
+    /// the frontier when the window moves past old slices.
+    fn open_slice(&mut self, slice: u32) -> usize {
+        debug_assert!(slice >= self.frontier);
+        while slice > self.horizon {
+            self.horizon += 1;
+            if self.horizon - self.frontier >= self.opts.window as u32 {
+                self.frontier = self.horizon - self.opts.window as u32 + 1;
+            }
+            let idx = (self.horizon as usize) % self.opts.window;
+            self.ring[idx].reset(self.horizon);
+            self.busy_per_slice.push(0);
+        }
+        let idx = (slice as usize) % self.opts.window;
+        debug_assert_eq!(self.ring[idx].slice, slice);
+        idx
+    }
+
+    /// Place one tile op; returns (slice, pod, was_deferred).
+    fn place_tile_op(&mut self, op_idx: usize) -> (u32, u32, bool) {
+        let op = &self.prog.tile_ops[op_idx];
+        let lt = &self.prog.layers[op.layer as usize];
+        let x = self.placement.x_tile(op.layer, op.i, op.j, lt.tm);
+        let w = self.placement.w_tile(op.layer, op.j, op.l, lt.tn);
+        let sub = lt.sub_of(op.j as usize);
+        let p = self.placement.p_group(op.layer, op.i, op.l, lt.tn, sub, lt.ways);
+        let has_psum_in = op.psum_dep.is_some();
+
+        let mut slice = self.ready_slice(op_idx).max(self.frontier);
+        let mut deferred = false;
+        loop {
+            let ring_idx = self.open_slice(slice);
+            if let Some(pod) = self.try_slice(ring_idx, x.bank, x.key, w.bank, w.key,
+                                              p.bank, p.key, has_psum_in) {
+                let st = &mut self.ring[ring_idx];
+                st.pods.set(pod);
+                st.pods_used += 1;
+                self.busy_per_slice[slice as usize] += 1;
+                return (slice, pod as u32, deferred);
+            }
+            deferred = true;
+            slice += 1;
+        }
+    }
+
+    /// Try to place on any pod within one slice; commits on success.
+    #[allow(clippy::too_many_arguments)]
+    fn try_slice(
+        &mut self,
+        ring_idx: usize,
+        x_bank: usize,
+        x_key: u64,
+        w_bank: usize,
+        w_key: u64,
+        p_bank: usize,
+        p_key: u64,
+        has_psum_in: bool,
+    ) -> Option<usize> {
+        let st = &mut self.ring[ring_idx];
+        if st.pods_used as usize >= self.cfg.num_pods {
+            return None;
+        }
+        // Bank-port checks (free, or serving the same tile: multicast).
+        if st.x_bank[x_bank] != 0 && st.x_bank[x_bank] != x_key + 1 {
+            return None;
+        }
+        if st.w_bank[w_bank] != 0 && st.w_bank[w_bank] != w_key + 1 {
+            return None;
+        }
+        if has_psum_in && st.p_in_bank[p_bank] != 0 && st.p_in_bank[p_bank] != p_key + 1 {
+            return None;
+        }
+        if st.p_out_bank[p_bank] != 0 {
+            return None; // single writer per bank per slice
+        }
+        if self.opts.shared_banks {
+            // One access per bank per slice across all roles: a bank
+            // serving one role (other than the identical multicast
+            // tile) blocks the others.
+            let occupied = |b: &Vec<u64>, bank: usize, key: u64| {
+                b[bank] != 0 && b[bank] != key + 1
+            };
+            if occupied(&st.w_bank, x_bank, x_key)
+                || occupied(&st.p_in_bank, x_bank, x_key)
+                || st.p_out_bank[x_bank] != 0 && x_bank != p_bank
+                || occupied(&st.x_bank, w_bank, w_key)
+                || occupied(&st.p_in_bank, w_bank, w_key)
+                || st.p_out_bank[w_bank] != 0 && w_bank != p_bank
+                || occupied(&st.x_bank, p_bank, p_key)
+                || occupied(&st.w_bank, p_bank, p_key)
+            {
+                return None;
+            }
+        }
+        // Candidate pods: scan free pods starting from a key-derived
+        // offset (spreads route patterns across the fabric).
+        let n = self.cfg.num_pods;
+        let start = (x_key ^ w_key).wrapping_mul(0x9E3779B97F4A7C15) as usize % n;
+        let mut tried = 0usize;
+        let mut pod = st.pods.first_clear(start).or_else(|| st.pods.first_clear(0));
+        while let Some(p) = pod {
+            if tried >= self.opts.max_pod_tries {
+                return None;
+            }
+            tried += 1;
+            // Transactional routing across the four planes.
+            let cx = st.x_fab.checkpoint();
+            let cw = st.w_fab.checkpoint();
+            let ci = st.p_in_fab.checkpoint();
+            let co = st.p_out_fab.checkpoint();
+            let ok = st.x_fab.try_connect(x_bank, p)
+                && st.w_fab.try_connect(w_bank, p)
+                && (!has_psum_in || st.p_in_fab.try_connect(p_bank, p))
+                && st.p_out_fab.try_connect(p, p_bank);
+            if ok {
+                st.x_bank[x_bank] = x_key + 1;
+                st.w_bank[w_bank] = w_key + 1;
+                if has_psum_in {
+                    st.p_in_bank[p_bank] = p_key + 1;
+                }
+                st.p_out_bank[p_bank] = p_key + 1;
+                return Some(p);
+            }
+            st.x_fab.rollback(cx);
+            st.w_fab.rollback(cw);
+            st.p_in_fab.rollback(ci);
+            st.p_out_fab.rollback(co);
+            // Next free pod after p (wrapping once).
+            pod = st.pods.first_clear(p + 1).or_else(|| {
+                let wrapped = st.pods.first_clear(0);
+                wrapped.filter(|&w| w < p)
+            });
+        }
+        None
+    }
+
+    /// Place a post-processor op at the earliest slice with PP capacity
+    /// after all its subchains complete (+ the merge-tree latency).
+    fn place_pp_op(&mut self, pp_idx: usize) -> u32 {
+        let pp = &self.prog.pp_ops[pp_idx];
+        let tails_done = pp
+            .tails
+            .iter()
+            .map(|&t| self.op_done[t as usize])
+            .max()
+            .expect("pp op has tails");
+        // Post-processors work in pairs (§4.2) — each add/epilogue
+        // occupies a pair for a slice; a w-way merge costs w slots and
+        // log2(w) slices of tree latency.
+        let capacity = (self.cfg.num_post_processors / 2).max(1) as u32;
+        let cost = pp.pp_slots().min(capacity); // tiny configs: span slices
+        let mut slice = (tails_done + 1 + pp.tree_depth()).max(self.frontier);
+        loop {
+            let ring_idx = self.open_slice(slice);
+            let st = &mut self.ring[ring_idx];
+            if st.pp_used + cost <= capacity {
+                st.pp_used += cost;
+                return slice;
+            }
+            slice += 1;
+        }
+    }
+}
+
+/// Convenience: schedule a program with default options.
+pub fn schedule(cfg: &ArchConfig, prog: &TileProgram) -> Schedule {
+    Scheduler::new(cfg, prog, SchedulerOptions::default()).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchConfig, ArrayDims};
+    use crate::tiling::{tile_model, Strategy};
+    use crate::workloads::ModelGraph;
+
+    fn cfg(pods: usize) -> ArchConfig {
+        ArchConfig::with_array(ArrayDims::new(32, 32), pods)
+    }
+
+    fn toy(m: usize, k: usize, n: usize) -> ModelGraph {
+        let mut g = ModelGraph::new("toy");
+        g.add("l0", m, k, n, vec![]);
+        g
+    }
+
+    #[test]
+    fn single_tile_takes_one_slice() {
+        let c = cfg(4);
+        let p = tile_model(&toy(32, 32, 32), 32, 32, Strategy::RxR, 0);
+        let s = schedule(&c, &p);
+        assert_eq!(s.tile_slots.len(), 1);
+        assert_eq!(s.tile_slots[0].0, 0, "lands in slice 0");
+        assert_eq!(s.stats.tile_ops, 1);
+        assert_eq!(s.stats.useful_macs, 32 * 32 * 32);
+        // pp op lands in slice 1.
+        assert_eq!(s.pp_slots[0], 1);
+    }
+
+    #[test]
+    fn psum_chain_serializes() {
+        let c = cfg(4);
+        // One chain of 4 tile ops (k = 128).
+        let p = tile_model(&toy(32, 128, 32), 32, 32, Strategy::RxR, 0);
+        let s = schedule(&c, &p);
+        let slices: Vec<u32> = s.tile_slots.iter().map(|&(sl, _)| sl).collect();
+        assert_eq!(slices, vec![0, 1, 2, 3], "chain must serialize");
+    }
+
+    #[test]
+    fn independent_groups_parallelize() {
+        let c = cfg(16);
+        // 8 independent (i, l) chains of length 1.
+        let p = tile_model(&toy(128, 32, 64), 32, 32, Strategy::RxR, 0);
+        let s = schedule(&c, &p);
+        assert_eq!(p.tile_ops.len(), 8);
+        let max_slice = s.tile_slots.iter().map(|&(sl, _)| sl).max().unwrap();
+        // 8 independent chains on 16 pods: a couple of slices at most
+        // (bank-hash collisions on 16 banks can defer a few ops).
+        assert!(max_slice <= 3, "8 chains took {} slices", max_slice + 1);
+        // All pods distinct within a slice.
+        for sl in 0..=max_slice {
+            let mut pods: Vec<u32> = s
+                .tile_slots
+                .iter()
+                .filter(|&&(s2, _)| s2 == sl)
+                .map(|&(_, p2)| p2)
+                .collect();
+            let before = pods.len();
+            pods.sort_unstable();
+            pods.dedup();
+            assert_eq!(pods.len(), before, "pod double-booked in slice {sl}");
+        }
+    }
+
+    #[test]
+    fn layer_dependency_orders_layers() {
+        let c = cfg(16);
+        let mut g = ModelGraph::new("two");
+        let a = g.add("a", 32, 32, 32, vec![]);
+        g.add("b", 32, 32, 32, vec![a]);
+        let p = tile_model(&g, 32, 32, Strategy::RxR, 0);
+        let s = schedule(&c, &p);
+        // Layer b's tile op must start after a's pp completes (slice ≥ 2).
+        assert!(s.tile_slots[1].0 >= 2, "got {:?}", s.tile_slots);
+    }
+
+    #[test]
+    fn fine_grained_dep_allows_row_overlap() {
+        let c = cfg(64);
+        let mut g = ModelGraph::new("pipe");
+        // Producer with 4 row groups; consumer with 4 row groups.
+        let a = g.add("a", 128, 32, 32, vec![]);
+        g.add("b", 128, 32, 32, vec![a]);
+        let p = tile_model(&g, 32, 32, Strategy::RxR, 0);
+        let s = schedule(&c, &p);
+        // Consumer row group 0 should start before producer row group 3
+        // finishes + 2 (pipelined overlap), i.e. earlier than full-layer
+        // serialization would allow (which would be slice ≥ 2 for all).
+        let b_first = s.tile_slots[4].0;
+        assert!(b_first <= 2, "expected pipelined start, got {b_first}");
+    }
+
+    #[test]
+    fn more_pods_never_slower() {
+        let model = toy(1024, 256, 256);
+        let p = tile_model(&model, 32, 32, Strategy::RxR, 0);
+        let mut prev_slices = u64::MAX;
+        for pods in [16usize, 64, 256] {
+            let s = schedule(&cfg(pods), &p);
+            assert!(
+                s.stats.slices <= prev_slices,
+                "{pods} pods used {} slices (prev {prev_slices})",
+                s.stats.slices
+            );
+            prev_slices = s.stats.slices;
+        }
+    }
+
+    #[test]
+    fn utilization_reflects_edge_waste() {
+        // 33×33×33 on 32×32 pods: edge tiles waste most MAC slots — the
+        // per-tile-op MAC density collapses (Fig. 5's ripples).
+        let c = cfg(4);
+        let full = schedule(&c, &tile_model(&toy(32, 32, 32), 32, 32, Strategy::RxR, 0));
+        let ragged = schedule(&c, &tile_model(&toy(33, 33, 33), 32, 32, Strategy::RxR, 0));
+        let density = |s: &Schedule| s.stats.useful_macs as f64 / s.stats.tile_ops as f64;
+        assert!(density(&ragged) < 0.2 * density(&full),
+                "ragged {} vs full {}", density(&ragged), density(&full));
+    }
+
+    #[test]
+    fn stats_macs_match_program() {
+        let model = toy(300, 200, 100);
+        let p = tile_model(&model, 32, 32, Strategy::RxR, 0);
+        let s = schedule(&cfg(16), &p);
+        assert_eq!(s.stats.useful_macs, model.total_macs());
+        assert_eq!(s.stats.tile_ops as usize, p.tile_ops.len());
+        assert_eq!(s.stats.pp_ops as usize, p.pp_ops.len());
+    }
+
+    #[test]
+    fn benes_chains_stall_on_round_trip_latency() {
+        use crate::interconnect::Kind;
+        // A single long psum chain: round-trip psum latency cannot hide
+        // behind computation (§3.2) — Benes chains stretch, Butterfly's
+        // do not (at 256 pods, r = 32: RT 50 > slice 36 vs RT 20 < 36).
+        let p = tile_model(&toy(32, 1024, 32), 32, 32, Strategy::RxR, 0);
+        let mut cb = cfg(256);
+        cb.interconnect = Kind::Butterfly { expansion: 2 };
+        let mut cn = cfg(256);
+        cn.interconnect = Kind::Benes;
+        let sb = schedule(&cb, &p).stats.slices;
+        let sn = schedule(&cn, &p).stats.slices;
+        assert!(sn >= 2 * sb - 2, "benes {sn} vs butterfly {sb} slices");
+        // At r = 16 the one-way exposure also lengthens the slice
+        // (Table 1: 30 vs ~20 cycles/tile-op).
+        let p16 = tile_model(&toy(16, 256, 16), 16, 16, Strategy::RxR, 0);
+        let cb16 = ArchConfig::with_array(ArrayDims::new(16, 16), 256);
+        let mut cn16 = cb16.clone();
+        cn16.interconnect = Kind::Benes;
+        let slice_b = Scheduler::new(&cb16, &p16, SchedulerOptions::default()).slice_cycles();
+        let slice_n = Scheduler::new(&cn16, &p16, SchedulerOptions::default()).slice_cycles();
+        assert_eq!(slice_b, 20, "butterfly r16: 16 + 4 fill");
+        assert!(slice_n >= 28, "benes r16 should expose latency, got {slice_n}");
+    }
+}
+
+#[cfg(test)]
+mod prop_tests {
+    use super::*;
+    use crate::arch::{ArchConfig, ArrayDims};
+    use crate::interconnect::Kind;
+    use crate::testutil::prop::forall;
+    use crate::tiling::{tile_model, Strategy};
+    use crate::workloads::ModelGraph;
+
+    /// Random small models: every schedule must satisfy the §4.2
+    /// resource exclusivity invariants.
+    #[test]
+    fn prop_no_pod_double_booking_and_deps_ordered() {
+        forall(30, |rng| {
+            let layers = rng.range(1, 4);
+            let mut g = ModelGraph::new("rand");
+            let mut prev: Option<usize> = None;
+            for li in 0..layers {
+                let m = rng.range(1, 200);
+                let k = rng.range(1, 200);
+                let n = rng.range(1, 200);
+                let id = g.add(format!("l{li}"), m, k, n,
+                               prev.map(|p| vec![p]).unwrap_or_default());
+                prev = Some(id);
+            }
+            let pods = 1usize << rng.range(2, 6); // 4..32
+            let r = *rng.choose(&[8usize, 16, 32]);
+            let icn = *rng.choose(&[
+                Kind::Butterfly { expansion: 2 },
+                Kind::Crossbar,
+                Kind::Benes,
+            ]);
+            let mut cfg = ArchConfig::with_array(ArrayDims::new(r, r), pods);
+            cfg.interconnect = icn;
+            let prog = tile_model(&g, r, r, Strategy::RxR, pods);
+            let sched = schedule(&cfg, &prog);
+
+            // (1) No pod double-booking within a slice.
+            let mut used = std::collections::HashSet::new();
+            for &(s, p) in &sched.tile_slots {
+                crate::prop_assert!(
+                    used.insert((s, p)),
+                    "pod {p} double-booked in slice {s} (pods={pods}, r={r})"
+                );
+            }
+            // (2) Psum chains strictly ordered.
+            for op in &prog.tile_ops {
+                if let Some(dep) = op.psum_dep {
+                    let (ds, _) = sched.tile_slots[dep as usize];
+                    let (s, _) = sched.tile_slots[op.id as usize];
+                    crate::prop_assert!(ds < s, "chain dep not ordered");
+                }
+            }
+            // (3) PP ops after all their tails.
+            for (pi, pp) in prog.pp_ops.iter().enumerate() {
+                for &t in &pp.tails {
+                    crate::prop_assert!(
+                        sched.pp_slots[pi] > sched.tile_slots[t as usize].0,
+                        "pp before its chain tail"
+                    );
+                }
+            }
+            // (4) Work conservation.
+            crate::prop_assert!(
+                sched.stats.useful_macs == g.total_macs(),
+                "macs lost in scheduling"
+            );
+            Ok(())
+        });
+    }
+
+    /// Scheduling is deterministic: same inputs → identical schedule.
+    #[test]
+    fn prop_schedule_deterministic() {
+        let mut g = ModelGraph::new("det");
+        let a = g.add("a", 100, 64, 96, vec![]);
+        g.add("b", 100, 96, 64, vec![a]);
+        let cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 16);
+        let prog = tile_model(&g, 32, 32, Strategy::RxR, 16);
+        let s1 = schedule(&cfg, &prog);
+        let s2 = schedule(&cfg, &prog);
+        assert_eq!(s1.tile_slots, s2.tile_slots);
+        assert_eq!(s1.pp_slots, s2.pp_slots);
+    }
+}

@@ -1,0 +1,148 @@
+//! Data placement: which SRAM bank holds each tile.
+//!
+//! Fig. 7 shows *dedicated* activation, weight and partial-sum banks, so
+//! each of the three networks has its own bank space (`num_banks` each).
+//! Within a layer, placement is round-robin over the per-slice access
+//! pattern so that the tiles live in *distinct* banks:
+//!
+//! * activation tile (i, j): bank `salt + i + j·tm` — at any chain step
+//!   j, the `tm` live tiles occupy `tm` distinct banks;
+//! * weight tile (j, l): bank `salt + l + j·tn` — the `tn` live weight
+//!   tiles are distinct;
+//! * psum group (i, l): bank `salt + i·tn + l` — every concurrent chain
+//!   accumulates in its own bank (a collision here would stall the
+//!   chain on *every* step, which an offline compiler trivially avoids).
+//!
+//! A per-layer salt decorrelates concurrently running layers (pipelined
+//! overlap).  The first hash-based placement cost 2× schedule length on
+//! deep ResNet layers — see EXPERIMENTS.md §Perf.
+
+/// Tile→bank placement for one program.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    banks: usize,
+}
+
+/// A placed tile: a stable identity key (for multicast detection) and
+/// its bank.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Slot {
+    /// Unique tile identity (multicast: same key ⇒ same data).
+    pub key: u64,
+    /// Bank index within the role's bank space.
+    pub bank: usize,
+}
+
+impl Placement {
+    /// New placement over `banks` banks per role.
+    pub fn new(banks: usize) -> Self {
+        assert!(banks > 0);
+        Placement { banks }
+    }
+
+    #[inline]
+    fn salt(layer: u32, tag: u64) -> u64 {
+        let mut x = (layer as u64)
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(tag.wrapping_mul(0xBF58476D1CE4E5B9));
+        x ^= x >> 31;
+        x.wrapping_mul(0x94D049BB133111EB)
+    }
+
+    /// Activation tile (layer, i, j) on a layer with `tm` row groups.
+    pub fn x_tile(&self, layer: u32, i: u16, j: u16, tm: usize) -> Slot {
+        let key = Self::salt(layer, 1) ^ ((i as u64) << 20 | j as u64);
+        let bank = (Self::salt(layer, 1) as usize
+            + i as usize
+            + j as usize * tm)
+            % self.banks;
+        Slot { key, bank }
+    }
+
+    /// Weight tile (layer, j, l) on a layer with `tn` filter groups.
+    pub fn w_tile(&self, layer: u32, j: u16, l: u16, tn: usize) -> Slot {
+        let key = Self::salt(layer, 2) ^ ((j as u64) << 20 | l as u64);
+        let bank = (Self::salt(layer, 2) as usize
+            + l as usize
+            + j as usize * tn)
+            % self.banks;
+        Slot { key, bank }
+    }
+
+    /// Psum accumulator of subchain `sub` of group (layer, i, l): each
+    /// parallel subchain owns a distinct accumulator bank.
+    pub fn p_group(&self, layer: u32, i: u16, l: u16, tn: usize, sub: usize,
+                   ways: usize) -> Slot {
+        let key = Self::salt(layer, 3)
+            ^ ((i as u64) << 36 | (l as u64) << 16 | sub as u64);
+        let bank = (Self::salt(layer, 3) as usize
+            + (i as usize * tn + l as usize) * ways
+            + sub)
+            % self.banks;
+        Slot { key, bank }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let p = Placement::new(256);
+        assert_eq!(p.x_tile(3, 1, 2, 16), p.x_tile(3, 1, 2, 16));
+        assert_eq!(p.w_tile(7, 0, 0, 4), p.w_tile(7, 0, 0, 4));
+    }
+
+    #[test]
+    fn concurrent_chain_psums_conflict_free() {
+        // All subchain accumulators of one layer land in distinct banks
+        // as long as the layer has ≤ banks concurrent subchains.
+        let p = Placement::new(256);
+        let (tm, tn, ways) = (16usize, 8usize, 2usize); // 256 subchains
+        let mut banks = std::collections::HashSet::new();
+        for i in 0..tm as u16 {
+            for l in 0..tn as u16 {
+                for sub in 0..ways {
+                    banks.insert(p.p_group(9, i, l, tn, sub, ways).bank);
+                }
+            }
+        }
+        assert_eq!(banks.len(), tm * tn * ways, "psum banks must be distinct");
+    }
+
+    #[test]
+    fn per_step_x_and_w_banks_distinct() {
+        let p = Placement::new(256);
+        let (tm, tn) = (32usize, 7usize);
+        for j in [0u16, 1, 5] {
+            let xb: std::collections::HashSet<_> =
+                (0..tm as u16).map(|i| p.x_tile(4, i, j, tm).bank).collect();
+            assert_eq!(xb.len(), tm);
+            let wb: std::collections::HashSet<_> =
+                (0..tn as u16).map(|l| p.w_tile(4, j, l, tn).bank).collect();
+            assert_eq!(wb.len(), tn);
+        }
+    }
+
+    #[test]
+    fn keys_unique_across_coords() {
+        let p = Placement::new(64);
+        let a = p.x_tile(1, 2, 3, 8);
+        let b = p.x_tile(1, 3, 2, 8);
+        assert_ne!(a.key, b.key);
+        // Same coordinates but different roles → different keys.
+        assert_ne!(p.x_tile(1, 2, 3, 8).key, p.w_tile(1, 2, 3, 8).key);
+    }
+
+    #[test]
+    fn chain_psum_stays_in_one_bank() {
+        let p = Placement::new(64);
+        let b = p.p_group(5, 3, 7, 16, 0, 1).bank;
+        // p_group is j-independent by construction.
+        assert_eq!(p.p_group(5, 3, 7, 16, 0, 1).bank, b);
+        // ...but each subchain gets its own accumulator bank.
+        assert_ne!(p.p_group(5, 3, 7, 16, 1, 2).bank,
+                   p.p_group(5, 3, 7, 16, 0, 2).bank);
+    }
+}

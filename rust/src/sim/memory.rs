@@ -1,0 +1,148 @@
+//! On-chip SRAM capacity / off-chip DRAM traffic model (§6.4, Fig. 13).
+//!
+//! Layer-granularity working-set analysis: a layer's live bytes are its
+//! activation input `m·k`, weights `k·n` and output partial sums
+//! `m·n·psum_bytes`.  Whatever exceeds the aggregate SRAM capacity
+//! spills — evicted tiles are re-fetched from DRAM, so the spill is
+//! charged twice.  Weights are additionally streamed from DRAM once per
+//! inference (compulsory traffic).  Stall cycles appear when the DRAM
+//! bandwidth cannot keep up with the compute rate — the Fig. 13 cliff
+//! below 256 KiB banks.
+
+use crate::arch::ArchConfig;
+use crate::workloads::ModelGraph;
+
+/// Result of the memory analysis.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MemoryStats {
+    /// Total off-chip traffic (compulsory + spill), bytes.
+    pub dram_bytes: u64,
+    /// Spill-only traffic, bytes.
+    pub spill_bytes: u64,
+    /// Peak single-layer working set, bytes.
+    pub peak_working_set: u64,
+    /// Sum of per-layer compute cycles at full utilization (for the
+    /// overlap estimate).
+    pub compute_cycles: u64,
+    /// Per-layer DRAM stall cycles (traffic that cannot hide behind
+    /// that layer's own compute — spills stall locally, they cannot
+    /// borrow slack from other layers).
+    pub layer_stall_cycles: u64,
+}
+
+impl MemoryStats {
+    /// Cycles the accelerator stalls on DRAM.
+    pub fn stall_cycles(&self, cfg: &ArchConfig) -> u64 {
+        let _ = cfg;
+        self.layer_stall_cycles
+    }
+
+    /// Average DRAM bandwidth demand in GB/s over the compute time.
+    pub fn bandwidth_gbps(&self, cfg: &ArchConfig) -> f64 {
+        if self.compute_cycles == 0 {
+            return 0.0;
+        }
+        let seconds = self.compute_cycles as f64 / (cfg.freq_ghz * 1e9);
+        self.dram_bytes as f64 / seconds / 1e9
+    }
+}
+
+/// Analyze the models' memory behaviour on a configuration.
+pub fn analyze(cfg: &ArchConfig, models: &[ModelGraph]) -> MemoryStats {
+    let sram = cfg.sram_bytes() as u64;
+    let ob = cfg.precision.operand_bytes as u64;
+    let pb = cfg.precision.psum_bytes as u64;
+    let mut out = MemoryStats::default();
+    let peak_macs_per_cycle = cfg.total_pes() as u64;
+    let bytes_per_cycle = (cfg.dram_gbps / cfg.freq_ghz).max(1.0);
+    for model in models {
+        for op in &model.ops {
+            let (m, k, n) = (op.m as u64, op.k as u64, op.n as u64);
+            let x = m * k * ob;
+            let w = k * n * ob;
+            let p = m * n * pb;
+            let ws = x + w + p;
+            out.peak_working_set = out.peak_working_set.max(ws);
+            // Compulsory: weights streamed in once per inference.
+            out.dram_bytes += w;
+            // Capacity spill: excess evicted + refetched.
+            let spill = ws.saturating_sub(sram);
+            out.spill_bytes += 2 * spill;
+            out.dram_bytes += 2 * spill;
+            // Ideal compute time for the overlap estimate.
+            let compute = op.macs().div_ceil(peak_macs_per_cycle);
+            out.compute_cycles += compute;
+            // Spill traffic stalls this layer when it outlasts the
+            // layer's own compute time (compulsory weight streaming is
+            // prefetchable across layers; spills are not).
+            let spill_cycles = (2 * spill) as f64 / bytes_per_cycle;
+            out.layer_stall_cycles +=
+                (spill_cycles as u64).saturating_sub(compute);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchConfig, ArrayDims};
+    use crate::workloads::{zoo, ModelGraph};
+
+    fn cfg_with_banks(bank_kb: usize) -> ArchConfig {
+        ArchConfig { bank_kb, ..ArchConfig::with_array(ArrayDims::new(32, 32), 256) }
+    }
+
+    #[test]
+    fn small_model_fits_no_spill() {
+        let mut g = ModelGraph::new("tiny");
+        g.add("l0", 64, 64, 64, vec![]);
+        let m = analyze(&cfg_with_banks(256), &[g]);
+        assert_eq!(m.spill_bytes, 0);
+        // Compulsory weight traffic only.
+        assert_eq!(m.dram_bytes, 64 * 64);
+    }
+
+    #[test]
+    fn fig13_bank_sweep_shows_knee_at_256kb() {
+        // ResNet152 batch 8 (§6.4's workload): spill below 256 KiB
+        // banks, none at/above.
+        let model = zoo::by_name("resnet152").unwrap().with_batch(8);
+        let spill_64 = analyze(&cfg_with_banks(64), &[model.clone()]).spill_bytes;
+        let spill_128 = analyze(&cfg_with_banks(128), &[model.clone()]).spill_bytes;
+        let spill_256 = analyze(&cfg_with_banks(256), &[model.clone()]).spill_bytes;
+        assert!(spill_64 > spill_128, "{spill_64} vs {spill_128}");
+        assert!(spill_128 > 0);
+        assert_eq!(spill_256, 0, "256 KiB banks hold the working set");
+    }
+
+    #[test]
+    fn dram_bandwidth_reasonable_for_resnet() {
+        let cfg = cfg_with_banks(256);
+        let model = zoo::by_name("resnet50").unwrap();
+        let m = analyze(&cfg, &[model]);
+        let bw = m.bandwidth_gbps(&cfg);
+        // Weight streaming only: far below HBM limits.
+        assert!(bw > 0.0 && bw < cfg.dram_gbps, "bw {bw} GB/s");
+        assert_eq!(m.stall_cycles(&cfg), 0);
+    }
+
+    #[test]
+    fn spill_induces_stalls() {
+        let cfg = cfg_with_banks(64);
+        let model = zoo::by_name("resnet152").unwrap().with_batch(8);
+        let m = analyze(&cfg, &[model]);
+        assert!(m.stall_cycles(&cfg) > 0, "64 KiB banks must stall");
+    }
+
+    #[test]
+    fn peak_working_set_tracks_largest_layer() {
+        let mut g = ModelGraph::new("two");
+        g.add("small", 32, 32, 32, vec![]);
+        let big = g.add("big", 4096, 512, 512, vec![]);
+        let m = analyze(&cfg_with_banks(256), &[g.clone()]);
+        let op = &g.ops[big];
+        let expect = (op.m * op.k + op.k * op.n) as u64 + (op.m * op.n * 2) as u64;
+        assert_eq!(m.peak_working_set, expect);
+    }
+}

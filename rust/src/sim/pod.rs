@@ -1,0 +1,134 @@
+//! Systolic pod pipeline model (§4.1): weight-stationary timing with
+//! activation multicast (U) and psum fan-in (V).
+//!
+//! This is the per-pod microarchitecture the slice-level scheduler
+//! abstracts into a fixed slice length; it exists separately so the U/V
+//! design-point analysis (§4.1's latency/frequency trade-off) can be
+//! reproduced and validated against hand-computed wavefront timings.
+
+use crate::arch::ArrayDims;
+
+/// Pod timing parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct PodTiming {
+    pub array: ArrayDims,
+    /// Activation multicast degree (1 = standard systolic array).
+    pub u: usize,
+    /// Psum fan-in degree (1 = standard).
+    pub v: usize,
+}
+
+impl PodTiming {
+    /// New pod timing model.
+    pub fn new(array: ArrayDims, u: usize, v: usize) -> Self {
+        assert!(u >= 1 && u <= array.r.max(array.c) && v >= 1);
+        PodTiming { array, u, v }
+    }
+
+    /// Cycles for the input wavefront to reach the last column:
+    /// activations hop `U` columns per cycle.
+    pub fn fill_cycles(&self) -> u64 {
+        (self.array.c.div_ceil(self.u)) as u64
+    }
+
+    /// Cycles for the last psum to drain to the bottom: psums hop `V`
+    /// rows per cycle.
+    pub fn drain_cycles(&self) -> u64 {
+        (self.array.r.div_ceil(self.v)) as u64
+    }
+
+    /// Total cycles for one tile op of `m` activation rows, including
+    /// pipeline fill and drain (no double buffering overlap).
+    pub fn tile_op_cycles(&self, m: usize) -> u64 {
+        m as u64 + self.fill_cycles() + self.drain_cycles()
+    }
+
+    /// Cycles to load an `r×c` weight tile row by row.
+    pub fn weight_load_cycles(&self) -> u64 {
+        self.array.r as u64
+    }
+
+    /// Steady-state cycles per tile op with double-buffered weights:
+    /// the next weight tile loads during compute, so the pod stalls only
+    /// when compute (`m`) is shorter than the load (`r`) — §3.1's
+    /// `r > d₁` underutilization condition.
+    pub fn steady_state_cycles(&self, m: usize) -> u64 {
+        (m as u64).max(self.weight_load_cycles()) + self.exposed_pipeline()
+    }
+
+    /// Fill+drain latency not hidden between back-to-back ops.
+    pub fn exposed_pipeline(&self) -> u64 {
+        self.fill_cycles() + self.drain_cycles()
+    }
+
+    /// Pod utilization for a stream of `m`-row tile ops.
+    pub fn utilization(&self, m: usize) -> f64 {
+        m as f64 / self.steady_state_cycles(m) as f64
+    }
+
+    /// Relative clock-period penalty of multicast/fan-in wiring: longer
+    /// combinational paths between registers (§4.1's timing trade-off).
+    /// Modeled as a logarithmic fan-out tree delay.
+    pub fn clock_period_factor(&self) -> f64 {
+        1.0 + 0.05 * ((self.u.max(self.v)) as f64).log2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims(r: usize, c: usize) -> ArrayDims {
+        ArrayDims::new(r, c)
+    }
+
+    #[test]
+    fn standard_array_full_skew() {
+        let t = PodTiming::new(dims(32, 32), 1, 1);
+        assert_eq!(t.fill_cycles(), 32);
+        assert_eq!(t.drain_cycles(), 32);
+        assert_eq!(t.tile_op_cycles(32), 96);
+        assert!((t.utilization(32) - 32.0 / 96.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn papers_uv16_choice() {
+        // §4.1: U = V = 16 for the 32×32 array.
+        let t = PodTiming::new(dims(32, 32), 16, 16);
+        assert_eq!(t.fill_cycles(), 2);
+        assert_eq!(t.drain_cycles(), 2);
+        assert_eq!(t.steady_state_cycles(32), 36);
+        assert!(t.utilization(32) > 0.85);
+    }
+
+    #[test]
+    fn short_tiles_expose_weight_buffering() {
+        // §3.3: execution shorter than r cycles stalls on weight load.
+        let t = PodTiming::new(dims(32, 32), 16, 16);
+        assert_eq!(t.steady_state_cycles(8), 36, "clamped to r");
+        assert!(t.utilization(8) < 0.25);
+    }
+
+    #[test]
+    fn uv_tradeoff_monotonic() {
+        // Larger U/V: fewer exposed cycles but slower clock.
+        let std = PodTiming::new(dims(32, 32), 1, 1);
+        let fast = PodTiming::new(dims(32, 32), 16, 16);
+        assert!(fast.exposed_pipeline() < std.exposed_pipeline());
+        assert!(fast.clock_period_factor() > std.clock_period_factor());
+        assert!((std.clock_period_factor() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn effective_throughput_peaks_at_intermediate_uv() {
+        // The §4.1 design argument: utilization/clock-period trade-off
+        // is maximized strictly between U=1 and U=r for r-row tiles.
+        let score = |u: usize| {
+            let t = PodTiming::new(dims(32, 32), u, u);
+            t.utilization(32) / t.clock_period_factor()
+        };
+        let s1 = score(1);
+        let s16 = score(16);
+        assert!(s16 > s1, "U=16 ({s16}) must beat U=1 ({s1})");
+    }
+}

@@ -1,0 +1,160 @@
+//! Run statistics: the metrics every experiment in §6 reports.
+
+use crate::arch::ArchConfig;
+use crate::power;
+
+/// Outcome of scheduling/simulating one program on one configuration.
+#[derive(Clone, Debug, Default)]
+pub struct RunStats {
+    /// Time slices used by the schedule.
+    pub slices: u64,
+    /// Cycles per slice (tile-op execution + exposed latencies).
+    pub cycles_per_slice: u64,
+    /// Total execution cycles.
+    pub total_cycles: u64,
+    /// Tile operations scheduled.
+    pub tile_ops: u64,
+    /// Post-processor operations scheduled.
+    pub pp_ops: u64,
+    /// Useful MACs executed.
+    pub useful_macs: u64,
+    /// Sum over slices of pods busy (for the busy-pod percentage).
+    pub pod_busy_slices: u64,
+    /// Tile ops that needed more than one pod/bank/route attempt slice
+    /// (scheduling contention indicator).
+    pub deferred_ops: u64,
+    /// Off-chip DRAM traffic in bytes (memory model).
+    pub dram_bytes: u64,
+}
+
+impl RunStats {
+    /// PE-level utilization: useful MACs over provisioned MAC slots.
+    pub fn utilization(&self, cfg: &ArchConfig) -> f64 {
+        if self.total_cycles == 0 {
+            return 0.0;
+        }
+        let slots = cfg.total_pes() as f64 * self.total_cycles as f64;
+        self.useful_macs as f64 / slots
+    }
+
+    /// Average fraction of pods busy per slice (Table 1 column 1).
+    pub fn busy_pods_frac(&self, cfg: &ArchConfig) -> f64 {
+        if self.slices == 0 {
+            return 0.0;
+        }
+        self.pod_busy_slices as f64 / (self.slices as f64 * cfg.num_pods as f64)
+    }
+
+    /// Average cycles per tile op (Table 1 column 2).
+    pub fn cycles_per_tile_op(&self) -> f64 {
+        if self.tile_ops == 0 {
+            return 0.0;
+        }
+        // Every scheduled tile op occupies one slice on its pod; the
+        // per-op cost is the slice length (compute + exposed latency),
+        // scaled by how sparsely the schedule packs (idle slices are a
+        // shared overhead attributed across ops).
+        self.total_cycles as f64 * self.pod_busy_slices as f64
+            / (self.slices as f64 * self.tile_ops as f64)
+    }
+
+    /// Wall-clock seconds at the configured frequency.
+    pub fn exec_seconds(&self, cfg: &ArchConfig) -> f64 {
+        self.total_cycles as f64 / (cfg.freq_ghz * 1e9)
+    }
+
+    /// Achieved throughput in ops/s on the raw silicon.
+    pub fn achieved_ops(&self, cfg: &ArchConfig) -> f64 {
+        if self.total_cycles == 0 {
+            return 0.0;
+        }
+        2.0 * self.useful_macs as f64 / self.exec_seconds(cfg)
+    }
+
+    /// The paper's headline metric: effective throughput normalized to
+    /// the TDP budget (utilization × peak@TDP, Table 2 rightmost col).
+    pub fn effective_ops_at_tdp(&self, cfg: &ArchConfig, tdp_w: f64) -> f64 {
+        power::effective_ops(cfg, self.utilization(cfg), tdp_w)
+    }
+
+    /// Merge a sequential sub-run into a cumulative total.
+    pub fn accumulate(&mut self, other: &RunStats) {
+        self.slices += other.slices;
+        self.total_cycles += other.total_cycles;
+        self.tile_ops += other.tile_ops;
+        self.pp_ops += other.pp_ops;
+        self.useful_macs += other.useful_macs;
+        self.pod_busy_slices += other.pod_busy_slices;
+        self.deferred_ops += other.deferred_ops;
+        self.dram_bytes += other.dram_bytes;
+        self.cycles_per_slice = self.cycles_per_slice.max(other.cycles_per_slice);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchConfig, ArrayDims};
+
+    fn stats() -> RunStats {
+        RunStats {
+            slices: 100,
+            cycles_per_slice: 36,
+            total_cycles: 3600,
+            tile_ops: 2000,
+            pp_ops: 100,
+            useful_macs: 2000 * 32 * 32 * 32,
+            pod_busy_slices: 2000,
+            deferred_ops: 5,
+            dram_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn utilization_and_busy_pods() {
+        let cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 256);
+        let s = stats();
+        let expect = (2000.0 * 32768.0) / (262144.0 * 3600.0);
+        assert!((s.utilization(&cfg) - expect).abs() < 1e-12);
+        assert!((s.busy_pods_frac(&cfg) - 2000.0 / 25600.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cycles_per_tile_op_equals_slice_len_when_fully_packed() {
+        let mut s = stats();
+        s.pod_busy_slices = 100 * 256;
+        s.tile_ops = 100 * 256;
+        let v = s.cycles_per_tile_op();
+        assert!((v - 36.0).abs() < 1e-9, "got {v}");
+    }
+
+    #[test]
+    fn accumulate_sums() {
+        let mut a = stats();
+        let b = stats();
+        a.accumulate(&b);
+        assert_eq!(a.slices, 200);
+        assert_eq!(a.tile_ops, 4000);
+        assert_eq!(a.total_cycles, 7200);
+    }
+
+    #[test]
+    fn zero_guards() {
+        let cfg = ArchConfig::baseline();
+        let s = RunStats::default();
+        assert_eq!(s.utilization(&cfg), 0.0);
+        assert_eq!(s.busy_pods_frac(&cfg), 0.0);
+        assert_eq!(s.cycles_per_tile_op(), 0.0);
+        assert_eq!(s.achieved_ops(&cfg), 0.0);
+    }
+
+    #[test]
+    fn effective_ops_uses_power_model() {
+        let cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 256);
+        let s = stats();
+        let eff = s.effective_ops_at_tdp(&cfg, 400.0);
+        let util = s.utilization(&cfg);
+        // peak@400W for this config is ~806 TOps/s (Table 2).
+        assert!((eff / (util * 806e12) - 1.0).abs() < 0.05);
+    }
+}

@@ -1,0 +1,126 @@
+//! Test utilities: a deterministic PRNG and a minimal property-testing
+//! harness (proptest is not in the offline crate set, so we provide the
+//! subset we need: random case generation, failure reporting with the
+//! seed, and a simple shrink-by-halving pass for integer tuples).
+
+pub mod prop;
+
+/// xorshift64* PRNG — deterministic, seedable, no dependencies.
+#[derive(Clone, Debug)]
+pub struct XorShift {
+    state: u64,
+}
+
+impl XorShift {
+    /// Seeded constructor; seed 0 is remapped (xorshift fixed point).
+    pub fn new(seed: u64) -> Self {
+        XorShift { state: if seed == 0 { 0x9E3779B97F4A7C15 } else { seed } }
+    }
+
+    /// Next raw u64.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[0, n)`.
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform in `[lo, hi]` inclusive.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f32 in `[-1, 1)`.
+    pub fn f32_pm1(&mut self) -> f32 {
+        (self.f64() * 2.0 - 1.0) as f32
+    }
+
+    /// Random i8 across the full range (int8 operand generator).
+    pub fn i8(&mut self) -> i8 {
+        (self.next_u64() & 0xFF) as u8 as i8
+    }
+
+    /// Shuffle a slice in place (Fisher–Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Choose a random element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = XorShift::new(42);
+        let mut b = XorShift::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn zero_seed_remapped() {
+        let mut r = XorShift::new(0);
+        // Would stay at 0 forever without remapping.
+        assert_ne!(r.next_u64(), 0);
+        assert_ne!(r.next_u64(), r.next_u64());
+    }
+
+    #[test]
+    fn below_and_range_bounds() {
+        let mut r = XorShift::new(7);
+        for _ in 0..1000 {
+            let v = r.below(10);
+            assert!(v < 10);
+            let w = r.range(5, 8);
+            assert!((5..=8).contains(&w));
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval_and_spread() {
+        let mut r = XorShift::new(9);
+        let mut lo = false;
+        let mut hi = false;
+        for _ in 0..1000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+            lo |= v < 0.3;
+            hi |= v > 0.7;
+        }
+        assert!(lo && hi, "values should spread over the interval");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = XorShift::new(3);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,461 @@
+//! Data tiling (paper §3.3): turning a model's GEMM layers into tile
+//! operations sized for the pod array.
+//!
+//! Weight-stationary pods force `W` into `r×c` tiles, which forces `X`'s
+//! second (feature) dimension into chunks of `r`.  The paper's
+//! contribution is the **first-dimension partition**: cutting `X`'s rows
+//! into chunks of `k_part = r` maximizes the number of *parallel* tile
+//! operations without dropping tile-op execution time below the weight
+//! buffering time (`r` cycles).  [`Strategy`] also provides the
+//! baselines the paper compares against (§6.3, Fig. 12b): no partition
+//! (AI-MT [4]) and arbitrary fixed partition sizes (PREMA-style [12]).
+//!
+//! The output is a [`TileProgram`]: tile ops with partial-sum chains
+//! (Fig. 8's dashed arrows), post-processor ops for epilogues, and
+//! layer-level readiness groups used by the scheduler for inter-layer
+//! pipelining.
+
+use crate::util::ceil_div;
+use crate::workloads::{GemmOp, ModelGraph};
+
+/// Activation-matrix first-dimension partitioning strategy (§3.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// The paper's scheme: partition size = array rows (`r×r` tiles).
+    RxR,
+    /// No partitioning of X's first dimension (AI-MT [4]).
+    NoPartition,
+    /// Fixed partition size `k` (Fig. 12b sweep; PREMA-like when large).
+    Fixed(usize),
+}
+
+impl Strategy {
+    /// The partition size for a layer with `m` rows on an array with
+    /// `r` rows.
+    pub fn k_part(&self, m: usize, r: usize) -> usize {
+        match *self {
+            Strategy::RxR => r.min(m.max(1)),
+            Strategy::NoPartition => m.max(1),
+            Strategy::Fixed(k) => k.min(m.max(1)).max(1),
+        }
+    }
+}
+
+/// How a tile op's activation input depends on earlier layers.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum XDep {
+    /// Layer input comes from outside the model (already in SRAM).
+    External,
+    /// Fine-grained: row-group `i` of this layer needs row-group
+    /// `i_scaled` of the single producer (same-m chains overlap
+    /// layer-by-layer like the paper's pipelined schedule).
+    Fine { layer: u32 },
+    /// Coarse: wait for the producers' full outputs (concats, attention
+    /// transposes — exact element mappings don't survive the GEMM
+    /// abstraction).
+    Coarse { layers: Vec<u32> },
+}
+
+/// One tile operation: `x(i,j) · w(j,l) (+ psum) → psum(i,l)`, Fig. 8.
+#[derive(Clone, Debug)]
+pub struct TileOp {
+    /// Global tile-op id (index into `TileProgram::tile_ops`).
+    pub id: u32,
+    /// Owning layer (index into `TileProgram::layers`).
+    pub layer: u32,
+    /// Row-group index (X first-dim chunk).
+    pub i: u16,
+    /// Feature-group index (X second-dim / W first-dim chunk).
+    pub j: u16,
+    /// Filter-group index (W second-dim chunk).
+    pub l: u16,
+    /// Actual tile dims (edge tiles are clipped).
+    pub m: u16,
+    pub k: u16,
+    pub n: u16,
+    /// Partial-sum chain predecessor (same (i,l), previous j).
+    pub psum_dep: Option<u32>,
+}
+
+impl TileOp {
+    /// Useful MACs this op performs.
+    pub fn macs(&self) -> u64 {
+        self.m as u64 * self.k as u64 * self.n as u64
+    }
+}
+
+/// A post-processor op: aggregates the group's subchain psums (a
+/// pairwise add tree, Fig. 8's post-processor aggregation) and applies
+/// the epilogue (bias/activation) to finalize output group `(i, l)`.
+#[derive(Clone, Debug)]
+pub struct PpOp {
+    /// Finalizes this layer's output group.
+    pub layer: u32,
+    pub i: u16,
+    pub l: u16,
+    /// Last tile op of each parallel psum subchain feeding this group.
+    pub tails: Vec<u32>,
+}
+
+impl PpOp {
+    /// Post-processor pair-slots this op consumes: the adds of the
+    /// merge tree plus the epilogue.
+    pub fn pp_slots(&self) -> u32 {
+        self.tails.len() as u32 // (ways − 1) adds + 1 epilogue
+    }
+
+    /// Merge-tree latency in slices.
+    pub fn tree_depth(&self) -> u32 {
+        (self.tails.len() as u32).next_power_of_two().trailing_zeros()
+    }
+}
+
+/// Per-layer tiling metadata.
+#[derive(Clone, Debug)]
+pub struct LayerTiling {
+    /// The source GEMM dims.
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Chosen X first-dim partition.
+    pub k_part: usize,
+    /// Grid: row groups × feature groups × filter groups.
+    pub tm: usize,
+    pub tk: usize,
+    pub tn: usize,
+    /// Parallel psum subchains per (i, l) group (§4.2's post-processor
+    /// aggregation; 1 = pure pod-chained accumulation).
+    pub ways: usize,
+    /// First tile-op id of this layer.
+    pub op_start: u32,
+    /// Activation dependency kind.
+    pub x_dep: XDep,
+}
+
+impl LayerTiling {
+    /// Tile ops in this layer.
+    pub fn num_ops(&self) -> usize {
+        self.tm * self.tk * self.tn
+    }
+
+    /// Id of tile op `(i, j, l)`.
+    pub fn op_id(&self, i: usize, j: usize, l: usize) -> u32 {
+        debug_assert!(i < self.tm && j < self.tk && l < self.tn);
+        self.op_start + ((i * self.tn + l) * self.tk + j) as u32
+    }
+
+    /// Output readiness group index for `(i, l)`.
+    pub fn group(&self, i: usize, l: usize) -> usize {
+        i * self.tn + l
+    }
+
+    /// j-length of each psum subchain.
+    pub fn sub_len(&self) -> usize {
+        self.tk.div_ceil(self.ways)
+    }
+
+    /// Subchain index of chain step `j`.
+    pub fn sub_of(&self, j: usize) -> usize {
+        j / self.sub_len()
+    }
+}
+
+/// A fully tiled model: the scheduler's input.
+#[derive(Clone, Debug, Default)]
+pub struct TileProgram {
+    pub layers: Vec<LayerTiling>,
+    pub tile_ops: Vec<TileOp>,
+    pub pp_ops: Vec<PpOp>,
+    /// Sum of useful MACs (== model MACs).
+    pub total_macs: u64,
+}
+
+/// Tile a model for an `r×c` array under a strategy.
+///
+/// `pods` sizes the chain-splitting heuristic: layers whose parallel
+/// chain count `tm·tn` cannot fill the pods get their psum chains split
+/// into up to [`MAX_AGG_WAYS`] subchains merged on post-processors.
+pub fn tile_model(
+    model: &ModelGraph,
+    r: usize,
+    c: usize,
+    strategy: Strategy,
+    pods: usize,
+) -> TileProgram {
+    let mut prog = TileProgram::default();
+    for op in &model.ops {
+        add_layer(&mut prog, op, r, c, strategy, pods);
+    }
+    debug_assert_eq!(prog.total_macs, model.total_macs());
+    prog
+}
+
+/// Cap on psum-subchain splitting.  The paper's post-processors
+/// aggregate tile *pairs* (§4.2: "post-processors work in pairs to
+/// perform tile aggregations"), so a group's accumulation splits at
+/// most two ways; the ablation bench sweeps larger caps.
+pub const MAX_AGG_WAYS: usize = 2;
+
+/// Subchains per group: just enough parallel chains to fill the pods
+/// (with 2× slack for scheduling), capped by the chain length and
+/// [`MAX_AGG_WAYS`].
+fn agg_ways(tm: usize, tn: usize, tk: usize, pods: usize) -> usize {
+    let chains = tm * tn;
+    if chains == 0 || chains >= pods {
+        return 1; // enough parallel chains already
+    }
+    let want = (2 * pods).div_ceil(chains);
+    want.clamp(1, tk.min(MAX_AGG_WAYS))
+}
+
+fn x_dep_for(op: &GemmOp) -> XDep {
+    match op.deps.len() {
+        0 => XDep::External,
+        1 => XDep::Fine { layer: op.deps[0] as u32 },
+        _ => XDep::Coarse { layers: op.deps.iter().map(|&d| d as u32).collect() },
+    }
+}
+
+fn add_layer(
+    prog: &mut TileProgram,
+    op: &GemmOp,
+    r: usize,
+    c: usize,
+    strategy: Strategy,
+    pods: usize,
+) {
+    let k_part = strategy.k_part(op.m, r);
+    let (tm, tk, tn) = (ceil_div(op.m, k_part), ceil_div(op.k, r), ceil_div(op.n, c));
+    let ways = agg_ways(tm, tn, tk, pods);
+    let layer_id = prog.layers.len() as u32;
+    let op_start = prog.tile_ops.len() as u32;
+    let lt = LayerTiling {
+        m: op.m,
+        k: op.k,
+        n: op.n,
+        k_part,
+        tm,
+        tk,
+        tn,
+        ways,
+        op_start,
+        x_dep: x_dep_for(op),
+    };
+    // Subchain boundaries over the j axis.
+    let sub_len = tk.div_ceil(ways);
+    for i in 0..tm {
+        let m_i = (op.m - i * k_part).min(k_part) as u16;
+        for l in 0..tn {
+            let n_l = (op.n - l * c).min(c) as u16;
+            let mut prev: Option<u32> = None;
+            let mut tails: Vec<u32> = Vec::with_capacity(ways);
+            for j in 0..tk {
+                if j % sub_len == 0 {
+                    // New subchain: close the previous one.
+                    if let Some(t) = prev {
+                        tails.push(t);
+                    }
+                    prev = None;
+                }
+                let k_j = (op.k - j * r).min(r) as u16;
+                let id = lt.op_id(i, j, l);
+                debug_assert_eq!(id as usize, prog.tile_ops.len());
+                prog.tile_ops.push(TileOp {
+                    id,
+                    layer: layer_id,
+                    i: i as u16,
+                    j: j as u16,
+                    l: l as u16,
+                    m: m_i,
+                    k: k_j,
+                    n: n_l,
+                    psum_dep: prev,
+                });
+                prog.total_macs += m_i as u64 * k_j as u64 * n_l as u64;
+                prev = Some(id);
+            }
+            tails.push(prev.expect("tk >= 1"));
+            prog.pp_ops.push(PpOp { layer: layer_id, i: i as u16, l: l as u16, tails });
+        }
+    }
+    prog.layers.push(lt);
+}
+
+/// Tile several models into one merged program (multi-tenancy, §6.1).
+/// Layers are interleaved round-robin so the scheduler sees both
+/// tenants' work concurrently; intra-model dependencies are remapped.
+pub fn tile_models(
+    models: &[&ModelGraph],
+    r: usize,
+    c: usize,
+    strategy: Strategy,
+    pods: usize,
+) -> TileProgram {
+    let mut prog = TileProgram::default();
+    // Per model: map original layer index -> merged layer index.
+    let mut maps: Vec<Vec<u32>> = models.iter().map(|m| vec![u32::MAX; m.ops.len()]).collect();
+    let mut cursors = vec![0usize; models.len()];
+    loop {
+        let mut progressed = false;
+        for (mi, model) in models.iter().enumerate() {
+            if cursors[mi] >= model.ops.len() {
+                continue;
+            }
+            progressed = true;
+            let op = &model.ops[cursors[mi]];
+            // Remap deps through this model's map.
+            let remapped = GemmOp {
+                deps: op.deps.iter().map(|&d| maps[mi][d] as usize).collect(),
+                ..op.clone()
+            };
+            maps[mi][cursors[mi]] = prog.layers.len() as u32;
+            add_layer(&mut prog, &remapped, r, c, strategy, pods);
+            cursors[mi] += 1;
+        }
+        if !progressed {
+            break;
+        }
+    }
+    prog
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::forall;
+    use crate::workloads::ModelGraph;
+
+    fn toy(m: usize, k: usize, n: usize) -> ModelGraph {
+        let mut g = ModelGraph::new("toy");
+        g.add("l0", m, k, n, vec![]);
+        g
+    }
+
+    #[test]
+    fn exact_tiling_no_remainder() {
+        let p = tile_model(&toy(64, 64, 64), 32, 32, Strategy::RxR, 0);
+        let lt = &p.layers[0];
+        assert_eq!((lt.tm, lt.tk, lt.tn), (2, 2, 2));
+        assert_eq!(p.tile_ops.len(), 8);
+        assert_eq!(p.pp_ops.len(), 4);
+        assert!(p.tile_ops.iter().all(|t| t.m == 32 && t.k == 32 && t.n == 32));
+        assert_eq!(p.total_macs, 64 * 64 * 64);
+    }
+
+    #[test]
+    fn edge_tiles_clipped() {
+        let p = tile_model(&toy(33, 40, 65), 32, 32, Strategy::RxR, 0);
+        let lt = &p.layers[0];
+        assert_eq!((lt.tm, lt.tk, lt.tn), (2, 2, 3));
+        // Total MACs preserved despite clipping — the invariant behind
+        // Fig. 5's "ripples".
+        assert_eq!(p.total_macs, 33 * 40 * 65);
+        let last = p.tile_ops.iter().find(|t| t.i == 1 && t.j == 1 && t.l == 2).unwrap();
+        assert_eq!((last.m, last.k, last.n), (1, 8, 1));
+    }
+
+    #[test]
+    fn psum_chains_follow_j() {
+        let p = tile_model(&toy(32, 96, 32), 32, 32, Strategy::RxR, 0);
+        let lt = &p.layers[0];
+        assert_eq!(lt.tk, 3);
+        let o0 = lt.op_id(0, 0, 0) as usize;
+        let o1 = lt.op_id(0, 1, 0) as usize;
+        let o2 = lt.op_id(0, 2, 0) as usize;
+        assert_eq!(p.tile_ops[o0].psum_dep, None);
+        assert_eq!(p.tile_ops[o1].psum_dep, Some(o0 as u32));
+        assert_eq!(p.tile_ops[o2].psum_dep, Some(o1 as u32));
+        assert_eq!(p.pp_ops[0].tails, vec![o2 as u32]);
+    }
+
+    #[test]
+    fn strategy_partition_sizes() {
+        assert_eq!(Strategy::RxR.k_part(1000, 32), 32);
+        assert_eq!(Strategy::RxR.k_part(10, 32), 10, "short m clips");
+        assert_eq!(Strategy::NoPartition.k_part(1000, 32), 1000);
+        assert_eq!(Strategy::Fixed(128).k_part(1000, 32), 128);
+        assert_eq!(Strategy::Fixed(128).k_part(64, 32), 64);
+    }
+
+    #[test]
+    fn rxr_produces_most_parallelism() {
+        // §3.3: r×r maximizes parallel tile ops vs no-partition.
+        let big = toy(4096, 256, 256);
+        let rxr = tile_model(&big, 32, 32, Strategy::RxR, 0);
+        let nop = tile_model(&big, 32, 32, Strategy::NoPartition, 0);
+        assert_eq!(rxr.tile_ops.len(), 128 * 8 * 8);
+        assert_eq!(nop.tile_ops.len(), 8 * 8);
+        assert_eq!(rxr.total_macs, nop.total_macs);
+    }
+
+    #[test]
+    fn xdep_classification() {
+        let mut g = ModelGraph::new("g");
+        let a = g.add("a", 32, 32, 32, vec![]);
+        let b = g.add("b", 32, 32, 32, vec![a]);
+        let _c = g.add("c", 32, 64, 32, vec![a, b]);
+        let p = tile_model(&g, 32, 32, Strategy::RxR, 0);
+        assert_eq!(p.layers[0].x_dep, XDep::External);
+        assert_eq!(p.layers[1].x_dep, XDep::Fine { layer: 0 });
+        assert_eq!(p.layers[2].x_dep, XDep::Coarse { layers: vec![0, 1] });
+    }
+
+    #[test]
+    fn tile_models_interleaves_and_remaps() {
+        let mut g1 = ModelGraph::new("m1");
+        let a = g1.add("a", 32, 32, 32, vec![]);
+        g1.add("b", 32, 32, 32, vec![a]);
+        let mut g2 = ModelGraph::new("m2");
+        g2.add("x", 32, 32, 32, vec![]);
+        let p = tile_models(&[&g1, &g2], 32, 32, Strategy::RxR, 0);
+        assert_eq!(p.layers.len(), 3);
+        // Interleaved: m1.a (0), m2.x (1), m1.b (2) — b's dep remapped to 0.
+        assert_eq!(p.layers[2].x_dep, XDep::Fine { layer: 0 });
+        assert_eq!(
+            p.total_macs,
+            g1.total_macs() + g2.total_macs()
+        );
+    }
+
+    #[test]
+    fn prop_tiling_preserves_macs_and_ids() {
+        forall(60, |rng| {
+            let m = rng.range(1, 300);
+            let k = rng.range(1, 300);
+            let n = rng.range(1, 300);
+            let r = *rng.choose(&[8usize, 16, 32, 64]);
+            let c = *rng.choose(&[8usize, 16, 32, 64]);
+            let fixed = Strategy::Fixed(rng.range(1, 256));
+            let strat = *rng.choose(&[Strategy::RxR, Strategy::NoPartition, fixed]);
+            let p = tile_model(&toy(m, k, n), r, c, strat, rng.range(0, 64));
+            crate::prop_assert!(
+                p.total_macs == (m * k * n) as u64,
+                "macs {} != {}", p.total_macs, m * k * n
+            );
+            // op_id is a bijection onto tile_ops.
+            let lt = &p.layers[0];
+            let mut seen = vec![false; p.tile_ops.len()];
+            for i in 0..lt.tm {
+                for j in 0..lt.tk {
+                    for l in 0..lt.tn {
+                        let id = lt.op_id(i, j, l) as usize;
+                        crate::prop_assert!(!seen[id], "dup id {id}");
+                        seen[id] = true;
+                        let t = &p.tile_ops[id];
+                        crate::prop_assert!(
+                            t.i as usize == i && t.j as usize == j && t.l as usize == l,
+                            "coords mismatch at {id}"
+                        );
+                        crate::prop_assert!(
+                            t.m as usize <= lt.k_part && t.k as usize <= r
+                                && t.n as usize <= c,
+                            "tile dims exceed array"
+                        );
+                    }
+                }
+            }
+            crate::prop_assert!(seen.iter().all(|&s| s), "missing ids");
+            Ok(())
+        });
+    }
+}

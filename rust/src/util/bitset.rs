@@ -1,0 +1,170 @@
+//! A fixed-capacity bitset used on the scheduler hot path (pod / bank
+//! occupancy per time slice).  `Vec<bool>` churn dominated early profiles;
+//! word-packed bits with `first_clear` scans removed it (EXPERIMENTS.md
+//! §Perf).
+
+/// Fixed-size bitset over `u64` words.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct BitSet {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitSet {
+    /// Create a bitset holding `len` bits, all clear.
+    pub fn new(len: usize) -> Self {
+        BitSet { words: vec![0; len.div_ceil(64)], len }
+    }
+
+    /// Number of bits.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if no bits are held (zero capacity).
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Set bit `i`.
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / 64] |= 1 << (i % 64);
+    }
+
+    /// Clear bit `i`.
+    #[inline]
+    pub fn clear(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / 64] &= !(1 << (i % 64));
+    }
+
+    /// Read bit `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        self.words[i / 64] >> (i % 64) & 1 == 1
+    }
+
+    /// Clear all bits.
+    pub fn clear_all(&mut self) {
+        self.words.iter_mut().for_each(|w| *w = 0);
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Index of the first clear bit at or after `from`, if any.
+    pub fn first_clear(&self, from: usize) -> Option<usize> {
+        if from >= self.len {
+            return None;
+        }
+        let mut wi = from / 64;
+        // Mask off bits below `from` in the first word by treating them
+        // as set.
+        let mut word = self.words[wi] | ((1u64 << (from % 64)) - 1);
+        loop {
+            let inv = !word;
+            if inv != 0 {
+                let bit = wi * 64 + inv.trailing_zeros() as usize;
+                return (bit < self.len).then_some(bit);
+            }
+            wi += 1;
+            if wi >= self.words.len() {
+                return None;
+            }
+            word = self.words[wi];
+        }
+    }
+
+    /// Iterator over indices of set bits.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_clear() {
+        let mut b = BitSet::new(130);
+        assert_eq!(b.len(), 130);
+        assert!(!b.get(0));
+        b.set(0);
+        b.set(64);
+        b.set(129);
+        assert!(b.get(0) && b.get(64) && b.get(129));
+        assert_eq!(b.count_ones(), 3);
+        b.clear(64);
+        assert!(!b.get(64));
+        assert_eq!(b.count_ones(), 2);
+        b.clear_all();
+        assert_eq!(b.count_ones(), 0);
+    }
+
+    #[test]
+    fn first_clear_scans() {
+        let mut b = BitSet::new(130);
+        assert_eq!(b.first_clear(0), Some(0));
+        for i in 0..70 {
+            b.set(i);
+        }
+        assert_eq!(b.first_clear(0), Some(70));
+        assert_eq!(b.first_clear(70), Some(70));
+        assert_eq!(b.first_clear(71), Some(71));
+        for i in 70..130 {
+            b.set(i);
+        }
+        assert_eq!(b.first_clear(0), None);
+        assert_eq!(b.first_clear(129), None);
+        assert_eq!(b.first_clear(200), None);
+    }
+
+    #[test]
+    fn first_clear_respects_from_within_word() {
+        let mut b = BitSet::new(16);
+        b.set(3);
+        // from=2: bit 2 clear
+        assert_eq!(b.first_clear(2), Some(2));
+        // from=3: bit 3 set, next clear is 4
+        assert_eq!(b.first_clear(3), Some(4));
+    }
+
+    #[test]
+    fn iter_ones_order() {
+        let mut b = BitSet::new(200);
+        for i in [5usize, 63, 64, 127, 199] {
+            b.set(i);
+        }
+        let got: Vec<_> = b.iter_ones().collect();
+        assert_eq!(got, vec![5, 63, 64, 127, 199]);
+    }
+
+    #[test]
+    fn exact_word_boundary_len() {
+        let mut b = BitSet::new(128);
+        for i in 0..128 {
+            b.set(i);
+        }
+        assert_eq!(b.first_clear(0), None);
+        assert_eq!(b.count_ones(), 128);
+    }
+}

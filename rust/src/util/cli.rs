@@ -1,0 +1,100 @@
+//! Tiny hand-rolled CLI argument parser (clap is not available in the
+//! offline crate set; the needs here are flags, `--key value` options and
+//! positional args).
+
+use std::collections::HashMap;
+
+/// Parsed command line: positionals plus `--key value` / `--flag` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Self {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Look up an option value.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Option with default.
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Typed option lookup.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+
+    /// Boolean flag (present / absent).
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key) || self.options.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn parses_positional_options_flags() {
+        let a = args("table2 --out results --quick --pods 256");
+        assert_eq!(a.positional, vec!["table2"]);
+        assert_eq!(a.get("out"), Some("results"));
+        assert!(a.flag("quick"));
+        assert_eq!(a.get_parse::<usize>("pods"), Some(256));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn parses_eq_form() {
+        let a = args("--size=32x32 run");
+        assert_eq!(a.get("size"), Some("32x32"));
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_next_flag() {
+        let a = args("--quick --out r");
+        assert!(a.flag("quick"));
+        assert_eq!(a.get("out"), Some("r"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args("x");
+        assert_eq!(a.get_or("out", "results"), "results");
+        assert_eq!(a.get_parse::<usize>("pods"), None);
+    }
+}

@@ -1,0 +1,65 @@
+//! Minimal CSV writer for experiment results (no serde offline; the
+//! format is trivial and the columns are all numeric/short strings).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::Result;
+
+/// Writes rows to a CSV file, escaping nothing (values must not contain
+/// commas/newlines — enforced by debug assertion).
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create the file (and parent dirs) and write the header row.
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<Self> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, cols: header.len() })
+    }
+
+    /// Write one row; must match the header width.
+    pub fn row(&mut self, values: &[String]) -> Result<()> {
+        debug_assert_eq!(values.len(), self.cols, "csv row width mismatch");
+        debug_assert!(values.iter().all(|v| !v.contains(',') && !v.contains('\n')));
+        writeln!(self.out, "{}", values.join(","))?;
+        Ok(())
+    }
+
+    /// Flush to disk.
+    pub fn finish(mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Format helper: fixed-point with `p` decimals.
+pub fn f(v: f64, p: usize) -> String {
+    format!("{v:.p$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("sosa_csv_test");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row(&["1".into(), "2".into()]).unwrap();
+        w.row(&[f(1.23456, 2), f(0.5, 3)]).unwrap();
+        w.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n1.23,0.500\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,70 @@
+//! Small shared utilities: bitsets, CSV/table emitters, CLI parsing.
+
+pub mod bitset;
+pub mod cli;
+pub mod csv;
+pub mod table;
+
+pub use bitset::BitSet;
+pub use csv::CsvWriter;
+pub use table::Table;
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Round `a` up to the next multiple of `m`.
+#[inline]
+pub fn round_up(a: usize, m: usize) -> usize {
+    ceil_div(a, m) * m
+}
+
+/// Is `n` a power of two (n > 0)?
+#[inline]
+pub fn is_pow2(n: usize) -> bool {
+    n > 0 && n & (n - 1) == 0
+}
+
+/// floor(log2(n)) for n > 0.
+#[inline]
+pub fn ilog2(n: usize) -> u32 {
+    debug_assert!(n > 0);
+    usize::BITS - 1 - n.leading_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_cases() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+        assert_eq!(ceil_div(100, 32), 4);
+    }
+
+    #[test]
+    fn round_up_cases() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn pow2_and_log2() {
+        assert!(is_pow2(1));
+        assert!(is_pow2(256));
+        assert!(!is_pow2(0));
+        assert!(!is_pow2(48));
+        assert_eq!(ilog2(1), 0);
+        assert_eq!(ilog2(2), 1);
+        assert_eq!(ilog2(255), 7);
+        assert_eq!(ilog2(256), 8);
+    }
+}

@@ -1,0 +1,146 @@
+//! BERT-family Transformer benchmarks (§5: BERT-medium/base/large at
+//! sequence length 100; Fig. 5 additionally sweeps mini/small and
+//! sequence lengths 10..500 per the TurboTransformers distribution).
+//!
+//! Each encoder layer contributes, at sequence length `s`, hidden `h`
+//! and `a` heads (head dim `d = h/a`):
+//!
+//! * Q, K, V projections — three `(s × h) · (h × h)` GEMMs,
+//! * attention scores  — `a` GEMMs of `(s × d) · (d × s)`,
+//! * attention context — `a` GEMMs of `(s × s) · (s × d)`,
+//! * output projection — `(s × h) · (h × h)`,
+//! * FFN — `(s × h) · (h × 4h)` then `(s × 4h) · (4h × h)`.
+//!
+//! Softmax / layernorm / residuals are post-processor SIMD work, not
+//! GEMMs (§4).
+
+use super::ModelGraph;
+
+/// BERT size configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BertConfig {
+    /// Encoder layers.
+    pub layers: usize,
+    /// Hidden size.
+    pub hidden: usize,
+    /// Attention heads.
+    pub heads: usize,
+}
+
+impl BertConfig {
+    /// Named configurations (Devlin et al. / Turc et al. sizes).
+    pub fn named(name: &str) -> Option<BertConfig> {
+        let (layers, hidden, heads) = match name {
+            "mini" => (4, 256, 4),
+            "small" => (4, 512, 8),
+            "medium" => (8, 512, 8),
+            "base" => (12, 768, 12),
+            "large" => (24, 1024, 16),
+            _ => return None,
+        };
+        Some(BertConfig { layers, hidden, heads })
+    }
+}
+
+/// Build a BERT encoder stack as a GEMM graph.
+pub fn bert(name: &str, layers: usize, hidden: usize, heads: usize, seq: usize) -> ModelGraph {
+    assert!(hidden % heads == 0, "hidden must divide by heads");
+    let d = hidden / heads;
+    let mut g = ModelGraph::new(name);
+    let mut prev: Option<usize> = None;
+    for l in 0..layers {
+        let dep = |p: Option<usize>| p.map(|v| vec![v]).unwrap_or_default();
+        let q = g.add(format!("l{l}_q"), seq, hidden, hidden, dep(prev));
+        let k = g.add(format!("l{l}_k"), seq, hidden, hidden, dep(prev));
+        let v = g.add(format!("l{l}_v"), seq, hidden, hidden, dep(prev));
+        // Per-head score and context GEMMs.
+        let mut ctx_ids = Vec::with_capacity(heads);
+        for hd in 0..heads {
+            let s_id = g.add(format!("l{l}_h{hd}_scores"), seq, d, seq, vec![q, k]);
+            let c_id = g.add(format!("l{l}_h{hd}_ctx"), seq, seq, d, vec![s_id, v]);
+            ctx_ids.push(c_id);
+        }
+        let o = g.add(format!("l{l}_out"), seq, hidden, hidden, ctx_ids);
+        let f1 = g.add(format!("l{l}_ffn1"), seq, hidden, 4 * hidden, vec![o]);
+        let f2 = g.add(format!("l{l}_ffn2"), seq, 4 * hidden, hidden, vec![f1]);
+        prev = Some(f2);
+    }
+    g
+}
+
+/// Convenience: named BERT at a sequence length.
+pub fn bert_named(size: &str, seq: usize) -> ModelGraph {
+    let cfg = BertConfig::named(size)
+        .unwrap_or_else(|| panic!("unknown BERT size {size}"));
+    bert(
+        &format!("BERT-{size}-s{seq}"),
+        cfg.layers,
+        cfg.hidden,
+        cfg.heads,
+        seq,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bert_base_op_count() {
+        let g = bert_named("base", 100);
+        g.validate().unwrap();
+        // Per layer: 3 (QKV) + 12 scores + 12 ctx + 1 out + 2 FFN = 30.
+        assert_eq!(g.ops.len(), 12 * 30);
+    }
+
+    #[test]
+    fn bert_base_macs_at_seq100() {
+        let g = bert_named("base", 100);
+        // Per layer: QKV+out 4·s·h² + FFN 8·s·h² + attention 2·s²·h
+        //          = 12·s·h² + 2·s²·h.
+        let (s, h) = (100u64, 768u64);
+        let per_layer = 12 * s * h * h + 2 * s * s * h;
+        assert_eq!(g.total_macs(), 12 * per_layer);
+    }
+
+    #[test]
+    fn bert_sizes_ordering() {
+        let sizes = ["mini", "small", "medium", "base", "large"];
+        let macs: Vec<u64> =
+            sizes.iter().map(|s| bert_named(s, 100).total_macs()).collect();
+        for w in macs.windows(2) {
+            assert!(w[0] < w[1], "BERT sizes must be increasing: {macs:?}");
+        }
+    }
+
+    #[test]
+    fn bert_filters_exceed_cnn_average() {
+        // Fig. 4: Transformers have ~6× more filters (n) on average.
+        let bert = bert_named("base", 100);
+        let cnn = crate::workloads::cnn::resnet(50, 299);
+        let bn = bert.dim_percentiles(|o| o.n).mean;
+        let cn = cnn.dim_percentiles(|o| o.n).mean;
+        assert!(bn / cn > 2.0, "bert n {bn} vs cnn n {cn}");
+    }
+
+    #[test]
+    fn seq_len_bounds_filter_reuse() {
+        // m never exceeds the sequence length for projection GEMMs.
+        let g = bert_named("medium", 60);
+        assert!(g.ops.iter().all(|o| o.m == 60));
+    }
+
+    #[test]
+    fn unknown_size_is_none() {
+        assert!(BertConfig::named("huge").is_none());
+    }
+
+    #[test]
+    fn score_ctx_dims() {
+        let g = bert("t", 1, 256, 4, 50);
+        let scores = g.ops.iter().find(|o| o.name == "l0_h0_scores").unwrap();
+        assert_eq!((scores.m, scores.k, scores.n), (50, 64, 50));
+        let ctx = g.ops.iter().find(|o| o.name == "l0_h0_ctx").unwrap();
+        assert_eq!((ctx.m, ctx.k, ctx.n), (50, 50, 64));
+    }
+}

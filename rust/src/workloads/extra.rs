@@ -1,0 +1,139 @@
+//! Zoo extensions beyond the paper's ten benchmarks: VGG-16 (the
+//! classic compute-heavy CNN), MobileNet-V2 (depthwise convolutions —
+//! a worst case for weight-stationary arrays), and a GPT-2-style
+//! decoder (autoregressive Transformer at generation time, seq = 1
+//! incremental or prompt-length prefill).  Useful for stressing the
+//! tiling/scheduling stack outside the paper's envelope.
+
+use super::cnn::out_dim_pub as out_dim;
+use super::ModelGraph;
+
+/// VGG-16 (Simonyan & Zisserman 2015) at `input`×`input`.
+pub fn vgg16(input: usize) -> ModelGraph {
+    let mut g = ModelGraph::new("VGG16");
+    let plan: &[(usize, usize)] = &[
+        (2, 64), (2, 128), (3, 256), (3, 512), (3, 512),
+    ];
+    let mut hw = input;
+    let mut in_c = 3usize;
+    let mut prev: Option<usize> = None;
+    for (bi, &(convs, out_c)) in plan.iter().enumerate() {
+        for ci in 0..convs {
+            let id = g.add(
+                format!("conv{}_{}", bi + 1, ci + 1),
+                hw * hw,
+                in_c * 9,
+                out_c,
+                prev.map(|p| vec![p]).unwrap_or_default(),
+            );
+            prev = Some(id);
+            in_c = out_c;
+        }
+        hw = out_dim(hw, 2, 2, 0); // 2×2 max-pool
+    }
+    let f1 = g.add("fc6", 1, hw * hw * 512, 4096, vec![prev.unwrap()]);
+    let f2 = g.add("fc7", 1, 4096, 4096, vec![f1]);
+    g.add("fc8", 1, 4096, 1000, vec![f2]);
+    g
+}
+
+/// MobileNet-V2 (Sandler et al. 2018).  Depthwise 3×3 convolutions are
+/// modeled per §3.1's GEMM abstraction as `k = 9` GEMMs (each output
+/// channel sees only its own input channel — the systolic array's
+/// worst-case feature dimension).
+pub fn mobilenet_v2(input: usize) -> ModelGraph {
+    let mut g = ModelGraph::new("MobileNetV2");
+    // (expansion t, out channels c, repeats n, stride s)
+    let plan: &[(usize, usize, usize, usize)] = &[
+        (1, 16, 1, 1), (6, 24, 2, 2), (6, 32, 3, 2), (6, 64, 4, 2),
+        (6, 96, 3, 1), (6, 160, 3, 2), (6, 320, 1, 1),
+    ];
+    let mut hw = out_dim(input, 3, 2, 1); // stem conv 3×3/2 → 32ch
+    let mut prev = g.add("stem", hw * hw, 27, 32, vec![]);
+    let mut in_c = 32usize;
+    for (bi, &(t, c, n, s)) in plan.iter().enumerate() {
+        for ri in 0..n {
+            let stride = if ri == 0 { s } else { 1 };
+            let mid = in_c * t;
+            let tag = format!("b{}_{}", bi + 1, ri + 1);
+            // expand 1×1
+            let e = if t > 1 {
+                g.add(format!("{tag}_exp"), hw * hw, in_c, mid, vec![prev])
+            } else {
+                prev
+            };
+            // depthwise 3×3: k = 9 (per-channel filters)
+            let new_hw = if stride == 2 { out_dim(hw, 3, 2, 1) } else { hw };
+            let d = g.add(format!("{tag}_dw"), new_hw * new_hw * mid / mid.max(1), 9, mid, vec![e]);
+            hw = new_hw;
+            // project 1×1
+            prev = g.add(format!("{tag}_proj"), hw * hw, mid, c, vec![d]);
+            in_c = c;
+        }
+    }
+    let head = g.add("head", hw * hw, in_c, 1280, vec![prev]);
+    g.add("fc", 1, 1280, 1000, vec![head]);
+    g
+}
+
+/// GPT-2-style decoder: `layers`×(QKV+attn+out+MLP) at context length
+/// `ctx` (prefill).  Equivalent GEMM structure to BERT but with the
+/// causal-decode dimensions.
+pub fn gpt2(name: &str, layers: usize, hidden: usize, heads: usize, ctx: usize) -> ModelGraph {
+    // The GEMM structure matches the BERT encoder; reuse it under a
+    // decoder name (causality only changes which scores are computed,
+    // not the scheduled GEMM dims in prefill).
+    let mut g = super::bert::bert(name, layers, hidden, heads, ctx);
+    g.name = name.to_string();
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_structure_and_macs() {
+        let g = vgg16(224);
+        g.validate().unwrap();
+        assert_eq!(g.ops.len(), 13 + 3);
+        // VGG-16 @224 ≈ 15.5 GMACs.
+        let gmacs = g.total_macs() as f64 / 1e9;
+        assert!((13.0..=17.5).contains(&gmacs), "VGG16 {gmacs} GMACs");
+    }
+
+    #[test]
+    fn mobilenet_v2_structure() {
+        let g = mobilenet_v2(224);
+        g.validate().unwrap();
+        // MobileNet-V2 @224 ≈ 0.3 GMACs — an order of magnitude lighter.
+        let gmacs = g.total_macs() as f64 / 1e9;
+        assert!(gmacs < 1.0, "MobileNetV2 {gmacs} GMACs");
+        // Depthwise layers have tiny k (= 9): the zoo's hardest case
+        // for feature-dimension utilization.
+        assert!(g.ops.iter().any(|o| o.k == 9));
+    }
+
+    #[test]
+    fn mobilenet_utilization_is_poor_on_wide_arrays() {
+        // Depthwise k = 9 wastes 23/32 feature rows even on the paper's
+        // optimal pod — MobileNets motivate flexible-k designs (beyond
+        // the paper's scope, but the simulator quantifies it).
+        use crate::arch::{ArchConfig, ArrayDims};
+        use crate::sim::{simulate, SimOptions};
+        let cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 64);
+        let mut o = SimOptions::default();
+        o.memory_model = false;
+        let dense = simulate(&cfg, &vgg16(224), &o).utilization(&cfg);
+        let dw = simulate(&cfg, &mobilenet_v2(224), &o).utilization(&cfg);
+        assert!(dw < dense, "depthwise {dw} vs dense {dense}");
+    }
+
+    #[test]
+    fn gpt2_small_matches_bert_style_macs() {
+        let g = gpt2("GPT2-small", 12, 768, 12, 128);
+        g.validate().unwrap();
+        let (s, h) = (128u64, 768u64);
+        assert_eq!(g.total_macs(), 12 * (12 * s * h * h + 2 * s * s * h));
+    }
+}

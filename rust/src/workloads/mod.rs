@@ -1,0 +1,213 @@
+//! DNN workload model zoo (paper §5).
+//!
+//! The simulator consumes DNN models as DAGs of GEMM operations — every
+//! layer type the paper's benchmarks use (convolution, fully-connected,
+//! attention) is expressed as a GEMM (§3.1): `X(m×k) · W(k×n)` where,
+//! in the paper's Fig. 4 vocabulary,
+//!
+//! * `m` = number of **filter reuses** (conv: out_h·out_w·batch;
+//!   attention/FC: sequence length · batch),
+//! * `k` = number of **features** (conv: in_c·kh·kw),
+//! * `n` = number of **filters** (output channels / hidden units).
+//!
+//! Models are built architecturally — ResNet/DenseNet/Inception-v3 layer
+//! dimensions are derived from the published block structures, BERT from
+//! (layers, hidden, heads) — because the simulator never needs weights,
+//! only dimensions (pretrained Keras weights, which the paper loads, are
+//! irrelevant to scheduling).
+
+pub mod bert;
+pub mod cnn;
+pub mod extra;
+pub mod zoo;
+
+pub use bert::{bert, BertConfig};
+pub use cnn::{densenet, inception_v3, resnet};
+
+/// One GEMM operation in a model graph.
+#[derive(Clone, Debug)]
+pub struct GemmOp {
+    /// Index within the owning [`ModelGraph`].
+    pub id: usize,
+    /// Human-readable layer name (e.g. `conv2_block1_1x1`).
+    pub name: String,
+    /// Filter reuse (rows of X).
+    pub m: usize,
+    /// Features (cols of X == rows of W).
+    pub k: usize,
+    /// Filters (cols of W).
+    pub n: usize,
+    /// Graph dependencies: ids of ops whose output feeds this op.
+    pub deps: Vec<usize>,
+}
+
+impl GemmOp {
+    /// MACs to execute this GEMM.
+    pub fn macs(&self) -> u64 {
+        self.m as u64 * self.k as u64 * self.n as u64
+    }
+
+    /// Output activation elements.
+    pub fn out_elems(&self) -> u64 {
+        self.m as u64 * self.n as u64
+    }
+}
+
+/// A DNN model as a DAG of GEMM ops (edges = activation dataflow).
+#[derive(Clone, Debug, Default)]
+pub struct ModelGraph {
+    /// Model name (benchmark id).
+    pub name: String,
+    /// Ops in a topological order (deps always point backwards).
+    pub ops: Vec<GemmOp>,
+}
+
+impl ModelGraph {
+    /// New empty graph.
+    pub fn new(name: impl Into<String>) -> Self {
+        ModelGraph { name: name.into(), ops: vec![] }
+    }
+
+    /// Append an op; `deps` must reference earlier ops.
+    pub fn add(
+        &mut self,
+        name: impl Into<String>,
+        m: usize,
+        k: usize,
+        n: usize,
+        deps: Vec<usize>,
+    ) -> usize {
+        let id = self.ops.len();
+        debug_assert!(deps.iter().all(|&d| d < id), "deps must be earlier ops");
+        debug_assert!(m > 0 && k > 0 && n > 0, "GEMM dims must be positive");
+        self.ops.push(GemmOp { id, name: name.into(), m, k, n, deps });
+        id
+    }
+
+    /// Total multiply-accumulates in the model.
+    pub fn total_macs(&self) -> u64 {
+        self.ops.iter().map(GemmOp::macs).sum()
+    }
+
+    /// Total ops (2 × MACs), the unit of the paper's TeraOps/s.
+    pub fn total_ops(&self) -> u64 {
+        2 * self.total_macs()
+    }
+
+    /// Check structural invariants (used by zoo tests).
+    pub fn validate(&self) -> crate::Result<()> {
+        for (i, op) in self.ops.iter().enumerate() {
+            if op.id != i {
+                return Err(crate::Error::Workload(format!(
+                    "{}: op {} has id {}",
+                    self.name, i, op.id
+                )));
+            }
+            if op.m == 0 || op.k == 0 || op.n == 0 {
+                return Err(crate::Error::Workload(format!(
+                    "{}: op {} has zero dim",
+                    self.name, op.name
+                )));
+            }
+            if op.deps.iter().any(|&d| d >= i) {
+                return Err(crate::Error::Workload(format!(
+                    "{}: op {} has forward dep",
+                    self.name, op.name
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Scale the batch dimension: multiplies every op's `m` (concatenated
+    /// batched inputs share weights — §6.1's multi-batching).
+    pub fn with_batch(&self, batch: usize) -> ModelGraph {
+        let mut g = self.clone();
+        g.name = format!("{}-b{batch}", self.name);
+        for op in &mut g.ops {
+            op.m *= batch;
+        }
+        g
+    }
+
+    /// Fig. 4 statistics: ops-weighted percentiles of a dimension.
+    pub fn dim_percentiles(&self, dim: impl Fn(&GemmOp) -> usize) -> DimStats {
+        let mut pairs: Vec<(usize, u64)> =
+            self.ops.iter().map(|o| (dim(o), o.macs())).collect();
+        pairs.sort_unstable();
+        let total: u64 = pairs.iter().map(|p| p.1).sum();
+        let pct = |q: f64| -> usize {
+            let target = (total as f64 * q) as u64;
+            let mut acc = 0u64;
+            for &(v, w) in &pairs {
+                acc += w;
+                if acc >= target {
+                    return v;
+                }
+            }
+            pairs.last().map(|p| p.0).unwrap_or(0)
+        };
+        let mean = if total == 0 {
+            0.0
+        } else {
+            pairs.iter().map(|&(v, w)| v as f64 * w as f64).sum::<f64>() / total as f64
+        };
+        DimStats { p10: pct(0.10), mean, p90: pct(0.90) }
+    }
+}
+
+/// Ops-weighted dimension statistics (Fig. 4's horizontal lines).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DimStats {
+    pub p10: usize,
+    pub mean: f64,
+    pub p90: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_totals() {
+        let mut g = ModelGraph::new("toy");
+        let a = g.add("l0", 10, 20, 30, vec![]);
+        let b = g.add("l1", 10, 30, 40, vec![a]);
+        assert_eq!(b, 1);
+        assert_eq!(g.total_macs(), 10 * 20 * 30 + 10 * 30 * 40);
+        assert_eq!(g.total_ops(), 2 * g.total_macs());
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn with_batch_scales_m_only() {
+        let mut g = ModelGraph::new("toy");
+        g.add("l0", 10, 20, 30, vec![]);
+        let g4 = g.with_batch(4);
+        assert_eq!(g4.ops[0].m, 40);
+        assert_eq!(g4.ops[0].k, 20);
+        assert_eq!(g4.ops[0].n, 30);
+        assert_eq!(g4.total_macs(), 4 * g.total_macs());
+        assert_eq!(g4.name, "toy-b4");
+    }
+
+    #[test]
+    fn validate_catches_zero_dims() {
+        let g = ModelGraph {
+            name: "bad".into(),
+            ops: vec![GemmOp { id: 0, name: "z".into(), m: 0, k: 1, n: 1, deps: vec![] }],
+        };
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn percentiles_weighted_by_macs() {
+        let mut g = ModelGraph::new("toy");
+        // Big op with m=100 dominates the weight.
+        g.add("big", 100, 100, 100, vec![]);
+        g.add("small", 2, 2, 2, vec![]);
+        let s = g.dim_percentiles(|o| o.m);
+        assert_eq!(s.p90, 100);
+        assert!(s.mean > 99.0);
+    }
+}

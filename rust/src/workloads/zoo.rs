@@ -1,0 +1,96 @@
+//! The paper's benchmark suite (§5) and Fig. 5 design-space workloads.
+
+use super::bert::bert_named;
+use super::cnn::{densenet, inception_v3, resnet};
+use super::ModelGraph;
+
+/// §5's ten benchmarks: seven CNNs at 299×299 input and three BERTs at
+/// the TurboTransformers median sequence length (100).
+pub fn benchmarks() -> Vec<ModelGraph> {
+    vec![
+        inception_v3(299),
+        resnet(50, 299),
+        resnet(101, 299),
+        resnet(152, 299),
+        densenet(121, 299),
+        densenet(169, 299),
+        densenet(201, 299),
+        bert_named("medium", 100),
+        bert_named("base", 100),
+        bert_named("large", 100),
+    ]
+}
+
+/// Look a benchmark up by (case-insensitive) name prefix.
+pub fn by_name(name: &str) -> Option<ModelGraph> {
+    let lower = name.to_lowercase();
+    benchmarks()
+        .into_iter()
+        .find(|m| m.name.to_lowercase().starts_with(&lower))
+}
+
+/// Fig. 5's CNN workload set: the seven CNNs at input sizes 224 / 256 /
+/// 299.
+pub fn fig5_cnns() -> Vec<ModelGraph> {
+    let mut out = vec![];
+    for input in [224usize, 256, 299] {
+        out.push(inception_v3(input));
+        out.push(resnet(50, input));
+        out.push(resnet(101, input));
+        out.push(resnet(152, input));
+        out.push(densenet(121, input));
+        out.push(densenet(169, input));
+        out.push(densenet(201, input));
+    }
+    out
+}
+
+/// Fig. 5's Transformer workload set: BERT mini/small/medium/base/large
+/// at sequence lengths 10..500 (from [57]).
+pub fn fig5_berts() -> Vec<ModelGraph> {
+    let mut out = vec![];
+    for size in ["mini", "small", "medium", "base", "large"] {
+        for seq in [10usize, 20, 40, 60, 80, 100, 200, 300, 400, 500] {
+            out.push(bert_named(size, seq));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ten_benchmarks_all_valid() {
+        let b = benchmarks();
+        assert_eq!(b.len(), 10);
+        for m in &b {
+            m.validate().unwrap();
+            assert!(m.total_macs() > 100_000_000, "{} too small", m.name);
+        }
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("resnet50").is_some());
+        assert!(by_name("ResNet152").is_some());
+        assert!(by_name("BERT-large").is_some());
+        assert!(by_name("vgg").is_none());
+    }
+
+    #[test]
+    fn fig5_workload_counts() {
+        assert_eq!(fig5_cnns().len(), 21);
+        assert_eq!(fig5_berts().len(), 50);
+    }
+
+    #[test]
+    fn benchmark_names_unique() {
+        let b = benchmarks();
+        let mut names: Vec<&str> = b.iter().map(|m| m.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 10);
+    }
+}
