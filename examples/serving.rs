@@ -1,0 +1,70 @@
+//! Online serving demo: live Poisson traffic over a ResNet + BERT
+//! tenant mix, comparing shared (one model group at a time) against
+//! statically partitioned pods (each tenant owns a power-of-two pod
+//! slice and the partitions run concurrently).
+//!
+//! ```bash
+//! cargo run --release --example serving [qps] [seed]
+//! ```
+
+use sosa::arch::{ArchConfig, ArrayDims};
+use sosa::serve::{
+    analyze, capacity_qps, generate, serve_partitioned, serve_shared, BatchPolicy,
+    EngineConfig, Tenant, TrafficSpec,
+};
+use sosa::sim::SimOptions;
+use sosa::workloads::zoo;
+
+fn main() {
+    let seed: u64 = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(7);
+
+    // A 64-pod machine keeps the demo snappy; scale --pods in the
+    // `sosa-experiments serve` CLI for the full 256-pod baseline.
+    let cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 64);
+    let tenants = vec![
+        Tenant::new(zoo::by_name("resnet50").unwrap(), 1.0),
+        Tenant::new(zoo::by_name("bert-medium").unwrap(), 1.0),
+    ];
+
+    let ecfg = EngineConfig {
+        policy: BatchPolicy { max_batch: 4, max_wait_s: 1e-3 },
+        sim: SimOptions { memory_model: false, ..Default::default() },
+        ..Default::default()
+    };
+
+    let capacity = capacity_qps(&cfg, &tenants, &ecfg);
+    let qps: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.6 * capacity);
+    let duration_s = 0.25;
+    let deadline_s = 8.0 * ecfg.policy.max_batch as f64 / capacity;
+
+    println!("machine  : {} pods of {}", cfg.num_pods, cfg.array);
+    println!("tenants  : {} + {}", tenants[0].name, tenants[1].name);
+    println!(
+        "traffic  : Poisson {qps:.0} req/s for {duration_s} s (seed {seed}), \
+         est. shared capacity {capacity:.0} req/s\n"
+    );
+
+    let arrivals = generate(&TrafficSpec::poisson(qps, duration_s, seed), &tenants);
+
+    let shared = serve_shared(&cfg, &tenants, &arrivals, &ecfg);
+    let s = analyze(&shared, duration_s, deadline_s);
+    println!("— shared machine (one model group at a time) —");
+    println!("{s}\n");
+
+    let part = serve_partitioned(&cfg, &tenants, &arrivals, &ecfg).expect("partition plan");
+    let p = analyze(&part, duration_s, deadline_s);
+    println!("— statically partitioned pods (one slice per tenant) —");
+    println!("{p}\n");
+    if p.latency.p99 > 0.0 && s.latency.p99 > 0.0 {
+        println!(
+            "partitioning: p99 {:.3} ms → {:.3} ms, goodput {:.0} → {:.0} req/s",
+            s.latency.p99 * 1e3,
+            p.latency.p99 * 1e3,
+            s.goodput_qps,
+            p.goodput_qps
+        );
+    }
+}

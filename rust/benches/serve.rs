@@ -1,0 +1,75 @@
+//! Serving-engine benchmarks (custom harness — criterion is not in the
+//! offline crate set).  Measures the discrete-event hot path: requests
+//! drained per second through the batcher with memoized batch costs,
+//! plus trace generation throughput.
+
+use std::time::Instant;
+
+use sosa::arch::{ArchConfig, ArrayDims};
+use sosa::serve::{
+    generate, serve_shared, BatchPolicy, EngineConfig, Tenant, TrafficSpec,
+};
+use sosa::sim::SimOptions;
+use sosa::workloads::{zoo, ModelGraph};
+
+fn bench<F: FnMut() -> u64>(name: &str, iters: usize, mut f: F) {
+    // Warmup.
+    let _ = f();
+    let t0 = Instant::now();
+    let mut units = 0u64;
+    for _ in 0..iters {
+        units += f();
+    }
+    let dt = t0.elapsed();
+    println!(
+        "{name:44} {:>10.3} ms/iter  {:>14.1} units/s",
+        dt.as_secs_f64() * 1e3 / iters as f64,
+        units as f64 / dt.as_secs_f64()
+    );
+}
+
+fn main() {
+    println!("== serving benches (units = requests unless noted) ==");
+
+    let sim = SimOptions { memory_model: false, ..Default::default() };
+
+    // Tiny model → batch costs are cheap to simulate once, so the
+    // bench isolates the event-loop + memoization path.
+    let mut toy = ModelGraph::new("toy-mlp");
+    let a = toy.add("fc1", 256, 256, 256, vec![]);
+    toy.add("fc2", 256, 256, 64, vec![a]);
+    let toy_tenants = vec![Tenant::new(toy, 1.0)];
+    let toy_cfg = ArchConfig::with_array(ArrayDims::new(16, 16), 16);
+
+    let spec = TrafficSpec::poisson(200_000.0, 1.0, 7);
+    let arrivals = generate(&spec, &toy_tenants);
+    println!("trace: {} arrivals", arrivals.len());
+
+    bench("generate poisson trace (~200k)", 5, || {
+        generate(&spec, &toy_tenants).len() as u64
+    });
+
+    let ecfg = EngineConfig {
+        policy: BatchPolicy { max_batch: 16, max_wait_s: 1e-4 },
+        sim: sim.clone(),
+        ..Default::default()
+    };
+    bench("engine drain 200k reqs (toy, memoized)", 3, || {
+        serve_shared(&toy_cfg, &toy_tenants, &arrivals, &ecfg).completed.len() as u64
+    });
+
+    // Real model: the per-batch cost is simulator-bound on the first
+    // iteration and memoized afterwards.
+    let bert = vec![Tenant::new(zoo::by_name("bert-medium").unwrap(), 1.0)];
+    let cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 64);
+    let bspec = TrafficSpec::poisson(5_000.0, 1.0, 11);
+    let barrivals = generate(&bspec, &bert);
+    let becfg = EngineConfig {
+        policy: BatchPolicy { max_batch: 8, max_wait_s: 1e-3 },
+        sim,
+        ..Default::default()
+    };
+    bench("engine drain 5k reqs (bert-medium @64)", 2, || {
+        serve_shared(&cfg, &bert, &barrivals, &becfg).completed.len() as u64
+    });
+}

@@ -136,8 +136,7 @@ mod tests {
         // The analytic model must stay within ~25% of the full
         // scheduler on the benchmarks it is used to sweep.
         let cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 256);
-        let mut opts = SimOptions::default();
-        opts.memory_model = false;
+        let opts = SimOptions { memory_model: false, ..Default::default() };
         for name in ["resnet50", "bert-base"] {
             let m = zoo::by_name(name).unwrap();
             let sim = simulate(&cfg, &m, &opts).utilization(&cfg);

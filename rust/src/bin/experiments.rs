@@ -1,13 +1,19 @@
-//! `sosa-experiments` — regenerate the paper's tables and figures.
+//! `sosa-experiments` — regenerate the paper's tables and figures, and
+//! drive the online serving engine.
 //!
 //! ```bash
 //! sosa-experiments all            # full suite → results/*.csv
 //! sosa-experiments table2 fig9    # selected experiments
 //! sosa-experiments all --quick    # reduced sweeps
 //! sosa-experiments --list
+//!
+//! # Online serving (trace-driven, deterministic under --seed):
+//! sosa-experiments serve --model bert-large --qps 2000 --seed 7
+//! sosa-experiments serve --models resnet50,bert-medium --partitioned
+//! sosa-experiments serve --model bert-large --sweep   # saturation knee
 //! ```
 
-use sosa::experiments::{run, run_all, ExpOptions, ALL};
+use sosa::experiments::{run, run_all, serving_exp, ExpOptions, ALL};
 use sosa::util::cli::Args;
 
 fn main() {
@@ -16,8 +22,18 @@ fn main() {
         out_dir: args.get_or("out", "results").to_string(),
         quick: args.flag("quick"),
     };
+    if args.positional.first().map(|s| s.as_str()) == Some("serve") {
+        let t0 = std::time::Instant::now();
+        serving_exp::serve_cmd(&args, &opts).expect("serve failed");
+        eprintln!("\nserve done in {:.1?}", t0.elapsed());
+        return;
+    }
     if args.flag("list") || args.positional.is_empty() {
         eprintln!("usage: sosa-experiments <ids...|all> [--out DIR] [--quick]");
+        eprintln!("       sosa-experiments serve --model NAME --qps N --seed S");
+        eprintln!("         [--models A,B --partitioned --sweep --duration S");
+        eprintln!("          --max-batch N --max-wait-ms MS --max-queue N");
+        eprintln!("          --deadline-ms MS --array RxC --pods N]");
         eprintln!("experiments: {}", ALL.join(" "));
         std::process::exit(if args.flag("list") { 0 } else { 2 });
     }

@@ -5,11 +5,21 @@
 //! SOSA's offline compiler produces a static schedule per workload
 //! *set*; the coordinator's job is admission: it groups queued requests
 //! into tenancy groups (up to `max_tenants` concurrent models — the
-//! paper evaluates pairs), invokes the compiler/simulator per group,
-//! and accounts per-request latency and aggregate effective throughput.
+//! paper evaluates pairs) and accounts per-request latency and
+//! aggregate effective throughput.
+//!
+//! Since the serving subsystem landed, the coordinator is a thin
+//! offline wrapper over [`crate::serve::engine`]: each request becomes
+//! a tenant with one arrival at `t = 0`, and the engine's co-schedule
+//! width reproduces the group structure.  Requests "arrive" with their
+//! batch, so per-request latency is the group's own execution time
+//! (`t_group_end − t_group_start`), not the cumulative clock — earlier
+//! groups' execution is not charged to later requests.
 
 use crate::arch::ArchConfig;
-use crate::sim::{simulate_multi, SimOptions};
+use crate::serve::engine::{Admission, BatchPolicy, Engine, EngineConfig};
+use crate::serve::traffic::{Arrival, Tenant};
+use crate::sim::SimOptions;
 use crate::stats::RunStats;
 use crate::workloads::ModelGraph;
 
@@ -32,8 +42,12 @@ impl Request {
 #[derive(Clone, Debug)]
 pub struct Completion {
     pub id: u64,
-    /// Seconds from queue head to completion (includes waiting for the
-    /// group's co-scheduled peers).
+    /// When the request's tenancy group started executing.
+    pub t_start: f64,
+    /// When the request's tenancy group completed.
+    pub t_end: f64,
+    /// Seconds from group start to completion — the time this
+    /// request's own co-scheduled group occupied the machine.
     pub latency_s: f64,
     /// Ops this request contributed.
     pub ops: u64,
@@ -78,29 +92,52 @@ impl Coordinator {
     }
 
     /// Serve a queue of requests to completion (offline batch serving).
+    ///
+    /// Chunks the queue into tenancy groups of `max_tenants` in order
+    /// (the paper's admission policy) and delegates each group's
+    /// execution to the discrete-event engine: group members become
+    /// tenants with a single `t = 0` arrival, and the engine
+    /// co-schedules the whole group in one launch.  Chunking first
+    /// keeps the queue scan linear in the request count.
     pub fn serve(&self, requests: &[Request]) -> ServeReport {
         let mut report = ServeReport::default();
-        let mut t = 0.0f64;
+        let mut t0 = 0.0f64;
         let mut total_ops = 0u64;
         for group in requests.chunks(self.max_tenants.max(1)) {
-            let batched: Vec<ModelGraph> =
-                group.iter().map(|r| r.model.with_batch(r.batch.max(1))).collect();
-            let refs: Vec<&ModelGraph> = batched.iter().collect();
-            let stats = simulate_multi(&self.cfg, &refs, &self.opts);
-            let dt = stats.exec_seconds(&self.cfg);
-            t += dt;
-            for (req, m) in group.iter().zip(&batched) {
-                total_ops += m.total_ops();
+            let tenants: Vec<Tenant> = group
+                .iter()
+                .map(|r| Tenant::new(r.model.clone(), 1.0))
+                .collect();
+            let arrivals: Vec<Arrival> = group
+                .iter()
+                .enumerate()
+                .map(|(k, r)| Arrival { t: 0.0, tenant: k, id: r.id, batch: r.batch.max(1) })
+                .collect();
+            let ecfg = EngineConfig {
+                // One request per tenant: no merging, each keeps its batch.
+                policy: BatchPolicy { max_batch: 1, max_wait_s: 0.0 },
+                admission: Admission::Unbounded,
+                coschedule: group.len().max(1),
+                sim: self.opts.clone(),
+                record_group_stats: true,
+            };
+            let rep = Engine::new(self.cfg.clone(), &tenants, ecfg).run(&arrivals);
+            for r in &rep.completed {
+                let ops = tenants[r.tenant].model.total_ops() * r.batch as u64;
+                total_ops += ops;
                 report.completions.push(Completion {
-                    id: req.id,
-                    latency_s: t,
-                    ops: m.total_ops(),
+                    id: r.id,
+                    t_start: t0 + r.t_start,
+                    t_end: t0 + r.t_end,
+                    latency_s: r.t_end - r.t_start,
+                    ops,
                 });
             }
-            report.groups.push(stats);
+            report.groups.extend(rep.group_stats);
+            t0 += rep.makespan_s;
         }
-        report.makespan_s = t;
-        report.achieved_ops = if t > 0.0 { total_ops as f64 / t } else { 0.0 };
+        report.makespan_s = t0;
+        report.achieved_ops = if t0 > 0.0 { total_ops as f64 / t0 } else { 0.0 };
         report
     }
 }
@@ -141,6 +178,26 @@ mod tests {
         assert!(rep.completions.iter().all(|c| c.latency_s > 0.0));
         // Same group → same completion time (lockstep static schedule).
         assert_eq!(rep.completions[0].latency_s, rep.completions[1].latency_s);
+        assert_eq!(rep.completions[0].t_end, rep.completions[1].t_end);
+    }
+
+    #[test]
+    fn later_groups_not_charged_for_earlier_ones() {
+        // Two sequential groups (single-tenancy): the second request's
+        // latency is its own group's execution time, not the cumulative
+        // clock — while the makespan still covers both groups.
+        let m = zoo::by_name("bert-medium").unwrap();
+        let rep = Coordinator::new(cfg())
+            .single_tenant()
+            .serve(&[Request::new(0, m.clone(), 1), Request::new(1, m, 1)]);
+        assert_eq!(rep.completions.len(), 2);
+        let (a, b) = (&rep.completions[0], &rep.completions[1]);
+        // Identical work → identical per-request latency.
+        assert!((a.latency_s - b.latency_s).abs() < 1e-12,
+                "second charged {} vs first {}", b.latency_s, a.latency_s);
+        // But the second group starts where the first ended.
+        assert!(b.t_start >= a.t_end - 1e-15);
+        assert!((rep.makespan_s - (a.latency_s + b.latency_s)).abs() < 1e-9);
     }
 
     #[test]

@@ -1,38 +1,68 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls — the
+//! offline crate set has no proc-macro derive crates).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by the SOSA library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Invalid architecture or experiment configuration.
-    #[error("configuration error: {0}")]
     Config(String),
 
     /// A workload definition is inconsistent (bad dims, missing dep, ...).
-    #[error("workload error: {0}")]
     Workload(String),
 
     /// The scheduler could not produce a legal schedule.
-    #[error("scheduling error: {0}")]
     Schedule(String),
 
     /// AOT artifact manifest / HLO loading problems.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// Functional-runtime numerics mismatch between tiled execution and
     /// the un-tiled reference.
-    #[error("numerics mismatch: {0}")]
     Numerics(String),
 
     /// PJRT / XLA failures.
-    #[error("xla error: {0}")]
-    Xla(#[from] xla::Error),
+    Xla(xla::Error),
 
     /// I/O failures (artifact files, result CSVs).
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "configuration error: {m}"),
+            Error::Workload(m) => write!(f, "workload error: {m}"),
+            Error::Schedule(m) => write!(f, "scheduling error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Numerics(m) => write!(f, "numerics mismatch: {m}"),
+            Error::Xla(e) => write!(f, "xla error: {e}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Xla(e) => Some(e),
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.
@@ -62,5 +92,12 @@ mod tests {
         let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
         let e: Error = ioe.into();
         assert!(matches!(e, Error::Io(_)));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+
+    #[test]
+    fn xla_error_converts() {
+        let e: Error = xla::Error::new("backend gone").into();
+        assert!(e.to_string().contains("backend gone"));
     }
 }

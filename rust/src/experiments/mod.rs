@@ -22,6 +22,7 @@ pub mod granularity;
 pub mod interconnect_exp;
 pub mod memory_exp;
 pub mod scaling;
+pub mod serving_exp;
 pub mod tiling_exp;
 pub mod workload_stats;
 

@@ -1,0 +1,197 @@
+//! The `serve` subcommand of `sosa-experiments`: trace-driven online
+//! serving over the model zoo with SLO reporting and load sweeps.
+//!
+//! ```bash
+//! sosa-experiments serve --model bert-large --qps 2000 --seed 7
+//! sosa-experiments serve --models resnet50,bert-medium --partitioned \
+//!                        --qps 800 --duration 2
+//! sosa-experiments serve --model bert-large --sweep --out results
+//! ```
+//!
+//! Everything printed to stdout is a pure function of the arguments:
+//! two runs with the same flags produce byte-identical reports (timing
+//! diagnostics go to stderr).
+
+use super::ExpOptions;
+use crate::arch::{ArchConfig, ArrayDims};
+use crate::error::{Error, Result};
+use crate::serve::{
+    analyze, capacity_qps, generate, load_sweep, max_sustainable_qps, serve_partitioned,
+    serve_shared, sweep_table, Admission, BatchPolicy, EngineConfig, SweepOptions, Tenant,
+    TrafficSpec,
+};
+use crate::util::cli::Args;
+use crate::util::{csv::f, CsvWriter};
+use crate::workloads::zoo;
+
+fn parse_array(s: &str) -> Result<ArrayDims> {
+    let (r, c) = s
+        .split_once('x')
+        .ok_or_else(|| Error::config(format!("array must be RxC, got {s}")))?;
+    let r = r.parse().map_err(|_| Error::config("bad array rows"))?;
+    let c = c.parse().map_err(|_| Error::config("bad array cols"))?;
+    Ok(ArrayDims::new(r, c))
+}
+
+fn tenants_from(args: &Args) -> Result<Vec<Tenant>> {
+    let names = args
+        .get("models")
+        .or_else(|| args.get("model"))
+        .unwrap_or("bert-large");
+    names
+        .split(',')
+        .map(|n| {
+            zoo::by_name(n.trim())
+                .map(|m| Tenant::new(m, 1.0))
+                .ok_or_else(|| Error::config(format!("unknown model {n}")))
+        })
+        .collect()
+}
+
+/// Run the serve subcommand.
+pub fn serve_cmd(args: &Args, opts: &ExpOptions) -> Result<()> {
+    let array = parse_array(args.get_or("array", "32x32"))?;
+    let pods: usize = args.get_parse("pods").unwrap_or(256);
+    let cfg = ArchConfig::with_array(array, pods);
+    cfg.validate()?;
+
+    let tenants = tenants_from(args)?;
+    let qps: f64 = args.get_parse("qps").unwrap_or(1000.0);
+    let seed: u64 = args.get_parse("seed").unwrap_or(42);
+    let duration_s: f64 = args.get_parse("duration").unwrap_or(1.0);
+    let partitioned = args.flag("partitioned");
+
+    let mut ecfg = EngineConfig {
+        policy: BatchPolicy {
+            max_batch: args.get_parse("max-batch").unwrap_or(8),
+            max_wait_s: args.get_parse::<f64>("max-wait-ms").unwrap_or(2.0) * 1e-3,
+        },
+        ..Default::default()
+    };
+    if let Some(cap) = args.get_parse::<usize>("max-queue") {
+        ecfg.admission = Admission::MaxQueue(cap);
+    }
+    if let Some(k) = args.get_parse::<usize>("coschedule") {
+        ecfg.coschedule = k;
+    }
+
+    // Deadline: explicit, or 5× the mix's batched per-request service
+    // time — deterministic, so seeded runs stay byte-identical.
+    let capacity = capacity_qps(&cfg, &tenants, &ecfg);
+    let deadline_s = match args.get_parse::<f64>("deadline-ms") {
+        Some(ms) => ms * 1e-3,
+        None => {
+            if capacity > 0.0 {
+                5.0 * ecfg.policy.max_batch as f64 / capacity
+            } else {
+                0.1
+            }
+        }
+    };
+
+    let mode = if partitioned { "partitioned" } else { "shared" };
+    println!(
+        "serving {} on {} pods of {} ({mode}), seed {seed}",
+        tenants.iter().map(|t| t.name.as_str()).collect::<Vec<_>>().join("+"),
+        cfg.num_pods,
+        cfg.array
+    );
+    println!(
+        "policy   : max_batch {}, max_wait {:.3} ms, est. capacity {:.1} req/s",
+        ecfg.policy.max_batch,
+        ecfg.policy.max_wait_s * 1e3,
+        capacity
+    );
+
+    if args.flag("sweep") {
+        // Probe around the estimated capacity to expose the knee.
+        let ladder: Vec<f64> = [0.25, 0.5, 0.75, 0.9, 1.0, 1.1, 1.3, 1.6, 2.0]
+            .iter()
+            .map(|&x| x * if qps > 0.0 && args.get("qps").is_some() { qps } else { capacity })
+            .collect();
+        let sweep = SweepOptions {
+            qps: ladder,
+            duration_s,
+            deadline_s,
+            seed,
+            partitioned,
+        };
+        let points = load_sweep(&cfg, &tenants, &ecfg, &sweep)?;
+        println!("{}", sweep_table(&points).render());
+        match max_sustainable_qps(&points, deadline_s) {
+            Some(q) => println!(
+                "max sustainable load: {q:.1} req/s at p99 <= {:.3} ms",
+                deadline_s * 1e3
+            ),
+            None => println!(
+                "no probed rate sustained p99 <= {:.3} ms without shedding",
+                deadline_s * 1e3
+            ),
+        }
+        let mut csv = CsvWriter::create(
+            format!("{}/serve_sweep.csv", opts.out_dir),
+            &["qps", "p50_ms", "p99_ms", "goodput_qps", "completed", "rejected", "busy_pct"],
+        )?;
+        for p in &points {
+            csv.row(&[
+                f(p.qps, 1),
+                f(p.p50_s * 1e3, 3),
+                f(p.p99_s * 1e3, 3),
+                f(p.goodput_qps, 1),
+                p.completed.to_string(),
+                p.rejected.to_string(),
+                f(100.0 * p.busy_frac, 1),
+            ])?;
+        }
+        csv.finish()?;
+        return Ok(());
+    }
+
+    let spec = TrafficSpec::poisson(qps, duration_s, seed);
+    let arrivals = generate(&spec, &tenants);
+    println!(
+        "traffic  : Poisson {qps:.1} req/s for {duration_s:.2} s → {} arrivals",
+        arrivals.len()
+    );
+    let rep = if partitioned {
+        serve_partitioned(&cfg, &tenants, &arrivals, &ecfg)?
+    } else {
+        serve_shared(&cfg, &tenants, &arrivals, &ecfg)
+    };
+    let slo = analyze(&rep, duration_s, deadline_s);
+    println!("{slo}");
+    println!(
+        "engine   : {} batches, {} simulator calls (memoized)",
+        rep.batches, rep.sim_calls
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli::Args;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn serve_cmd_runs_on_a_small_config() {
+        let dir = std::env::temp_dir().join("sosa_serve_cmd");
+        let opts = ExpOptions { out_dir: dir.to_str().unwrap().into(), quick: true };
+        let a = args(
+            "serve --model bert-medium --pods 16 --qps 50 --duration 0.05 \
+             --seed 7 --max-batch 4",
+        );
+        serve_cmd(&a, &opts).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_unknown_model_and_bad_array() {
+        let opts = ExpOptions::default();
+        assert!(serve_cmd(&args("serve --model vgg19 --pods 16"), &opts).is_err());
+        assert!(serve_cmd(&args("serve --array 32 --pods 16"), &opts).is_err());
+    }
+}

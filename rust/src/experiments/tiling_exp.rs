@@ -33,8 +33,7 @@ pub fn fig12b(opts: &ExpOptions) -> Result<()> {
     )?;
     let mut results: Vec<(String, f64)> = vec![];
     for &k in &ks {
-        let mut opts_k = SimOptions::default();
-        opts_k.strategy = Strategy::Fixed(k);
+        let opts_k = SimOptions { strategy: Strategy::Fixed(k), ..Default::default() };
         let mut eff = 0.0;
         for m in &benches {
             eff += simulate(&cfg, m, &opts_k).achieved_ops(&cfg);
@@ -43,8 +42,7 @@ pub fn fig12b(opts: &ExpOptions) -> Result<()> {
     }
     // No-partition baseline (AI-MT-style).
     {
-        let mut opts_np = SimOptions::default();
-        opts_np.strategy = Strategy::NoPartition;
+        let opts_np = SimOptions { strategy: Strategy::NoPartition, ..Default::default() };
         let mut eff = 0.0;
         for m in &benches {
             eff += simulate(&cfg, m, &opts_np).achieved_ops(&cfg);
@@ -78,8 +76,7 @@ mod tests {
         let cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 256);
         let m = zoo::by_name("resnet50").unwrap();
         let eff = |strategy| {
-            let mut o = SimOptions::default();
-            o.strategy = strategy;
+            let o = SimOptions { strategy, ..Default::default() };
             simulate(&cfg, &m, &o).achieved_ops(&cfg)
         };
         let at_r = eff(Strategy::Fixed(32));

@@ -17,7 +17,13 @@
 //! * [`analytic`] — the fast isopower design-space-exploration model
 //!   behind Fig. 5;
 //! * [`power`] — the calibrated energy/power model (§5, Table 2/3);
-//! * [`coordinator`] — single- and multi-tenant serving frontend (§6.1);
+//! * [`coordinator`] — offline single- and multi-tenant serving
+//!   frontend (§6.1), a thin wrapper over the serving engine;
+//! * [`serve`] — the online serving subsystem: trace-driven
+//!   discrete-event engine with open-loop traffic generation, dynamic
+//!   batching, admission control, static pod partitioning for
+//!   multi-tenancy, and SLO accounting (latency percentiles, goodput,
+//!   load sweeps);
 //! * [`runtime`] — the XLA/PJRT functional runtime executing the AOT
 //!   Pallas/JAX tile artifacts from `artifacts/`;
 //! * [`e2e`] — functional execution of a schedule through the runtime,
@@ -37,6 +43,7 @@ pub mod interconnect;
 pub mod power;
 pub mod runtime;
 pub mod scheduler;
+pub mod serve;
 pub mod sim;
 pub mod stats;
 pub mod testutil;

@@ -1,0 +1,542 @@
+//! Deterministic discrete-event serving engine.
+//!
+//! One [`Engine`] models one accelerator (or one pod partition) with a
+//! single execution context: the static scheduler runs one batch (or
+//! one co-scheduled batch group, §6.1) at a time.  Requests queue per
+//! tenant; a dynamic batcher launches when a batch fills
+//! (`max_batch`), when the head request has waited `max_wait_s`, or
+//! when the trace is drained.  Batch execution time comes from the
+//! cycle-level cost model (`simulate_multi`) through a memoized
+//! [`CostCache`], so million-request traces cost only a handful of
+//! simulator invocations.
+//!
+//! The loop is strictly deterministic: time advances monotonically,
+//! ties break on tenant index, and no wall-clock or hash-iteration
+//! order leaks into results — equal inputs produce byte-identical
+//! reports.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::arch::ArchConfig;
+use crate::sim::{simulate_multi, SimOptions};
+use crate::stats::RunStats;
+use crate::workloads::ModelGraph;
+
+use super::traffic::{Arrival, Tenant};
+
+/// Dynamic batching knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Maximum batch units per tenant per launch (a request
+    /// contributes its `batch` field; online requests are 1 unit
+    /// each).  With `coschedule > 1` a launch carries up to
+    /// `coschedule × max_batch` units across its tenant group.
+    pub max_batch: usize,
+    /// Maximum seconds the head-of-line request may wait for the batch
+    /// to fill before launching anyway.
+    pub max_wait_s: f64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait_s: 2e-3 }
+    }
+}
+
+/// Admission control at enqueue time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Queue without bound.
+    Unbounded,
+    /// Reject arrivals once the tenant's queue holds this many
+    /// requests (shed load instead of growing latency without bound).
+    MaxQueue(usize),
+}
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub policy: BatchPolicy,
+    pub admission: Admission,
+    /// Distinct tenants co-scheduled per launch (1 = one model at a
+    /// time; 2 reproduces the paper's §6.1 tenant pairs).
+    pub coschedule: usize,
+    /// Cost-model options.
+    pub sim: SimOptions,
+    /// Keep per-launch [`RunStats`] in the report (off by default:
+    /// large traces would hold one entry per batch).
+    pub record_group_stats: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            policy: BatchPolicy::default(),
+            admission: Admission::Unbounded,
+            coschedule: 1,
+            sim: SimOptions::default(),
+            record_group_stats: false,
+        }
+    }
+}
+
+/// Completion record for one request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServedRequest {
+    pub id: u64,
+    /// Tenant index (engine-local; partition drivers remap to global).
+    pub tenant: usize,
+    /// Batch units this request carried.
+    pub batch: usize,
+    pub t_arrival: f64,
+    /// When its batch group started executing.
+    pub t_start: f64,
+    /// When its batch group completed.
+    pub t_end: f64,
+}
+
+impl ServedRequest {
+    /// End-to-end latency (queueing + service).
+    pub fn latency_s(&self) -> f64 {
+        self.t_end - self.t_arrival
+    }
+
+    /// Time spent queued before the batch launched.
+    pub fn queue_s(&self) -> f64 {
+        self.t_start - self.t_arrival
+    }
+
+    /// Service (batch execution) time.
+    pub fn service_s(&self) -> f64 {
+        self.t_end - self.t_start
+    }
+}
+
+/// Outcome of one engine run.
+#[derive(Clone, Debug, Default)]
+pub struct EngineReport {
+    /// Completion records in launch order.
+    pub completed: Vec<ServedRequest>,
+    /// Requests shed by admission control.
+    pub rejected: u64,
+    /// Rejections per tenant index.
+    pub rejected_by_tenant: Vec<u64>,
+    /// Time of the last completion (0 when nothing ran).
+    pub makespan_s: f64,
+    /// Seconds the accelerator spent executing batches.
+    pub busy_s: f64,
+    /// Batch groups launched.
+    pub batches: u64,
+    /// Ops completed (2 × MACs).
+    pub total_ops: u64,
+    /// Distinct simulator invocations (memoization diagnostic).
+    pub sim_calls: u64,
+    /// Per-launch stats when `record_group_stats` is set.
+    pub group_stats: Vec<RunStats>,
+}
+
+impl EngineReport {
+    /// Completed requests per second of makespan.
+    pub fn throughput_qps(&self) -> f64 {
+        if self.makespan_s > 0.0 {
+            self.completed.len() as f64 / self.makespan_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Achieved ops/s over the makespan.
+    pub fn achieved_ops(&self) -> f64 {
+        if self.makespan_s > 0.0 {
+            self.total_ops as f64 / self.makespan_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Accelerator busy fraction over the makespan.
+    pub fn busy_frac(&self) -> f64 {
+        if self.makespan_s > 0.0 {
+            self.busy_s / self.makespan_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Memoized batch cost entry.
+#[derive(Clone, Debug)]
+pub struct CostEntry {
+    /// Batch-group execution seconds on the engine's configuration.
+    pub seconds: f64,
+    /// Ops the group completes.
+    pub ops: u64,
+    /// Full simulator stats for the group.
+    pub stats: RunStats,
+}
+
+/// Memoizes `simulate_multi` over batch-group compositions — the key
+/// is the exact ordered `(tenant, batch)` list, so distinct group
+/// shapes are simulated once per engine configuration.
+#[derive(Debug)]
+pub struct CostCache {
+    cfg: ArchConfig,
+    opts: SimOptions,
+    models: Vec<ModelGraph>,
+    map: HashMap<Vec<(usize, usize)>, CostEntry>,
+    /// Simulator invocations so far.
+    pub sim_calls: u64,
+}
+
+impl CostCache {
+    /// New cache over a configuration and the tenant models.
+    pub fn new(cfg: ArchConfig, models: Vec<ModelGraph>, opts: SimOptions) -> Self {
+        CostCache { cfg, opts, models, map: HashMap::new(), sim_calls: 0 }
+    }
+
+    /// Cost of a batch group given as `(tenant index, batch units)`
+    /// entries (order is the co-schedule order).
+    pub fn cost(&mut self, comp: &[(usize, usize)]) -> CostEntry {
+        if let Some(e) = self.map.get(comp) {
+            return e.clone();
+        }
+        let batched: Vec<ModelGraph> = comp
+            .iter()
+            .map(|&(k, b)| self.models[k].with_batch(b.max(1)))
+            .collect();
+        let refs: Vec<&ModelGraph> = batched.iter().collect();
+        let stats = simulate_multi(&self.cfg, &refs, &self.opts);
+        let entry = CostEntry {
+            seconds: stats.exec_seconds(&self.cfg),
+            ops: batched.iter().map(ModelGraph::total_ops).sum(),
+            stats,
+        };
+        self.sim_calls += 1;
+        self.map.insert(comp.to_vec(), entry.clone());
+        entry
+    }
+}
+
+/// The serving engine for one accelerator (or pod partition).
+pub struct Engine {
+    ecfg: EngineConfig,
+    n_tenants: usize,
+    cache: CostCache,
+}
+
+impl Engine {
+    /// New engine over a configuration and tenant set.
+    pub fn new(cfg: ArchConfig, tenants: &[Tenant], ecfg: EngineConfig) -> Self {
+        assert!(!tenants.is_empty(), "engine needs at least one tenant");
+        let models: Vec<ModelGraph> = tenants.iter().map(|t| t.model.clone()).collect();
+        let cache = CostCache::new(cfg, models, ecfg.sim.clone());
+        Engine { ecfg, n_tenants: tenants.len(), cache }
+    }
+
+    /// Pop up to `max_batch` batch units from a queue (always at least
+    /// the head request, even if it alone exceeds the cap).
+    fn pop_batch(q: &mut VecDeque<Arrival>, max_batch: usize) -> (usize, Vec<Arrival>) {
+        let mut total = 0usize;
+        let mut popped = Vec::new();
+        while let Some(front) = q.front() {
+            let b = front.batch.max(1);
+            if !popped.is_empty() && total + b > max_batch {
+                break;
+            }
+            total += b;
+            popped.push(q.pop_front().expect("front checked"));
+            if total >= max_batch {
+                break;
+            }
+        }
+        (total, popped)
+    }
+
+    /// Run the trace to completion (arrivals must be time-sorted).
+    pub fn run(&mut self, arrivals: &[Arrival]) -> EngineReport {
+        debug_assert!(arrivals.windows(2).all(|w| w[0].t <= w[1].t));
+        let nt = self.n_tenants;
+        let max_batch = self.ecfg.policy.max_batch.max(1);
+        let max_wait = self.ecfg.policy.max_wait_s.max(0.0);
+        let coschedule = self.ecfg.coschedule.max(1);
+
+        let mut queues: Vec<VecDeque<Arrival>> = (0..nt).map(|_| VecDeque::new()).collect();
+        let mut report = EngineReport { rejected_by_tenant: vec![0; nt], ..Default::default() };
+        let mut i = 0usize; // next arrival to absorb
+        let mut t = 0.0f64; // simulation clock
+        let mut t_free = 0.0f64; // accelerator free time
+
+        loop {
+            // Absorb every arrival at or before the clock.
+            while i < arrivals.len() && arrivals[i].t <= t {
+                let a = arrivals[i];
+                i += 1;
+                assert!(a.tenant < nt, "arrival tenant out of range");
+                let reject = match self.ecfg.admission {
+                    Admission::Unbounded => false,
+                    Admission::MaxQueue(cap) => queues[a.tenant].len() >= cap,
+                };
+                if reject {
+                    report.rejected += 1;
+                    report.rejected_by_tenant[a.tenant] += 1;
+                } else {
+                    queues[a.tenant].push_back(a);
+                }
+            }
+
+            let any_queued = queues.iter().any(|q| !q.is_empty());
+            if !any_queued {
+                if i >= arrivals.len() {
+                    break; // drained and idle: done
+                }
+                t = arrivals[i].t.max(t);
+                continue;
+            }
+            if t < t_free {
+                t = t_free; // wait for the in-flight batch
+                continue;
+            }
+
+            // Accelerator is idle and work is queued.  Primary tenant:
+            // oldest head-of-line request, ties to the lowest index.
+            let primary = (0..nt)
+                .filter(|&k| !queues[k].is_empty())
+                .min_by(|&a, &b| queues[a][0].t.total_cmp(&queues[b][0].t).then(a.cmp(&b)))
+                .expect("some queue is non-empty");
+            let head_t = queues[primary][0].t;
+            let mut ready = 0usize;
+            for r in queues[primary].iter() {
+                ready += r.batch.max(1);
+                if ready >= max_batch {
+                    break;
+                }
+            }
+            let drained = i >= arrivals.len();
+
+            if ready >= max_batch || drained || t >= head_t + max_wait {
+                // Launch: primary batch plus up to `coschedule - 1`
+                // co-scheduled tenants, oldest head first.
+                let mut others: Vec<usize> = (0..nt)
+                    .filter(|&k| k != primary && !queues[k].is_empty())
+                    .collect();
+                others.sort_by(|&a, &b| {
+                    queues[a][0].t.total_cmp(&queues[b][0].t).then(a.cmp(&b))
+                });
+                let mut chosen = vec![primary];
+                chosen.extend(others.into_iter().take(coschedule - 1));
+
+                let mut comp: Vec<(usize, usize)> = Vec::with_capacity(chosen.len());
+                let mut popped_all: Vec<Arrival> = Vec::new();
+                for &k in &chosen {
+                    let (units, popped) = Self::pop_batch(&mut queues[k], max_batch);
+                    comp.push((k, units));
+                    popped_all.extend(popped);
+                }
+                let entry = self.cache.cost(&comp);
+                let start = t;
+                let end = start + entry.seconds;
+                for a in &popped_all {
+                    report.completed.push(ServedRequest {
+                        id: a.id,
+                        tenant: a.tenant,
+                        batch: a.batch.max(1),
+                        t_arrival: a.t,
+                        t_start: start,
+                        t_end: end,
+                    });
+                }
+                report.batches += 1;
+                report.busy_s += entry.seconds;
+                report.total_ops += entry.ops;
+                if self.ecfg.record_group_stats {
+                    report.group_stats.push(entry.stats.clone());
+                }
+                t_free = end;
+                t = end;
+            } else {
+                // Wait for the batch to fill or the head to time out.
+                let deadline = head_t + max_wait;
+                t = if i < arrivals.len() { arrivals[i].t.min(deadline) } else { deadline };
+            }
+        }
+
+        report.makespan_s = t_free;
+        report.sim_calls = self.cache.sim_calls;
+        report
+    }
+}
+
+/// Serve a trace on the whole accelerator (no partitioning): every
+/// tenant shares one engine, one model group at a time unless
+/// `ecfg.coschedule > 1`.
+pub fn serve_shared(
+    cfg: &ArchConfig,
+    tenants: &[Tenant],
+    arrivals: &[Arrival],
+    ecfg: &EngineConfig,
+) -> EngineReport {
+    Engine::new(cfg.clone(), tenants, ecfg.clone()).run(arrivals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchConfig, ArrayDims};
+    use crate::serve::traffic::{generate, ArrivalProcess, TrafficSpec};
+
+    fn toy_cfg() -> ArchConfig {
+        ArchConfig::with_array(ArrayDims::new(8, 8), 4)
+    }
+
+    fn toy_tenant(name: &str) -> Tenant {
+        let mut g = ModelGraph::new(name);
+        g.add("fc1", 64, 64, 64, vec![]);
+        g.add("fc2", 64, 64, 32, vec![0]);
+        Tenant::new(g, 1.0)
+    }
+
+    fn fast_sim() -> SimOptions {
+        SimOptions { memory_model: false, ..Default::default() }
+    }
+
+    fn at(times: &[f64]) -> Vec<Arrival> {
+        times
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| Arrival { t, tenant: 0, id: i as u64, batch: 1 })
+            .collect()
+    }
+
+    fn ecfg(max_batch: usize, max_wait_s: f64) -> EngineConfig {
+        EngineConfig {
+            policy: BatchPolicy { max_batch, max_wait_s },
+            sim: fast_sim(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn batches_fill_to_max_batch() {
+        let tenants = vec![toy_tenant("a")];
+        let mut e = Engine::new(toy_cfg(), &tenants, ecfg(4, 1.0));
+        let rep = e.run(&at(&[0.0; 8]));
+        assert_eq!(rep.completed.len(), 8);
+        assert_eq!(rep.batches, 2, "8 simultaneous arrivals at max_batch 4");
+        // One distinct composition (batch of 4) → one simulator call.
+        assert_eq!(rep.sim_calls, 1);
+        // First four share a group; the rest start where it ended.
+        assert_eq!(rep.completed[0].t_end, rep.completed[3].t_end);
+        assert_eq!(rep.completed[4].t_start, rep.completed[0].t_end);
+    }
+
+    #[test]
+    fn max_wait_launches_partial_batch() {
+        let tenants = vec![toy_tenant("a")];
+        // Second arrival outside the wait window: two singleton batches.
+        let mut e = Engine::new(toy_cfg(), &tenants, ecfg(100, 0.01));
+        let rep = e.run(&at(&[0.0, 0.1]));
+        assert_eq!(rep.batches, 2);
+        let first = rep.completed.iter().find(|r| r.id == 0).unwrap();
+        assert!((first.t_start - 0.01).abs() < 1e-12, "held for max_wait");
+        // Second arrival inside the window: one batch of two.
+        let mut e = Engine::new(toy_cfg(), &tenants, ecfg(100, 0.01));
+        let rep = e.run(&at(&[0.0, 0.001]));
+        assert_eq!(rep.batches, 1);
+        assert_eq!(rep.completed.len(), 2);
+    }
+
+    #[test]
+    fn drained_trace_launches_immediately() {
+        let tenants = vec![toy_tenant("a")];
+        // One arrival, huge wait: no future arrivals, so no reason to hold.
+        let mut e = Engine::new(toy_cfg(), &tenants, ecfg(100, 10.0));
+        let rep = e.run(&at(&[0.0]));
+        assert_eq!(rep.batches, 1);
+        assert_eq!(rep.completed[0].t_start, 0.0);
+    }
+
+    #[test]
+    fn admission_control_sheds_load() {
+        let tenants = vec![toy_tenant("a")];
+        let mut cfg = ecfg(1, 0.0);
+        cfg.admission = Admission::MaxQueue(1);
+        let mut e = Engine::new(toy_cfg(), &tenants, cfg);
+        let rep = e.run(&at(&[0.0, 0.0, 0.0]));
+        assert_eq!(rep.completed.len() as u64 + rep.rejected, 3);
+        assert_eq!(rep.rejected, 2, "cap 1: head admitted, rest shed");
+        assert_eq!(rep.rejected_by_tenant[0], 2);
+    }
+
+    #[test]
+    fn latency_decomposes_into_queue_plus_service() {
+        let tenants = vec![toy_tenant("a")];
+        let mut e = Engine::new(toy_cfg(), &tenants, ecfg(1, 0.0));
+        let rep = e.run(&at(&[0.0, 0.0]));
+        for r in &rep.completed {
+            assert!((r.latency_s() - (r.queue_s() + r.service_s())).abs() < 1e-15);
+            assert!(r.service_s() > 0.0);
+        }
+        // Second request queues behind the first batch.
+        let second = rep.completed.iter().find(|r| r.id == 1).unwrap();
+        assert!(second.queue_s() > 0.0);
+    }
+
+    #[test]
+    fn coschedule_groups_tenants_per_launch() {
+        let tenants = vec![toy_tenant("a"), toy_tenant("b")];
+        let arrivals = vec![
+            Arrival { t: 0.0, tenant: 0, id: 0, batch: 1 },
+            Arrival { t: 0.0, tenant: 1, id: 1, batch: 1 },
+        ];
+        let mut cfg = ecfg(1, 0.0);
+        cfg.coschedule = 2;
+        let mut e = Engine::new(toy_cfg(), &tenants, cfg);
+        let rep = e.run(&arrivals);
+        assert_eq!(rep.batches, 1, "both tenants co-scheduled in one group");
+        assert_eq!(rep.completed[0].t_end, rep.completed[1].t_end);
+    }
+
+    #[test]
+    fn memoization_bounds_simulator_calls() {
+        let tenants = vec![toy_tenant("a")];
+        let spec = TrafficSpec::poisson(2000.0, 1.0, 5);
+        let arrivals = generate(&spec, &tenants);
+        assert!(arrivals.len() > 500);
+        let mut e = Engine::new(toy_cfg(), &tenants, ecfg(4, 1e-3));
+        let rep = e.run(&arrivals);
+        assert_eq!(rep.completed.len(), arrivals.len());
+        // Batch sizes range over 1..=4 → at most 4 distinct sims.
+        assert!(rep.sim_calls <= 4, "sim_calls {}", rep.sim_calls);
+        assert!(rep.batches < arrivals.len() as u64, "batching must merge");
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let tenants = vec![toy_tenant("a"), toy_tenant("b")];
+        let spec = TrafficSpec {
+            process: ArrivalProcess::Poisson { qps: 800.0 },
+            duration_s: 0.5,
+            seed: 9,
+        };
+        let arrivals = generate(&spec, &tenants);
+        let run = || {
+            Engine::new(toy_cfg(), &tenants, ecfg(4, 1e-3)).run(&arrivals)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.total_ops, b.total_ops);
+    }
+
+    #[test]
+    fn empty_trace_yields_empty_report() {
+        let tenants = vec![toy_tenant("a")];
+        let mut e = Engine::new(toy_cfg(), &tenants, ecfg(4, 1e-3));
+        let rep = e.run(&[]);
+        assert!(rep.completed.is_empty());
+        assert_eq!(rep.makespan_s, 0.0);
+        assert_eq!(rep.throughput_qps(), 0.0);
+        assert_eq!(rep.achieved_ops(), 0.0);
+    }
+}

@@ -1,0 +1,54 @@
+//! Online serving subsystem: a deterministic, trace-driven
+//! discrete-event engine layered on the cycle-level cost model.
+//!
+//! The offline [`crate::coordinator`] answers "how fast does this
+//! request list run"; this module answers the production questions the
+//! ROADMAP's north star asks — what latency distribution, goodput and
+//! sustainable QPS does a SOSA configuration deliver under live
+//! traffic?  The pieces:
+//!
+//! * [`traffic`] — open-loop arrival generation (Poisson, bursty MMPP,
+//!   trace replay) over the model zoo with a seeded RNG;
+//! * [`engine`] — per-tenant queues, dynamic batching (max-batch +
+//!   max-wait), admission control, and memoized batch costs from
+//!   `simulate`/`simulate_multi` so million-request traces need only a
+//!   handful of simulator invocations;
+//! * [`partition`] — static pod partitioning for multi-tenancy: each
+//!   tenant gets a power-of-two pod slice simulated as its own
+//!   sub-[`crate::ArchConfig`];
+//! * [`slo`] — p50/p95/p99 latency, queueing vs service decomposition,
+//!   goodput under a deadline, and a load-sweep helper that finds the
+//!   saturation knee / max sustainable QPS.
+//!
+//! Everything is deterministic under a fixed seed: equal inputs yield
+//! byte-identical reports (no wall clock, no hash-order dependence).
+//!
+//! ```no_run
+//! use sosa::arch::ArchConfig;
+//! use sosa::serve::{
+//!     analyze, generate, serve_shared, EngineConfig, Tenant, TrafficSpec,
+//! };
+//! use sosa::workloads::zoo;
+//!
+//! let cfg = ArchConfig::baseline();
+//! let tenants = vec![Tenant::new(zoo::by_name("bert-large").unwrap(), 1.0)];
+//! let arrivals = generate(&TrafficSpec::poisson(2000.0, 1.0, 7), &tenants);
+//! let rep = serve_shared(&cfg, &tenants, &arrivals, &EngineConfig::default());
+//! println!("{}", analyze(&rep, 1.0, 5e-3));
+//! ```
+
+pub mod engine;
+pub mod partition;
+pub mod slo;
+pub mod traffic;
+
+pub use engine::{
+    serve_shared, Admission, BatchPolicy, CostCache, CostEntry, Engine, EngineConfig,
+    EngineReport, ServedRequest,
+};
+pub use partition::{partition_pods, serve_partitioned, sub_config, PartitionPlan, TenantPartition};
+pub use slo::{
+    analyze, capacity_qps, load_sweep, max_sustainable_qps, percentile, sweep_table,
+    LatencyStats, SloReport, SweepOptions, SweepPoint,
+};
+pub use traffic::{generate, Arrival, ArrivalProcess, Tenant, TrafficSpec};

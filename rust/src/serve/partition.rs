@@ -1,0 +1,279 @@
+//! Static pod partitioning for multi-tenancy: split the accelerator's
+//! `num_pods` across tenants (weight-proportional, power-of-two sized
+//! so every partition is itself a valid N-to-N SOSA configuration) and
+//! serve each tenant on its own sub-accelerator.
+//!
+//! This is the spatial alternative to the paper's temporal
+//! co-scheduling (§6.1): instead of interleaving tenant batches on the
+//! whole machine, each tenant owns a pod slice and the engines run
+//! concurrently, so one tenant's long batches cannot head-of-line
+//! block another's.
+
+use crate::arch::ArchConfig;
+use crate::error::{Error, Result};
+use crate::util::{ilog2, is_pow2};
+
+use super::engine::{Engine, EngineConfig, EngineReport};
+use super::traffic::{Arrival, Tenant};
+
+/// One tenant's share of the machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TenantPartition {
+    /// Tenant index.
+    pub tenant: usize,
+    /// Pods assigned (a power of two).
+    pub pods: usize,
+}
+
+/// A full partitioning of the machine.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PartitionPlan {
+    pub parts: Vec<TenantPartition>,
+}
+
+impl PartitionPlan {
+    /// Total pods assigned.
+    pub fn pods_used(&self) -> usize {
+        self.parts.iter().map(|p| p.pods).sum()
+    }
+}
+
+/// Largest power of two `<= n` (n >= 1).
+fn prev_pow2(n: usize) -> usize {
+    1 << ilog2(n)
+}
+
+/// Split `num_pods` across tenants proportionally to their weights,
+/// rounding each share down to a power of two, then greedily doubling
+/// the most under-served partition while pods remain.  Deterministic:
+/// ties break on the lowest tenant index.
+pub fn partition_pods(num_pods: usize, tenants: &[Tenant]) -> Result<PartitionPlan> {
+    if tenants.is_empty() {
+        return Err(Error::config("partitioning needs at least one tenant"));
+    }
+    if !is_pow2(num_pods) {
+        return Err(Error::config(format!(
+            "num_pods must be a power of two, got {num_pods}"
+        )));
+    }
+    if num_pods < tenants.len() {
+        return Err(Error::config(format!(
+            "{num_pods} pods cannot host {} tenants",
+            tenants.len()
+        )));
+    }
+    let total_w: f64 = tenants.iter().map(|t| t.weight.max(0.0)).sum();
+    let ideal: Vec<f64> = tenants
+        .iter()
+        .map(|t| {
+            if total_w > 0.0 {
+                num_pods as f64 * t.weight.max(0.0) / total_w
+            } else {
+                num_pods as f64 / tenants.len() as f64
+            }
+        })
+        .collect();
+    let mut pods: Vec<usize> = ideal
+        .iter()
+        .map(|&x| prev_pow2((x.floor() as usize).max(1)))
+        .collect();
+    // Shrink if rounding-to-at-least-one overshot (many tiny tenants).
+    while pods.iter().sum::<usize>() > num_pods {
+        let i = (0..pods.len())
+            .filter(|&i| pods[i] > 1)
+            .min_by(|&a, &b| {
+                (ideal[a] / pods[a] as f64)
+                    .total_cmp(&(ideal[b] / pods[b] as f64))
+                    .then(a.cmp(&b))
+            })
+            .ok_or_else(|| Error::config("cannot fit one pod per tenant"))?;
+        pods[i] /= 2;
+    }
+    // Grow the most under-served partitions into the leftover pods.
+    loop {
+        let used: usize = pods.iter().sum();
+        let grow = (0..pods.len())
+            .filter(|&i| used + pods[i] <= num_pods)
+            .max_by(|&a, &b| {
+                (ideal[a] / pods[a] as f64)
+                    .total_cmp(&(ideal[b] / pods[b] as f64))
+                    .then(b.cmp(&a)) // prefer the lower index on ties
+            });
+        match grow {
+            Some(i) => pods[i] *= 2,
+            None => break,
+        }
+    }
+    Ok(PartitionPlan {
+        parts: pods
+            .into_iter()
+            .enumerate()
+            .map(|(tenant, pods)| TenantPartition { tenant, pods })
+            .collect(),
+    })
+}
+
+/// Derive the sub-accelerator configuration for a partition: same pod
+/// microarchitecture, `pods` pods with matching bank/post-processor
+/// counts (the N-to-N invariant).
+pub fn sub_config(cfg: &ArchConfig, pods: usize) -> Result<ArchConfig> {
+    let sub = ArchConfig {
+        num_pods: pods,
+        num_banks: pods,
+        num_post_processors: pods,
+        ..cfg.clone()
+    };
+    sub.validate()?;
+    Ok(sub)
+}
+
+/// Serve a trace with static pod partitioning: each tenant gets its
+/// own engine on its own sub-configuration; partitions run
+/// concurrently (they share nothing, so each is simulated
+/// independently and the reports are merged).
+pub fn serve_partitioned(
+    cfg: &ArchConfig,
+    tenants: &[Tenant],
+    arrivals: &[Arrival],
+    ecfg: &EngineConfig,
+) -> Result<EngineReport> {
+    let plan = partition_pods(cfg.num_pods, tenants)?;
+    let mut merged = EngineReport {
+        rejected_by_tenant: vec![0; tenants.len()],
+        ..Default::default()
+    };
+    for part in &plan.parts {
+        let k = part.tenant;
+        let sub = sub_config(cfg, part.pods)?;
+        // Remap this tenant's arrivals to engine-local index 0.
+        let local: Vec<Arrival> = arrivals
+            .iter()
+            .filter(|a| a.tenant == k)
+            .map(|a| Arrival { tenant: 0, ..*a })
+            .collect();
+        let one = std::slice::from_ref(&tenants[k]);
+        let mut engine = Engine::new(sub, one, ecfg.clone());
+        let rep = engine.run(&local);
+        merged.rejected += rep.rejected;
+        merged.rejected_by_tenant[k] = rep.rejected;
+        merged.makespan_s = merged.makespan_s.max(rep.makespan_s);
+        // Partitions run concurrently: weight each engine's busy time
+        // by its pod share so the merged busy fraction stays a
+        // machine-level utilization in [0, 1] (idle pods count).
+        merged.busy_s += rep.busy_s * part.pods as f64 / cfg.num_pods as f64;
+        merged.batches += rep.batches;
+        merged.total_ops += rep.total_ops;
+        merged.sim_calls += rep.sim_calls;
+        merged.completed.extend(
+            rep.completed
+                .iter()
+                .map(|r| super::engine::ServedRequest { tenant: k, ..*r }),
+        );
+        if ecfg.record_group_stats {
+            merged.group_stats.extend(rep.group_stats);
+        }
+    }
+    // Deterministic global order: by completion time, then id.
+    merged
+        .completed
+        .sort_by(|a, b| a.t_end.total_cmp(&b.t_end).then(a.id.cmp(&b.id)));
+    Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchConfig, ArrayDims};
+    use crate::serve::engine::BatchPolicy;
+    use crate::sim::SimOptions;
+    use crate::workloads::ModelGraph;
+
+    fn tenant(name: &str, weight: f64) -> Tenant {
+        let mut g = ModelGraph::new(name);
+        g.add("fc", 64, 64, 64, vec![]);
+        Tenant::new(g, weight)
+    }
+
+    #[test]
+    fn equal_weights_split_evenly() {
+        let plan = partition_pods(64, &[tenant("a", 1.0), tenant("b", 1.0)]).unwrap();
+        assert_eq!(plan.parts[0].pods, 32);
+        assert_eq!(plan.parts[1].pods, 32);
+        assert_eq!(plan.pods_used(), 64);
+    }
+
+    #[test]
+    fn skewed_weights_round_to_pow2_work_conserving() {
+        // 7:1 over 8 pods: floors are 4/1; the leftover pods double the
+        // small partition (work-conserving) until nothing fits: 4/4.
+        let plan = partition_pods(8, &[tenant("a", 7.0), tenant("b", 1.0)]).unwrap();
+        assert_eq!(plan.parts[0].pods, 4);
+        assert_eq!(plan.parts[1].pods, 4);
+        assert_eq!(plan.pods_used(), 8);
+        // 3:1 over 256: floors 128/64, leftover 64 doubles the small
+        // partition (the big one cannot fit another 128).
+        let plan = partition_pods(256, &[tenant("a", 3.0), tenant("b", 1.0)]).unwrap();
+        assert!(is_pow2(plan.parts[0].pods) && is_pow2(plan.parts[1].pods));
+        assert_eq!(plan.pods_used(), 256);
+        assert!(plan.parts[0].pods >= plan.parts[1].pods);
+    }
+
+    #[test]
+    fn three_tenants_fill_256() {
+        let t = vec![tenant("a", 1.0), tenant("b", 1.0), tenant("c", 1.0)];
+        let plan = partition_pods(256, &t).unwrap();
+        assert_eq!(plan.pods_used(), 256);
+        for p in &plan.parts {
+            assert!(is_pow2(p.pods));
+            assert!(p.pods >= 64, "equal thirds of 256: 128/64/64");
+        }
+    }
+
+    #[test]
+    fn rejects_impossible_plans() {
+        assert!(partition_pods(100, &[tenant("a", 1.0)]).is_err(), "non-pow2");
+        let none: Vec<Tenant> = vec![];
+        assert!(partition_pods(2, &none).is_err(), "no tenants");
+        let four = vec![tenant("a", 1.0), tenant("b", 1.0), tenant("c", 1.0), tenant("d", 1.0)];
+        assert!(partition_pods(2, &four).is_err(), "more tenants than pods");
+    }
+
+    #[test]
+    fn sub_config_preserves_invariants() {
+        let cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 64);
+        let sub = sub_config(&cfg, 16).unwrap();
+        assert_eq!(sub.num_pods, 16);
+        assert_eq!(sub.num_banks, 16);
+        assert_eq!(sub.num_post_processors, 16);
+        assert_eq!(sub.array, cfg.array);
+        assert!(sub_config(&cfg, 17).is_err(), "non-pow2 partition");
+    }
+
+    #[test]
+    fn partitioned_serving_completes_everything() {
+        let cfg = ArchConfig::with_array(ArrayDims::new(8, 8), 8);
+        let tenants = vec![tenant("a", 1.0), tenant("b", 1.0)];
+        let arrivals: Vec<Arrival> = (0..10)
+            .map(|i| Arrival {
+                t: i as f64 * 1e-4,
+                tenant: (i % 2) as usize,
+                id: i as u64,
+                batch: 1,
+            })
+            .collect();
+        let ecfg = EngineConfig {
+            policy: BatchPolicy { max_batch: 4, max_wait_s: 1e-3 },
+            sim: SimOptions { memory_model: false, ..Default::default() },
+            ..Default::default()
+        };
+        let rep = serve_partitioned(&cfg, &tenants, &arrivals, &ecfg).unwrap();
+        assert_eq!(rep.completed.len(), 10);
+        assert_eq!(rep.rejected, 0);
+        assert!(rep.makespan_s > 0.0);
+        // Both tenants actually completed work.
+        assert!(rep.completed.iter().any(|r| r.tenant == 0));
+        assert!(rep.completed.iter().any(|r| r.tenant == 1));
+        // Sorted by completion time.
+        assert!(rep.completed.windows(2).all(|w| w[0].t_end <= w[1].t_end));
+    }
+}

@@ -1,0 +1,355 @@
+//! SLO accounting over engine reports: latency percentiles, queueing
+//! vs service decomposition, goodput under a latency deadline, and a
+//! load-sweep helper that locates the saturation knee / maximum
+//! sustainable QPS for a configuration.
+
+use crate::arch::ArchConfig;
+use crate::error::Result;
+use crate::util::{csv::f, Table};
+
+use super::engine::{serve_shared, CostCache, EngineConfig, EngineReport};
+use super::partition::serve_partitioned;
+use super::traffic::{generate, Tenant, TrafficSpec};
+
+/// Percentile summary of a sample set (seconds).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencyStats {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+/// Nearest-rank percentile of a **sorted** sample slice; `q` in
+/// `[0, 100]`.  Empty input yields 0 (there is no latency to report).
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let n = sorted.len();
+    let rank = (q / 100.0 * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
+impl LatencyStats {
+    /// Summarize a sample set (sorts a copy; callers keep their order).
+    pub fn from_samples(samples: &[f64]) -> LatencyStats {
+        if samples.is_empty() {
+            return LatencyStats::default();
+        }
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        LatencyStats {
+            n: sorted.len(),
+            mean: sorted.iter().sum::<f64>() / sorted.len() as f64,
+            p50: percentile(&sorted, 50.0),
+            p95: percentile(&sorted, 95.0),
+            p99: percentile(&sorted, 99.0),
+            max: *sorted.last().expect("non-empty"),
+        }
+    }
+}
+
+/// Full SLO report for one serving run.
+#[derive(Clone, Debug)]
+pub struct SloReport {
+    /// End-to-end latency (arrival → completion).
+    pub latency: LatencyStats,
+    /// Queueing component (arrival → batch launch).
+    pub queue: LatencyStats,
+    /// Service component (batch launch → completion).
+    pub service: LatencyStats,
+    /// Requests offered (completed + rejected).
+    pub offered: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    /// Completions within the deadline.
+    pub within_deadline: u64,
+    /// Latency deadline used for goodput.
+    pub deadline_s: f64,
+    /// In-deadline completions per second of horizon.
+    pub goodput_qps: f64,
+    /// Completions per second of horizon (deadline-blind).
+    pub throughput_qps: f64,
+    pub makespan_s: f64,
+    /// Accelerator busy fraction over the makespan.
+    pub busy_frac: f64,
+}
+
+/// Compute the SLO report for an engine run.  `horizon_s` is the
+/// offered-traffic duration (rates are normalized to it, extended to
+/// the makespan if the run overran while draining).
+pub fn analyze(rep: &EngineReport, horizon_s: f64, deadline_s: f64) -> SloReport {
+    let latencies: Vec<f64> = rep.completed.iter().map(|r| r.latency_s()).collect();
+    let queues: Vec<f64> = rep.completed.iter().map(|r| r.queue_s()).collect();
+    let services: Vec<f64> = rep.completed.iter().map(|r| r.service_s()).collect();
+    let within = latencies.iter().filter(|&&l| l <= deadline_s).count() as u64;
+    let span = horizon_s.max(rep.makespan_s);
+    let (goodput, throughput) = if span > 0.0 {
+        (within as f64 / span, rep.completed.len() as f64 / span)
+    } else {
+        (0.0, 0.0)
+    };
+    SloReport {
+        latency: LatencyStats::from_samples(&latencies),
+        queue: LatencyStats::from_samples(&queues),
+        service: LatencyStats::from_samples(&services),
+        offered: rep.completed.len() as u64 + rep.rejected,
+        completed: rep.completed.len() as u64,
+        rejected: rep.rejected,
+        within_deadline: within,
+        deadline_s,
+        goodput_qps: goodput,
+        throughput_qps: throughput,
+        makespan_s: rep.makespan_s,
+        busy_frac: rep.busy_frac(),
+    }
+}
+
+impl std::fmt::Display for SloReport {
+    fn fmt(&self, fm: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            fm,
+            "requests : {} offered, {} completed, {} rejected",
+            self.offered, self.completed, self.rejected
+        )?;
+        writeln!(
+            fm,
+            "latency  : p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms  mean {:.3} ms  max {:.3} ms",
+            self.latency.p50 * 1e3,
+            self.latency.p95 * 1e3,
+            self.latency.p99 * 1e3,
+            self.latency.mean * 1e3,
+            self.latency.max * 1e3
+        )?;
+        writeln!(
+            fm,
+            "breakdown: queueing p50 {:.3} / p99 {:.3} ms — service p50 {:.3} / p99 {:.3} ms",
+            self.queue.p50 * 1e3,
+            self.queue.p99 * 1e3,
+            self.service.p50 * 1e3,
+            self.service.p99 * 1e3
+        )?;
+        writeln!(
+            fm,
+            "goodput  : {:.1} req/s within {:.3} ms deadline ({} of {} in time)",
+            self.goodput_qps,
+            self.deadline_s * 1e3,
+            self.within_deadline,
+            self.completed
+        )?;
+        write!(
+            fm,
+            "machine  : makespan {:.3} s, busy {:.1} %, throughput {:.1} req/s",
+            self.makespan_s,
+            100.0 * self.busy_frac,
+            self.throughput_qps
+        )
+    }
+}
+
+/// Back-of-envelope capacity: requests/s the configuration sustains
+/// when every batch fills to `max_batch`, mixing tenants by weight.
+/// Exact for one tenant; an upper-bound estimate for shared serving.
+pub fn capacity_qps(cfg: &ArchConfig, tenants: &[Tenant], ecfg: &EngineConfig) -> f64 {
+    let models = tenants.iter().map(|t| t.model.clone()).collect();
+    let mut cache = CostCache::new(cfg.clone(), models, ecfg.sim.clone());
+    let b = ecfg.policy.max_batch.max(1);
+    let total_w: f64 = tenants.iter().map(|t| t.weight.max(0.0)).sum();
+    // Mean per-request service time across the mix.
+    let mut per_req = 0.0;
+    for (k, t) in tenants.iter().enumerate() {
+        let share = if total_w > 0.0 {
+            t.weight.max(0.0) / total_w
+        } else {
+            1.0 / tenants.len() as f64
+        };
+        per_req += share * cache.cost(&[(k, b)]).seconds / b as f64;
+    }
+    if per_req > 0.0 {
+        1.0 / per_req
+    } else {
+        0.0
+    }
+}
+
+/// One point of a load sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepPoint {
+    pub qps: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub goodput_qps: f64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub busy_frac: f64,
+}
+
+/// Load-sweep options.
+#[derive(Clone, Debug)]
+pub struct SweepOptions {
+    /// Offered rates to probe (requests/s).
+    pub qps: Vec<f64>,
+    /// Trace duration per point (seconds).
+    pub duration_s: f64,
+    /// Latency deadline for goodput.
+    pub deadline_s: f64,
+    /// Traffic seed (shared by every point so only the rate varies).
+    pub seed: u64,
+    /// Serve each tenant on its own pod partition instead of sharing.
+    pub partitioned: bool,
+}
+
+/// Sweep offered load over a configuration, reporting the latency/
+/// goodput curve.  The saturation knee is visible as the offered rate
+/// beyond which p99 diverges and goodput flattens.
+pub fn load_sweep(
+    cfg: &ArchConfig,
+    tenants: &[Tenant],
+    ecfg: &EngineConfig,
+    sweep: &SweepOptions,
+) -> Result<Vec<SweepPoint>> {
+    let mut out = Vec::with_capacity(sweep.qps.len());
+    for &qps in &sweep.qps {
+        let spec = TrafficSpec::poisson(qps, sweep.duration_s, sweep.seed);
+        let arrivals = generate(&spec, tenants);
+        let rep = if sweep.partitioned {
+            serve_partitioned(cfg, tenants, &arrivals, ecfg)?
+        } else {
+            serve_shared(cfg, tenants, &arrivals, ecfg)
+        };
+        let slo = analyze(&rep, sweep.duration_s, sweep.deadline_s);
+        out.push(SweepPoint {
+            qps,
+            p50_s: slo.latency.p50,
+            p99_s: slo.latency.p99,
+            goodput_qps: slo.goodput_qps,
+            completed: slo.completed,
+            rejected: slo.rejected,
+            busy_frac: slo.busy_frac,
+        });
+    }
+    Ok(out)
+}
+
+/// Highest probed rate that served its whole offered load (no
+/// admission-control shedding) with p99 inside the deadline — the max
+/// sustainable QPS under the SLO, if any point qualified.  Points that
+/// survive only by rejecting traffic don't count: their survivors'
+/// latency looks healthy while goodput has collapsed.
+pub fn max_sustainable_qps(points: &[SweepPoint], deadline_s: f64) -> Option<f64> {
+    points
+        .iter()
+        .filter(|p| p.completed > 0 && p.rejected == 0 && p.p99_s <= deadline_s)
+        .map(|p| p.qps)
+        .fold(None, |acc, q| Some(acc.map_or(q, |a: f64| a.max(q))))
+}
+
+/// Render sweep points as the experiments' aligned table.
+pub fn sweep_table(points: &[SweepPoint]) -> Table {
+    let mut table = Table::new(&[
+        "offered qps", "p50 ms", "p99 ms", "goodput qps", "completed", "rejected", "busy %",
+    ]);
+    for p in points {
+        table.row(vec![
+            f(p.qps, 1),
+            f(p.p50_s * 1e3, 3),
+            f(p.p99_s * 1e3, 3),
+            f(p.goodput_qps, 1),
+            p.completed.to_string(),
+            p.rejected.to_string(),
+            f(100.0 * p.busy_frac, 1),
+        ]);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::engine::ServedRequest;
+
+    #[test]
+    fn percentile_empty_and_single() {
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[], 99.0), 0.0);
+        let one = [0.25];
+        assert_eq!(percentile(&one, 0.0), 0.25);
+        assert_eq!(percentile(&one, 50.0), 0.25);
+        assert_eq!(percentile(&one, 99.0), 0.25);
+        assert_eq!(percentile(&one, 100.0), 0.25);
+        let s = LatencyStats::from_samples(&one);
+        assert_eq!((s.p50, s.p95, s.p99, s.max), (0.25, 0.25, 0.25, 0.25));
+        assert_eq!(LatencyStats::from_samples(&[]), LatencyStats::default());
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 50.0), 50.0);
+        assert_eq!(percentile(&v, 95.0), 95.0);
+        assert_eq!(percentile(&v, 99.0), 99.0);
+        assert_eq!(percentile(&v, 100.0), 100.0);
+        // Two samples: p50 is the first, p99 the second.
+        assert_eq!(percentile(&[1.0, 2.0], 50.0), 1.0);
+        assert_eq!(percentile(&[1.0, 2.0], 99.0), 2.0);
+    }
+
+    #[test]
+    fn analyze_counts_goodput_against_deadline() {
+        let mk = |t_arrival: f64, t_end: f64| ServedRequest {
+            id: 0,
+            tenant: 0,
+            batch: 1,
+            t_arrival,
+            t_start: t_arrival,
+            t_end,
+        };
+        let rep = EngineReport {
+            completed: vec![mk(0.0, 0.010), mk(0.1, 0.115), mk(0.2, 0.290)],
+            rejected: 1,
+            rejected_by_tenant: vec![1],
+            makespan_s: 0.290,
+            busy_s: 0.1,
+            batches: 3,
+            total_ops: 300,
+            sim_calls: 1,
+            group_stats: vec![],
+        };
+        let slo = analyze(&rep, 1.0, 0.020);
+        assert_eq!(slo.offered, 4);
+        assert_eq!(slo.completed, 3);
+        assert_eq!(slo.within_deadline, 2, "10 ms and 15 ms meet 20 ms");
+        assert!((slo.goodput_qps - 2.0).abs() < 1e-12);
+        assert!((slo.throughput_qps - 3.0).abs() < 1e-12);
+        assert!((slo.latency.max - 0.09).abs() < 1e-12);
+    }
+
+    #[test]
+    fn display_is_stable() {
+        let slo = analyze(&EngineReport::default(), 1.0, 0.01);
+        let a = format!("{slo}");
+        let b = format!("{slo}");
+        assert_eq!(a, b);
+        assert!(a.contains("p99"));
+    }
+
+    #[test]
+    fn max_sustainable_picks_last_meeting_deadline() {
+        let mk = |qps: f64, p99: f64| SweepPoint {
+            qps,
+            p50_s: p99 / 2.0,
+            p99_s: p99,
+            goodput_qps: qps,
+            completed: 100,
+            rejected: 0,
+            busy_frac: 0.5,
+        };
+        let pts = vec![mk(100.0, 0.005), mk(200.0, 0.008), mk(400.0, 0.5)];
+        assert_eq!(max_sustainable_qps(&pts, 0.01), Some(200.0));
+        assert_eq!(max_sustainable_qps(&pts, 1e-4), None);
+        assert_eq!(max_sustainable_qps(&[], 0.01), None);
+    }
+}

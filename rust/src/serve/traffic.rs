@@ -1,0 +1,268 @@
+//! Open-loop arrival generation for the serving engine: Poisson,
+//! bursty (two-state Markov-modulated Poisson) and trace replay, all
+//! driven by a seeded [`XorShift`] so a `(spec, tenants)` pair always
+//! produces the same request stream.
+
+use crate::testutil::XorShift;
+use crate::workloads::ModelGraph;
+
+/// One tenant served by the engine: a model plus a traffic/partition
+/// weight (relative share of the request mix and of the pod budget).
+#[derive(Clone, Debug)]
+pub struct Tenant {
+    /// Display name (defaults to the model name).
+    pub name: String,
+    /// The model every request of this tenant runs (batch dimension is
+    /// applied by the engine's batcher, not stored here).
+    pub model: ModelGraph,
+    /// Relative weight for traffic mixing and pod partitioning.
+    pub weight: f64,
+}
+
+impl Tenant {
+    /// Tenant named after its model.
+    pub fn new(model: ModelGraph, weight: f64) -> Self {
+        debug_assert!(weight > 0.0, "tenant weight must be positive");
+        Tenant { name: model.name.clone(), model, weight }
+    }
+}
+
+/// One request arrival.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Arrival {
+    /// Arrival time in seconds from the start of the trace.
+    pub t: f64,
+    /// Index into the engine's tenant list.
+    pub tenant: usize,
+    /// Unique request id.
+    pub id: u64,
+    /// Requested batch units (1 for online requests; offline wrappers
+    /// may carry pre-batched requests).
+    pub batch: usize,
+}
+
+/// The arrival process shape.
+#[derive(Clone, Debug)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals at a constant offered rate (requests/s
+    /// across all tenants; tenants sampled by weight).
+    Poisson { qps: f64 },
+    /// Two-state Markov-modulated Poisson process: `base_qps` in the
+    /// quiet state, `burst_qps` during bursts, with exponentially
+    /// distributed state holding times.
+    Bursty {
+        base_qps: f64,
+        burst_qps: f64,
+        /// Mean burst duration in seconds.
+        mean_burst_s: f64,
+        /// Mean quiet-period duration in seconds.
+        mean_quiet_s: f64,
+    },
+    /// Replay an explicit trace (clamped to the spec duration; ids are
+    /// reassigned sequentially).
+    Trace(Vec<Arrival>),
+}
+
+/// A complete traffic specification.
+#[derive(Clone, Debug)]
+pub struct TrafficSpec {
+    pub process: ArrivalProcess,
+    /// Trace horizon in seconds: no arrivals at or beyond this time.
+    pub duration_s: f64,
+    /// RNG seed; equal seeds produce byte-identical traces.
+    pub seed: u64,
+}
+
+impl TrafficSpec {
+    /// Poisson spec shorthand.
+    pub fn poisson(qps: f64, duration_s: f64, seed: u64) -> Self {
+        TrafficSpec { process: ArrivalProcess::Poisson { qps }, duration_s, seed }
+    }
+
+    /// Bursty spec shorthand.
+    pub fn bursty(
+        base_qps: f64,
+        burst_qps: f64,
+        mean_burst_s: f64,
+        mean_quiet_s: f64,
+        duration_s: f64,
+        seed: u64,
+    ) -> Self {
+        TrafficSpec {
+            process: ArrivalProcess::Bursty { base_qps, burst_qps, mean_burst_s, mean_quiet_s },
+            duration_s,
+            seed,
+        }
+    }
+}
+
+/// Exponential variate with the given rate (events/s).
+fn exp_variate(rng: &mut XorShift, rate: f64) -> f64 {
+    debug_assert!(rate > 0.0);
+    // 1 - U lies in (0, 1], so ln() is finite and the variate >= 0.
+    -(1.0 - rng.f64()).ln() / rate
+}
+
+/// Sample a tenant index by weight.
+fn sample_tenant(rng: &mut XorShift, cum_weights: &[f64]) -> usize {
+    let total = *cum_weights.last().expect("at least one tenant");
+    let r = rng.f64() * total;
+    cum_weights.iter().position(|&c| r < c).unwrap_or(cum_weights.len() - 1)
+}
+
+/// Generate the arrival stream for a spec over a tenant set, sorted by
+/// time with sequential ids.
+pub fn generate(spec: &TrafficSpec, tenants: &[Tenant]) -> Vec<Arrival> {
+    assert!(!tenants.is_empty(), "traffic needs at least one tenant");
+    let mut rng = XorShift::new(spec.seed);
+    let cum: Vec<f64> = tenants
+        .iter()
+        .scan(0.0, |acc, t| {
+            *acc += t.weight;
+            Some(*acc)
+        })
+        .collect();
+    let mut out = Vec::new();
+    match &spec.process {
+        ArrivalProcess::Poisson { qps } => {
+            assert!(*qps > 0.0, "Poisson qps must be positive");
+            let mut t = exp_variate(&mut rng, *qps);
+            while t < spec.duration_s {
+                let tenant = sample_tenant(&mut rng, &cum);
+                out.push(Arrival { t, tenant, id: out.len() as u64, batch: 1 });
+                t += exp_variate(&mut rng, *qps);
+            }
+        }
+        ArrivalProcess::Bursty { base_qps, burst_qps, mean_burst_s, mean_quiet_s } => {
+            assert!(*base_qps > 0.0 && *burst_qps > 0.0);
+            assert!(*mean_burst_s > 0.0 && *mean_quiet_s > 0.0);
+            let mut in_burst = false;
+            let mut t = 0.0f64;
+            let mut state_end = exp_variate(&mut rng, 1.0 / mean_quiet_s);
+            while t < spec.duration_s {
+                let rate = if in_burst { *burst_qps } else { *base_qps };
+                let dt = exp_variate(&mut rng, rate);
+                if t + dt >= state_end {
+                    // The exponential is memoryless: jumping to the state
+                    // boundary and redrawing preserves the process law.
+                    t = state_end;
+                    in_burst = !in_burst;
+                    let mean = if in_burst { *mean_burst_s } else { *mean_quiet_s };
+                    state_end = t + exp_variate(&mut rng, 1.0 / mean);
+                    continue;
+                }
+                t += dt;
+                if t >= spec.duration_s {
+                    break;
+                }
+                let tenant = sample_tenant(&mut rng, &cum);
+                out.push(Arrival { t, tenant, id: out.len() as u64, batch: 1 });
+            }
+        }
+        ArrivalProcess::Trace(trace) => {
+            let mut sorted: Vec<Arrival> = trace
+                .iter()
+                .filter(|a| a.t < spec.duration_s)
+                .copied()
+                .collect();
+            sorted.sort_by(|a, b| a.t.total_cmp(&b.t).then(a.id.cmp(&b.id)));
+            for (i, a) in sorted.iter_mut().enumerate() {
+                assert!(a.tenant < tenants.len(), "trace tenant out of range");
+                a.id = i as u64;
+                a.batch = a.batch.max(1);
+            }
+            out = sorted;
+        }
+    }
+    debug_assert!(out.windows(2).all(|w| w[0].t <= w[1].t));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::ModelGraph;
+
+    fn toy_tenants(n: usize) -> Vec<Tenant> {
+        (0..n)
+            .map(|i| {
+                let mut g = ModelGraph::new(format!("toy{i}"));
+                g.add("fc", 64, 64, 64, vec![]);
+                Tenant::new(g, 1.0)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn poisson_rate_roughly_matches() {
+        let tenants = toy_tenants(1);
+        let spec = TrafficSpec::poisson(1000.0, 4.0, 7);
+        let a = generate(&spec, &tenants);
+        // ~4000 expected; 5 sigma ≈ 316.
+        assert!((a.len() as i64 - 4000).abs() < 400, "got {}", a.len());
+        assert!(a.iter().all(|x| x.t < 4.0 && x.batch == 1));
+        assert!(a.windows(2).all(|w| w[0].t <= w[1].t && w[0].id < w[1].id));
+    }
+
+    #[test]
+    fn same_seed_same_trace_different_seed_differs() {
+        let tenants = toy_tenants(2);
+        let spec = TrafficSpec::poisson(500.0, 1.0, 42);
+        let a = generate(&spec, &tenants);
+        let b = generate(&spec, &tenants);
+        assert_eq!(a, b);
+        let other = generate(&TrafficSpec::poisson(500.0, 1.0, 43), &tenants);
+        assert_ne!(a, other);
+    }
+
+    #[test]
+    fn tenant_mix_follows_weights() {
+        let mut tenants = toy_tenants(2);
+        tenants[0].weight = 3.0;
+        let spec = TrafficSpec::poisson(2000.0, 2.0, 11);
+        let a = generate(&spec, &tenants);
+        let first = a.iter().filter(|x| x.tenant == 0).count();
+        let frac = first as f64 / a.len() as f64;
+        assert!((frac - 0.75).abs() < 0.05, "tenant-0 share {frac}");
+    }
+
+    #[test]
+    fn bursty_has_higher_peak_density_than_poisson() {
+        let tenants = toy_tenants(1);
+        let spec = TrafficSpec::bursty(100.0, 4000.0, 0.05, 0.2, 4.0, 3);
+        let a = generate(&spec, &tenants);
+        assert!(!a.is_empty());
+        // Count arrivals per 50 ms bin; the busiest bin must far exceed
+        // the mean bin (burstiness), which a flat Poisson would not.
+        let bins = (4.0 / 0.05) as usize;
+        let mut hist = vec![0usize; bins];
+        for x in &a {
+            hist[((x.t / 0.05) as usize).min(bins - 1)] += 1;
+        }
+        let max = *hist.iter().max().unwrap();
+        let mean = a.len() as f64 / bins as f64;
+        assert!(max as f64 > 3.0 * mean, "max {max} mean {mean:.1}");
+    }
+
+    #[test]
+    fn trace_replay_clamps_sorts_and_reindexes() {
+        let tenants = toy_tenants(2);
+        let trace = vec![
+            Arrival { t: 0.9, tenant: 1, id: 99, batch: 0 },
+            Arrival { t: 0.1, tenant: 0, id: 98, batch: 4 },
+            Arrival { t: 5.0, tenant: 0, id: 97, batch: 1 },
+        ];
+        let spec = TrafficSpec {
+            process: ArrivalProcess::Trace(trace),
+            duration_s: 1.0,
+            seed: 0,
+        };
+        let a = generate(&spec, &tenants);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0].t, 0.1);
+        assert_eq!(a[0].id, 0);
+        assert_eq!(a[0].batch, 4);
+        assert_eq!(a[1].t, 0.9);
+        assert_eq!(a[1].batch, 1, "batch 0 normalized to 1");
+    }
+}

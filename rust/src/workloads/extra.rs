@@ -122,8 +122,7 @@ mod tests {
         use crate::arch::{ArchConfig, ArrayDims};
         use crate::sim::{simulate, SimOptions};
         let cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 64);
-        let mut o = SimOptions::default();
-        o.memory_model = false;
+        let o = SimOptions { memory_model: false, ..Default::default() };
         let dense = simulate(&cfg, &vgg16(224), &o).utilization(&cfg);
         let dw = simulate(&cfg, &mobilenet_v2(224), &o).utilization(&cfg);
         assert!(dw < dense, "depthwise {dw} vs dense {dense}");

@@ -8,6 +8,10 @@ use sosa::arch::{ArchConfig, ArrayDims};
 use sosa::coordinator::{Coordinator, Request};
 use sosa::interconnect::Kind;
 use sosa::power::{max_pods_under_tdp, peak_power, TDP_W};
+use sosa::serve::{
+    analyze, capacity_qps, generate, load_sweep, max_sustainable_qps, serve_partitioned,
+    serve_shared, sub_config, BatchPolicy, EngineConfig, SweepOptions, Tenant, TrafficSpec,
+};
 use sosa::sim::{simulate, simulate_multi, SimOptions};
 use sosa::tiling::{tile_model, Strategy};
 use sosa::workloads::zoo;
@@ -21,8 +25,7 @@ fn full_pipeline_on_every_benchmark() {
     // Every §5 benchmark must tile, schedule and report sane stats on
     // a small config (16 pods keeps this fast).
     let cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 16);
-    let mut opts = SimOptions::default();
-    opts.memory_model = false;
+    let opts = SimOptions { memory_model: false, ..Default::default() };
     for m in zoo::benchmarks() {
         let s = simulate(&cfg, &m, &opts);
         assert_eq!(s.useful_macs, m.total_macs(), "{}", m.name);
@@ -38,8 +41,7 @@ fn interconnect_choice_flows_through_stack() {
     let mk = |kind| {
         let mut cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 64);
         cfg.interconnect = kind;
-        let mut o = SimOptions::default();
-        o.memory_model = false;
+        let o = SimOptions { memory_model: false, ..Default::default() };
         simulate(&cfg, &m, &o).total_cycles
     };
     let bfly = mk(Kind::Butterfly { expansion: 2 });
@@ -71,8 +73,7 @@ fn analytic_and_sim_agree_on_ordering() {
     let a32 = analytic::estimate(&c32, &m, Strategy::RxR).utilization;
     let a128 = analytic::estimate(&c128, &m, Strategy::RxR).utilization;
     assert!(a32 > a128);
-    let mut o = SimOptions::default();
-    o.memory_model = false;
+    let o = SimOptions { memory_model: false, ..Default::default() };
     let s32 = simulate(&c32, &m, &o).utilization(&c32);
     let s128 = simulate(&c128, &m, &o).utilization(&c128);
     assert!(s32 > s128);
@@ -105,10 +106,118 @@ fn multi_model_scheduling_conserves_work() {
     let a = zoo::by_name("bert-medium").unwrap();
     let b = zoo::by_name("densenet121").unwrap();
     let cfg = baseline();
-    let mut o = SimOptions::default();
-    o.memory_model = false;
+    let o = SimOptions { memory_model: false, ..Default::default() };
     let s = simulate_multi(&cfg, &[&a, &b], &o);
     assert_eq!(s.useful_macs, a.total_macs() + b.total_macs());
+}
+
+#[test]
+fn serving_engine_deterministic_under_fixed_seed() {
+    let cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 16);
+    let tenants = vec![Tenant::new(zoo::by_name("bert-medium").unwrap(), 1.0)];
+    let ecfg = EngineConfig {
+        policy: BatchPolicy { max_batch: 2, max_wait_s: 1e-3 },
+        sim: SimOptions { memory_model: false, ..Default::default() },
+        ..Default::default()
+    };
+    let run = |seed: u64| {
+        let arrivals = generate(&TrafficSpec::poisson(300.0, 0.1, seed), &tenants);
+        let rep = serve_shared(&cfg, &tenants, &arrivals, &ecfg);
+        let slo = analyze(&rep, 0.1, 5e-3);
+        (rep, format!("{slo}"))
+    };
+    let (a, ra) = run(7);
+    let (b, rb) = run(7);
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.makespan_s, b.makespan_s);
+    assert_eq!(ra, rb, "same seed must render byte-identical reports");
+    let (c, _) = run(8);
+    assert_ne!(a.completed, c.completed, "different seed, different trace");
+}
+
+#[test]
+fn partitioned_multi_tenant_beats_sequential_goodput() {
+    // ResNet + BERT mix: static pod partitioning isolates the short
+    // BERT requests from head-of-line blocking behind long ResNet
+    // batches, so goodput under a BERT-scaled deadline improves over
+    // sequential single-tenant serving on the shared machine.
+    let cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 32);
+    // BERT-heavy mix: the interactive tenant dominates the request
+    // count while the few ResNet batches each occupy the machine for
+    // several BERT service times.
+    let tenants = vec![
+        Tenant::new(zoo::by_name("resnet152").unwrap(), 1.0),
+        Tenant::new(zoo::by_name("bert-medium").unwrap(), 4.0),
+    ];
+    let ecfg = EngineConfig {
+        policy: BatchPolicy { max_batch: 2, max_wait_s: 2e-4 },
+        sim: SimOptions { memory_model: false, ..Default::default() },
+        ..Default::default()
+    };
+
+    // Deadline: generous for BERT on its own 16-pod partition (2.5×
+    // a full BERT batch there), far below any ResNet batch.
+    let sub = sub_config(&cfg, 16).unwrap();
+    let serv_bert_part =
+        simulate(&sub, &tenants[1].model.with_batch(2), &ecfg.sim).exec_seconds(&sub);
+    let serv_resnet_shared =
+        simulate(&cfg, &tenants[0].model.with_batch(2), &ecfg.sim).exec_seconds(&cfg);
+    assert!(serv_resnet_shared > serv_bert_part, "mix must be asymmetric");
+    let deadline = 2.5 * serv_bert_part + 2.0 * ecfg.policy.max_wait_s;
+
+    let qps = 0.75 * capacity_qps(&cfg, &tenants, &ecfg);
+    let duration = 60.0 / qps; // ~60 requests
+    let arrivals = generate(&TrafficSpec::poisson(qps, duration, 17), &tenants);
+
+    let shared = analyze(&serve_shared(&cfg, &tenants, &arrivals, &ecfg), duration, deadline);
+    let part = analyze(
+        &serve_partitioned(&cfg, &tenants, &arrivals, &ecfg).unwrap(),
+        duration,
+        deadline,
+    );
+    assert_eq!(part.completed, shared.completed, "both drain the whole trace");
+    assert!(part.within_deadline >= 10, "partitioned BERT mostly in time");
+    assert!(
+        part.goodput_qps > 1.2 * shared.goodput_qps,
+        "partitioned {:.1} req/s vs sequential {:.1} req/s",
+        part.goodput_qps,
+        shared.goodput_qps
+    );
+}
+
+#[test]
+fn load_sweep_shows_saturation_knee() {
+    let cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 16);
+    let tenants = vec![Tenant::new(zoo::by_name("bert-medium").unwrap(), 1.0)];
+    let ecfg = EngineConfig {
+        policy: BatchPolicy { max_batch: 4, max_wait_s: 5e-4 },
+        sim: SimOptions { memory_model: false, ..Default::default() },
+        ..Default::default()
+    };
+    let cap = capacity_qps(&cfg, &tenants, &ecfg);
+    assert!(cap > 0.0);
+    let deadline = 5.0 * ecfg.policy.max_batch as f64 / cap; // 5× a full batch
+    let sweep = SweepOptions {
+        qps: vec![0.3 * cap, 3.0 * cap],
+        duration_s: 100.0 / cap,
+        deadline_s: deadline,
+        seed: 23,
+        partitioned: false,
+    };
+    let pts = load_sweep(&cfg, &tenants, &ecfg, &sweep).unwrap();
+    let (lo, hi) = (pts[0], pts[1]);
+    // Past the knee p99 diverges (queueing dominates) …
+    assert!(
+        hi.p99_s > 3.0 * lo.p99_s.max(1e-9),
+        "p99 {:.6}s at 3× capacity vs {:.6}s at 0.3×",
+        hi.p99_s,
+        lo.p99_s
+    );
+    // … while goodput stops tracking offered load.
+    assert!(lo.goodput_qps > 0.4 * lo.qps, "light load mostly in time");
+    assert!(hi.goodput_qps < 0.7 * hi.qps, "overload cannot keep up");
+    // The sweep pins the sustainable rate at the pre-knee point.
+    assert_eq!(max_sustainable_qps(&pts, deadline), Some(lo.qps));
 }
 
 #[test]
