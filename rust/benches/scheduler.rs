@@ -42,6 +42,14 @@ fn main() {
             .tile_ops
     });
 
+    let mut ctx = sosa::sim::SimContext::new();
+    bench("schedule resnet50 @256 pods (pooled ctx)", 3, || {
+        Scheduler::with_context(&cfg, &prog, SchedulerOptions::default(), &mut ctx)
+            .run()
+            .stats
+            .tile_ops
+    });
+
     let bert = zoo::by_name("bert-base").unwrap();
     let bprog = tile_model(&bert, 32, 32, Strategy::RxR, 256);
     bench("schedule bert-base @256 pods", 3, || {

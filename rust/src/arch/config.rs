@@ -48,7 +48,7 @@ impl Precision {
 }
 
 /// Full accelerator configuration.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ArchConfig {
     /// Pod systolic-array granularity.
     pub array: ArrayDims,

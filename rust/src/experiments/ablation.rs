@@ -8,7 +8,7 @@
 use super::ExpOptions;
 use crate::arch::{ArchConfig, ArrayDims};
 use crate::sim::pod::PodTiming;
-use crate::sim::{simulate, SimOptions};
+use crate::sim::{simulate_with, SimContext, SimOptions};
 use crate::util::{csv::f, CsvWriter, Table};
 use crate::workloads::zoo;
 use crate::Result;
@@ -24,11 +24,15 @@ pub fn ablation(opts: &ExpOptions) -> Result<()> {
     )?;
     let mut table = Table::new(&["knob", "value", "util %", "notes"]);
 
+    // One pooled context across the whole suite: every run shares the
+    // same (interconnect, pods, window) key, so checkouts are free.
+    let mut ctx = SimContext::new();
+
     // (a) Bank organization.
     for (label, shared) in [("dedicated", false), ("shared-pool", true)] {
         let mut o = SimOptions::default();
         o.sched.shared_banks = shared;
-        let s = simulate(&cfg, &model, &o);
+        let s = simulate_with(&mut ctx, &cfg, &model, &o);
         let u = s.utilization(&cfg);
         csv.row(&["banks".into(), label.into(), f(u, 4), f(0.0, 1)])?;
         table.row(vec!["banks".into(), label.into(), format!("{:.1}", u * 100.0),
@@ -39,13 +43,13 @@ pub fn ablation(opts: &ExpOptions) -> Result<()> {
     for tries in [1usize, 2, 4, 8, 16] {
         let mut o = SimOptions::default();
         o.sched.max_pod_tries = tries;
-        let s = simulate(&cfg, &model, &o);
+        let s = simulate_with(&mut ctx, &cfg, &model, &o);
         let u = s.utilization(&cfg);
         csv.row(&["pod_tries".into(), tries.to_string(), f(u, 4),
-                  s.deferred_ops.to_string()])?;
+                  s.deferred_slices.to_string()])?;
         table.row(vec!["pod_tries".into(), tries.to_string(),
                        format!("{:.1}", u * 100.0),
-                       format!("{} deferred ops", s.deferred_ops)]);
+                       format!("{} deferred slices", s.deferred_slices)]);
     }
 
     // (c) U/V pipeline degrees (analytic pod model, §4.1).

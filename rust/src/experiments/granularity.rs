@@ -4,7 +4,7 @@
 use super::ExpOptions;
 use crate::arch::{ArchConfig, ArrayDims};
 use crate::power::{max_pods_under_tdp, peak_power, throughput_at_tdp, TDP_W};
-use crate::sim::{simulate, SimOptions};
+use crate::sim::{simulate_with, SimOptions, SweepExecutor};
 use crate::util::{csv::f, CsvWriter, Table};
 use crate::workloads::zoo;
 use crate::Result;
@@ -51,14 +51,20 @@ pub fn table2(opts: &ExpOptions) -> Result<()> {
     } else {
         SIZES.to_vec()
     };
-    for (dim, paper_util, paper_eff) in sizes {
-        let cfg = config_for(dim);
-        let mut util_sum = 0.0;
-        for m in &benches {
-            util_sum += simulate(&cfg, m, &sim_opts).utilization(&cfg);
-        }
-        let util = util_sum / benches.len() as f64;
-        let tp = throughput_at_tdp(&cfg, TDP_W);
+    // Fan the (granularity × benchmark) grid across cores — one pooled
+    // context per worker; rows are assembled in sweep order below.
+    let cfgs: Vec<ArchConfig> = sizes.iter().map(|&(dim, _, _)| config_for(dim)).collect();
+    let grid: Vec<(usize, usize)> = (0..sizes.len())
+        .flat_map(|si| (0..benches.len()).map(move |bi| (si, bi)))
+        .collect();
+    let utils: Vec<f64> = SweepExecutor::new().run_with_ctx(&grid, |ctx, _, &(si, bi)| {
+        simulate_with(ctx, &cfgs[si], &benches[bi], &sim_opts).utilization(&cfgs[si])
+    });
+    for (si, &(dim, paper_util, paper_eff)) in sizes.iter().enumerate() {
+        let cfg = &cfgs[si];
+        let per_bench = &utils[si * benches.len()..(si + 1) * benches.len()];
+        let util = per_bench.iter().sum::<f64>() / benches.len() as f64;
+        let tp = throughput_at_tdp(cfg, TDP_W);
         let eff = util * tp.peak_ops_at_tdp / 1e12;
         csv.row(&[
             format!("{dim}x{dim}"),
@@ -73,7 +79,7 @@ pub fn table2(opts: &ExpOptions) -> Result<()> {
         table.row(vec![
             format!("{dim}x{dim}"),
             cfg.num_pods.to_string(),
-            format!("{:.1}", peak_power(&cfg).total()),
+            format!("{:.1}", peak_power(cfg).total()),
             format!("{:.0}", tp.peak_ops_at_tdp / 1e12),
             format!("{:.1}", util * 100.0),
             format!("{eff:.1}"),
@@ -104,16 +110,28 @@ pub fn fig9(opts: &ExpOptions) -> Result<()> {
             }))
             .collect::<Vec<_>>(),
     );
+    // Fan the (granularity × benchmark) grid across cores,
+    // config-major so consecutive items share a context key (each dim
+    // has its own pod count; benchmark-major would rebuild the pooled
+    // fabric ring on every item).  The serial loop below reads the
+    // cells back in deterministic order.
+    let cfgs: Vec<ArchConfig> = dims.iter().map(|&d| config_for(d)).collect();
+    let grid: Vec<(usize, usize)> = (0..dims.len())
+        .flat_map(|di| (0..benches.len()).map(move |mi| (mi, di)))
+        .collect();
+    let cells: Vec<(f64, f64)> = SweepExecutor::new().run_with_ctx(&grid, |ctx, _, &(mi, di)| {
+        let cfg = &cfgs[di];
+        let s = simulate_with(ctx, cfg, &benches[mi], &sim_opts);
+        (s.utilization(cfg), s.effective_ops_at_tdp(cfg, TDP_W) / 1e12)
+    });
     let mut wins32 = 0usize;
-    for m in &benches {
+    for (mi, m) in benches.iter().enumerate() {
         let mut row = vec![m.name.clone()];
         let mut best = (0usize, f64::MIN);
-        for &dim in &dims {
-            let cfg = config_for(dim);
-            let s = simulate(&cfg, m, &sim_opts);
-            let eff = s.effective_ops_at_tdp(&cfg, TDP_W) / 1e12;
+        for (di, &dim) in dims.iter().enumerate() {
+            let (util, eff) = cells[di * benches.len() + mi];
             csv.row(&[m.name.clone(), format!("{dim}x{dim}"),
-                      f(s.utilization(&cfg), 4), f(eff, 1)])?;
+                      f(util, 4), f(eff, 1)])?;
             row.push(format!("{eff:.0}"));
             if eff > best.1 {
                 best = (dim, eff);

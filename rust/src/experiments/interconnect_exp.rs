@@ -6,7 +6,7 @@ use crate::arch::{ArchConfig, ArrayDims};
 use crate::interconnect::cost::{interconnect_power_w, PodTraffic};
 use crate::interconnect::Kind;
 use crate::power::{peak_power, throughput_at_tdp, TDP_W};
-use crate::sim::{simulate, SimOptions};
+use crate::sim::{simulate_with, SimOptions, SweepExecutor};
 use crate::util::{csv::f, CsvWriter, Table};
 use crate::workloads::zoo;
 use crate::Result;
@@ -41,19 +41,29 @@ pub fn table1(opts: &ExpOptions) -> Result<()> {
     let mut table = Table::new(&[
         "type", "busy %", "cyc/op", "mW/B", "paper busy", "paper cyc", "paper mW",
     ]);
-    for &(kind, p_busy, p_cyc, p_mw) in KINDS {
-        let mut cfg = ArchConfig::with_array(ArrayDims::new(16, 16), pods);
-        cfg.interconnect = kind;
-        let sim_opts = SimOptions::default();
-        let mut busy = 0.0;
-        let mut cyc = 0.0;
-        for m in &benches {
-            let s = simulate(&cfg, m, &sim_opts);
-            busy += s.busy_pods_frac(&cfg);
-            cyc += s.cycles_per_tile_op();
-        }
-        busy = 100.0 * busy / benches.len() as f64;
-        cyc /= benches.len() as f64;
+    // Fan the (interconnect × benchmark) grid across cores with one
+    // pooled context per worker; rows assemble in KINDS order below.
+    let sim_opts = SimOptions::default();
+    let cfgs: Vec<ArchConfig> = KINDS
+        .iter()
+        .map(|&(kind, _, _, _)| {
+            let mut cfg = ArchConfig::with_array(ArrayDims::new(16, 16), pods);
+            cfg.interconnect = kind;
+            cfg
+        })
+        .collect();
+    let grid: Vec<(usize, usize)> = (0..KINDS.len())
+        .flat_map(|ki| (0..benches.len()).map(move |bi| (ki, bi)))
+        .collect();
+    let cells: Vec<(f64, f64)> = SweepExecutor::new().run_with_ctx(&grid, |ctx, _, &(ki, bi)| {
+        let s = simulate_with(ctx, &cfgs[ki], &benches[bi], &sim_opts);
+        (s.busy_pods_frac(&cfgs[ki]), s.cycles_per_tile_op())
+    });
+    for (ki, &(kind, p_busy, p_cyc, p_mw)) in KINDS.iter().enumerate() {
+        let per_bench = &cells[ki * benches.len()..(ki + 1) * benches.len()];
+        let busy =
+            100.0 * per_bench.iter().map(|&(b, _)| b).sum::<f64>() / benches.len() as f64;
+        let cyc = per_bench.iter().map(|&(_, c)| c).sum::<f64>() / benches.len() as f64;
         let mw = kind.mw_per_byte(pods);
         csv.row(&[kind.to_string(), f(busy, 2), f(cyc, 2), f(mw, 2),
                   f(p_busy, 2), f(p_cyc, 2), f(p_mw, 2)])?;
@@ -93,17 +103,31 @@ pub fn fig12a(opts: &ExpOptions) -> Result<()> {
         &["interconnect", "pods", "tdp_w", "eff_tops", "icn_power_w"],
     )?;
     let mut table = Table::new(&["type", "pods", "TDP W", "eff TOps/s", "icn W"]);
-    for &kind in &kinds {
-        for &pods in &pods_sweep {
-            let mut cfg = ArchConfig::with_array(ArrayDims::new(32, 32), pods);
-            cfg.interconnect = kind;
-            let sim_opts = SimOptions::default();
-            let mut util = 0.0;
-            for m in &benches {
-                util += simulate(&cfg, m, &sim_opts).utilization(&cfg);
-            }
-            util /= benches.len() as f64;
-            let tdp = peak_power(&cfg).total();
+    // Fan the (interconnect × pods × benchmark) grid across cores.
+    let sim_opts = SimOptions::default();
+    let cfgs: Vec<ArchConfig> = kinds
+        .iter()
+        .flat_map(|&kind| {
+            pods_sweep.iter().map(move |&pods| {
+                let mut cfg = ArchConfig::with_array(ArrayDims::new(32, 32), pods);
+                cfg.interconnect = kind;
+                cfg
+            })
+        })
+        .collect();
+    let grid: Vec<(usize, usize)> = (0..cfgs.len())
+        .flat_map(|ci| (0..benches.len()).map(move |bi| (ci, bi)))
+        .collect();
+    let utils: Vec<f64> = SweepExecutor::new().run_with_ctx(&grid, |ctx, _, &(ci, bi)| {
+        simulate_with(ctx, &cfgs[ci], &benches[bi], &sim_opts).utilization(&cfgs[ci])
+    });
+    for (ki, &kind) in kinds.iter().enumerate() {
+        for (pi, &pods) in pods_sweep.iter().enumerate() {
+            let ci = ki * pods_sweep.len() + pi;
+            let cfg = &cfgs[ci];
+            let per_bench = &utils[ci * benches.len()..(ci + 1) * benches.len()];
+            let util = per_bench.iter().sum::<f64>() / benches.len() as f64;
+            let tdp = peak_power(cfg).total();
             // Fig. 12a plots effective throughput of the *provisioned*
             // silicon against its own TDP (not normalized to 400 W).
             let eff = util * cfg.peak_ops() / 1e12;

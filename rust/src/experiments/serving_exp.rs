@@ -10,15 +10,17 @@
 //!
 //! Everything printed to stdout is a pure function of the arguments:
 //! two runs with the same flags produce byte-identical reports (timing
-//! diagnostics go to stderr).
+//! diagnostics go to stderr).  Sweeps fan their points across cores
+//! (`--threads N` / `SOSA_THREADS` to pin; the thread count never
+//! changes the output, only the wall clock).
 
 use super::ExpOptions;
 use crate::arch::{ArchConfig, ArrayDims};
 use crate::error::{Error, Result};
 use crate::serve::{
-    analyze, capacity_qps, generate, load_sweep, max_sustainable_qps, serve_partitioned,
-    serve_shared, sweep_table, Admission, BatchPolicy, EngineConfig, SweepOptions, Tenant,
-    TrafficSpec,
+    analyze, capacity_qps, generate, load_sweep, max_sustainable_qps,
+    serve_partitioned_threads, serve_shared, sweep_table, Admission, BatchPolicy, EngineConfig,
+    SweepOptions, Tenant, TrafficSpec,
 };
 use crate::util::cli::Args;
 use crate::util::{csv::f, CsvWriter};
@@ -115,6 +117,7 @@ pub fn serve_cmd(args: &Args, opts: &ExpOptions) -> Result<()> {
             deadline_s,
             seed,
             partitioned,
+            threads: args.get_parse::<usize>("threads"),
         };
         let points = load_sweep(&cfg, &tenants, &ecfg, &sweep)?;
         println!("{}", sweep_table(&points).render());
@@ -154,7 +157,14 @@ pub fn serve_cmd(args: &Args, opts: &ExpOptions) -> Result<()> {
         arrivals.len()
     );
     let rep = if partitioned {
-        serve_partitioned(&cfg, &tenants, &arrivals, &ecfg)?
+        // `--threads N` pins the partition fan-out too (not just sweeps).
+        serve_partitioned_threads(
+            &cfg,
+            &tenants,
+            &arrivals,
+            &ecfg,
+            args.get_parse::<usize>("threads"),
+        )?
     } else {
         serve_shared(&cfg, &tenants, &arrivals, &ecfg)
     };

@@ -84,6 +84,17 @@ pub trait Fabric {
 
     /// Roll back every `try_connect` committed after `at`.
     fn rollback(&mut self, at: usize);
+
+    /// Reset *all* state so the instance can be reused for a fresh
+    /// scheduler run — the pooled-context alternative to rebuilding the
+    /// fabric with [`Kind::build`] (a heap allocation per instance, 4 ×
+    /// window per scheduler run).  Every current topology keeps only
+    /// per-slice occupancy, so the default forwards to
+    /// [`Fabric::begin_slice`]; topologies that grow cross-slice state
+    /// must override.
+    fn reset_full(&mut self) {
+        self.begin_slice();
+    }
 }
 
 impl Kind {
@@ -219,6 +230,26 @@ mod tests {
         ] {
             let f = kind.build(64);
             assert_eq!(f.ports(), 64);
+        }
+    }
+
+    #[test]
+    fn reset_full_makes_any_fabric_reusable() {
+        // A pooled fabric must behave like a freshly built one after
+        // reset_full: previously committed routes and undo logs vanish.
+        for kind in [
+            Kind::Butterfly { expansion: 1 },
+            Kind::Benes,
+            Kind::Crossbar,
+            Kind::Mesh,
+            Kind::HTree,
+        ] {
+            let mut f = kind.build(8);
+            f.begin_slice();
+            assert!(f.try_connect(0, 1), "{kind}: initial route");
+            f.reset_full();
+            assert_eq!(f.checkpoint(), 0, "{kind}: undo log cleared");
+            assert!(f.try_connect(2, 1), "{kind}: dst freed by reset_full");
         }
     }
 

@@ -13,7 +13,9 @@
 //! * [`interconnect`] — Butterfly-k / Benes / Crossbar / Mesh / H-tree
 //!   models with real routing feasibility checks and cost models (§3.2);
 //! * [`scheduler`] — the offline greedy time-slice scheduler (§4.2);
-//! * [`sim`] — the slice-level timing simulation + memory/DRAM model;
+//! * [`sim`] — the slice-level timing simulation + memory/DRAM model,
+//!   with pooled simulation contexts (`SimContext`) and a parallel
+//!   sweep executor (`sim::sweep`) on the hot path;
 //! * [`analytic`] — the fast isopower design-space-exploration model
 //!   behind Fig. 5;
 //! * [`power`] — the calibrated energy/power model (§5, Table 2/3);

@@ -18,19 +18,41 @@
 //! searches all pod×bank combinations; we bound the search to
 //! `max_pod_tries` candidate pods per slice (banks are fixed by
 //! placement) — profiling showed exhaustive search changes utilization
-//! <0.5% while costing 30× scheduling time (EXPERIMENTS.md §Perf).
+//! <0.5% while costing 30× scheduling time (README §Perf).
+//!
+//! ## Pooled simulation contexts
+//!
+//! Scheduler state — the open-slice ring with its `4 × window` fabric
+//! instances plus the per-op/per-group scratch vectors — dominated the
+//! cost of short runs: every `simulate` call re-allocated all of it.
+//! [`SimContext`] pools that state across runs; [`Scheduler::with_context`]
+//! reuses a context when the (interconnect, pods, window) key matches
+//! and rebuilds it otherwise.  Pooled runs produce **bit-identical**
+//! schedules to cold runs (`prop_schedule_deterministic` asserts this);
+//! the serving engine's `CostCache` and the parallel sweep executor
+//! ([`crate::sim::sweep`]) keep one context per worker.
+//!
+//! ## Slice length under merged multi-tenant programs
+//!
+//! [`Scheduler::slice_cycles`] is a *program-wide* constant: the max
+//! `k_part` over every layer of the (possibly multi-tenant, merged)
+//! program.  This is intentional — the time-slice discipline requires
+//! one global slice length, so co-scheduling a tenant tiled with
+//! `Strategy::NoPartition` (large `k_part`) stretches every tenant's
+//! slices, exactly the fragmentation argument §3.3 makes for `r×r`
+//! tiling (regression-pinned in `merged_program_slice_length_is_program_wide_max`).
 
 pub mod placement;
 
 use crate::arch::ArchConfig;
-use crate::interconnect::Fabric;
+use crate::interconnect::{Fabric, Kind};
 use crate::stats::RunStats;
 use crate::tiling::{TileProgram, XDep};
 use crate::util::BitSet;
 use placement::Placement;
 
 /// Scheduler tuning knobs.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SchedulerOptions {
     /// Candidate pods tried per (op, slice) before deferring.
     pub max_pod_tries: usize,
@@ -53,7 +75,8 @@ impl Default for SchedulerOptions {
 pub struct Schedule {
     /// Per tile op: (slice, pod).
     pub tile_slots: Vec<(u32, u32)>,
-    /// Per pp op: slice.
+    /// Per pp op: completion slice (a merge spanning several slices
+    /// reports the slice its last pair-slot lands in).
     pub pp_slots: Vec<u32>,
     /// Summary statistics.
     pub stats: RunStats,
@@ -112,19 +135,43 @@ impl SliceState {
         self.p_in_fab.begin_slice();
         self.p_out_fab.begin_slice();
     }
+
+    /// Make a pooled ring entry reusable for a new run: full fabric
+    /// reset plus an invalid slice id so `open_slice` re-initializes
+    /// the entry on first use (no per-run allocation).
+    fn recycle(&mut self) {
+        self.slice = u32::MAX;
+        self.x_fab.reset_full();
+        self.w_fab.reset_full();
+        self.p_in_fab.reset_full();
+        self.p_out_fab.reset_full();
+    }
 }
 
-/// The greedy §4.2 scheduler.
-pub struct Scheduler<'a> {
-    cfg: &'a ArchConfig,
-    prog: &'a TileProgram,
-    opts: SchedulerOptions,
-    placement: Placement,
+/// The configuration a [`SimContext`]'s pooled resources were built
+/// for; a mismatch forces a rebuild, a match makes checkout free of
+/// allocation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct CtxKey {
+    interconnect: Kind,
+    num_pods: usize,
+    window: usize,
+}
+
+/// Pooled scheduler state, reusable across runs.
+///
+/// One context holds the open-slice ring (each entry owning four boxed
+/// fabric instances) and the per-op / per-group scratch vectors.  A
+/// cold `Scheduler::new` allocates all of it per run — `4 × window`
+/// fabrics (256 with the default window) plus O(ops) vectors — which
+/// dwarfs the routing work on short programs.  Reusing one context per
+/// thread amortizes that away; schedules are bit-identical either way.
+///
+/// Contexts are cheap to create and intentionally **not** thread-safe:
+/// give each worker thread its own (see [`crate::sim::sweep`]).
+pub struct SimContext {
+    key: Option<CtxKey>,
     ring: Vec<SliceState>,
-    /// Lowest open slice (older ones are frozen).
-    frontier: u32,
-    /// Highest slice ever opened.
-    horizon: u32,
     /// Per-slice busy pod counts (full history, cheap).
     busy_per_slice: Vec<u32>,
     /// Completion slice of each tile op.
@@ -133,31 +180,185 @@ pub struct Scheduler<'a> {
     group_ready: Vec<Vec<u32>>,
     /// Per-layer max group readiness (coarse deps).
     layer_done: Vec<u32>,
+}
+
+impl SimContext {
+    /// A fresh, empty context (buffers are built on first checkout).
+    pub fn new() -> Self {
+        SimContext {
+            key: None,
+            ring: Vec::new(),
+            busy_per_slice: Vec::new(),
+            op_done: Vec::new(),
+            group_ready: Vec::new(),
+            layer_done: Vec::new(),
+        }
+    }
+
+    /// Prepare the pooled buffers for one run: rebuild the ring when
+    /// the (interconnect, pods, window) key changed, recycle it
+    /// otherwise, and size the scratch vectors to the program.
+    fn checkout(&mut self, cfg: &ArchConfig, prog: &TileProgram, opts: &SchedulerOptions) {
+        let key = CtxKey {
+            interconnect: cfg.interconnect,
+            num_pods: cfg.num_pods,
+            window: opts.window,
+        };
+        if self.key.as_ref() != Some(&key) {
+            self.ring = (0..opts.window).map(|_| SliceState::new(cfg)).collect();
+            self.key = Some(key);
+        } else {
+            for st in &mut self.ring {
+                st.recycle();
+            }
+        }
+        self.busy_per_slice.clear();
+        self.op_done.clear();
+        self.op_done.resize(prog.tile_ops.len(), u32::MAX);
+        self.layer_done.clear();
+        self.layer_done.resize(prog.layers.len(), u32::MAX);
+        self.group_ready.truncate(prog.layers.len());
+        while self.group_ready.len() < prog.layers.len() {
+            self.group_ready.push(Vec::new());
+        }
+        for (g, lt) in self.group_ready.iter_mut().zip(&prog.layers) {
+            g.clear();
+            g.resize(lt.tm * lt.tn, u32::MAX);
+        }
+    }
+}
+
+impl Default for SimContext {
+    fn default() -> Self {
+        SimContext::new()
+    }
+}
+
+impl std::fmt::Debug for SimContext {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SimContext")
+            .field("key", &self.key)
+            .field("ring_len", &self.ring.len())
+            .finish()
+    }
+}
+
+/// Owned-or-borrowed context slot, so `Scheduler::new` keeps its
+/// self-contained signature while `with_context` pools.
+enum Ctx<'a> {
+    Owned(Box<SimContext>),
+    Borrowed(&'a mut SimContext),
+}
+
+impl std::ops::Deref for Ctx<'_> {
+    type Target = SimContext;
+    fn deref(&self) -> &SimContext {
+        match self {
+            Ctx::Owned(c) => c,
+            Ctx::Borrowed(c) => c,
+        }
+    }
+}
+
+impl std::ops::DerefMut for Ctx<'_> {
+    fn deref_mut(&mut self) -> &mut SimContext {
+        match self {
+            Ctx::Owned(c) => c,
+            Ctx::Borrowed(c) => c,
+        }
+    }
+}
+
+/// Wrap-around scan over the clear (free) bits of a pod bitset:
+/// starts at `start`, wraps past the end once, and terminates before
+/// reaching `start` again, so every free pod is visited **at most
+/// once**.  (The pre-fix scan kept going after the wrap and re-tested
+/// pods it had already tried, burning `max_pod_tries` budget on
+/// duplicates that fail identically — routing state doesn't change
+/// between attempts within one slice.)
+struct PodScan {
+    start: usize,
+    wrapped: bool,
+}
+
+impl PodScan {
+    fn new(start: usize) -> Self {
+        PodScan { start, wrapped: false }
+    }
+
+    /// First candidate pod at or after `start` (wrapping if needed).
+    fn first(&mut self, pods: &BitSet) -> Option<usize> {
+        match pods.first_clear(self.start) {
+            Some(p) => Some(p),
+            None => {
+                self.wrapped = true;
+                pods.first_clear(0).filter(|&w| w < self.start)
+            }
+        }
+    }
+
+    /// Next candidate pod after `prev`, terminating at `start`.
+    fn next(&mut self, pods: &BitSet, prev: usize) -> Option<usize> {
+        if self.wrapped {
+            return pods.first_clear(prev + 1).filter(|&w| w < self.start);
+        }
+        match pods.first_clear(prev + 1) {
+            Some(p) => Some(p),
+            None => {
+                self.wrapped = true;
+                pods.first_clear(0).filter(|&w| w < self.start)
+            }
+        }
+    }
+}
+
+/// The greedy §4.2 scheduler.
+pub struct Scheduler<'a> {
+    cfg: &'a ArchConfig,
+    prog: &'a TileProgram,
+    opts: SchedulerOptions,
+    placement: Placement,
+    /// Pooled slice ring + scratch state (owned or checked out).
+    ctx: Ctx<'a>,
+    /// Lowest open slice (older ones are frozen).
+    frontier: u32,
+    /// Highest slice ever opened.
+    horizon: u32,
     /// Cached [`Self::chain_gap_slices`].
     chain_gap: u32,
 }
 
 impl<'a> Scheduler<'a> {
-    /// Prepare a scheduler for one program on one configuration.
+    /// Prepare a scheduler for one program on one configuration with a
+    /// private, one-shot context.
     pub fn new(cfg: &'a ArchConfig, prog: &'a TileProgram, opts: SchedulerOptions) -> Self {
-        let ring = (0..opts.window).map(|_| SliceState::new(cfg)).collect();
-        let group_ready = prog
-            .layers
-            .iter()
-            .map(|lt| vec![u32::MAX; lt.tm * lt.tn])
-            .collect();
+        let mut ctx = Box::new(SimContext::new());
+        ctx.checkout(cfg, prog, &opts);
+        Self::build(cfg, prog, opts, Ctx::Owned(ctx))
+    }
+
+    /// Prepare a scheduler reusing a pooled [`SimContext`] — identical
+    /// schedules to [`Scheduler::new`], without the per-run allocation
+    /// of the slice ring and scratch vectors.
+    pub fn with_context(
+        cfg: &'a ArchConfig,
+        prog: &'a TileProgram,
+        opts: SchedulerOptions,
+        ctx: &'a mut SimContext,
+    ) -> Self {
+        ctx.checkout(cfg, prog, &opts);
+        Self::build(cfg, prog, opts, Ctx::Borrowed(ctx))
+    }
+
+    fn build(cfg: &'a ArchConfig, prog: &'a TileProgram, opts: SchedulerOptions, ctx: Ctx<'a>) -> Self {
         let mut s = Scheduler {
             cfg,
             prog,
             opts,
             placement: Placement::new(cfg.num_banks),
-            ring,
+            ctx,
             frontier: 0,
             horizon: 0,
-            busy_per_slice: vec![],
-            op_done: vec![u32::MAX; prog.tile_ops.len()],
-            group_ready,
-            layer_done: vec![u32::MAX; prog.layers.len()],
             chain_gap: 0,
         };
         s.chain_gap = s.chain_gap_slices();
@@ -168,7 +369,7 @@ impl<'a> Scheduler<'a> {
     /// lockstep — chain step j of every (i, l) group before step j+1).
     /// Depth-first chain order would let the sliding window's frontier
     /// serialize parallel chains (a 37× slowdown on ResNet's deep
-    /// layers; EXPERIMENTS.md §Perf).
+    /// layers; README §Perf).
     fn processing_order(&self) -> Vec<u32> {
         let mut order = Vec::with_capacity(self.prog.tile_ops.len());
         for lt in &self.prog.layers {
@@ -188,8 +389,8 @@ impl<'a> Scheduler<'a> {
         let mut tile_slots = vec![(0u32, 0u32); self.prog.tile_ops.len()];
         let mut pp_slots = vec![0u32; self.prog.pp_ops.len()];
         let mut stats = RunStats::default();
-        self.ring[0].reset(0);
-        self.busy_per_slice.push(0);
+        self.ctx.ring[0].reset(0);
+        self.ctx.busy_per_slice.push(0);
 
         // Interleave: pp ops become schedulable as chains complete; we
         // process tile ops in lockstep order and flush pp ops as their
@@ -198,25 +399,25 @@ impl<'a> Scheduler<'a> {
         let order = self.processing_order();
         for &op_id in &order {
             let op_idx = op_id as usize;
-            let (slice, pod, deferred) = self.place_tile_op(op_idx);
+            let (slice, pod, deferrals) = self.place_tile_op(op_idx);
             tile_slots[op_idx] = (slice, pod);
-            self.op_done[op_idx] = slice;
-            stats.deferred_ops += deferred as u64;
+            self.ctx.op_done[op_idx] = slice;
+            stats.deferred_slices += deferrals as u64;
             stats.useful_macs += self.prog.tile_ops[op_idx].macs();
             // Flush any pp ops whose chain tails are all placed.
             while next_pp < self.prog.pp_ops.len()
                 && self.prog.pp_ops[next_pp]
                     .tails
                     .iter()
-                    .all(|&t| self.op_done[t as usize] != u32::MAX)
+                    .all(|&t| self.ctx.op_done[t as usize] != u32::MAX)
             {
                 let s = self.place_pp_op(next_pp);
                 pp_slots[next_pp] = s;
                 let pp = &self.prog.pp_ops[next_pp];
                 let lt = &self.prog.layers[pp.layer as usize];
                 let g = lt.group(pp.i as usize, pp.l as usize);
-                self.group_ready[pp.layer as usize][g] = s + 1;
-                let ld = &mut self.layer_done[pp.layer as usize];
+                self.ctx.group_ready[pp.layer as usize][g] = s + 1;
+                let ld = &mut self.ctx.layer_done[pp.layer as usize];
                 *ld = if *ld == u32::MAX { s + 1 } else { (*ld).max(s + 1) };
                 next_pp += 1;
             }
@@ -231,7 +432,7 @@ impl<'a> Scheduler<'a> {
         stats.total_cycles = slices * slice_cycles;
         stats.tile_ops = self.prog.tile_ops.len() as u64;
         stats.pp_ops = self.prog.pp_ops.len() as u64;
-        stats.pod_busy_slices = self.busy_per_slice.iter().map(|&b| b as u64).sum();
+        stats.pod_busy_slices = self.ctx.busy_per_slice.iter().map(|&b| b as u64).sum();
         Schedule { tile_slots, pp_slots, stats }
     }
 
@@ -239,6 +440,10 @@ impl<'a> Scheduler<'a> {
     /// r)`, §3.3 — weight double-buffering lower-bounds it at `r`) plus
     /// the pipeline fill (§4.1's U/V) plus any exposed interconnect
     /// latency (§3.2: latency is hidden only if shorter than compute).
+    ///
+    /// The max is **program-wide** (see the module docs): in a merged
+    /// multi-tenant program the largest `k_part` of any tenant sets
+    /// every tenant's slice length.
     pub fn slice_cycles(&self) -> u64 {
         let r = self.cfg.array.r as u64;
         let k_part = self
@@ -273,7 +478,7 @@ impl<'a> Scheduler<'a> {
         let lt = &self.prog.layers[op.layer as usize];
         let mut ready = 0u32;
         if let Some(dep) = op.psum_dep {
-            let d = self.op_done[dep as usize];
+            let d = self.ctx.op_done[dep as usize];
             debug_assert_ne!(d, u32::MAX, "psum dep must be placed first");
             ready = ready.max(d + 1 + self.chain_gap);
         }
@@ -304,14 +509,14 @@ impl<'a> Scheduler<'a> {
                 let lo = (plo / c).min(p.tn - 1);
                 let hi = phi.div_ceil(c).clamp(lo + 1, p.tn);
                 for l in lo..hi {
-                    let g = self.group_ready[*layer as usize][p.group(i_p, l)];
+                    let g = self.ctx.group_ready[*layer as usize][p.group(i_p, l)];
                     debug_assert_ne!(g, u32::MAX, "producer group not ready");
                     ready = ready.max(g);
                 }
             }
             XDep::Coarse { layers } => {
                 for &pl in layers {
-                    let d = self.layer_done[pl as usize];
+                    let d = self.ctx.layer_done[pl as usize];
                     debug_assert_ne!(d, u32::MAX, "producer layer not done");
                     ready = ready.max(d);
                 }
@@ -330,16 +535,17 @@ impl<'a> Scheduler<'a> {
                 self.frontier = self.horizon - self.opts.window as u32 + 1;
             }
             let idx = (self.horizon as usize) % self.opts.window;
-            self.ring[idx].reset(self.horizon);
-            self.busy_per_slice.push(0);
+            let h = self.horizon;
+            self.ctx.ring[idx].reset(h);
+            self.ctx.busy_per_slice.push(0);
         }
         let idx = (slice as usize) % self.opts.window;
-        debug_assert_eq!(self.ring[idx].slice, slice);
+        debug_assert_eq!(self.ctx.ring[idx].slice, slice);
         idx
     }
 
-    /// Place one tile op; returns (slice, pod, was_deferred).
-    fn place_tile_op(&mut self, op_idx: usize) -> (u32, u32, bool) {
+    /// Place one tile op; returns (slice, pod, slices deferred).
+    fn place_tile_op(&mut self, op_idx: usize) -> (u32, u32, u32) {
         let op = &self.prog.tile_ops[op_idx];
         let lt = &self.prog.layers[op.layer as usize];
         let x = self.placement.x_tile(op.layer, op.i, op.j, lt.tm);
@@ -349,18 +555,18 @@ impl<'a> Scheduler<'a> {
         let has_psum_in = op.psum_dep.is_some();
 
         let mut slice = self.ready_slice(op_idx).max(self.frontier);
-        let mut deferred = false;
+        let mut deferrals = 0u32;
         loop {
             let ring_idx = self.open_slice(slice);
             if let Some(pod) = self.try_slice(ring_idx, x.bank, x.key, w.bank, w.key,
                                               p.bank, p.key, has_psum_in) {
-                let st = &mut self.ring[ring_idx];
+                let st = &mut self.ctx.ring[ring_idx];
                 st.pods.set(pod);
                 st.pods_used += 1;
-                self.busy_per_slice[slice as usize] += 1;
-                return (slice, pod as u32, deferred);
+                self.ctx.busy_per_slice[slice as usize] += 1;
+                return (slice, pod as u32, deferrals);
             }
-            deferred = true;
+            deferrals += 1;
             slice += 1;
         }
     }
@@ -378,8 +584,11 @@ impl<'a> Scheduler<'a> {
         p_key: u64,
         has_psum_in: bool,
     ) -> Option<usize> {
-        let st = &mut self.ring[ring_idx];
-        if st.pods_used as usize >= self.cfg.num_pods {
+        let num_pods = self.cfg.num_pods;
+        let max_pod_tries = self.opts.max_pod_tries;
+        let shared_banks = self.opts.shared_banks;
+        let st = &mut self.ctx.ring[ring_idx];
+        if st.pods_used as usize >= num_pods {
             return None;
         }
         // Bank-port checks (free, or serving the same tile: multicast).
@@ -395,7 +604,7 @@ impl<'a> Scheduler<'a> {
         if st.p_out_bank[p_bank] != 0 {
             return None; // single writer per bank per slice
         }
-        if self.opts.shared_banks {
+        if shared_banks {
             // One access per bank per slice across all roles: a bank
             // serving one role (other than the identical multicast
             // tile) blocks the others.
@@ -415,13 +624,15 @@ impl<'a> Scheduler<'a> {
             }
         }
         // Candidate pods: scan free pods starting from a key-derived
-        // offset (spreads route patterns across the fabric).
-        let n = self.cfg.num_pods;
-        let start = (x_key ^ w_key).wrapping_mul(0x9E3779B97F4A7C15) as usize % n;
+        // offset (spreads route patterns across the fabric), visiting
+        // each free pod at most once (wrap-around terminates at the
+        // start offset).
+        let start = (x_key ^ w_key).wrapping_mul(0x9E3779B97F4A7C15) as usize % num_pods;
+        let mut scan = PodScan::new(start);
         let mut tried = 0usize;
-        let mut pod = st.pods.first_clear(start).or_else(|| st.pods.first_clear(0));
+        let mut pod = scan.first(&st.pods);
         while let Some(p) = pod {
-            if tried >= self.opts.max_pod_tries {
+            if tried >= max_pod_tries {
                 return None;
             }
             tried += 1;
@@ -447,36 +658,53 @@ impl<'a> Scheduler<'a> {
             st.w_fab.rollback(cw);
             st.p_in_fab.rollback(ci);
             st.p_out_fab.rollback(co);
-            // Next free pod after p (wrapping once).
-            pod = st.pods.first_clear(p + 1).or_else(|| {
-                let wrapped = st.pods.first_clear(0);
-                wrapped.filter(|&w| w < p)
-            });
+            pod = scan.next(&st.pods, p);
         }
         None
     }
 
-    /// Place a post-processor op at the earliest slice with PP capacity
-    /// after all its subchains complete (+ the merge-tree latency).
+    /// Place a post-processor op at the earliest slice(s) with PP
+    /// capacity after all its subchains complete (+ the merge-tree
+    /// latency); returns the completion slice.
     fn place_pp_op(&mut self, pp_idx: usize) -> u32 {
         let pp = &self.prog.pp_ops[pp_idx];
         let tails_done = pp
             .tails
             .iter()
-            .map(|&t| self.op_done[t as usize])
+            .map(|&t| self.ctx.op_done[t as usize])
             .max()
             .expect("pp op has tails");
         // Post-processors work in pairs (§4.2) — each add/epilogue
         // occupies a pair for a slice; a w-way merge costs w slots and
         // log2(w) slices of tree latency.
         let capacity = (self.cfg.num_post_processors / 2).max(1) as u32;
-        let cost = pp.pp_slots().min(capacity); // tiny configs: span slices
-        let mut slice = (tails_done + 1 + pp.tree_depth()).max(self.frontier);
+        let total = pp.pp_slots();
+        let earliest = (tails_done + 1 + pp.tree_depth()).max(self.frontier);
+        let mut slice = earliest;
+        if total <= capacity {
+            // Fits within one slice's capacity: first slice with room.
+            loop {
+                let ring_idx = self.open_slice(slice);
+                let st = &mut self.ctx.ring[ring_idx];
+                if st.pp_used + total <= capacity {
+                    st.pp_used += total;
+                    return slice;
+                }
+                slice += 1;
+            }
+        }
+        // Tiny configs (capacity < w): the merge cannot fit one slice —
+        // spill the remaining pair-slots into subsequent slices instead
+        // of silently shrinking the merge.
+        let mut remaining = total;
         loop {
             let ring_idx = self.open_slice(slice);
-            let st = &mut self.ring[ring_idx];
-            if st.pp_used + cost <= capacity {
-                st.pp_used += cost;
+            let st = &mut self.ctx.ring[ring_idx];
+            let free = capacity - st.pp_used;
+            let take = free.min(remaining);
+            st.pp_used += take;
+            remaining -= take;
+            if remaining == 0 {
                 return slice;
             }
             slice += 1;
@@ -487,6 +715,12 @@ impl<'a> Scheduler<'a> {
 /// Convenience: schedule a program with default options.
 pub fn schedule(cfg: &ArchConfig, prog: &TileProgram) -> Schedule {
     Scheduler::new(cfg, prog, SchedulerOptions::default()).run()
+}
+
+/// Convenience: schedule a program with default options on a pooled
+/// context.
+pub fn schedule_with(ctx: &mut SimContext, cfg: &ArchConfig, prog: &TileProgram) -> Schedule {
+    Scheduler::with_context(cfg, prog, SchedulerOptions::default(), ctx).run()
 }
 
 #[cfg(test)]
@@ -646,6 +880,120 @@ mod tests {
         assert_eq!(slice_b, 20, "butterfly r16: 16 + 4 fill");
         assert!(slice_n >= 28, "benes r16 should expose latency, got {slice_n}");
     }
+
+    #[test]
+    fn pod_scan_visits_each_free_pod_once() {
+        let mut pods = BitSet::new(8);
+        for i in [1usize, 3, 4, 6] {
+            pods.set(i);
+        }
+        // Free pods: {0, 2, 5, 7}; scan from 5 wraps and stops at start.
+        let mut scan = PodScan::new(5);
+        let mut seq = Vec::new();
+        let mut p = scan.first(&pods);
+        while let Some(q) = p {
+            seq.push(q);
+            p = scan.next(&pods, q);
+        }
+        assert_eq!(seq, vec![5, 7, 0, 2]);
+    }
+
+    #[test]
+    fn pod_scan_near_full_slice_terminates() {
+        // All pods busy except one *below* the scan start: the fixed
+        // scan visits it exactly once and stops; the pre-fix scan kept
+        // cycling past `start`, re-testing pods and burning the
+        // `max_pod_tries` budget on duplicates.
+        let mut pods = BitSet::new(8);
+        for i in 0..8 {
+            if i != 2 {
+                pods.set(i);
+            }
+        }
+        let mut scan = PodScan::new(5);
+        let mut seq = Vec::new();
+        let mut p = scan.first(&pods);
+        while let Some(q) = p {
+            seq.push(q);
+            p = scan.next(&pods, q);
+        }
+        assert_eq!(seq, vec![2], "single free pod visited exactly once");
+
+        // Fully booked slice: no candidates at all.
+        pods.set(2);
+        let mut scan = PodScan::new(5);
+        assert_eq!(scan.first(&pods), None);
+    }
+
+    #[test]
+    fn deferred_slices_count_total_deferrals_not_ops() {
+        // 16 independent chains on 4 pods: ops pile up several slices
+        // deep.  Every op is ready at slice 0 and the window never
+        // slides, so each op's deferral count equals its landing slice —
+        // the metric must equal the sum of landing slices (total
+        // deferral slices), not the number of ops deferred at least
+        // once (the pre-fix semantics, blind past the first retry).
+        let c = cfg(4);
+        let p = tile_model(&toy(512, 32, 32), 32, 32, Strategy::RxR, 0);
+        assert_eq!(p.tile_ops.len(), 16);
+        let s = schedule(&c, &p);
+        let slice_sum: u64 = s.tile_slots.iter().map(|&(sl, _)| sl as u64).sum();
+        assert_eq!(s.stats.deferred_slices, slice_sum);
+        let ops_deferred = s.tile_slots.iter().filter(|&&(sl, _)| sl > 0).count() as u64;
+        assert!(
+            s.stats.deferred_slices > ops_deferred,
+            "congestion must accumulate past the first retry: {} vs {}",
+            s.stats.deferred_slices,
+            ops_deferred
+        );
+    }
+
+    #[test]
+    fn pp_merge_spans_slices_on_tiny_pp_configs() {
+        // 1 chain on 16 pods with tk = 2 → the tiler splits the psum
+        // chain 2 ways, so the pp op is a 2-way merge (2 pair-slots).
+        let p = tile_model(&toy(32, 64, 32), 32, 32, Strategy::RxR, 16);
+        assert_eq!(p.layers[0].ways, 2);
+        assert_eq!(p.pp_ops[0].pp_slots(), 2);
+        let tree = p.pp_ops[0].tree_depth();
+
+        // Roomy config: the merge fits one slice.
+        let c_full = cfg(16);
+        let s_full = schedule(&c_full, &p);
+        let tails_full = s_full.tile_slots.iter().map(|&(sl, _)| sl).max().unwrap();
+        assert_eq!(s_full.pp_slots[0], tails_full + 1 + tree);
+
+        // 2 post-processors = 1 pair-slot per slice: the merge must
+        // span two slices (completing one later), not silently shrink
+        // to fit one.
+        let mut c_tiny = cfg(16);
+        c_tiny.num_post_processors = 2;
+        let s_tiny = schedule(&c_tiny, &p);
+        let tails_tiny = s_tiny.tile_slots.iter().map(|&(sl, _)| sl).max().unwrap();
+        assert_eq!(s_tiny.pp_slots[0], tails_tiny + 1 + tree + 1);
+    }
+
+    #[test]
+    fn merged_program_slice_length_is_program_wide_max() {
+        // Pinned behavior (module docs): slice length is one global
+        // constant, so a NoPartition tenant with a large m stretches
+        // every tenant's slices in a merged program.
+        let big = toy(256, 32, 32);
+        let small = toy(32, 32, 32);
+        let c = cfg(4);
+        let pb = tile_model(&big, 32, 32, Strategy::NoPartition, 4);
+        let ps = tile_model(&small, 32, 32, Strategy::NoPartition, 4);
+        let pm = crate::tiling::tile_models(&[&big, &small], 32, 32, Strategy::NoPartition, 4);
+        let slice_len = |p| Scheduler::new(&c, p, SchedulerOptions::default()).slice_cycles();
+        let sb = slice_len(&pb);
+        let ss = slice_len(&ps);
+        let sm = slice_len(&pm);
+        assert!(sb > ss, "big tenant alone must have longer slices");
+        assert_eq!(
+            sm, sb,
+            "one NoPartition tenant sets every tenant's slice length"
+        );
+    }
 }
 
 #[cfg(test)]
@@ -719,7 +1067,10 @@ mod prop_tests {
         });
     }
 
-    /// Scheduling is deterministic: same inputs → identical schedule.
+    /// Scheduling is deterministic, and pooled-context runs are
+    /// bit-identical to cold runs — including after the context served
+    /// a different configuration (rebuild) and a different program
+    /// (scratch reuse).
     #[test]
     fn prop_schedule_deterministic() {
         let mut g = ModelGraph::new("det");
@@ -731,5 +1082,27 @@ mod prop_tests {
         let s2 = schedule(&cfg, &prog);
         assert_eq!(s1.tile_slots, s2.tile_slots);
         assert_eq!(s1.pp_slots, s2.pp_slots);
+
+        // Pooled context, first use (cold buffers) and warm reuse.
+        let mut ctx = SimContext::new();
+        let p1 = schedule_with(&mut ctx, &cfg, &prog);
+        let p2 = schedule_with(&mut ctx, &cfg, &prog);
+        assert_eq!(s1.tile_slots, p1.tile_slots);
+        assert_eq!(s1.pp_slots, p1.pp_slots);
+        assert_eq!(s1.stats, p1.stats);
+        assert_eq!(s1.tile_slots, p2.tile_slots);
+        assert_eq!(s1.pp_slots, p2.pp_slots);
+        assert_eq!(s1.stats, p2.stats);
+
+        // Pollute the context with a different interconnect/pod count
+        // and a different program, then re-run the original.
+        let mut other_cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 64);
+        other_cfg.interconnect = Kind::Benes;
+        let other_prog = tile_model(&g, 32, 32, Strategy::NoPartition, 64);
+        let _ = schedule_with(&mut ctx, &other_cfg, &other_prog);
+        let p3 = schedule_with(&mut ctx, &cfg, &prog);
+        assert_eq!(s1.tile_slots, p3.tile_slots);
+        assert_eq!(s1.pp_slots, p3.pp_slots);
+        assert_eq!(s1.stats, p3.stats);
     }
 }

@@ -18,7 +18,7 @@
 use std::collections::{HashMap, VecDeque};
 
 use crate::arch::ArchConfig;
-use crate::sim::{simulate_multi, SimOptions};
+use crate::sim::{simulate_multi_with, SimContext, SimOptions};
 use crate::stats::RunStats;
 use crate::workloads::ModelGraph;
 
@@ -129,7 +129,8 @@ pub struct EngineReport {
     pub batches: u64,
     /// Ops completed (2 × MACs).
     pub total_ops: u64,
-    /// Distinct simulator invocations (memoization diagnostic).
+    /// Simulator invocations during this run (memoization diagnostic;
+    /// 0 when a warm cache served every batch).
     pub sim_calls: u64,
     /// Per-launch stats when `record_group_stats` is set.
     pub group_stats: Vec<RunStats>,
@@ -177,13 +178,16 @@ pub struct CostEntry {
 
 /// Memoizes `simulate_multi` over batch-group compositions — the key
 /// is the exact ordered `(tenant, batch)` list, so distinct group
-/// shapes are simulated once per engine configuration.
+/// shapes are simulated once per engine configuration.  Cache misses
+/// run on a pooled [`SimContext`] (unless `opts.pooling` is off), so
+/// even the misses skip the scheduler's per-run allocation.
 #[derive(Debug)]
 pub struct CostCache {
     cfg: ArchConfig,
     opts: SimOptions,
     models: Vec<ModelGraph>,
     map: HashMap<Vec<(usize, usize)>, CostEntry>,
+    ctx: SimContext,
     /// Simulator invocations so far.
     pub sim_calls: u64,
 }
@@ -191,7 +195,19 @@ pub struct CostCache {
 impl CostCache {
     /// New cache over a configuration and the tenant models.
     pub fn new(cfg: ArchConfig, models: Vec<ModelGraph>, opts: SimOptions) -> Self {
-        CostCache { cfg, opts, models, map: HashMap::new(), sim_calls: 0 }
+        CostCache {
+            cfg,
+            opts,
+            models,
+            map: HashMap::new(),
+            ctx: SimContext::new(),
+            sim_calls: 0,
+        }
+    }
+
+    /// Number of tenant models the cache covers.
+    pub fn num_tenants(&self) -> usize {
+        self.models.len()
     }
 
     /// Cost of a batch group given as `(tenant index, batch units)`
@@ -205,7 +221,11 @@ impl CostCache {
             .map(|&(k, b)| self.models[k].with_batch(b.max(1)))
             .collect();
         let refs: Vec<&ModelGraph> = batched.iter().collect();
-        let stats = simulate_multi(&self.cfg, &refs, &self.opts);
+        if !self.opts.pooling {
+            // Cold A/B baseline: rebuild the scheduler state per call.
+            self.ctx = SimContext::new();
+        }
+        let stats = simulate_multi_with(&mut self.ctx, &self.cfg, &refs, &self.opts);
         let entry = CostEntry {
             seconds: stats.exec_seconds(&self.cfg),
             ops: batched.iter().map(ModelGraph::total_ops).sum(),
@@ -231,6 +251,41 @@ impl Engine {
         let models: Vec<ModelGraph> = tenants.iter().map(|t| t.model.clone()).collect();
         let cache = CostCache::new(cfg, models, ecfg.sim.clone());
         Engine { ecfg, n_tenants: tenants.len(), cache }
+    }
+
+    /// New engine over an existing (possibly warm) [`CostCache`] —
+    /// batch costs memoized by a previous engine on the same
+    /// configuration carry over.  Used by load sweeps to avoid
+    /// re-simulating identical batch compositions at every offered
+    /// rate.  Panics if the cache was built for a different
+    /// configuration, cost-model options, or tenant model set: its
+    /// memoized entries would silently be wrong for this engine.
+    pub fn with_cache(
+        cfg: &ArchConfig,
+        tenants: &[Tenant],
+        cache: CostCache,
+        ecfg: EngineConfig,
+    ) -> Self {
+        assert!(!tenants.is_empty(), "engine needs at least one tenant");
+        assert!(
+            cache.cfg == *cfg,
+            "cost cache was built for a different ArchConfig"
+        );
+        assert!(
+            cache.opts == ecfg.sim,
+            "cost cache was built with different SimOptions"
+        );
+        assert!(
+            cache.num_tenants() == tenants.len()
+                && cache.models.iter().zip(tenants).all(|(m, t)| *m == t.model),
+            "cost cache was built over a different tenant model set"
+        );
+        Engine { ecfg, n_tenants: cache.num_tenants(), cache }
+    }
+
+    /// Recover the cache (and its memoized costs) after a run.
+    pub fn into_cache(self) -> CostCache {
+        self.cache
     }
 
     /// Pop up to `max_batch` batch units from a queue (always at least
@@ -262,6 +317,9 @@ impl Engine {
 
         let mut queues: Vec<VecDeque<Arrival>> = (0..nt).map(|_| VecDeque::new()).collect();
         let mut report = EngineReport { rejected_by_tenant: vec![0; nt], ..Default::default() };
+        // Warm caches carry sim_calls across runs; report the delta so
+        // the field stays a per-run diagnostic.
+        let sim_calls_at_entry = self.cache.sim_calls;
         let mut i = 0usize; // next arrival to absorb
         let mut t = 0.0f64; // simulation clock
         let mut t_free = 0.0f64; // accelerator free time
@@ -361,7 +419,7 @@ impl Engine {
         }
 
         report.makespan_s = t_free;
-        report.sim_calls = self.cache.sim_calls;
+        report.sim_calls = self.cache.sim_calls - sim_calls_at_entry;
         report
     }
 }
@@ -508,6 +566,24 @@ mod tests {
         // Batch sizes range over 1..=4 → at most 4 distinct sims.
         assert!(rep.sim_calls <= 4, "sim_calls {}", rep.sim_calls);
         assert!(rep.batches < arrivals.len() as u64, "batching must merge");
+    }
+
+    #[test]
+    fn warm_cache_reuse_is_transparent() {
+        let tenants = vec![toy_tenant("a")];
+        let arrivals = at(&[0.0; 8]);
+        let mut cold_engine = Engine::new(toy_cfg(), &tenants, ecfg(4, 1.0));
+        let cold = cold_engine.run(&arrivals);
+        let mut e1 = Engine::new(toy_cfg(), &tenants, ecfg(4, 1.0));
+        let r1 = e1.run(&arrivals);
+        // Hand the warm cache to a fresh engine: identical results,
+        // zero additional simulator calls.
+        let mut e2 = Engine::with_cache(&toy_cfg(), &tenants, e1.into_cache(), ecfg(4, 1.0));
+        let r2 = e2.run(&arrivals);
+        assert_eq!(cold.completed, r2.completed);
+        assert_eq!(cold.makespan_s, r2.makespan_s);
+        assert_eq!(r1.sim_calls, cold.sim_calls);
+        assert_eq!(r2.sim_calls, 0, "warm cache adds no sims");
     }
 
     #[test]

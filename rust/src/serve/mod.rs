@@ -46,7 +46,10 @@ pub use engine::{
     serve_shared, Admission, BatchPolicy, CostCache, CostEntry, Engine, EngineConfig,
     EngineReport, ServedRequest,
 };
-pub use partition::{partition_pods, serve_partitioned, sub_config, PartitionPlan, TenantPartition};
+pub use partition::{
+    partition_pods, serve_partitioned, serve_partitioned_cached, serve_partitioned_threads,
+    sub_config, PartitionPlan, TenantPartition,
+};
 pub use slo::{
     analyze, capacity_qps, load_sweep, max_sustainable_qps, percentile, sweep_table,
     LatencyStats, SloReport, SweepOptions, SweepPoint,

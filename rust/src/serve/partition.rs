@@ -11,9 +11,10 @@
 
 use crate::arch::ArchConfig;
 use crate::error::{Error, Result};
+use crate::sim::SweepExecutor;
 use crate::util::{ilog2, is_pow2};
 
-use super::engine::{Engine, EngineConfig, EngineReport};
+use super::engine::{CostCache, Engine, EngineConfig, EngineReport};
 use super::traffic::{Arrival, Tenant};
 
 /// One tenant's share of the machine.
@@ -130,30 +131,105 @@ pub fn sub_config(cfg: &ArchConfig, pods: usize) -> Result<ArchConfig> {
 /// Serve a trace with static pod partitioning: each tenant gets its
 /// own engine on its own sub-configuration; partitions run
 /// concurrently (they share nothing, so each is simulated
-/// independently and the reports are merged).
+/// independently — in parallel across cores — and the reports are
+/// merged in plan order, deterministically for any worker count).
 pub fn serve_partitioned(
     cfg: &ArchConfig,
     tenants: &[Tenant],
     arrivals: &[Arrival],
     ecfg: &EngineConfig,
 ) -> Result<EngineReport> {
-    let plan = partition_pods(cfg.num_pods, tenants)?;
-    let mut merged = EngineReport {
-        rejected_by_tenant: vec![0; tenants.len()],
-        ..Default::default()
+    serve_partitioned_threads(cfg, tenants, arrivals, ecfg, None)
+}
+
+/// As [`serve_partitioned`], with an explicit worker count for the
+/// partition fan-out (`None` = `SOSA_THREADS` / machine parallelism).
+/// Callers that already parallelize at a higher level — load sweeps
+/// fan points across workers — pass `Some(1)` so thread pinning holds
+/// end-to-end and nested pools don't oversubscribe the machine.
+pub fn serve_partitioned_threads(
+    cfg: &ArchConfig,
+    tenants: &[Tenant],
+    arrivals: &[Arrival],
+    ecfg: &EngineConfig,
+    threads: Option<usize>,
+) -> Result<EngineReport> {
+    let ex = match threads {
+        Some(n) => SweepExecutor::with_threads(n),
+        None => SweepExecutor::new(),
     };
+    let plan = partition_pods(cfg.num_pods, tenants)?;
+    let reports: Result<Vec<EngineReport>> = ex
+        .run(&plan.parts, |_, part| {
+            let k = part.tenant;
+            let sub = sub_config(cfg, part.pods)?;
+            let local = local_arrivals(arrivals, k);
+            let one = std::slice::from_ref(&tenants[k]);
+            let mut engine = Engine::new(sub, one, ecfg.clone());
+            Ok(engine.run(&local))
+        })
+        .into_iter()
+        .collect();
+    Ok(merge_reports(cfg, tenants.len(), &plan, reports?, ecfg))
+}
+
+/// As [`serve_partitioned`], sequential, with one warm per-tenant
+/// [`CostCache`] carried across calls via `caches` (length =
+/// `tenants.len()`, start with `None`s).  Sweep drivers call this per
+/// point so a tenant's batch compositions are simulated once per
+/// sweep worker instead of once per offered rate; parallelism belongs
+/// to the caller's point fan-out.  With `ecfg.sim.pooling` off the
+/// caches are ignored (cold baseline).
+pub fn serve_partitioned_cached(
+    cfg: &ArchConfig,
+    tenants: &[Tenant],
+    arrivals: &[Arrival],
+    ecfg: &EngineConfig,
+    caches: &mut [Option<CostCache>],
+) -> Result<EngineReport> {
+    assert_eq!(caches.len(), tenants.len(), "one cache slot per tenant");
+    let plan = partition_pods(cfg.num_pods, tenants)?;
+    let mut reports = Vec::with_capacity(plan.parts.len());
     for part in &plan.parts {
         let k = part.tenant;
         let sub = sub_config(cfg, part.pods)?;
-        // Remap this tenant's arrivals to engine-local index 0.
-        let local: Vec<Arrival> = arrivals
-            .iter()
-            .filter(|a| a.tenant == k)
-            .map(|a| Arrival { tenant: 0, ..*a })
-            .collect();
+        let local = local_arrivals(arrivals, k);
         let one = std::slice::from_ref(&tenants[k]);
-        let mut engine = Engine::new(sub, one, ecfg.clone());
-        let rep = engine.run(&local);
+        let warm = if ecfg.sim.pooling { caches[k].take() } else { None };
+        let mut engine = match warm {
+            Some(c) => Engine::with_cache(&sub, one, c, ecfg.clone()),
+            None => Engine::new(sub, one, ecfg.clone()),
+        };
+        reports.push(engine.run(&local));
+        caches[k] = Some(engine.into_cache());
+    }
+    Ok(merge_reports(cfg, tenants.len(), &plan, reports, ecfg))
+}
+
+/// Remap one tenant's arrivals to engine-local index 0.
+fn local_arrivals(arrivals: &[Arrival], tenant: usize) -> Vec<Arrival> {
+    arrivals
+        .iter()
+        .filter(|a| a.tenant == tenant)
+        .map(|a| Arrival { tenant: 0, ..*a })
+        .collect()
+}
+
+/// Merge per-partition reports in plan order (deterministic for any
+/// worker count).
+fn merge_reports(
+    cfg: &ArchConfig,
+    n_tenants: usize,
+    plan: &PartitionPlan,
+    reports: Vec<EngineReport>,
+    ecfg: &EngineConfig,
+) -> EngineReport {
+    let mut merged = EngineReport {
+        rejected_by_tenant: vec![0; n_tenants],
+        ..Default::default()
+    };
+    for (part, rep) in plan.parts.iter().zip(reports) {
+        let k = part.tenant;
         merged.rejected += rep.rejected;
         merged.rejected_by_tenant[k] = rep.rejected;
         merged.makespan_s = merged.makespan_s.max(rep.makespan_s);
@@ -177,7 +253,7 @@ pub fn serve_partitioned(
     merged
         .completed
         .sort_by(|a, b| a.t_end.total_cmp(&b.t_end).then(a.id.cmp(&b.id)));
-    Ok(merged)
+    merged
 }
 
 #[cfg(test)]
@@ -247,6 +323,36 @@ mod tests {
         assert_eq!(sub.num_post_processors, 16);
         assert_eq!(sub.array, cfg.array);
         assert!(sub_config(&cfg, 17).is_err(), "non-pow2 partition");
+    }
+
+    #[test]
+    fn cached_partitioned_serving_matches_cold() {
+        let cfg = ArchConfig::with_array(ArrayDims::new(8, 8), 8);
+        let tenants = vec![tenant("a", 1.0), tenant("b", 1.0)];
+        let arrivals: Vec<Arrival> = (0..12)
+            .map(|i| Arrival {
+                t: i as f64 * 1e-4,
+                tenant: (i % 2) as usize,
+                id: i as u64,
+                batch: 1,
+            })
+            .collect();
+        let ecfg = EngineConfig {
+            policy: BatchPolicy { max_batch: 4, max_wait_s: 1e-3 },
+            sim: SimOptions { memory_model: false, ..Default::default() },
+            ..Default::default()
+        };
+        let cold = serve_partitioned(&cfg, &tenants, &arrivals, &ecfg).unwrap();
+        let mut caches: Vec<Option<CostCache>> = (0..tenants.len()).map(|_| None).collect();
+        let c1 = serve_partitioned_cached(&cfg, &tenants, &arrivals, &ecfg, &mut caches).unwrap();
+        // Second call reuses the warm per-tenant caches: identical
+        // report, no new simulator calls.
+        let c2 = serve_partitioned_cached(&cfg, &tenants, &arrivals, &ecfg, &mut caches).unwrap();
+        assert_eq!(cold.completed, c1.completed);
+        assert_eq!(c1.completed, c2.completed);
+        assert_eq!(c1.makespan_s, c2.makespan_s);
+        assert_eq!(c1.sim_calls, cold.sim_calls);
+        assert_eq!(c2.sim_calls, 0, "warm caches add no sims");
     }
 
     #[test]

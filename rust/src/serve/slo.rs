@@ -5,10 +5,12 @@
 
 use crate::arch::ArchConfig;
 use crate::error::Result;
+use crate::sim::SweepExecutor;
 use crate::util::{csv::f, Table};
+use crate::workloads::ModelGraph;
 
-use super::engine::{serve_shared, CostCache, EngineConfig, EngineReport};
-use super::partition::serve_partitioned;
+use super::engine::{CostCache, Engine, EngineConfig, EngineReport};
+use super::partition::serve_partitioned_cached;
 use super::traffic::{generate, Tenant, TrafficSpec};
 
 /// Percentile summary of a sample set (seconds).
@@ -200,38 +202,74 @@ pub struct SweepOptions {
     pub seed: u64,
     /// Serve each tenant on its own pod partition instead of sharing.
     pub partitioned: bool,
+    /// Worker threads for the sweep (`None` = `SOSA_THREADS` / machine
+    /// parallelism).  Points are independent and results are merged in
+    /// qps order, so the thread count never changes the output.
+    pub threads: Option<usize>,
 }
 
 /// Sweep offered load over a configuration, reporting the latency/
 /// goodput curve.  The saturation knee is visible as the offered rate
 /// beyond which p99 diverges and goodput flattens.
+///
+/// Points fan out across cores; each worker carries warm
+/// [`CostCache`]s across its points — one machine-wide cache in shared
+/// mode, one per tenant partition in partitioned mode — so a batch
+/// composition is simulated once per worker rather than once per
+/// offered rate (memoization is semantically transparent — results
+/// are identical with pooling and threading off, which
+/// `ecfg.sim.pooling = false` + `threads = Some(1)` restores as the
+/// cold baseline).  Partitions within a point run sequentially: the
+/// point fan-out already saturates the workers, and nesting pools
+/// would break thread pinning.
 pub fn load_sweep(
     cfg: &ArchConfig,
     tenants: &[Tenant],
     ecfg: &EngineConfig,
     sweep: &SweepOptions,
 ) -> Result<Vec<SweepPoint>> {
-    let mut out = Vec::with_capacity(sweep.qps.len());
-    for &qps in &sweep.qps {
-        let spec = TrafficSpec::poisson(qps, sweep.duration_s, sweep.seed);
-        let arrivals = generate(&spec, tenants);
-        let rep = if sweep.partitioned {
-            serve_partitioned(cfg, tenants, &arrivals, ecfg)?
-        } else {
-            serve_shared(cfg, tenants, &arrivals, ecfg)
-        };
-        let slo = analyze(&rep, sweep.duration_s, sweep.deadline_s);
-        out.push(SweepPoint {
-            qps,
-            p50_s: slo.latency.p50,
-            p99_s: slo.latency.p99,
-            goodput_qps: slo.goodput_qps,
-            completed: slo.completed,
-            rejected: slo.rejected,
-            busy_frac: slo.busy_frac,
-        });
-    }
-    Ok(out)
+    let ex = match sweep.threads {
+        Some(n) => SweepExecutor::with_threads(n),
+        None => SweepExecutor::new(),
+    };
+    let models: Vec<ModelGraph> = tenants.iter().map(|t| t.model.clone()).collect();
+    // Per-worker warm caches: (shared-mode cache, per-tenant partition
+    // caches).
+    let init = || {
+        let parts: Vec<Option<CostCache>> = (0..tenants.len()).map(|_| None).collect();
+        (None::<CostCache>, parts)
+    };
+    let points: Vec<Result<SweepPoint>> = ex.run_with_state(
+        &sweep.qps,
+        init,
+        |(cache, part_caches), _, &qps| {
+            let spec = TrafficSpec::poisson(qps, sweep.duration_s, sweep.seed);
+            let arrivals = generate(&spec, tenants);
+            let rep = if sweep.partitioned {
+                serve_partitioned_cached(cfg, tenants, &arrivals, ecfg, part_caches)?
+            } else {
+                let warm = if ecfg.sim.pooling { cache.take() } else { None };
+                let c = warm.unwrap_or_else(|| {
+                    CostCache::new(cfg.clone(), models.clone(), ecfg.sim.clone())
+                });
+                let mut engine = Engine::with_cache(cfg, tenants, c, ecfg.clone());
+                let rep = engine.run(&arrivals);
+                *cache = Some(engine.into_cache());
+                rep
+            };
+            let slo = analyze(&rep, sweep.duration_s, sweep.deadline_s);
+            Ok(SweepPoint {
+                qps,
+                p50_s: slo.latency.p50,
+                p99_s: slo.latency.p99,
+                goodput_qps: slo.goodput_qps,
+                completed: slo.completed,
+                rejected: slo.rejected,
+                busy_frac: slo.busy_frac,
+            })
+        },
+    );
+    points.into_iter().collect()
 }
 
 /// Highest probed rate that served its whole offered load (no

@@ -1,9 +1,16 @@
 //! Simulation driver: ties workloads → tiling → scheduling → memory
 //! model into per-benchmark [`RunStats`] — the engine behind every §6
 //! experiment.
+//!
+//! The `*_with` variants reuse a pooled [`SimContext`] across calls,
+//! skipping the per-run allocation of the scheduler's slice ring and
+//! scratch vectors (bit-identical results; see
+//! [`crate::scheduler::SimContext`]).  [`sweep`] fans independent
+//! simulation points across cores with one context per worker.
 
 pub mod memory;
 pub mod pod;
+pub mod sweep;
 
 use crate::arch::ArchConfig;
 use crate::scheduler::{Scheduler, SchedulerOptions};
@@ -11,8 +18,11 @@ use crate::stats::RunStats;
 use crate::tiling::{tile_model, tile_models, Strategy, TileProgram};
 use crate::workloads::ModelGraph;
 
+pub use crate::scheduler::SimContext;
+pub use sweep::SweepExecutor;
+
 /// Simulation parameters.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SimOptions {
     /// Tiling strategy (§3.3; default the paper's r×r).
     pub strategy: Strategy,
@@ -20,6 +30,11 @@ pub struct SimOptions {
     pub sched: SchedulerOptions,
     /// Model the SRAM capacity / DRAM traffic interaction (Fig. 13).
     pub memory_model: bool,
+    /// Reuse pooled scheduler contexts (and, in sweeps, memoized batch
+    /// costs) across runs.  On by default; turning it off restores the
+    /// cold rebuild-per-run path — the A/B baseline `benches/sched.rs`
+    /// measures against.  Results are bit-identical either way.
+    pub pooling: bool,
 }
 
 impl Default for SimOptions {
@@ -28,30 +43,52 @@ impl Default for SimOptions {
             strategy: Strategy::RxR,
             sched: SchedulerOptions::default(),
             memory_model: true,
+            pooling: true,
         }
     }
 }
 
 /// Simulate one model on one configuration.
 pub fn simulate(cfg: &ArchConfig, model: &ModelGraph, opts: &SimOptions) -> RunStats {
+    simulate_with(&mut SimContext::new(), cfg, model, opts)
+}
+
+/// [`simulate`] on a pooled context (no per-run scheduler allocation).
+pub fn simulate_with(
+    ctx: &mut SimContext,
+    cfg: &ArchConfig,
+    model: &ModelGraph,
+    opts: &SimOptions,
+) -> RunStats {
     let prog = tile_model(model, cfg.array.r, cfg.array.c, opts.strategy, cfg.num_pods);
-    simulate_program(cfg, &prog, std::slice::from_ref(model), opts)
+    simulate_program(ctx, cfg, &prog, std::slice::from_ref(model), opts)
 }
 
 /// Simulate several models co-scheduled (multi-tenancy, §6.1/Fig. 11).
 pub fn simulate_multi(cfg: &ArchConfig, models: &[&ModelGraph], opts: &SimOptions) -> RunStats {
+    simulate_multi_with(&mut SimContext::new(), cfg, models, opts)
+}
+
+/// [`simulate_multi`] on a pooled context.
+pub fn simulate_multi_with(
+    ctx: &mut SimContext,
+    cfg: &ArchConfig,
+    models: &[&ModelGraph],
+    opts: &SimOptions,
+) -> RunStats {
     let prog = tile_models(models, cfg.array.r, cfg.array.c, opts.strategy, cfg.num_pods);
     let owned: Vec<ModelGraph> = models.iter().map(|m| (*m).clone()).collect();
-    simulate_program(cfg, &prog, &owned, opts)
+    simulate_program(ctx, cfg, &prog, &owned, opts)
 }
 
 fn simulate_program(
+    ctx: &mut SimContext,
     cfg: &ArchConfig,
     prog: &TileProgram,
     models: &[ModelGraph],
     opts: &SimOptions,
 ) -> RunStats {
-    let schedule = Scheduler::new(cfg, prog, opts.sched.clone()).run();
+    let schedule = Scheduler::with_context(cfg, prog, opts.sched.clone(), ctx).run();
     let mut stats = schedule.stats;
     if opts.memory_model {
         let mem = memory::analyze(cfg, models);
@@ -66,14 +103,16 @@ fn simulate_program(
     stats
 }
 
-/// Average a metric over the paper's ten benchmarks.
+/// Average a metric over the paper's ten benchmarks (one pooled
+/// context across the loop).
 pub fn average_over<F>(cfg: &ArchConfig, models: &[ModelGraph], opts: &SimOptions, f: F) -> f64
 where
     F: Fn(&RunStats, &ArchConfig) -> f64,
 {
+    let mut ctx = SimContext::new();
     let mut acc = 0.0;
     for m in models {
-        let s = simulate(cfg, m, opts);
+        let s = simulate_with(&mut ctx, cfg, m, opts);
         acc += f(&s, cfg);
     }
     acc / models.len() as f64
@@ -88,6 +127,21 @@ mod tests {
 
     fn cfg(r: usize, pods: usize) -> ArchConfig {
         ArchConfig::with_array(ArrayDims::new(r, r), pods)
+    }
+
+    #[test]
+    fn pooled_simulation_matches_cold() {
+        // The pooled path must be bit-identical, memory model included,
+        // even when the context previously served other shapes.
+        let c = cfg(32, 64);
+        let a = zoo::by_name("resnet50").unwrap();
+        let b = zoo::by_name("bert-medium").unwrap();
+        let opts = SimOptions::default();
+        let mut ctx = SimContext::new();
+        let warm_b = simulate_with(&mut ctx, &c, &b, &opts);
+        let warm_a = simulate_with(&mut ctx, &c, &a, &opts);
+        assert_eq!(warm_a, simulate(&c, &a, &opts));
+        assert_eq!(warm_b, simulate(&c, &b, &opts));
     }
 
     #[test]

@@ -1,0 +1,200 @@
+//! Parallel sweep executor: fan independent simulation/serving points
+//! across cores with deterministic result ordering.
+//!
+//! Every §6 experiment and every serving load sweep is a map over an
+//! independent grid (array sizes × benchmarks, interconnects × pod
+//! counts, offered rates) — embarrassingly parallel, but each point
+//! needs mutable scheduler state.  [`SweepExecutor`] runs the map on
+//! `std::thread::scope` (no dependencies), giving each worker its own
+//! per-thread state — a pooled [`SimContext`] with
+//! [`SweepExecutor::run_with_ctx`], or arbitrary state (e.g. a shared
+//! `CostCache`) with [`SweepExecutor::run_with_state`] — and
+//! reassembles results **by item index**, so the output is identical
+//! for any thread count, including 1.
+//!
+//! Work is distributed by an atomic cursor (dynamic load balancing:
+//! sweep points vary wildly in cost), which only affects *which worker*
+//! computes a point, never the result.
+//!
+//! Thread count: `SOSA_THREADS` env var when set, else the machine's
+//! available parallelism.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::SimContext;
+
+/// Default worker count: `SOSA_THREADS` or the machine parallelism.
+pub fn default_threads() -> usize {
+    std::env::var("SOSA_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(std::num::NonZeroUsize::get)
+                .unwrap_or(1)
+        })
+}
+
+/// Deterministic scoped-thread map over independent sweep points.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepExecutor {
+    threads: usize,
+}
+
+impl SweepExecutor {
+    /// Executor with the default worker count (see [`default_threads`]).
+    pub fn new() -> Self {
+        SweepExecutor { threads: default_threads() }
+    }
+
+    /// Executor with an explicit worker count (1 = fully sequential).
+    pub fn with_threads(threads: usize) -> Self {
+        SweepExecutor { threads: threads.max(1) }
+    }
+
+    /// Configured worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Map `f` over `items`; results in item order.
+    pub fn run<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        self.run_with_state(items, || (), |_, i, t| f(i, t))
+    }
+
+    /// Map `f` over `items` with one pooled [`SimContext`] per worker;
+    /// results in item order.
+    pub fn run_with_ctx<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(&mut SimContext, usize, &T) -> R + Sync,
+    {
+        self.run_with_state(items, SimContext::new, f)
+    }
+
+    /// Map `f` over `items` with arbitrary per-worker state created by
+    /// `init`; results in item order regardless of thread count.
+    pub fn run_with_state<S, T, R, IF, F>(&self, items: &[T], init: IF, f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        IF: Fn() -> S + Sync,
+        F: Fn(&mut S, usize, &T) -> R + Sync,
+    {
+        let workers = self.threads.min(items.len()).max(1);
+        if workers <= 1 {
+            let mut state = init();
+            return items.iter().enumerate().map(|(i, t)| f(&mut state, i, t)).collect();
+        }
+        let cursor = AtomicUsize::new(0);
+        let (cursor, init, f) = (&cursor, &init, &f);
+        let mut chunks: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    scope.spawn(move || {
+                        let mut state = init();
+                        let mut out = Vec::new();
+                        loop {
+                            let i = cursor.fetch_add(1, Ordering::Relaxed);
+                            if i >= items.len() {
+                                break;
+                            }
+                            out.push((i, f(&mut state, i, &items[i])));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("sweep worker panicked"))
+                .collect()
+        });
+        // Deterministic ordering: reassemble by item index.
+        let mut slots: Vec<Option<R>> = items.iter().map(|_| None).collect();
+        for chunk in &mut chunks {
+            for (i, r) in chunk.drain(..) {
+                slots[i] = Some(r);
+            }
+        }
+        slots.into_iter().map(|r| r.expect("every item computed")).collect()
+    }
+}
+
+impl Default for SweepExecutor {
+    fn default() -> Self {
+        SweepExecutor::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchConfig, ArrayDims};
+    use crate::sim::{simulate_with, SimOptions};
+    use crate::workloads::ModelGraph;
+
+    #[test]
+    fn results_are_in_item_order_for_any_thread_count() {
+        let items: Vec<usize> = (0..37).collect();
+        let expect: Vec<usize> = items.iter().map(|&x| x * x).collect();
+        for threads in [1usize, 2, 3, 8] {
+            let ex = SweepExecutor::with_threads(threads);
+            let got = ex.run(&items, |_, &x| x * x);
+            assert_eq!(got, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs() {
+        let ex = SweepExecutor::with_threads(4);
+        let none: Vec<u32> = vec![];
+        assert!(ex.run(&none, |_, &x| x).is_empty());
+        assert_eq!(ex.run(&[7u32], |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn per_worker_state_is_reused_within_a_worker() {
+        // Each worker counts its own calls; totals must cover all items.
+        let items: Vec<u32> = (0..20).collect();
+        let ex = SweepExecutor::with_threads(2);
+        let counts = ex.run_with_state(
+            &items,
+            || 0usize,
+            |calls, _, &x| {
+                *calls += 1;
+                (*calls, x)
+            },
+        );
+        assert_eq!(counts.len(), 20);
+        // Item payloads stay aligned with their index.
+        for (i, &(_, x)) in counts.iter().enumerate() {
+            assert_eq!(x as usize, i);
+        }
+    }
+
+    #[test]
+    fn parallel_simulation_matches_sequential() {
+        let cfg = ArchConfig::with_array(ArrayDims::new(16, 16), 16);
+        let opts = SimOptions { memory_model: false, ..Default::default() };
+        let models: Vec<ModelGraph> = (1..=4)
+            .map(|i| {
+                let mut g = ModelGraph::new(format!("m{i}"));
+                g.add("fc", 64 * i, 64, 64, vec![]);
+                g
+            })
+            .collect();
+        let seq = SweepExecutor::with_threads(1)
+            .run_with_ctx(&models, |ctx, _, m| simulate_with(ctx, &cfg, m, &opts));
+        let par = SweepExecutor::with_threads(4)
+            .run_with_ctx(&models, |ctx, _, m| simulate_with(ctx, &cfg, m, &opts));
+        assert_eq!(seq, par, "thread count must not change results");
+    }
+}

@@ -4,7 +4,7 @@ use crate::arch::ArchConfig;
 use crate::power;
 
 /// Outcome of scheduling/simulating one program on one configuration.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct RunStats {
     /// Time slices used by the schedule.
     pub slices: u64,
@@ -20,9 +20,12 @@ pub struct RunStats {
     pub useful_macs: u64,
     /// Sum over slices of pods busy (for the busy-pod percentage).
     pub pod_busy_slices: u64,
-    /// Tile ops that needed more than one pod/bank/route attempt slice
-    /// (scheduling contention indicator).
-    pub deferred_ops: u64,
+    /// Total slices tile ops were deferred past: the sum over all tile
+    /// ops of failed slice attempts before placement (scheduling
+    /// contention indicator).  An op bumped 5 slices contributes 5 —
+    /// counting ops deferred *at least once* (the old semantics) made
+    /// congestion invisible past the first retry.
+    pub deferred_slices: u64,
     /// Off-chip DRAM traffic in bytes (memory model).
     pub dram_bytes: u64,
 }
@@ -85,7 +88,7 @@ impl RunStats {
         self.pp_ops += other.pp_ops;
         self.useful_macs += other.useful_macs;
         self.pod_busy_slices += other.pod_busy_slices;
-        self.deferred_ops += other.deferred_ops;
+        self.deferred_slices += other.deferred_slices;
         self.dram_bytes += other.dram_bytes;
         self.cycles_per_slice = self.cycles_per_slice.max(other.cycles_per_slice);
     }
@@ -105,7 +108,7 @@ mod tests {
             pp_ops: 100,
             useful_macs: 2000 * 32 * 32 * 32,
             pod_busy_slices: 2000,
-            deferred_ops: 5,
+            deferred_slices: 5,
             dram_bytes: 0,
         }
     }

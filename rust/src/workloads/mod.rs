@@ -25,7 +25,7 @@ pub use bert::{bert, BertConfig};
 pub use cnn::{densenet, inception_v3, resnet};
 
 /// One GEMM operation in a model graph.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct GemmOp {
     /// Index within the owning [`ModelGraph`].
     pub id: usize,
@@ -54,7 +54,7 @@ impl GemmOp {
 }
 
 /// A DNN model as a DAG of GEMM ops (edges = activation dataflow).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct ModelGraph {
     /// Model name (benchmark id).
     pub name: String,

@@ -203,6 +203,7 @@ fn load_sweep_shows_saturation_knee() {
         deadline_s: deadline,
         seed: 23,
         partitioned: false,
+        threads: None,
     };
     let pts = load_sweep(&cfg, &tenants, &ecfg, &sweep).unwrap();
     let (lo, hi) = (pts[0], pts[1]);
