@@ -34,43 +34,107 @@ pub struct Estimate {
 
 /// Estimate utilization of `model` on `cfg` under a tiling strategy.
 pub fn estimate(cfg: &ArchConfig, model: &ModelGraph, strategy: Strategy) -> Estimate {
-    let (r, c) = (cfg.array.r, cfg.array.c);
-    let pods = cfg.num_pods;
-    let fill = cfg.pipeline_fill_cycles() as f64;
-    let latency = cfg.interconnect.latency_cycles(pods.max(2)) as f64;
-
+    let r = cfg.array.r;
     let mut cycles = 0.0;
     let mut macs = 0u64;
     for op in &model.ops {
-        let k_part = strategy.k_part(op.m, r);
-        let tm = ceil_div(op.m, k_part);
-        let tk = ceil_div(op.k, r);
-        let tn = ceil_div(op.n, c);
-        let ways = analytic_ways(tm, tn, tk, pods);
-        let sub_len = tk.div_ceil(ways);
-        let subchains = tm * tn * ways;
-        let compute = k_part.max(r) as f64;
-        let slice = compute + fill + (latency - compute).max(0.0);
-        // Chained steps must wait the round trip when it outlasts a
-        // slice (§3.2).
-        let gap = ((2.0 * latency - slice) / slice).max(0.0).ceil();
-        let waves = ceil_div(subchains, pods) as f64;
-        let mut layer_slices = sub_len as f64 * (1.0 + gap) * waves;
-        // Bank/fabric contention stretches saturated layers — the
-        // busy-pod ceiling of Table 1 (~72% for Butterfly-2), validated
-        // against the full scheduler.
-        if subchains >= pods {
-            layer_slices /= BUSY_EFFICIENCY;
-        }
-        cycles += layer_slices * slice;
+        // Per-layer slice length: each layer charged its own
+        // `max(k_part, r)` (good enough for the Fig. 5 sweeps; the
+        // compile pipeline's selector uses [`estimate_per_layer`],
+        // which models the scheduler's program-wide slice instead).
+        let slice = slice_cycles_for(cfg, strategy.k_part(op.m, r));
+        cycles += layer_cycles_at_slice(cfg, op, strategy, slice);
         macs += op.macs();
     }
+    finish_estimate(cfg, cycles, macs)
+}
+
+/// Estimate a model under **per-layer** strategies with the
+/// scheduler's *program-wide* slice length (the largest `k_part` of
+/// any layer sets every layer's slice — see
+/// [`crate::scheduler::Scheduler::slice_cycles`]).  This is the cost
+/// model behind [`crate::compile`]'s per-layer strategy selection: it
+/// charges a layer that inflates the global slice for the cycles it
+/// costs every *other* layer too.
+pub fn estimate_per_layer(
+    cfg: &ArchConfig,
+    model: &ModelGraph,
+    strategies: &[Strategy],
+) -> Estimate {
+    assert_eq!(
+        strategies.len(),
+        model.ops.len(),
+        "one strategy per layer"
+    );
+    let r = cfg.array.r;
+    let max_kpart = model
+        .ops
+        .iter()
+        .zip(strategies)
+        .map(|(op, s)| s.k_part(op.m, r))
+        .max()
+        .unwrap_or(r);
+    let slice = slice_cycles_for(cfg, max_kpart);
+    let mut cycles = 0.0;
+    let mut macs = 0u64;
+    for (op, &s) in model.ops.iter().zip(strategies) {
+        cycles += layer_cycles_at_slice(cfg, op, s, slice);
+        macs += op.macs();
+    }
+    finish_estimate(cfg, cycles, macs)
+}
+
+fn finish_estimate(cfg: &ArchConfig, cycles: f64, macs: u64) -> Estimate {
     let slots = cfg.total_pes() as f64 * cycles;
     Estimate {
         cycles,
         macs,
         utilization: if slots > 0.0 { macs as f64 / slots } else { 0.0 },
     }
+}
+
+/// Slice length in cycles when the program-wide partition maximum is
+/// `k_part`: compute (`max(k_part, r)`) + pipeline fill + exposed
+/// one-way interconnect latency — the analytic mirror of
+/// [`crate::scheduler::Scheduler::slice_cycles`].
+pub fn slice_cycles_for(cfg: &ArchConfig, k_part: usize) -> f64 {
+    let compute = k_part.max(cfg.array.r) as f64;
+    let fill = cfg.pipeline_fill_cycles() as f64;
+    let latency = cfg.interconnect.latency_cycles(cfg.num_pods.max(2)) as f64;
+    compute + fill + (latency - compute).max(0.0)
+}
+
+/// Cycles one layer contributes under a given slice length: the wave
+/// model of the module docs (psum subchains executed in waves of
+/// `pods`, round-trip chain gaps, saturation efficiency).
+pub fn layer_cycles_at_slice(
+    cfg: &ArchConfig,
+    op: &crate::workloads::GemmOp,
+    strategy: Strategy,
+    slice: f64,
+) -> f64 {
+    let (r, c) = (cfg.array.r, cfg.array.c);
+    let pods = cfg.num_pods;
+    let latency = cfg.interconnect.latency_cycles(pods.max(2)) as f64;
+    let k_part = strategy.k_part(op.m, r);
+    let tm = ceil_div(op.m, k_part);
+    let tk = ceil_div(op.k, r);
+    let tn = ceil_div(op.n, c);
+    let ways = analytic_ways(tm, tn, tk, pods);
+    let sub_len = tk.div_ceil(ways);
+    let subchains = tm * tn * ways;
+    // Chained steps must wait the round trip when it outlasts a
+    // slice (§3.2).
+    let gap = ((2.0 * latency - slice) / slice).max(0.0).ceil();
+    let waves = ceil_div(subchains, pods) as f64;
+    let mut layer_slices = sub_len as f64 * (1.0 + gap) * waves;
+    // Bank/fabric contention stretches saturated layers — the
+    // busy-pod ceiling of Table 1 (~72% for Butterfly-2), validated
+    // against the full scheduler.
+    if subchains >= pods {
+        layer_slices /= BUSY_EFFICIENCY;
+    }
+    layer_slices * slice
 }
 
 /// Fraction of pods the scheduler keeps busy on saturated layers
@@ -144,6 +208,39 @@ mod tests {
             let err = (sim - ana).abs() / sim;
             assert!(err < 0.25, "{name}: sim {sim:.3} vs analytic {ana:.3}");
         }
+    }
+
+    #[test]
+    fn per_layer_uniform_rxr_matches_global_estimate() {
+        // With every k_part <= r the program-wide slice equals the
+        // per-layer slice, so the two estimators agree exactly.
+        let cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 256);
+        let m = zoo::by_name("resnet50").unwrap();
+        let rxr = vec![Strategy::RxR; m.ops.len()];
+        let a = estimate(&cfg, &m, Strategy::RxR);
+        let b = estimate_per_layer(&cfg, &m, &rxr);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.macs, b.macs);
+    }
+
+    #[test]
+    fn per_layer_charges_global_slice_stretch() {
+        // One NoPartition layer with a large m sets every layer's
+        // slice, so the per-layer estimator must charge more than the
+        // per-layer-slice estimator does.
+        let cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 16);
+        let mut g = crate::workloads::ModelGraph::new("mix");
+        g.add("big", 4096, 64, 64, vec![]);
+        g.add("small", 64, 64, 64, vec![]);
+        let mixed = vec![Strategy::NoPartition, Strategy::RxR];
+        let stretched = estimate_per_layer(&cfg, &g, &mixed);
+        let rxr = estimate_per_layer(&cfg, &g, &[Strategy::RxR, Strategy::RxR]);
+        assert!(
+            stretched.cycles > rxr.cycles,
+            "stretched {} vs rxr {}",
+            stretched.cycles,
+            rxr.cycles
+        );
     }
 
     #[test]

@@ -33,7 +33,7 @@ fn main() {
         eprintln!("       sosa-experiments serve --model NAME --qps N --seed S");
         eprintln!("         [--models A,B --partitioned --sweep --duration S");
         eprintln!("          --max-batch N --max-wait-ms MS --max-queue N");
-        eprintln!("          --deadline-ms MS --array RxC --pods N]");
+        eprintln!("          --deadline-ms MS --array RxC --pods N --per-layer]");
         eprintln!("experiments: {}", ALL.join(" "));
         std::process::exit(if args.flag("list") { 0 } else { 2 });
     }

@@ -1,0 +1,409 @@
+//! The compile → schedule → execute pipeline.
+//!
+//! Every consumer of the simulation core used to fuse the three stages
+//! ad hoc — `tile_model` + `Scheduler::run` + the memory model, re-run
+//! from scratch per call.  This module splits them into explicit
+//! phases around one reusable artifact:
+//!
+//! ```text
+//!            ┌────────────────────── compile ──────────────────────┐
+//! ModelGraph │ per-layer strategy selection   tiling (TileProgram) │
+//! ArchConfig ┼──────────────────────────────────────────────────▶  │──▶ CompiledProgram
+//! TilingSpec │ (analytic / exhaustive)        analytic estimate    │      (reusable)
+//!            └─────────────────────────────────────────────────────┘
+//!                  ┌─── schedule ───┐        ┌──── execute ────┐
+//! CompiledProgram ▶│ placement onto │─▶ ...─▶│ slice timing +  │──▶ RunStats
+//!   + SimContext   │ pods (pooled)  │        │ memory model    │
+//!                  └────────────────┘        └─────────────────┘
+//! ```
+//!
+//! * **compile** resolves a [`TilingSpec`] into one [`Strategy`] per
+//!   layer (globally uniform, explicit per-layer, or [`TilingSpec::Auto`]
+//!   selection via the analytic model in [`crate::analytic`]), tiles the
+//!   model(s) into a [`TileProgram`] and attaches an analytic cost
+//!   [`Estimate`].  The result is a pure artifact: no scheduler state,
+//!   reusable across runs, threads, and interconnect variants.
+//! * **schedule** places the program onto pods through the pooled
+//!   [`SimContext`] ([`CompiledProgram::schedule_with`]).
+//! * **execute** runs schedule + DRAM model and returns [`RunStats`]
+//!   ([`CompiledProgram::execute_with`]).
+//!
+//! `sim::simulate*` are thin wrappers over this pipeline, and the serve
+//! engine's `CostCache` memoizes `CompiledProgram`s keyed by batch
+//! composition, so the serving hot path compiles each batch shape once
+//! and only re-executes.
+//!
+//! A compiled program is tied to the **geometry** it was compiled for —
+//! array shape and pod count (tiling depends on `r`, `c` and the
+//! chain-splitting pod heuristic).  Global / explicit per-layer
+//! artifacts are additionally *interconnect-agnostic*: executing one
+//! artifact across fabric variants is exactly the reuse the Fig. 12a
+//! sweep exploits.  [`TilingSpec::Auto`] artifacts are pinned to the
+//! compile-time interconnect, whose latency the selection consulted
+//! (see [`CompiledFor`]).
+
+pub mod select;
+
+use crate::analytic::{self, Estimate};
+use crate::arch::ArchConfig;
+use crate::interconnect::Kind;
+use crate::scheduler::{Schedule, Scheduler, SimContext};
+use crate::sim::{memory, SimOptions};
+use crate::stats::RunStats;
+use crate::tiling::{merge_graphs, tile_model_per_layer, Strategy, TileProgram};
+use crate::workloads::ModelGraph;
+
+pub use select::{SelectMode, SelectOptions};
+
+/// How to choose the §3.3 activation-partition strategy per layer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TilingSpec {
+    /// One strategy for every layer (the paper's global sweep).
+    Global(Strategy),
+    /// Explicit per-layer strategies (one per layer of the model, in
+    /// merged layer order for multi-model programs).
+    PerLayer(Vec<Strategy>),
+    /// Per-layer selection by the analytic cost model (or exhaustive
+    /// per-layer scheduling), falling back to global `r×r` when the
+    /// estimate ties — see [`select`].
+    Auto(SelectOptions),
+}
+
+impl Default for TilingSpec {
+    fn default() -> Self {
+        TilingSpec::Global(Strategy::RxR)
+    }
+}
+
+impl TilingSpec {
+    /// Convenience: automatic per-layer selection with defaults.
+    pub fn auto() -> Self {
+        TilingSpec::Auto(SelectOptions::default())
+    }
+}
+
+/// What a [`CompiledProgram`] was compiled for.  The tiling depends on
+/// the array shape and (through the chain-splitting heuristic) the pod
+/// count, never on scheduler knobs or the memory model.  The
+/// interconnect is pinned **only** for [`TilingSpec::Auto`] artifacts:
+/// per-layer selection scores and verifies against the compile-time
+/// fabric's latency, so reusing such an artifact on another fabric
+/// would silently void the never-worse-than-`r×r` guarantee.  Global /
+/// explicit per-layer artifacts stay interconnect-agnostic
+/// (`interconnect: None`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CompiledFor {
+    pub r: usize,
+    pub c: usize,
+    pub pods: usize,
+    /// `Some(fabric)` when the strategy choice consulted the
+    /// interconnect (`Auto`); `None` otherwise.
+    pub interconnect: Option<Kind>,
+}
+
+/// A compiled, reusable program: the output of the compile phase.
+#[derive(Clone, Debug)]
+pub struct CompiledProgram {
+    /// The source models (owned — the artifact is self-contained; the
+    /// execute phase's memory model reads them).
+    pub models: Vec<ModelGraph>,
+    /// The tiled program the scheduler consumes.
+    pub prog: TileProgram,
+    /// The strategy chosen for each (merged) layer.
+    pub strategies: Vec<Strategy>,
+    /// Analytic cost estimate for the chosen plan (program-wide slice
+    /// model; see [`analytic::estimate_per_layer`]).
+    pub estimate: Estimate,
+    /// Geometry the program is valid for.
+    pub compiled_for: CompiledFor,
+}
+
+impl CompiledProgram {
+    /// Does this artifact fit a configuration?  True across
+    /// scheduler-option / memory-model variants, and across
+    /// interconnects unless the artifact's strategies were
+    /// auto-selected against a specific fabric (see [`CompiledFor`]).
+    pub fn compatible_with(&self, cfg: &ArchConfig) -> bool {
+        self.compiled_for.r == cfg.array.r
+            && self.compiled_for.c == cfg.array.c
+            && self.compiled_for.pods == cfg.num_pods
+            && match self.compiled_for.interconnect {
+                Some(kind) => kind == cfg.interconnect,
+                None => true,
+            }
+    }
+
+    /// Total useful MACs in the program.
+    pub fn total_macs(&self) -> u64 {
+        self.prog.total_macs
+    }
+
+    /// How many layers deviate from the global `r×r` default.
+    pub fn non_rxr_layers(&self) -> usize {
+        self.strategies.iter().filter(|&&s| s != Strategy::RxR).count()
+    }
+
+    /// Schedule phase: place the program onto pods via a pooled
+    /// [`SimContext`].  Panics if `cfg`'s geometry differs from the
+    /// compile-time geometry.
+    pub fn schedule_with(
+        &self,
+        ctx: &mut SimContext,
+        cfg: &ArchConfig,
+        opts: &SimOptions,
+    ) -> Schedule {
+        assert!(
+            self.compatible_with(cfg),
+            "program compiled for {:?}, executed on {}x{} / {} pods",
+            self.compiled_for,
+            cfg.array.r,
+            cfg.array.c,
+            cfg.num_pods
+        );
+        Scheduler::with_context(cfg, &self.prog, opts.sched.clone(), ctx).run()
+    }
+
+    /// Execute phase with a one-shot context.
+    pub fn execute(&self, cfg: &ArchConfig, opts: &SimOptions) -> RunStats {
+        self.execute_with(&mut SimContext::new(), cfg, opts)
+    }
+
+    /// Execute phase: schedule, then apply the DRAM model.  Equal to
+    /// what `sim::simulate*` returns for the same spec — those are
+    /// wrappers over this call.  `opts.spec` is ignored here (the
+    /// strategies are baked into the artifact).
+    pub fn execute_with(
+        &self,
+        ctx: &mut SimContext,
+        cfg: &ArchConfig,
+        opts: &SimOptions,
+    ) -> RunStats {
+        let schedule = self.schedule_with(ctx, cfg, opts);
+        let mut stats = schedule.stats;
+        if opts.memory_model {
+            let mem = memory::analyze(cfg, &self.models);
+            stats.dram_bytes = mem.dram_bytes;
+            // DRAM stalls extend execution when the memory traffic
+            // cannot be overlapped with compute (Fig. 13's cliff).
+            let dram_cycles = mem.stall_cycles(cfg);
+            if dram_cycles > 0 {
+                stats.total_cycles += dram_cycles;
+            }
+        }
+        stats
+    }
+}
+
+/// Compile one model (one-shot context for `Auto` selection).
+pub fn compile(cfg: &ArchConfig, model: &ModelGraph, opts: &SimOptions) -> CompiledProgram {
+    compile_with(&mut SimContext::new(), cfg, model, opts)
+}
+
+/// Compile one model, reusing a pooled context for the selector's
+/// verification / exhaustive scheduling runs.
+pub fn compile_with(
+    ctx: &mut SimContext,
+    cfg: &ArchConfig,
+    model: &ModelGraph,
+    opts: &SimOptions,
+) -> CompiledProgram {
+    build(ctx, cfg, model, std::slice::from_ref(model), opts)
+}
+
+/// Compile several models into one merged multi-tenant program
+/// (round-robin layer interleave, §6.1).
+pub fn compile_multi(
+    cfg: &ArchConfig,
+    models: &[&ModelGraph],
+    opts: &SimOptions,
+) -> CompiledProgram {
+    compile_multi_with(&mut SimContext::new(), cfg, models, opts)
+}
+
+/// [`compile_multi`] on a pooled context.
+pub fn compile_multi_with(
+    ctx: &mut SimContext,
+    cfg: &ArchConfig,
+    models: &[&ModelGraph],
+    opts: &SimOptions,
+) -> CompiledProgram {
+    let merged = merge_graphs(models);
+    let owned: Vec<ModelGraph> = models.iter().map(|m| (*m).clone()).collect();
+    build(ctx, cfg, &merged, &owned, opts)
+}
+
+fn build(
+    ctx: &mut SimContext,
+    cfg: &ArchConfig,
+    graph: &ModelGraph,
+    models: &[ModelGraph],
+    opts: &SimOptions,
+) -> CompiledProgram {
+    let strategies = match &opts.spec {
+        TilingSpec::Global(s) => vec![*s; graph.ops.len()],
+        TilingSpec::PerLayer(v) => {
+            assert_eq!(
+                v.len(),
+                graph.ops.len(),
+                "PerLayer spec must name every (merged) layer"
+            );
+            v.clone()
+        }
+        TilingSpec::Auto(sel) => select::choose(ctx, cfg, graph, sel, &opts.sched),
+    };
+    let interconnect = match &opts.spec {
+        TilingSpec::Auto(_) => Some(cfg.interconnect),
+        _ => None,
+    };
+    let prog = tile_model_per_layer(graph, cfg.array.r, cfg.array.c, &strategies, cfg.num_pods);
+    let estimate = analytic::estimate_per_layer(cfg, graph, &strategies);
+    CompiledProgram {
+        models: models.to_vec(),
+        prog,
+        strategies,
+        estimate,
+        compiled_for: CompiledFor {
+            r: cfg.array.r,
+            c: cfg.array.c,
+            pods: cfg.num_pods,
+            interconnect,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchConfig, ArrayDims};
+    use crate::interconnect::Kind;
+    use crate::sim::{simulate, simulate_multi, SimOptions};
+    use crate::tiling::tile_model;
+    use crate::workloads::ModelGraph;
+
+    fn cfg(pods: usize) -> ArchConfig {
+        ArchConfig::with_array(ArrayDims::new(32, 32), pods)
+    }
+
+    fn toy(m: usize, k: usize, n: usize) -> ModelGraph {
+        let mut g = ModelGraph::new("toy");
+        g.add("l0", m, k, n, vec![]);
+        g
+    }
+
+    fn two_layer() -> ModelGraph {
+        let mut g = ModelGraph::new("two");
+        let a = g.add("a", 100, 64, 96, vec![]);
+        g.add("b", 100, 96, 64, vec![a]);
+        g
+    }
+
+    #[test]
+    fn global_compile_matches_fused_tiling() {
+        let c = cfg(16);
+        let g = two_layer();
+        let opts = SimOptions::default();
+        let cp = compile(&c, &g, &opts);
+        let fused = tile_model(&g, 32, 32, Strategy::RxR, 16);
+        assert_eq!(cp.prog.tile_ops.len(), fused.tile_ops.len());
+        assert_eq!(cp.prog.total_macs, fused.total_macs);
+        assert_eq!(cp.strategies, vec![Strategy::RxR; 2]);
+        assert_eq!(cp.non_rxr_layers(), 0);
+        assert!(cp.estimate.cycles > 0.0);
+    }
+
+    #[test]
+    fn execute_matches_simulate() {
+        let c = cfg(16);
+        let g = two_layer();
+        for memory_model in [false, true] {
+            let opts = SimOptions { memory_model, ..Default::default() };
+            let cp = compile(&c, &g, &opts);
+            assert_eq!(cp.execute(&c, &opts), simulate(&c, &g, &opts));
+        }
+    }
+
+    #[test]
+    fn compile_multi_matches_simulate_multi() {
+        let c = cfg(16);
+        let a = two_layer();
+        let b = toy(64, 64, 64);
+        let opts = SimOptions { memory_model: true, ..Default::default() };
+        let cp = compile_multi(&c, &[&a, &b], &opts);
+        assert_eq!(cp.models.len(), 2, "memory model sees the source models");
+        assert_eq!(cp.execute(&c, &opts), simulate_multi(&c, &[&a, &b], &opts));
+    }
+
+    #[test]
+    fn compile_once_execute_across_interconnects() {
+        // The artifact is geometry-bound, not interconnect-bound:
+        // executing one compiled program across fabric variants equals
+        // fused simulation per variant.
+        let g = two_layer();
+        let opts = SimOptions { memory_model: false, ..Default::default() };
+        let cp = compile(&cfg(16), &g, &opts);
+        for kind in [Kind::Butterfly { expansion: 2 }, Kind::Crossbar, Kind::Benes] {
+            let mut c = cfg(16);
+            c.interconnect = kind;
+            assert!(cp.compatible_with(&c));
+            assert_eq!(cp.execute(&c, &opts), simulate(&c, &g, &opts), "{kind}");
+        }
+    }
+
+    #[test]
+    fn per_layer_spec_is_honored() {
+        let c = cfg(4);
+        let g = two_layer();
+        let spec = TilingSpec::PerLayer(vec![Strategy::RxR, Strategy::Fixed(50)]);
+        let opts = SimOptions { spec, memory_model: false, ..Default::default() };
+        let cp = compile(&c, &g, &opts);
+        assert_eq!(cp.strategies[1], Strategy::Fixed(50));
+        assert_eq!(cp.prog.layers[0].k_part, 32);
+        assert_eq!(cp.prog.layers[1].k_part, 50);
+        assert_eq!(cp.non_rxr_layers(), 1);
+        // Still executes and conserves work.
+        let s = cp.execute(&c, &opts);
+        assert_eq!(s.useful_macs, g.total_macs());
+    }
+
+    #[test]
+    #[should_panic(expected = "compiled for")]
+    fn geometry_mismatch_panics() {
+        let g = toy(64, 64, 64);
+        let opts = SimOptions::default();
+        let cp = compile(&cfg(16), &g, &opts);
+        let _ = cp.execute(&cfg(64), &opts);
+    }
+
+    #[test]
+    #[should_panic(expected = "compiled for")]
+    fn auto_artifact_is_pinned_to_its_interconnect() {
+        // Per-layer selection consults the fabric's latency, so an
+        // Auto artifact must refuse to execute on a different one.
+        let g = two_layer();
+        let opts = SimOptions {
+            spec: TilingSpec::auto(),
+            memory_model: false,
+            ..Default::default()
+        };
+        let cp = compile(&cfg(16), &g, &opts);
+        let mut other = cfg(16);
+        other.interconnect = Kind::Benes;
+        assert!(!cp.compatible_with(&other));
+        let _ = cp.execute(&other, &opts);
+    }
+
+    #[test]
+    fn auto_spec_compiles_and_conserves_macs() {
+        let c = cfg(16);
+        let g = two_layer();
+        let opts = SimOptions {
+            spec: TilingSpec::auto(),
+            memory_model: false,
+            ..Default::default()
+        };
+        let cp = compile(&c, &g, &opts);
+        assert_eq!(cp.strategies.len(), 2);
+        let s = cp.execute(&c, &opts);
+        assert_eq!(s.useful_macs, g.total_macs());
+    }
+}

@@ -1,0 +1,335 @@
+//! Per-layer tiling-strategy selection.
+//!
+//! The paper sweeps one global partition size (Fig. 12b); Stehle et
+//! al. show the optimum is layer-dependent.  The selector picks, per
+//! layer, between the paper's `r×r` default and `Fixed(k)` candidates:
+//!
+//! * [`SelectMode::Analytic`] scores candidates with the analytic wave
+//!   model ([`crate::analytic::layer_cycles_at_slice`]) under a
+//!   *program-wide* slice length: because the scheduler's slice is one
+//!   global constant (the largest `k_part` of any layer), candidates
+//!   above `r` are only considered jointly through a `k*` ladder that
+//!   charges every layer for the stretched slice.
+//! * [`SelectMode::Exhaustive`] schedules each layer in isolation with
+//!   the real scheduler, per candidate, and keeps the per-layer winner
+//!   (the fig12b-style per-layer search of the `perlayer` experiment).
+//!
+//! Two guards keep the result *never worse* than global `r×r`:
+//!
+//! 1. ties and sub-margin wins fall back to `r×r`
+//!    ([`SelectOptions::min_gain_pct`]);
+//! 2. with [`SelectOptions::verify`] (the default), any plan that
+//!    deviates is scheduled once against the all-`r×r` plan on the
+//!    real scheduler and kept only if its cycle count is strictly
+//!    lower.
+
+use crate::analytic;
+use crate::arch::ArchConfig;
+use crate::scheduler::{Scheduler, SchedulerOptions, SimContext};
+use crate::tiling::{tile_model_per_layer, Strategy};
+use crate::util::ceil_div;
+use crate::workloads::ModelGraph;
+
+/// How candidates are scored.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SelectMode {
+    /// Analytic wave model (fast; the default).
+    Analytic,
+    /// Real scheduler on each layer in isolation (slow, exhaustive).
+    Exhaustive,
+}
+
+/// Selector knobs (all `Eq` so [`super::TilingSpec`] can key caches).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SelectOptions {
+    pub mode: SelectMode,
+    /// Partition-size candidates; empty = derived from the array
+    /// (`{r/4, r/2, r, 2r, 4r}`).
+    pub candidates: Vec<usize>,
+    /// Minimum predicted whole-program gain (percent) before deviating
+    /// from global `r×r` (Analytic mode's tie/noise guard).
+    pub min_gain_pct: u32,
+    /// Arbitrate any deviating plan against all-`r×r` with one real
+    /// scheduler run each, keeping the winner.  Makes per-layer
+    /// selection never worse than global `r×r` by construction.
+    pub verify: bool,
+}
+
+impl Default for SelectOptions {
+    fn default() -> Self {
+        SelectOptions {
+            mode: SelectMode::Analytic,
+            candidates: vec![],
+            min_gain_pct: 3,
+            verify: true,
+        }
+    }
+}
+
+impl SelectOptions {
+    /// Exhaustive per-layer search (the `perlayer` experiment's mode).
+    pub fn exhaustive() -> Self {
+        SelectOptions { mode: SelectMode::Exhaustive, ..Default::default() }
+    }
+}
+
+/// Candidate partition sizes, sorted and deduplicated.
+fn effective_candidates(sel: &SelectOptions, r: usize) -> Vec<usize> {
+    let mut c: Vec<usize> = if sel.candidates.is_empty() {
+        vec![(r / 4).max(1), (r / 2).max(1), r, 2 * r, 4 * r]
+    } else {
+        sel.candidates.clone()
+    };
+    c.retain(|&k| k >= 1);
+    c.sort_unstable();
+    c.dedup();
+    c
+}
+
+/// Choose one strategy per layer of `graph` (merged layer order for
+/// multi-model programs).  Deterministic: equal inputs yield equal
+/// plans.
+pub(crate) fn choose(
+    ctx: &mut SimContext,
+    cfg: &ArchConfig,
+    graph: &ModelGraph,
+    sel: &SelectOptions,
+    sched: &SchedulerOptions,
+) -> Vec<Strategy> {
+    let rxr = vec![Strategy::RxR; graph.ops.len()];
+    if graph.ops.is_empty() {
+        return rxr;
+    }
+    let cands = effective_candidates(sel, cfg.array.r);
+    let plan = match sel.mode {
+        SelectMode::Analytic => choose_analytic(cfg, graph, &cands, sel.min_gain_pct),
+        SelectMode::Exhaustive => choose_exhaustive(ctx, cfg, graph, &cands, sched),
+    };
+    if plan == rxr {
+        return rxr;
+    }
+    if sel.verify
+        && scheduled_cycles(ctx, cfg, graph, &plan, sched)
+            >= scheduled_cycles(ctx, cfg, graph, &rxr, sched)
+    {
+        return rxr;
+    }
+    plan
+}
+
+/// One real scheduler run of `graph` under a per-layer plan.
+fn scheduled_cycles(
+    ctx: &mut SimContext,
+    cfg: &ArchConfig,
+    graph: &ModelGraph,
+    plan: &[Strategy],
+    sched: &SchedulerOptions,
+) -> u64 {
+    let prog = tile_model_per_layer(graph, cfg.array.r, cfg.array.c, plan, cfg.num_pods);
+    Scheduler::with_context(cfg, &prog, sched.clone(), ctx).run().stats.total_cycles
+}
+
+/// Analytic selection: joint over a `k*` slice-cap ladder, per-layer
+/// greedy within each cap, margin-guarded against all-`r×r`.
+fn choose_analytic(
+    cfg: &ArchConfig,
+    graph: &ModelGraph,
+    cands: &[usize],
+    min_gain_pct: u32,
+) -> Vec<Strategy> {
+    let r = cfg.array.r;
+    let rxr = vec![Strategy::RxR; graph.ops.len()];
+    let base = analytic::estimate_per_layer(cfg, graph, &rxr).cycles;
+    if base <= 0.0 {
+        return rxr;
+    }
+    // Slice caps: r (no stretch) plus every candidate above it.
+    let mut kstars: Vec<usize> = cands.iter().copied().filter(|&k| k > r).collect();
+    kstars.insert(0, r);
+    let mut best_cycles = base;
+    let mut best_plan = rxr.clone();
+    for &kstar in &kstars {
+        let slice = analytic::slice_cycles_for(cfg, kstar);
+        let plan: Vec<Strategy> = graph
+            .ops
+            .iter()
+            .map(|op| {
+                let mut best_s = Strategy::RxR;
+                let mut best_c = analytic::layer_cycles_at_slice(cfg, op, Strategy::RxR, slice);
+                for &k in cands.iter().filter(|&&k| k <= kstar) {
+                    let c = analytic::layer_cycles_at_slice(cfg, op, Strategy::Fixed(k), slice);
+                    // Strict improvement only: ties keep r×r.
+                    if c < best_c {
+                        best_c = c;
+                        best_s = Strategy::Fixed(k);
+                    }
+                }
+                best_s
+            })
+            .collect();
+        // Re-score the whole plan with its *actual* max k_part (layers
+        // may not have used the cap, shortening the real slice).
+        let total = analytic::estimate_per_layer(cfg, graph, &plan).cycles;
+        if total < best_cycles {
+            best_cycles = total;
+            best_plan = plan;
+        }
+    }
+    // Deviate only on a clear predicted win.
+    let needed = base * (100u32.saturating_sub(min_gain_pct)) as f64 / 100.0;
+    if best_cycles <= needed {
+        best_plan
+    } else {
+        rxr
+    }
+}
+
+/// Exhaustive per-layer search: schedule each layer in isolation with
+/// the real scheduler, per candidate, and keep the winner (ties keep
+/// `r×r`).  Candidates whose tile-op count would explode are skipped.
+fn choose_exhaustive(
+    ctx: &mut SimContext,
+    cfg: &ArchConfig,
+    graph: &ModelGraph,
+    cands: &[usize],
+    sched: &SchedulerOptions,
+) -> Vec<Strategy> {
+    const MAX_OPS_PER_TRIAL: usize = 1 << 20;
+    let (r, c) = (cfg.array.r, cfg.array.c);
+    let mut plan = Vec::with_capacity(graph.ops.len());
+    for op in &graph.ops {
+        let mut trial = ModelGraph::new("trial");
+        trial.add(op.name.clone(), op.m, op.k, op.n, vec![]);
+        let trial_cycles = |ctx: &mut SimContext, s: Strategy| {
+            let prog = tile_model_per_layer(&trial, r, c, &[s], cfg.num_pods);
+            Scheduler::with_context(cfg, &prog, sched.clone(), ctx).run().stats.total_cycles
+        };
+        let mut best_s = Strategy::RxR;
+        let mut best_c = trial_cycles(ctx, Strategy::RxR);
+        for &k in cands {
+            let s = Strategy::Fixed(k);
+            let ops = ceil_div(op.m, s.k_part(op.m, r))
+                * ceil_div(op.k, r)
+                * ceil_div(op.n, c);
+            if ops > MAX_OPS_PER_TRIAL {
+                continue;
+            }
+            let cyc = trial_cycles(ctx, s);
+            if cyc < best_c {
+                best_c = cyc;
+                best_s = s;
+            }
+        }
+        plan.push(best_s);
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchConfig, ArrayDims};
+
+    fn cfg(pods: usize) -> ArchConfig {
+        ArchConfig::with_array(ArrayDims::new(32, 32), pods)
+    }
+
+    fn toy(m: usize, k: usize, n: usize) -> ModelGraph {
+        let mut g = ModelGraph::new("toy");
+        g.add("l0", m, k, n, vec![]);
+        g
+    }
+
+    #[test]
+    fn default_candidates_derived_from_r() {
+        let sel = SelectOptions::default();
+        assert_eq!(effective_candidates(&sel, 32), vec![8, 16, 32, 64, 128]);
+        let custom = SelectOptions { candidates: vec![64, 8, 8, 0], ..Default::default() };
+        assert_eq!(effective_candidates(&custom, 32), vec![8, 64]);
+    }
+
+    #[test]
+    fn identical_candidates_tie_to_rxr() {
+        // m = 8 < every candidate: k_part clips to m for all of them,
+        // so every score is identical and the strict-improvement rule
+        // keeps r×r deterministically.
+        let c = cfg(16);
+        let g = toy(8, 256, 256);
+        let plan = choose(
+            &mut SimContext::new(),
+            &c,
+            &g,
+            &SelectOptions::default(),
+            &SchedulerOptions::default(),
+        );
+        assert_eq!(plan, vec![Strategy::RxR]);
+    }
+
+    #[test]
+    fn full_margin_forces_global_rxr() {
+        // min_gain_pct = 100 demands best <= 0 predicted cycles: the
+        // analytic path can never deviate, whatever the model.
+        let c = cfg(16);
+        let g = toy(1024, 256, 256);
+        let sel = SelectOptions { min_gain_pct: 100, ..Default::default() };
+        let plan = choose(
+            &mut SimContext::new(),
+            &c,
+            &g,
+            &sel,
+            &SchedulerOptions::default(),
+        );
+        assert_eq!(plan, vec![Strategy::RxR]);
+    }
+
+    #[test]
+    fn verify_keeps_plan_only_when_scheduler_agrees() {
+        // Whatever the analytic model proposes, with verify on the
+        // chosen plan must never schedule slower than all-r×r.
+        let c = cfg(16);
+        let mut ctx = SimContext::new();
+        let sched = SchedulerOptions::default();
+        for g in [toy(100, 768, 768), toy(197, 768, 3072), toy(33, 40, 65)] {
+            let plan = choose(&mut ctx, &c, &g, &SelectOptions::default(), &sched);
+            let mut cycles = |p: &[Strategy]| {
+                let prog = tile_model_per_layer(&g, 32, 32, p, 16);
+                Scheduler::with_context(&c, &prog, sched.clone(), &mut ctx)
+                    .run()
+                    .stats
+                    .total_cycles
+            };
+            let chosen = cycles(&plan);
+            let base = cycles(&[Strategy::RxR]);
+            assert!(chosen <= base, "{}: plan {chosen} vs rxr {base}", g.name);
+        }
+    }
+
+    #[test]
+    fn exhaustive_mode_returns_one_strategy_per_layer() {
+        let c = cfg(4);
+        let mut g = ModelGraph::new("two");
+        g.add("a", 100, 64, 64, vec![]);
+        g.add("b", 64, 64, 64, vec![0]);
+        let plan = choose(
+            &mut SimContext::new(),
+            &c,
+            &g,
+            &SelectOptions::exhaustive(),
+            &SchedulerOptions::default(),
+        );
+        assert_eq!(plan.len(), 2);
+    }
+
+    #[test]
+    fn empty_graph_yields_empty_plan() {
+        let g = ModelGraph::new("empty");
+        let plan = choose(
+            &mut SimContext::new(),
+            &cfg(4),
+            &g,
+            &SelectOptions::default(),
+            &SchedulerOptions::default(),
+        );
+        assert!(plan.is_empty());
+    }
+}

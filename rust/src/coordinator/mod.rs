@@ -17,6 +17,7 @@
 //! groups' execution is not charged to later requests.
 
 use crate::arch::ArchConfig;
+use crate::compile::TilingSpec;
 use crate::serve::engine::{Admission, BatchPolicy, Engine, EngineConfig};
 use crate::serve::traffic::{Arrival, Tenant};
 use crate::sim::SimOptions;
@@ -82,6 +83,13 @@ impl Coordinator {
     /// Override simulation options.
     pub fn with_options(mut self, opts: SimOptions) -> Self {
         self.opts = opts;
+        self
+    }
+
+    /// Use a tiling spec for every group's compile — e.g.
+    /// [`TilingSpec::auto`] for per-layer strategy selection.
+    pub fn with_spec(mut self, spec: TilingSpec) -> Self {
+        self.opts.spec = spec;
         self
     }
 
@@ -208,6 +216,21 @@ mod tests {
         assert_eq!(r8.completions[0].ops, 8 * r1.completions[0].ops);
         // Throughput grows sub-linearly but meaningfully (Fig. 11 BERT).
         assert!(r8.achieved_ops > 2.0 * r1.achieved_ops);
+    }
+
+    #[test]
+    fn per_layer_spec_never_hurts_makespan() {
+        let m = zoo::by_name("bert-medium").unwrap();
+        let reqs = vec![Request::new(0, m, 1)];
+        let base = Coordinator::new(cfg()).serve(&reqs);
+        let auto = Coordinator::new(cfg()).with_spec(TilingSpec::auto()).serve(&reqs);
+        assert_eq!(auto.completions.len(), 1);
+        assert!(
+            auto.makespan_s <= base.makespan_s,
+            "auto {} vs rxr {}",
+            auto.makespan_s,
+            base.makespan_s
+        );
     }
 
     #[test]

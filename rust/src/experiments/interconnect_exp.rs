@@ -103,30 +103,39 @@ pub fn fig12a(opts: &ExpOptions) -> Result<()> {
         &["interconnect", "pods", "tdp_w", "eff_tops", "icn_power_w"],
     )?;
     let mut table = Table::new(&["type", "pods", "TDP W", "eff TOps/s", "icn W"]);
-    // Fan the (interconnect × pods × benchmark) grid across cores.
+    // Compile once per (pod count × benchmark) — a Global-spec artifact
+    // is geometry-bound but interconnect-agnostic — then fan execution
+    // of each compiled artifact across every interconnect variant
+    // (`SweepExecutor::run_compiled`): the sweep pays the compile phase
+    // |pods|×|benches| times instead of ×|kinds| more.
     let sim_opts = SimOptions::default();
-    let cfgs: Vec<ArchConfig> = kinds
-        .iter()
-        .flat_map(|&kind| {
-            pods_sweep.iter().map(move |&pods| {
-                let mut cfg = ArchConfig::with_array(ArrayDims::new(32, 32), pods);
-                cfg.interconnect = kind;
-                cfg
-            })
-        })
-        .collect();
-    let grid: Vec<(usize, usize)> = (0..cfgs.len())
-        .flat_map(|ci| (0..benches.len()).map(move |bi| (ci, bi)))
-        .collect();
-    let utils: Vec<f64> = SweepExecutor::new().run_with_ctx(&grid, |ctx, _, &(ci, bi)| {
-        simulate_with(ctx, &cfgs[ci], &benches[bi], &sim_opts).utilization(&cfgs[ci])
-    });
+    let cfg_for = |kind: Kind, pods: usize| {
+        let mut cfg = ArchConfig::with_array(ArrayDims::new(32, 32), pods);
+        cfg.interconnect = kind;
+        cfg
+    };
+    let ex = SweepExecutor::new();
+    let mut ctx = crate::sim::SimContext::new();
+    // cells[pi·|benches| + bi][ki] = utilization of bench bi on kind ki.
+    let mut cells: Vec<Vec<f64>> = Vec::with_capacity(pods_sweep.len() * benches.len());
+    for &pods in &pods_sweep {
+        let kind_cfgs: Vec<ArchConfig> =
+            kinds.iter().map(|&kind| cfg_for(kind, pods)).collect();
+        for bench in &benches {
+            let cp = crate::compile::compile_with(&mut ctx, &kind_cfgs[0], bench, &sim_opts);
+            let stats = ex.run_compiled(&cp, &kind_cfgs, &sim_opts);
+            cells.push(
+                stats.iter().zip(&kind_cfgs).map(|(s, c)| s.utilization(c)).collect(),
+            );
+        }
+    }
     for (ki, &kind) in kinds.iter().enumerate() {
         for (pi, &pods) in pods_sweep.iter().enumerate() {
-            let ci = ki * pods_sweep.len() + pi;
-            let cfg = &cfgs[ci];
-            let per_bench = &utils[ci * benches.len()..(ci + 1) * benches.len()];
-            let util = per_bench.iter().sum::<f64>() / benches.len() as f64;
+            let cfg = &cfg_for(kind, pods);
+            let util = (0..benches.len())
+                .map(|bi| cells[pi * benches.len() + bi][ki])
+                .sum::<f64>()
+                / benches.len() as f64;
             let tdp = peak_power(cfg).total();
             // Fig. 12a plots effective throughput of the *provisioned*
             // silicon against its own TDP (not normalized to 400 W).

@@ -16,6 +16,10 @@
 //! | fig12b | activation partition size sweep            |
 //! | fig13  | SRAM bank size sweep                       |
 //! | table3 | power & area breakdown                     |
+//!
+//! Beyond the paper: `perlayer` — per-layer tiling-strategy selection
+//! (analytic + exhaustive, via the compile pipeline) vs the best
+//! global strategy, and `ablation` — scheduler design ablations.
 
 pub mod ablation;
 pub mod granularity;
@@ -58,14 +62,15 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<()> {
         "fig13" => memory_exp::fig13(opts),
         "table3" => memory_exp::table3(opts),
         "ablation" => ablation::ablation(opts),
+        "perlayer" => tiling_exp::perlayer(opts),
         other => Err(crate::Error::config(format!("unknown experiment {other}"))),
     }
 }
 
-/// All experiment ids, in paper order.
+/// All experiment ids, in paper order (paper-beyond experiments last).
 pub const ALL: &[&str] = &[
     "fig4", "fig5", "table1", "table2", "fig9", "fig10", "fig11", "fig12a",
-    "fig12b", "fig13", "table3", "ablation",
+    "fig12b", "fig13", "table3", "ablation", "perlayer",
 ];
 
 /// Run the full suite.

@@ -16,6 +16,7 @@
 
 use super::ExpOptions;
 use crate::arch::{ArchConfig, ArrayDims};
+use crate::compile::TilingSpec;
 use crate::error::{Error, Result};
 use crate::serve::{
     analyze, capacity_qps, generate, load_sweep, max_sustainable_qps,
@@ -75,6 +76,11 @@ pub fn serve_cmd(args: &Args, opts: &ExpOptions) -> Result<()> {
     }
     if let Some(k) = args.get_parse::<usize>("coschedule") {
         ecfg.coschedule = k;
+    }
+    if args.flag("per-layer") {
+        // Per-layer tiling-strategy selection at batch-compile time
+        // (never worse than the global r×r default; see crate::compile).
+        ecfg.sim.spec = TilingSpec::auto();
     }
 
     // Deadline: explicit, or 5× the mix's batched per-request service
@@ -193,6 +199,18 @@ mod tests {
         let a = args(
             "serve --model bert-medium --pods 16 --qps 50 --duration 0.05 \
              --seed 7 --max-batch 4",
+        );
+        serve_cmd(&a, &opts).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn serve_cmd_accepts_per_layer_and_extended_models() {
+        let dir = std::env::temp_dir().join("sosa_serve_cmd_pl");
+        let opts = ExpOptions { out_dir: dir.to_str().unwrap().into(), quick: true };
+        let a = args(
+            "serve --model vit-base --pods 16 --qps 20 --duration 0.02 \
+             --seed 7 --max-batch 2 --per-layer",
         );
         serve_cmd(&a, &opts).unwrap();
         std::fs::remove_dir_all(&dir).ok();

@@ -5,11 +5,35 @@
 //! pillars — optimal array granularity (32×32), a Butterfly-2 pod↔bank
 //! interconnect, and `r×r` activation tiling.
 //!
+//! The simulation core is an explicit **compile → schedule → execute**
+//! pipeline around one reusable artifact:
+//!
+//! ```text
+//!  ModelGraph ─┐
+//!  ArchConfig ─┼─▶ compile ──▶ CompiledProgram ──▶ schedule ──▶ execute ──▶ RunStats
+//!  TilingSpec ─┘   (per-layer    (TileProgram +      (pods via     (slice timing
+//!                   strategy      strategies +        pooled        + DRAM model)
+//!                   selection,    analytic est.)      SimContext)
+//!                   tiling)
+//!        reuse:  serve::CostCache memoizes CompiledPrograms per batch
+//!                composition; sweeps execute one artifact across
+//!                interconnect variants (sim::SweepExecutor::run_compiled)
+//! ```
+//!
+//! `sim::simulate*` wrap the pipeline for one-shot callers; everything
+//! that re-runs a workload (the serving engine, load sweeps, the §6
+//! experiment grids) compiles once and re-executes the artifact.
+//!
 //! The crate contains the full system the paper describes:
 //!
 //! * [`workloads`] — a DNN model zoo (ResNet/DenseNet/Inception-v3, BERT
-//!   family) expressed as GEMM-layer graphs with exact dimensions;
-//! * [`tiling`] — the paper's tiling schemes (§3.3) producing tile-op DAGs;
+//!   family, ViT/GPT-2 extensions) expressed as GEMM-layer graphs with
+//!   exact dimensions;
+//! * [`tiling`] — the paper's tiling schemes (§3.3) producing tile-op DAGs,
+//!   with per-layer strategy support;
+//! * [`compile`] — the compile phase: [`compile::TilingSpec`] resolution
+//!   (global / explicit per-layer / automatic selection via the analytic
+//!   model) into a reusable [`compile::CompiledProgram`];
 //! * [`interconnect`] — Butterfly-k / Benes / Crossbar / Mesh / H-tree
 //!   models with real routing feasibility checks and cost models (§3.2);
 //! * [`scheduler`] — the offline greedy time-slice scheduler (§4.2);
@@ -37,6 +61,7 @@
 
 pub mod analytic;
 pub mod arch;
+pub mod compile;
 pub mod coordinator;
 pub mod e2e;
 pub mod error;
@@ -54,4 +79,5 @@ pub mod util;
 pub mod workloads;
 
 pub use arch::{ArchConfig, ArrayDims};
+pub use compile::{CompiledProgram, TilingSpec};
 pub use error::{Error, Result};

@@ -55,7 +55,11 @@ fn cmd_simulate(args: &Args) {
     let name = args.get_or("model", "resnet50");
     let batch: usize = args.get_parse("batch").unwrap_or(1);
     let model = zoo::by_name(name).expect("unknown model").with_batch(batch);
-    let stats = simulate(&cfg, &model, &SimOptions::default());
+    let mut opts = SimOptions::default();
+    if args.flag("per-layer") {
+        opts.spec = sosa::compile::TilingSpec::auto();
+    }
+    let stats = simulate(&cfg, &model, &opts);
     println!("{} on {} pods of {} ({}):", model.name, cfg.num_pods, cfg.array, cfg.interconnect);
     println!("  latency      : {:.3} ms", stats.exec_seconds(&cfg) * 1e3);
     println!("  utilization  : {:.1} %", 100.0 * stats.utilization(&cfg));
@@ -128,7 +132,7 @@ fn cmd_e2e(args: &Args) {
 }
 
 fn cmd_list() {
-    for m in zoo::benchmarks() {
+    for m in zoo::extended() {
         println!("{:20} {:7.2} GMACs  {:4} layers", m.name,
                  m.total_macs() as f64 / 1e9, m.ops.len());
     }
@@ -145,7 +149,7 @@ fn main() {
             eprintln!("usage: sosa <simulate|serve|e2e|list> [options]");
             eprintln!("  simulate --model resnet50 --array 32x32 --pods 256 \\");
             eprintln!("           [--interconnect butterfly2|benes|crossbar|mesh|htree]");
-            eprintln!("           [--batch N] [--bank-kb 256]");
+            eprintln!("           [--batch N] [--bank-kb 256] [--per-layer]");
             eprintln!("  serve    --models resnet152,bert-medium [--single-tenant]");
             eprintln!("  e2e      [--artifacts artifacts]");
             eprintln!("  list");

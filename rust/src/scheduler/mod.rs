@@ -1104,5 +1104,20 @@ mod prop_tests {
         assert_eq!(s1.tile_slots, p3.tile_slots);
         assert_eq!(s1.pp_slots, p3.pp_slots);
         assert_eq!(s1.stats, p3.stats);
+
+        // Compile path: scheduling a reusable CompiledProgram — cold,
+        // warm, and after context pollution — is bit-identical to the
+        // fused cold path above.
+        let opts = crate::sim::SimOptions::default();
+        let cp = crate::compile::compile(&cfg, &g, &opts);
+        let c1 = cp.schedule_with(&mut SimContext::new(), &cfg, &opts);
+        let c2 = cp.schedule_with(&mut ctx, &cfg, &opts);
+        let _ = schedule_with(&mut ctx, &other_cfg, &other_prog);
+        let c3 = cp.schedule_with(&mut ctx, &cfg, &opts);
+        for c in [&c1, &c2, &c3] {
+            assert_eq!(s1.tile_slots, c.tile_slots);
+            assert_eq!(s1.pp_slots, c.pp_slots);
+            assert_eq!(s1.stats, c.stats);
+        }
     }
 }

@@ -6,9 +6,10 @@
 //! tenant; a dynamic batcher launches when a batch fills
 //! (`max_batch`), when the head request has waited `max_wait_s`, or
 //! when the trace is drained.  Batch execution time comes from the
-//! cycle-level cost model (`simulate_multi`) through a memoized
-//! [`CostCache`], so million-request traces cost only a handful of
-//! simulator invocations.
+//! cycle-level cost model — each batch composition is **compiled once**
+//! into a reusable [`crate::compile::CompiledProgram`] and executed
+//! through the memoized [`CostCache`], so million-request traces cost
+//! only a handful of compile + execute invocations.
 //!
 //! The loop is strictly deterministic: time advances monotonically,
 //! ties break on tenant index, and no wall-clock or hash-iteration
@@ -18,7 +19,8 @@
 use std::collections::{HashMap, VecDeque};
 
 use crate::arch::ArchConfig;
-use crate::sim::{simulate_multi_with, SimContext, SimOptions};
+use crate::compile::CompiledProgram;
+use crate::sim::{SimContext, SimOptions};
 use crate::stats::RunStats;
 use crate::workloads::ModelGraph;
 
@@ -176,20 +178,45 @@ pub struct CostEntry {
     pub stats: RunStats,
 }
 
-/// Memoizes `simulate_multi` over batch-group compositions — the key
-/// is the exact ordered `(tenant, batch)` list, so distinct group
-/// shapes are simulated once per engine configuration.  Cache misses
-/// run on a pooled [`SimContext`] (unless `opts.pooling` is off), so
-/// even the misses skip the scheduler's per-run allocation.
+/// Two-level memoization over batch-group compositions — the key is
+/// the exact ordered `(tenant, batch)` list:
+///
+/// 1. **Compiled programs**: each distinct composition is compiled
+///    once ([`crate::compile::compile_multi_with`] — merged tiling +
+///    per-layer strategy resolution) and the [`CompiledProgram`] is
+///    cached, keyed by the composition (the model set, batch sizes and
+///    tiling spec are fixed per cache).
+/// 2. **Batch costs**: the executed [`RunStats`]/seconds per
+///    composition, so repeated groups cost a `HashMap` hit.
+///
+/// Cache misses run on a pooled [`SimContext`] (unless `opts.pooling`
+/// is off, the cold A/B baseline — scheduler state rebuilt, the
+/// program recompiled per miss and not retained, mimicking the old
+/// fused path), so even the misses skip the scheduler's per-run
+/// allocation.
+///
+/// Retention: both maps live for the cache's lifetime.  Their
+/// cardinality is the number of *distinct* compositions the batcher
+/// produces — bounded by the batch-size × tenant-group combinations,
+/// not the trace length (the premise that makes memoization pay) —
+/// but a compiled program is orders of magnitude larger than a cost
+/// entry, so callers juggling many caches (per-worker, per-partition)
+/// should drop caches they are done with rather than hoard them.
 #[derive(Debug)]
 pub struct CostCache {
     cfg: ArchConfig,
     opts: SimOptions,
     models: Vec<ModelGraph>,
     map: HashMap<Vec<(usize, usize)>, CostEntry>,
+    programs: HashMap<Vec<(usize, usize)>, CompiledProgram>,
     ctx: SimContext,
-    /// Simulator invocations so far.
+    /// Simulator (execute-phase) invocations so far.
     pub sim_calls: u64,
+    /// Compile-phase invocations so far.  Each distinct composition
+    /// compiles at most once on the pooled path (also via
+    /// [`CostCache::program`], which compiles without executing); with
+    /// `pooling` off it recompiles per cost miss.
+    pub compile_calls: u64,
 }
 
 impl CostCache {
@@ -200,8 +227,10 @@ impl CostCache {
             opts,
             models,
             map: HashMap::new(),
+            programs: HashMap::new(),
             ctx: SimContext::new(),
             sim_calls: 0,
+            compile_calls: 0,
         }
     }
 
@@ -210,29 +239,58 @@ impl CostCache {
         self.models.len()
     }
 
-    /// Cost of a batch group given as `(tenant index, batch units)`
-    /// entries (order is the co-schedule order).
-    pub fn cost(&mut self, comp: &[(usize, usize)]) -> CostEntry {
-        if let Some(e) = self.map.get(comp) {
-            return e.clone();
+    /// Compiled programs currently cached.
+    pub fn programs_cached(&self) -> usize {
+        self.programs.len()
+    }
+
+    /// Compile (or fetch) the program for a composition without
+    /// executing it.
+    pub fn program(&mut self, comp: &[(usize, usize)]) -> &CompiledProgram {
+        self.ensure_program(comp);
+        self.programs.get(comp).expect("ensured above")
+    }
+
+    fn ensure_program(&mut self, comp: &[(usize, usize)]) {
+        if self.programs.contains_key(comp) {
+            return;
         }
         let batched: Vec<ModelGraph> = comp
             .iter()
             .map(|&(k, b)| self.models[k].with_batch(b.max(1)))
             .collect();
         let refs: Vec<&ModelGraph> = batched.iter().collect();
-        if !self.opts.pooling {
-            // Cold A/B baseline: rebuild the scheduler state per call.
-            self.ctx = SimContext::new();
+        let cp = crate::compile::compile_multi_with(&mut self.ctx, &self.cfg, &refs, &self.opts);
+        self.compile_calls += 1;
+        self.programs.insert(comp.to_vec(), cp);
+    }
+
+    /// Cost of a batch group given as `(tenant index, batch units)`
+    /// entries (order is the co-schedule order).
+    pub fn cost(&mut self, comp: &[(usize, usize)]) -> CostEntry {
+        if let Some(e) = self.map.get(comp) {
+            return e.clone();
         }
-        let stats = simulate_multi_with(&mut self.ctx, &self.cfg, &refs, &self.opts);
+        if !self.opts.pooling {
+            // Cold A/B baseline: rebuild the scheduler state and
+            // recompile per call (the fused pre-pipeline path).
+            self.ctx = SimContext::new();
+            self.programs.remove(comp);
+        }
+        self.ensure_program(comp);
+        let cp = self.programs.get(comp).expect("ensured above");
+        let stats = cp.execute_with(&mut self.ctx, &self.cfg, &self.opts);
         let entry = CostEntry {
             seconds: stats.exec_seconds(&self.cfg),
-            ops: batched.iter().map(ModelGraph::total_ops).sum(),
+            ops: cp.models.iter().map(ModelGraph::total_ops).sum(),
             stats,
         };
         self.sim_calls += 1;
         self.map.insert(comp.to_vec(), entry.clone());
+        if !self.opts.pooling {
+            // The fused baseline held no artifact; don't retain one.
+            self.programs.remove(comp);
+        }
         entry
     }
 }
@@ -566,6 +624,41 @@ mod tests {
         // Batch sizes range over 1..=4 → at most 4 distinct sims.
         assert!(rep.sim_calls <= 4, "sim_calls {}", rep.sim_calls);
         assert!(rep.batches < arrivals.len() as u64, "batching must merge");
+    }
+
+    #[test]
+    fn cost_cache_compiles_each_composition_once() {
+        let tenants = vec![toy_tenant("a")];
+        let models: Vec<ModelGraph> = tenants.iter().map(|t| t.model.clone()).collect();
+        let mut cache = CostCache::new(toy_cfg(), models, fast_sim());
+        let a1 = cache.cost(&[(0, 1)]);
+        let a2 = cache.cost(&[(0, 1)]);
+        let b = cache.cost(&[(0, 4)]);
+        assert_eq!(a1.seconds, a2.seconds);
+        assert!(b.seconds > a1.seconds, "bigger batch runs longer");
+        assert_eq!(cache.sim_calls, 2, "two distinct compositions executed");
+        assert_eq!(cache.compile_calls, 2, "each compiled exactly once");
+        assert_eq!(cache.programs_cached(), 2);
+        // The compiled artifact is directly addressable too.
+        assert_eq!(cache.program(&[(0, 4)]).models[0].ops[0].m, 4 * 64);
+        assert_eq!(cache.compile_calls, 2, "program() reuses the cache");
+    }
+
+    #[test]
+    fn cold_cost_cache_matches_pooled() {
+        // pooling = false (rebuild + recompile per miss) must be a pure
+        // A/B toggle: identical entries.
+        let tenants = vec![toy_tenant("a")];
+        let models: Vec<ModelGraph> = tenants.iter().map(|t| t.model.clone()).collect();
+        let mut warm = CostCache::new(toy_cfg(), models.clone(), fast_sim());
+        let cold_opts = SimOptions { pooling: false, ..fast_sim() };
+        let mut cold = CostCache::new(toy_cfg(), models, cold_opts);
+        for comp in [vec![(0usize, 1usize)], vec![(0, 3)], vec![(0, 1)]] {
+            let w = warm.cost(&comp);
+            let c = cold.cost(&comp);
+            assert_eq!(w.seconds, c.seconds);
+            assert_eq!(w.stats, c.stats);
+        }
     }
 
     #[test]

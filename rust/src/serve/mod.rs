@@ -10,9 +10,11 @@
 //! * [`traffic`] — open-loop arrival generation (Poisson, bursty MMPP,
 //!   trace replay) over the model zoo with a seeded RNG;
 //! * [`engine`] — per-tenant queues, dynamic batching (max-batch +
-//!   max-wait), admission control, and memoized batch costs from
-//!   `simulate`/`simulate_multi` so million-request traces need only a
-//!   handful of simulator invocations;
+//!   max-wait), admission control, and a two-level cost cache: each
+//!   batch composition is compiled once into a reusable
+//!   [`crate::compile::CompiledProgram`] and its executed cost
+//!   memoized, so million-request traces need only a handful of
+//!   compile + execute invocations;
 //! * [`partition`] — static pod partitioning for multi-tenancy: each
 //!   tenant gets a power-of-two pod slice simulated as its own
 //!   sub-[`crate::ArchConfig`];

@@ -8,6 +8,14 @@
 //! whole machine, each tenant owns a pod slice and the engines run
 //! concurrently, so one tenant's long batches cannot head-of-line
 //! block another's.
+//!
+//! Each partition engine carries its own [`CostCache`], so batch
+//! compositions are **compiled once per partition geometry** (the
+//! sub-configuration's pod count changes the tiling) and re-executed
+//! from the cached [`crate::compile::CompiledProgram`] thereafter;
+//! `ecfg.sim.spec` — including per-layer
+//! [`crate::compile::TilingSpec::Auto`] selection — applies per
+//! sub-accelerator.
 
 use crate::arch::ArchConfig;
 use crate::error::{Error, Result};
@@ -353,6 +361,36 @@ mod tests {
         assert_eq!(c1.makespan_s, c2.makespan_s);
         assert_eq!(c1.sim_calls, cold.sim_calls);
         assert_eq!(c2.sim_calls, 0, "warm caches add no sims");
+    }
+
+    #[test]
+    fn partitioned_serving_with_per_layer_spec_is_deterministic() {
+        // Auto per-layer selection happens per partition geometry and
+        // must stay deterministic end to end (cached or not).
+        let cfg = ArchConfig::with_array(ArrayDims::new(8, 8), 8);
+        let tenants = vec![tenant("a", 1.0), tenant("b", 2.0)];
+        let arrivals: Vec<Arrival> = (0..8)
+            .map(|i| Arrival {
+                t: i as f64 * 1e-4,
+                tenant: (i % 2) as usize,
+                id: i as u64,
+                batch: 1,
+            })
+            .collect();
+        let ecfg = EngineConfig {
+            policy: BatchPolicy { max_batch: 2, max_wait_s: 1e-3 },
+            sim: SimOptions {
+                spec: crate::compile::TilingSpec::auto(),
+                memory_model: false,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let r1 = serve_partitioned(&cfg, &tenants, &arrivals, &ecfg).unwrap();
+        let mut caches: Vec<Option<CostCache>> = (0..tenants.len()).map(|_| None).collect();
+        let r2 = serve_partitioned_cached(&cfg, &tenants, &arrivals, &ecfg, &mut caches).unwrap();
+        assert_eq!(r1.completed, r2.completed);
+        assert_eq!(r1.completed.len(), 8);
     }
 
     #[test]

@@ -1,11 +1,14 @@
-//! Simulation driver: ties workloads → tiling → scheduling → memory
-//! model into per-benchmark [`RunStats`] — the engine behind every §6
-//! experiment.
+//! Simulation driver: thin wrappers over the compile → schedule →
+//! execute pipeline ([`crate::compile`]) producing per-benchmark
+//! [`RunStats`] — the engine behind every §6 experiment.
 //!
-//! The `*_with` variants reuse a pooled [`SimContext`] across calls,
-//! skipping the per-run allocation of the scheduler's slice ring and
-//! scratch vectors (bit-identical results; see
-//! [`crate::scheduler::SimContext`]).  [`sweep`] fans independent
+//! `simulate*` compile a fresh [`CompiledProgram`] per call and
+//! execute it immediately; callers that re-run the same workload
+//! (serving cost caches, interconnect sweeps) hold on to the artifact
+//! and only re-execute.  The `*_with` variants reuse a pooled
+//! [`SimContext`] across calls, skipping the per-run allocation of the
+//! scheduler's slice ring and scratch vectors (bit-identical results;
+//! see [`crate::scheduler::SimContext`]).  [`sweep`] fans independent
 //! simulation points across cores with one context per worker.
 
 pub mod memory;
@@ -13,9 +16,9 @@ pub mod pod;
 pub mod sweep;
 
 use crate::arch::ArchConfig;
-use crate::scheduler::{Scheduler, SchedulerOptions};
+use crate::compile::{self, CompiledProgram, TilingSpec};
+use crate::scheduler::SchedulerOptions;
 use crate::stats::RunStats;
-use crate::tiling::{tile_model, tile_models, Strategy, TileProgram};
 use crate::workloads::ModelGraph;
 
 pub use crate::scheduler::SimContext;
@@ -24,23 +27,25 @@ pub use sweep::SweepExecutor;
 /// Simulation parameters.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SimOptions {
-    /// Tiling strategy (§3.3; default the paper's r×r).
-    pub strategy: Strategy,
+    /// Tiling specification (§3.3; default the paper's global r×r —
+    /// [`TilingSpec::Auto`] enables per-layer strategy selection).
+    pub spec: TilingSpec,
     /// Scheduler knobs.
     pub sched: SchedulerOptions,
     /// Model the SRAM capacity / DRAM traffic interaction (Fig. 13).
     pub memory_model: bool,
     /// Reuse pooled scheduler contexts (and, in sweeps, memoized batch
-    /// costs) across runs.  On by default; turning it off restores the
-    /// cold rebuild-per-run path — the A/B baseline `benches/sched.rs`
-    /// measures against.  Results are bit-identical either way.
+    /// costs and compiled programs) across runs.  On by default;
+    /// turning it off restores the cold rebuild-per-run path — the A/B
+    /// baseline `benches/sched.rs` measures against.  Results are
+    /// bit-identical either way.
     pub pooling: bool,
 }
 
 impl Default for SimOptions {
     fn default() -> Self {
         SimOptions {
-            strategy: Strategy::RxR,
+            spec: TilingSpec::default(),
             sched: SchedulerOptions::default(),
             memory_model: true,
             pooling: true,
@@ -53,15 +58,16 @@ pub fn simulate(cfg: &ArchConfig, model: &ModelGraph, opts: &SimOptions) -> RunS
     simulate_with(&mut SimContext::new(), cfg, model, opts)
 }
 
-/// [`simulate`] on a pooled context (no per-run scheduler allocation).
+/// [`simulate`] on a pooled context (no per-run scheduler allocation):
+/// compile, then execute.
 pub fn simulate_with(
     ctx: &mut SimContext,
     cfg: &ArchConfig,
     model: &ModelGraph,
     opts: &SimOptions,
 ) -> RunStats {
-    let prog = tile_model(model, cfg.array.r, cfg.array.c, opts.strategy, cfg.num_pods);
-    simulate_program(ctx, cfg, &prog, std::slice::from_ref(model), opts)
+    let cp: CompiledProgram = compile::compile_with(ctx, cfg, model, opts);
+    cp.execute_with(ctx, cfg, opts)
 }
 
 /// Simulate several models co-scheduled (multi-tenancy, §6.1/Fig. 11).
@@ -76,31 +82,8 @@ pub fn simulate_multi_with(
     models: &[&ModelGraph],
     opts: &SimOptions,
 ) -> RunStats {
-    let prog = tile_models(models, cfg.array.r, cfg.array.c, opts.strategy, cfg.num_pods);
-    let owned: Vec<ModelGraph> = models.iter().map(|m| (*m).clone()).collect();
-    simulate_program(ctx, cfg, &prog, &owned, opts)
-}
-
-fn simulate_program(
-    ctx: &mut SimContext,
-    cfg: &ArchConfig,
-    prog: &TileProgram,
-    models: &[ModelGraph],
-    opts: &SimOptions,
-) -> RunStats {
-    let schedule = Scheduler::with_context(cfg, prog, opts.sched.clone(), ctx).run();
-    let mut stats = schedule.stats;
-    if opts.memory_model {
-        let mem = memory::analyze(cfg, models);
-        stats.dram_bytes = mem.dram_bytes;
-        // DRAM stalls extend execution when the memory traffic cannot be
-        // overlapped with compute (Fig. 13's throughput cliff).
-        let dram_cycles = mem.stall_cycles(cfg);
-        if dram_cycles > 0 {
-            stats.total_cycles += dram_cycles;
-        }
-    }
-    stats
+    let cp = compile::compile_multi_with(ctx, cfg, models, opts);
+    cp.execute_with(ctx, cfg, opts)
 }
 
 /// Average a metric over the paper's ten benchmarks (one pooled

@@ -21,7 +21,11 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use super::SimContext;
+use crate::arch::ArchConfig;
+use crate::compile::CompiledProgram;
+use crate::stats::RunStats;
+
+use super::{SimContext, SimOptions};
 
 /// Default worker count: `SOSA_THREADS` or the machine parallelism.
 pub fn default_threads() -> usize {
@@ -66,6 +70,20 @@ impl SweepExecutor {
         F: Fn(usize, &T) -> R + Sync,
     {
         self.run_with_state(items, || (), |_, i, t| f(i, t))
+    }
+
+    /// Execute one [`CompiledProgram`] across many configurations
+    /// (e.g. interconnect variants sharing the compiled geometry) with
+    /// a pooled context per worker; results in `cfgs` order.  This is
+    /// the compile-once-execute-many sweep shape: the tiling and
+    /// strategy selection are paid once, each point only schedules.
+    pub fn run_compiled(
+        &self,
+        cp: &CompiledProgram,
+        cfgs: &[ArchConfig],
+        opts: &SimOptions,
+    ) -> Vec<RunStats> {
+        self.run_with_ctx(cfgs, |ctx, _, cfg| cp.execute_with(ctx, cfg, opts))
     }
 
     /// Map `f` over `items` with one pooled [`SimContext`] per worker;
@@ -177,6 +195,37 @@ mod tests {
         // Item payloads stay aligned with their index.
         for (i, &(_, x)) in counts.iter().enumerate() {
             assert_eq!(x as usize, i);
+        }
+    }
+
+    #[test]
+    fn compiled_execution_across_configs_matches_fused() {
+        use crate::interconnect::Kind;
+        use crate::sim::simulate;
+        let mut g = ModelGraph::new("m");
+        g.add("a", 100, 64, 96, vec![]);
+        g.add("b", 100, 96, 64, vec![0]);
+        let opts = SimOptions { memory_model: false, ..Default::default() };
+        let base = ArchConfig::with_array(ArrayDims::new(16, 16), 16);
+        let cp = crate::compile::compile(&base, &g, &opts);
+        let cfgs: Vec<ArchConfig> = [
+            Kind::Butterfly { expansion: 2 },
+            Kind::Crossbar,
+            Kind::Benes,
+            Kind::Mesh,
+        ]
+        .iter()
+        .map(|&kind| {
+            let mut c = base.clone();
+            c.interconnect = kind;
+            c
+        })
+        .collect();
+        let seq = SweepExecutor::with_threads(1).run_compiled(&cp, &cfgs, &opts);
+        let par = SweepExecutor::with_threads(4).run_compiled(&cp, &cfgs, &opts);
+        assert_eq!(seq, par, "thread count must not change compiled execution");
+        for (cfg, s) in cfgs.iter().zip(&seq) {
+            assert_eq!(*s, simulate(cfg, &g, &opts), "{}", cfg.interconnect);
         }
     }
 

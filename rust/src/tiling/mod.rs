@@ -32,12 +32,25 @@ pub enum Strategy {
 impl Strategy {
     /// The partition size for a layer with `m` rows on an array with
     /// `r` rows.
+    ///
+    /// [`TileOp`] stores tile dims and row-group indices as `u16`, so
+    /// the result is clamped to keep both the tile height
+    /// (`k_part <= u16::MAX`) and the row-group count
+    /// (`ceil(m / k_part) <= u16::MAX`) representable.  Unclamped, a
+    /// `NoPartition` layer with `m > 65535` (e.g. a batched CNN) or a
+    /// tiny `Fixed(k)` on a huge `m` would silently truncate through
+    /// the `as u16` casts and break MAC conservation.
     pub fn k_part(&self, m: usize, r: usize) -> usize {
-        match *self {
+        let want = match *self {
             Strategy::RxR => r.min(m.max(1)),
             Strategy::NoPartition => m.max(1),
             Strategy::Fixed(k) => k.min(m.max(1)).max(1),
-        }
+        };
+        // Not Ord::clamp: for absurd m (> u16::MAX²) the index floor
+        // exceeds the dim cap and clamp would panic; cap wins instead.
+        let max_dim = u16::MAX as usize;
+        let min_for_index = ceil_div(m.max(1), max_dim);
+        want.max(min_for_index).min(max_dim)
     }
 }
 
@@ -190,6 +203,32 @@ pub fn tile_model(
     prog
 }
 
+/// Tile a model with a **per-layer** strategy choice — the compile
+/// pipeline's entry point ([`crate::compile`]).  `strategies[i]`
+/// applies to `model.ops[i]`; with a uniform vector this is exactly
+/// [`tile_model`].
+pub fn tile_model_per_layer(
+    model: &ModelGraph,
+    r: usize,
+    c: usize,
+    strategies: &[Strategy],
+    pods: usize,
+) -> TileProgram {
+    assert_eq!(
+        strategies.len(),
+        model.ops.len(),
+        "one strategy per layer ({} layers, {} strategies)",
+        model.ops.len(),
+        strategies.len()
+    );
+    let mut prog = TileProgram::default();
+    for (op, &strategy) in model.ops.iter().zip(strategies) {
+        add_layer(&mut prog, op, r, c, strategy, pods);
+    }
+    debug_assert_eq!(prog.total_macs, model.total_macs());
+    prog
+}
+
 /// Cap on psum-subchain splitting.  The paper's post-processors
 /// aggregate tile *pairs* (§4.2: "post-processors work in pairs to
 /// perform tile aggregations"), so a group's accumulation splits at
@@ -281,19 +320,17 @@ fn add_layer(
     prog.layers.push(lt);
 }
 
-/// Tile several models into one merged program (multi-tenancy, §6.1).
-/// Layers are interleaved round-robin so the scheduler sees both
-/// tenants' work concurrently; intra-model dependencies are remapped.
-pub fn tile_models(
-    models: &[&ModelGraph],
-    r: usize,
-    c: usize,
-    strategy: Strategy,
-    pods: usize,
-) -> TileProgram {
-    let mut prog = TileProgram::default();
+/// Merge several models into one graph with layers interleaved
+/// round-robin (multi-tenancy, §6.1) and intra-model dependencies
+/// remapped to the merged indices.  The merged layer order is the
+/// layer order [`tile_models`] tiles and the per-layer strategy
+/// vectors of [`crate::compile`] address.
+pub fn merge_graphs(models: &[&ModelGraph]) -> ModelGraph {
+    let name = models.iter().map(|m| m.name.as_str()).collect::<Vec<_>>().join("+");
+    let mut merged = ModelGraph::new(name);
     // Per model: map original layer index -> merged layer index.
-    let mut maps: Vec<Vec<u32>> = models.iter().map(|m| vec![u32::MAX; m.ops.len()]).collect();
+    let mut maps: Vec<Vec<usize>> =
+        models.iter().map(|m| vec![usize::MAX; m.ops.len()]).collect();
     let mut cursors = vec![0usize; models.len()];
     loop {
         let mut progressed = false;
@@ -303,20 +340,27 @@ pub fn tile_models(
             }
             progressed = true;
             let op = &model.ops[cursors[mi]];
-            // Remap deps through this model's map.
-            let remapped = GemmOp {
-                deps: op.deps.iter().map(|&d| maps[mi][d] as usize).collect(),
-                ..op.clone()
-            };
-            maps[mi][cursors[mi]] = prog.layers.len() as u32;
-            add_layer(&mut prog, &remapped, r, c, strategy, pods);
+            let deps: Vec<usize> = op.deps.iter().map(|&d| maps[mi][d]).collect();
+            maps[mi][cursors[mi]] = merged.add(op.name.clone(), op.m, op.k, op.n, deps);
             cursors[mi] += 1;
         }
         if !progressed {
             break;
         }
     }
-    prog
+    merged
+}
+
+/// Tile several models into one merged program (multi-tenancy, §6.1):
+/// [`merge_graphs`] followed by [`tile_model`] on the merged graph.
+pub fn tile_models(
+    models: &[&ModelGraph],
+    r: usize,
+    c: usize,
+    strategy: Strategy,
+    pods: usize,
+) -> TileProgram {
+    tile_model(&merge_graphs(models), r, c, strategy, pods)
 }
 
 #[cfg(test)]
@@ -415,6 +459,151 @@ mod tests {
             p.total_macs,
             g1.total_macs() + g2.total_macs()
         );
+    }
+
+    #[test]
+    fn per_layer_uniform_matches_global() {
+        let mut g = ModelGraph::new("two");
+        let a = g.add("a", 100, 64, 96, vec![]);
+        g.add("b", 50, 96, 64, vec![a]);
+        let global = tile_model(&g, 32, 32, Strategy::RxR, 16);
+        let per = tile_model_per_layer(&g, 32, 32, &[Strategy::RxR, Strategy::RxR], 16);
+        assert_eq!(global.tile_ops.len(), per.tile_ops.len());
+        assert_eq!(global.total_macs, per.total_macs);
+        for (x, y) in global.layers.iter().zip(&per.layers) {
+            assert_eq!((x.k_part, x.tm, x.tk, x.tn, x.ways), (y.k_part, y.tm, y.tk, y.tn, y.ways));
+        }
+    }
+
+    #[test]
+    fn per_layer_heterogeneous_partitions() {
+        let mut g = ModelGraph::new("two");
+        g.add("a", 128, 32, 32, vec![]);
+        g.add("b", 128, 32, 32, vec![]);
+        let p = tile_model_per_layer(
+            &g,
+            32,
+            32,
+            &[Strategy::RxR, Strategy::Fixed(64)],
+            0,
+        );
+        assert_eq!(p.layers[0].k_part, 32);
+        assert_eq!(p.layers[1].k_part, 64);
+        assert_eq!(p.layers[0].tm, 4);
+        assert_eq!(p.layers[1].tm, 2);
+        assert_eq!(p.total_macs, g.total_macs());
+    }
+
+    #[test]
+    fn merge_graphs_matches_tile_models_layer_order() {
+        let mut g1 = ModelGraph::new("m1");
+        let a = g1.add("a", 32, 32, 32, vec![]);
+        g1.add("b", 32, 32, 32, vec![a]);
+        let mut g2 = ModelGraph::new("m2");
+        g2.add("x", 32, 32, 32, vec![]);
+        let merged = merge_graphs(&[&g1, &g2]);
+        assert_eq!(merged.name, "m1+m2");
+        assert_eq!(merged.ops.len(), 3);
+        // Round-robin: m1.a, m2.x, m1.b — with b's dep remapped to 0.
+        assert_eq!(merged.ops[0].name, "a");
+        assert_eq!(merged.ops[1].name, "x");
+        assert_eq!(merged.ops[2].name, "b");
+        assert_eq!(merged.ops[2].deps, vec![0]);
+        merged.validate().unwrap();
+    }
+
+    #[test]
+    fn huge_m_no_partition_clamps_to_u16_tile_height() {
+        // NoPartition on m > u16::MAX used to truncate the tile height
+        // through the `as u16` cast and lose MACs; the clamp splits the
+        // layer into u16-sized row groups instead.
+        let m = 100_000usize;
+        let p = tile_model(&toy(m, 32, 32), 32, 32, Strategy::NoPartition, 0);
+        assert_eq!(p.total_macs, (m * 32 * 32) as u64);
+        assert_eq!(p.layers[0].tm, 2, "100k rows split into two u16 groups");
+        assert!(p.tile_ops.iter().all(|t| t.m as usize <= u16::MAX as usize));
+    }
+
+    #[test]
+    fn huge_m_tiny_fixed_clamps_row_group_index() {
+        // Fixed(1) on m = 100k would need 100k row groups — more than
+        // the u16 `i` index holds; the clamp rounds the partition up.
+        let m = 100_000usize;
+        let p = tile_model(&toy(m, 8, 8), 8, 8, Strategy::Fixed(1), 0);
+        assert_eq!(p.total_macs, (m * 8 * 8) as u64);
+        let lt = &p.layers[0];
+        assert!(lt.tm <= u16::MAX as usize, "tm {} must fit u16", lt.tm);
+        assert_eq!(lt.k_part, 2, "partition rounded up to fit the index");
+    }
+
+    /// Satellite audit (m % k_part != 0, k < r): per layer, the tile
+    /// ops' MACs sum to the GEMM's MACs exactly, and the psum-chain
+    /// structure is well-formed for every strategy — each (i, l)
+    /// group's j-axis splits into `ways` consecutive subchains whose
+    /// tails are exactly the pp op's merge inputs.
+    #[test]
+    fn prop_mac_conservation_and_chain_structure() {
+        forall(80, |rng| {
+            let m = rng.range(1, 400);
+            let k = rng.range(1, 400);
+            let n = rng.range(1, 400);
+            let r = *rng.choose(&[8usize, 16, 32, 64]);
+            let c = *rng.choose(&[8usize, 16, 32, 64]);
+            let fixed = Strategy::Fixed(rng.range(1, 512));
+            let strat = *rng.choose(&[Strategy::RxR, Strategy::NoPartition, fixed]);
+            let pods = rng.range(0, 64);
+            let g = toy(m, k, n);
+            let p = tile_model(&g, r, c, strat, pods);
+            let lt = &p.layers[0];
+
+            // (1) MAC conservation, per layer and in total.
+            let op_macs: u64 = p.tile_ops.iter().map(TileOp::macs).sum();
+            crate::prop_assert!(
+                op_macs == g.ops[0].macs() && p.total_macs == op_macs,
+                "tile-op macs {} != gemm macs {}", op_macs, g.ops[0].macs()
+            );
+
+            // (2) Chain structure: per (i, l) group, chain step j links
+            // to j-1 within a subchain and starts fresh at subchain
+            // boundaries; the subchain tails are the pp op's inputs.
+            let sub_len = lt.sub_len();
+            for i in 0..lt.tm {
+                for l in 0..lt.tn {
+                    let mut tails: Vec<u32> = Vec::new();
+                    for j in 0..lt.tk {
+                        let id = lt.op_id(i, j, l) as usize;
+                        let expect = if j % sub_len == 0 {
+                            None
+                        } else {
+                            Some(lt.op_id(i, j - 1, l))
+                        };
+                        crate::prop_assert!(
+                            p.tile_ops[id].psum_dep == expect,
+                            "psum_dep mismatch at (i={i}, j={j}, l={l})"
+                        );
+                        if j + 1 == lt.tk || (j + 1) % sub_len == 0 {
+                            tails.push(id as u32);
+                        }
+                    }
+                    let pp = &p.pp_ops[lt.group(i, l)];
+                    crate::prop_assert!(
+                        (pp.i as usize, pp.l as usize) == (i, l),
+                        "pp op order mismatch at ({i}, {l})"
+                    );
+                    crate::prop_assert!(
+                        pp.tails == tails,
+                        "pp tails {:?} != chain tails {:?} at ({i}, {l})",
+                        pp.tails,
+                        tails
+                    );
+                    crate::prop_assert!(
+                        pp.tails.len() <= lt.ways,
+                        "more subchains than ways"
+                    );
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

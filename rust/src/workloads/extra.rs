@@ -1,9 +1,12 @@
 //! Zoo extensions beyond the paper's ten benchmarks: VGG-16 (the
 //! classic compute-heavy CNN), MobileNet-V2 (depthwise convolutions —
-//! a worst case for weight-stationary arrays), and a GPT-2-style
-//! decoder (autoregressive Transformer at generation time, seq = 1
-//! incremental or prompt-length prefill).  Useful for stressing the
-//! tiling/scheduling stack outside the paper's envelope.
+//! a worst case for weight-stationary arrays), a GPT-2-style decoder
+//! (autoregressive Transformer at generation time, seq = 1 incremental
+//! or prompt-length prefill), long-context BERT-large ([`bert_large`])
+//! and ViT-Base ([`vit_base`] — token counts like 197 are deliberately
+//! r-unaligned, the per-layer tiling selector's natural prey).  All are
+//! wired into the [`super::zoo`] registry used by the experiments and
+//! the `serve` subcommand.
 
 use super::cnn::out_dim_pub as out_dim;
 use super::ModelGraph;
@@ -88,6 +91,58 @@ pub fn gpt2(name: &str, layers: usize, hidden: usize, heads: usize, ctx: usize) 
     g
 }
 
+/// BERT-large at context length `ctx` — the long-context serving
+/// scenario (the §5 benchmarks pin sequence length 100; serving
+/// traffic routinely runs 384/512-token contexts, where the quadratic
+/// attention GEMMs dominate).
+pub fn bert_large(ctx: usize) -> ModelGraph {
+    super::bert::bert_named("large", ctx)
+}
+
+/// ViT (Dosovitskiy et al. 2021): patch embedding + BERT-style encoder
+/// stack over `(input/patch)² + 1` tokens + classification head.
+pub fn vit(
+    name: &str,
+    layers: usize,
+    hidden: usize,
+    heads: usize,
+    patch: usize,
+    input: usize,
+) -> ModelGraph {
+    assert!(patch > 0 && input % patch == 0, "input must tile into patches");
+    assert!(hidden % heads == 0, "hidden must divide by heads");
+    let patches = (input / patch) * (input / patch);
+    let tokens = patches + 1; // + [CLS]
+    let d = hidden / heads;
+    let mut g = ModelGraph::new(format!("{name}-p{patch}-{input}"));
+    // Patch projection: each patch flattens to 3·patch² features.
+    let mut prev = g.add("patch_embed", patches, 3 * patch * patch, hidden, vec![]);
+    for l in 0..layers {
+        let q = g.add(format!("l{l}_q"), tokens, hidden, hidden, vec![prev]);
+        let k = g.add(format!("l{l}_k"), tokens, hidden, hidden, vec![prev]);
+        let v = g.add(format!("l{l}_v"), tokens, hidden, hidden, vec![prev]);
+        let mut ctx_ids = Vec::with_capacity(heads);
+        for hd in 0..heads {
+            let s_id = g.add(format!("l{l}_h{hd}_scores"), tokens, d, tokens, vec![q, k]);
+            let c_id = g.add(format!("l{l}_h{hd}_ctx"), tokens, tokens, d, vec![s_id, v]);
+            ctx_ids.push(c_id);
+        }
+        let o = g.add(format!("l{l}_out"), tokens, hidden, hidden, ctx_ids);
+        let f1 = g.add(format!("l{l}_ffn1"), tokens, hidden, 4 * hidden, vec![o]);
+        let f2 = g.add(format!("l{l}_ffn2"), tokens, 4 * hidden, hidden, vec![f1]);
+        prev = f2;
+    }
+    g.add("head", 1, hidden, 1000, vec![prev]);
+    g
+}
+
+/// ViT-Base (12 layers, hidden 768, 12 heads) at `patch`×`patch`
+/// patches over an `input`×`input` image — e.g. `vit_base(16, 224)`
+/// runs 197 tokens, a deliberately r-unaligned sequence length.
+pub fn vit_base(patch: usize, input: usize) -> ModelGraph {
+    vit("ViT-base", 12, 768, 12, patch, input)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -134,5 +189,47 @@ mod tests {
         g.validate().unwrap();
         let (s, h) = (128u64, 768u64);
         assert_eq!(g.total_macs(), 12 * (12 * s * h * h + 2 * s * s * h));
+    }
+
+    #[test]
+    fn bert_large_tracks_context_length() {
+        let short = bert_large(100);
+        let long = bert_large(384);
+        short.validate().unwrap();
+        long.validate().unwrap();
+        assert_eq!(short.name, "BERT-large-s100");
+        assert_eq!(long.name, "BERT-large-s384");
+        // Quadratic attention term: MACs grow super-linearly in ctx.
+        assert!(long.total_macs() as f64 > 3.84 * short.total_macs() as f64);
+        // Matches the benchmark BERT-large at the same context.
+        assert_eq!(
+            short.total_macs(),
+            crate::workloads::bert::bert_named("large", 100).total_macs()
+        );
+    }
+
+    #[test]
+    fn vit_base_structure_and_macs() {
+        let g = vit_base(16, 224);
+        g.validate().unwrap();
+        assert_eq!(g.name, "ViT-base-p16-224");
+        // patch_embed + 12 × (3 QKV + 24 attn + out + 2 FFN) + head.
+        assert_eq!(g.ops.len(), 1 + 12 * 30 + 1);
+        let emb = &g.ops[0];
+        assert_eq!((emb.m, emb.k, emb.n), (196, 3 * 16 * 16, 768));
+        // Encoder runs 197 tokens (196 patches + CLS) — r-unaligned.
+        assert!(g.ops.iter().any(|o| o.m == 197));
+        // ViT-Base @224 ≈ 17.5 GMACs.
+        let gmacs = g.total_macs() as f64 / 1e9;
+        assert!((15.0..=20.0).contains(&gmacs), "ViT-base {gmacs} GMACs");
+    }
+
+    #[test]
+    fn vit_patch_size_scales_tokens() {
+        let p16 = vit_base(16, 224);
+        let p32 = vit_base(32, 224);
+        let tokens = |g: &ModelGraph| g.ops.iter().map(|o| o.m).max().unwrap();
+        assert_eq!(tokens(&p16), 197);
+        assert_eq!(tokens(&p32), 50);
     }
 }

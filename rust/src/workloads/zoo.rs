@@ -1,7 +1,11 @@
-//! The paper's benchmark suite (§5) and Fig. 5 design-space workloads.
+//! The paper's benchmark suite (§5), Fig. 5 design-space workloads,
+//! and the extended registry (VGG/MobileNet/GPT-2/long-context
+//! BERT/ViT from [`super::extra`]) used by the experiments and the
+//! `serve` subcommand.
 
 use super::bert::bert_named;
 use super::cnn::{densenet, inception_v3, resnet};
+use super::extra;
 use super::ModelGraph;
 
 /// §5's ten benchmarks: seven CNNs at 299×299 input and three BERTs at
@@ -21,12 +25,36 @@ pub fn benchmarks() -> Vec<ModelGraph> {
     ]
 }
 
-/// Look a benchmark up by (case-insensitive) name prefix.
+/// Zoo extensions beyond the §5 suite: scenario coverage for serving
+/// and per-layer tiling experiments.
+pub fn extras() -> Vec<ModelGraph> {
+    vec![
+        extra::vgg16(224),
+        extra::mobilenet_v2(224),
+        extra::gpt2("GPT2-small", 12, 768, 12, 128),
+        extra::bert_large(384),
+        extra::vit_base(16, 224),
+    ]
+}
+
+/// The full registry: the §5 benchmarks followed by [`extras`].
+pub fn extended() -> Vec<ModelGraph> {
+    let mut out = benchmarks();
+    out.extend(extras());
+    out
+}
+
+/// Look a model up by (case-insensitive) name prefix — §5 benchmarks
+/// first (so e.g. `bert-large` keeps resolving to the paper's
+/// seq-100 benchmark), then the extended registry.
 pub fn by_name(name: &str) -> Option<ModelGraph> {
     let lower = name.to_lowercase();
+    let hit = |m: &ModelGraph| m.name.to_lowercase().starts_with(&lower);
+    // Lazily: don't build the (large) extra graphs for benchmark hits.
     benchmarks()
         .into_iter()
-        .find(|m| m.name.to_lowercase().starts_with(&lower))
+        .find(|m| hit(m))
+        .or_else(|| extras().into_iter().find(|m| hit(m)))
 }
 
 /// Fig. 5's CNN workload set: the seven CNNs at input sizes 224 / 256 /
@@ -76,7 +104,27 @@ mod tests {
         assert!(by_name("resnet50").is_some());
         assert!(by_name("ResNet152").is_some());
         assert!(by_name("BERT-large").is_some());
-        assert!(by_name("vgg").is_none());
+        assert!(by_name("alexnet").is_none());
+    }
+
+    #[test]
+    fn extended_registry_resolves_extras() {
+        // Paper benchmarks shadow extras on prefix collisions.
+        assert_eq!(by_name("bert-large").unwrap().name, "BERT-large-s100");
+        assert_eq!(by_name("bert-large-s384").unwrap().name, "BERT-large-s384");
+        assert_eq!(by_name("vit-base").unwrap().name, "ViT-base-p16-224");
+        assert!(by_name("vgg").is_some());
+        assert!(by_name("mobilenet").is_some());
+        assert!(by_name("gpt2").is_some());
+        let all = extended();
+        assert_eq!(all.len(), 15);
+        for m in &all {
+            m.validate().unwrap();
+        }
+        let mut names: Vec<String> = all.iter().map(|m| m.name.clone()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 15, "extended names must stay unique");
     }
 
     #[test]

@@ -5,6 +5,7 @@
 
 use sosa::analytic;
 use sosa::arch::{ArchConfig, ArrayDims};
+use sosa::compile::{compile, SelectOptions, TilingSpec};
 use sosa::coordinator::{Coordinator, Request};
 use sosa::interconnect::Kind;
 use sosa::power::{max_pods_under_tdp, peak_power, TDP_W};
@@ -77,6 +78,72 @@ fn analytic_and_sim_agree_on_ordering() {
     let s32 = simulate(&c32, &m, &o).utilization(&c32);
     let s128 = simulate(&c128, &m, &o).utilization(&c128);
     assert!(s32 > s128);
+}
+
+#[test]
+fn per_layer_selection_never_worse_than_global_rxr() {
+    // Acceptance: across the full §5 workload suite, per-layer strategy
+    // selection (TilingSpec::Auto, scheduler-verified) delivers at
+    // least global r×r's effective throughput — exactly, not within a
+    // tolerance, because deviating plans are kept only when the real
+    // scheduler agrees they finish in fewer cycles.
+    let cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 64);
+    let auto_opts = SimOptions {
+        spec: TilingSpec::auto(),
+        memory_model: false,
+        ..Default::default()
+    };
+    let rxr_opts = SimOptions { memory_model: false, ..Default::default() };
+    for m in zoo::benchmarks() {
+        let auto = simulate(&cfg, &m, &auto_opts);
+        let rxr = simulate(&cfg, &m, &rxr_opts);
+        assert_eq!(auto.useful_macs, rxr.useful_macs, "{}", m.name);
+        assert!(
+            auto.total_cycles <= rxr.total_cycles,
+            "{}: auto {} cycles vs rxr {}",
+            m.name,
+            auto.total_cycles,
+            rxr.total_cycles
+        );
+        assert!(
+            auto.effective_ops_at_tdp(&cfg, TDP_W) >= rxr.effective_ops_at_tdp(&cfg, TDP_W),
+            "{}: per-layer selection lost effective throughput",
+            m.name
+        );
+    }
+}
+
+#[test]
+fn compiled_program_reuse_matches_fused_simulation() {
+    // compile once → execute across interconnect variants and repeated
+    // runs; every execution must equal the fused simulate() result.
+    let m = zoo::by_name("bert-medium").unwrap();
+    let opts = SimOptions { memory_model: false, ..Default::default() };
+    let base = ArchConfig::with_array(ArrayDims::new(32, 32), 64);
+    let cp = compile(&base, &m, &opts);
+    for kind in [Kind::Butterfly { expansion: 2 }, Kind::Benes, Kind::Crossbar] {
+        let mut cfg = base.clone();
+        cfg.interconnect = kind;
+        let direct = simulate(&cfg, &m, &opts);
+        assert_eq!(cp.execute(&cfg, &opts), direct);
+        assert_eq!(cp.execute(&cfg, &opts), direct, "re-execution drifted");
+    }
+}
+
+#[test]
+fn exhaustive_per_layer_mode_is_scheduler_verified_too() {
+    let cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 16);
+    let m = zoo::by_name("bert-medium").unwrap();
+    let ex_opts = SimOptions {
+        spec: TilingSpec::Auto(SelectOptions::exhaustive()),
+        memory_model: false,
+        ..Default::default()
+    };
+    let rxr_opts = SimOptions { memory_model: false, ..Default::default() };
+    let ex = simulate(&cfg, &m, &ex_opts);
+    let rxr = simulate(&cfg, &m, &rxr_opts);
+    assert!(ex.total_cycles <= rxr.total_cycles);
+    assert_eq!(ex.useful_macs, rxr.useful_macs);
 }
 
 #[test]
