@@ -1,13 +1,17 @@
-//! Design-space exploration demo (Fig. 5): sweep array shapes under the
-//! iso-power constraint and print the effective-TOps/s-per-Watt map for
-//! a workload mix.
+//! Design-space exploration demo: the fast analytic Fig. 5 heatmap,
+//! then the typed `sosa::explore` front door — a joint granularity ×
+//! interconnect sweep under the TDP constraint, simulated end to end,
+//! with a Pareto frontier over (effective TOps/s/W, latency).
 //!
 //! ```bash
 //! cargo run --release --example design_space [cnn|bert|mixed]
 //! ```
 
 use sosa::analytic::dse_cell;
+use sosa::explore::{DesignSpace, Explorer, Objective};
+use sosa::interconnect::Kind;
 use sosa::power::TDP_W;
+use sosa::sim::SimOptions;
 use sosa::workloads::zoo;
 
 fn main() {
@@ -50,4 +54,26 @@ fn main() {
          (paper Fig. 5c: optima near 20x32; 32x32 chosen for alignment)",
         best.0, best.1, best.2
     );
+
+    // The typed front door: declare the joint space, constrain it,
+    // simulate every surviving point, extract the frontier.
+    println!("\nexplore API: granularity x interconnect under {TDP_W} W, ResNet-50");
+    let space = DesignSpace::baseline()
+        .square_arrays(&[16, 32, 64])
+        .pods_under_tdp(TDP_W)
+        .interconnects(&[Kind::Butterfly { expansion: 2 }, Kind::Benes])
+        .workloads(vec![zoo::by_name("resnet50").expect("zoo model")])
+        .sim(SimOptions { memory_model: false, ..SimOptions::default() })
+        .under_tdp(TDP_W);
+    let x = Explorer::new().evaluate(&space).expect("explore");
+    let front = x.frontier(&[Objective::EffTopsPerWatt, Objective::Latency]);
+    for &i in &front.ranked_by(&x.records, Objective::EffTopsPerWatt) {
+        let r = &x.records[i];
+        println!(
+            "  pareto: {:24} {:.3} TOps/s/W, {:.3} ms",
+            r.point.label(),
+            r.eff_tops_per_w,
+            r.latency_s * 1e3
+        );
+    }
 }

@@ -3,5 +3,6 @@
 
 pub mod area;
 pub mod config;
+pub mod presets;
 
 pub use config::{ArchConfig, ArrayDims, Precision};

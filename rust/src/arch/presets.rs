@@ -1,0 +1,75 @@
+//! Named configuration presets (§2/§7): the registry behind
+//! `sosa explore --preset` and the experiments' shared starting
+//! points, replacing scattered `ArchConfig::baseline()` call sites.
+//!
+//! | name         | design point                                        |
+//! |--------------|-----------------------------------------------------|
+//! | `baseline`   | the paper's SOSA: 256 pods of 32×32, Butterfly-2    |
+//! | `sosa-256`   | alias of `baseline` (§6's chosen granularity)       |
+//! | `sosa-512`   | 512 pods of 16×16 (Table 2's finest granularity)    |
+//! | `tpu-like`   | monolithic 256×256 array (§2's TPU-class baseline)  |
+//! | `monolithic` | monolithic 512×512 array (Table 2 row 1)            |
+
+use crate::interconnect::Kind;
+
+use super::config::{ArchConfig, ArrayDims};
+
+/// All registered preset names, in registry order.
+pub const NAMES: &[&str] = &["baseline", "sosa-256", "sosa-512", "tpu-like", "monolithic"];
+
+/// Look a preset up by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<ArchConfig> {
+    match name.to_lowercase().as_str() {
+        // The paper's design point (§6): 32×32 granularity, the largest
+        // power-of-two pod count under the 400 W TDP.
+        "baseline" | "sosa-256" => Some(ArchConfig::baseline()),
+        // Table 2's finest granularity: pays the SRAM/interconnect tax
+        // for the highest utilization.
+        "sosa-512" => Some(ArchConfig::with_array(ArrayDims::new(16, 16), 512)),
+        // §2's monolithic TPU-class comparison point: one large array,
+        // so the pod↔bank network degenerates (a crossbar of one port).
+        "tpu-like" => Some(monolithic(256)),
+        // Table 2 row 1: the 512×512 monolithic baseline.
+        "monolithic" => Some(monolithic(512)),
+        _ => None,
+    }
+}
+
+/// A single-pod (monolithic) configuration of `dim×dim`.
+fn monolithic(dim: usize) -> ArchConfig {
+    ArchConfig {
+        interconnect: Kind::Crossbar,
+        ..ArchConfig::with_array(ArrayDims::new(dim, dim), 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_preset_validates() {
+        for name in NAMES {
+            let cfg = by_name(name).unwrap_or_else(|| panic!("{name} missing"));
+            cfg.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn lookup_is_case_insensitive_and_total() {
+        assert_eq!(by_name("Baseline").unwrap(), ArchConfig::baseline());
+        assert_eq!(by_name("sosa-256").unwrap(), ArchConfig::baseline());
+        assert!(by_name("a100").is_none());
+    }
+
+    #[test]
+    fn presets_hit_their_design_points() {
+        let fine = by_name("sosa-512").unwrap();
+        assert_eq!((fine.array.r, fine.num_pods), (16, 512));
+        let tpu = by_name("tpu-like").unwrap();
+        assert_eq!((tpu.array.r, tpu.num_pods), (256, 1));
+        assert_eq!(tpu.interconnect, Kind::Crossbar);
+        let mono = by_name("monolithic").unwrap();
+        assert_eq!((mono.array.r, mono.num_pods), (512, 1));
+    }
+}

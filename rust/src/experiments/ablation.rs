@@ -6,7 +6,7 @@
 //! * U/V multicast/fan-in degrees (§4.1's pipeline-latency knob).
 
 use super::ExpOptions;
-use crate::arch::{ArchConfig, ArrayDims};
+use crate::arch::{presets, ArrayDims};
 use crate::sim::pod::PodTiming;
 use crate::sim::{simulate_with, SimContext, SimOptions};
 use crate::util::{csv::f, CsvWriter, Table};
@@ -15,7 +15,7 @@ use crate::Result;
 
 /// Run the ablation suite.
 pub fn ablation(opts: &ExpOptions) -> Result<()> {
-    let cfg = ArchConfig::baseline();
+    let cfg = presets::by_name("baseline").expect("registered preset");
     let model = zoo::by_name(if opts.quick { "densenet121" } else { "resnet50" }).unwrap();
 
     let mut csv = CsvWriter::create(

@@ -1,10 +1,15 @@
 //! Table 2 (array granularity @400 W) and Fig. 9 (per-benchmark
-//! effective throughput by array size).
+//! effective throughput by array size), declared as
+//! [`DesignSpace`] sweeps: the granularity axis zipped with its §6 pod
+//! provisioning, crossed with the ten benchmarks, evaluated through
+//! the explore pipeline (pooled contexts, parallel executor).  The
+//! CSV/stdout outputs are byte-identical to the pre-`explore`
+//! hand-rolled loops (pinned by `tests/golden.rs`).
 
 use super::ExpOptions;
 use crate::arch::{ArchConfig, ArrayDims};
+use crate::explore::{DesignSpace, Explorer};
 use crate::power::{max_pods_under_tdp, peak_power, throughput_at_tdp, TDP_W};
-use crate::sim::{simulate_with, SimOptions, SweepExecutor};
 use crate::util::{csv::f, CsvWriter, Table};
 use crate::workloads::zoo;
 use crate::Result;
@@ -20,7 +25,7 @@ pub const SIZES: &[(usize, f64, f64)] = &[
     (16, 40.0, 198.9),
 ];
 
-fn config_for(dim: usize) -> ArchConfig {
+pub(crate) fn config_for(dim: usize) -> ArchConfig {
     // 512×512 is the *monolithic* baseline (Table 2 row 1): one array
     // by definition, even though two would fit the 400 W envelope.
     let pods = if dim >= 512 {
@@ -32,11 +37,20 @@ fn config_for(dim: usize) -> ArchConfig {
     ArchConfig::with_array(ArrayDims::new(dim, dim), pods)
 }
 
+/// The Table 2 / Fig. 9 design space: square arrays at the paper's
+/// granularities, each zipped with its §6 pod count (monolithic rule
+/// included), crossed with the ten benchmarks.
+fn granularity_space(dims: &[usize], benches: Vec<crate::workloads::ModelGraph>) -> DesignSpace {
+    let pods: Vec<usize> = dims.iter().map(|&d| config_for(d).num_pods).collect();
+    DesignSpace::baseline()
+        .square_arrays(dims)
+        .pods_zip(&pods)
+        .workloads(benches)
+}
+
 /// Table 2: pods / peak power / peak@400W / util / effective@400W per
 /// array granularity, averaged over the ten benchmarks.
 pub fn table2(opts: &ExpOptions) -> Result<()> {
-    let benches = zoo::benchmarks();
-    let sim_opts = SimOptions::default();
     let mut csv = CsvWriter::create(
         format!("{}/table2.csv", opts.out_dir),
         &["array", "pods", "peak_w", "peak_tops_at_400w", "util", "eff_tops",
@@ -51,19 +65,17 @@ pub fn table2(opts: &ExpOptions) -> Result<()> {
     } else {
         SIZES.to_vec()
     };
-    // Fan the (granularity × benchmark) grid across cores — one pooled
-    // context per worker; rows are assembled in sweep order below.
-    let cfgs: Vec<ArchConfig> = sizes.iter().map(|&(dim, _, _)| config_for(dim)).collect();
-    let grid: Vec<(usize, usize)> = (0..sizes.len())
-        .flat_map(|si| (0..benches.len()).map(move |bi| (si, bi)))
-        .collect();
-    let utils: Vec<f64> = SweepExecutor::new().run_with_ctx(&grid, |ctx, _, &(si, bi)| {
-        simulate_with(ctx, &cfgs[si], &benches[bi], &sim_opts).utilization(&cfgs[si])
-    });
+    // Declare the (granularity × benchmark) grid and evaluate it on
+    // the explore pipeline; records are in enumeration order (size
+    // outer, benchmark inner), so each size's rows slice out directly.
+    let dims: Vec<usize> = sizes.iter().map(|s| s.0).collect();
+    let benches = zoo::benchmarks();
+    let n_bench = benches.len();
+    let x = Explorer::new().evaluate(&granularity_space(&dims, benches))?;
     for (si, &(dim, paper_util, paper_eff)) in sizes.iter().enumerate() {
-        let cfg = &cfgs[si];
-        let per_bench = &utils[si * benches.len()..(si + 1) * benches.len()];
-        let util = per_bench.iter().sum::<f64>() / benches.len() as f64;
+        let recs = &x.records[si * n_bench..(si + 1) * n_bench];
+        let cfg = &recs[0].point.cfg;
+        let util = recs.iter().map(|r| r.utilization).sum::<f64>() / n_bench as f64;
         let tp = throughput_at_tdp(cfg, TDP_W);
         let eff = util * tp.peak_ops_at_tdp / 1e12;
         csv.row(&[
@@ -94,8 +106,6 @@ pub fn table2(opts: &ExpOptions) -> Result<()> {
 
 /// Fig. 9: effective throughput per benchmark per array size.
 pub fn fig9(opts: &ExpOptions) -> Result<()> {
-    let benches = zoo::benchmarks();
-    let sim_opts = SimOptions::default();
     let dims: Vec<usize> =
         if opts.quick { vec![32, 128] } else { vec![16, 32, 64, 128, 256, 512] };
     let mut csv = CsvWriter::create(
@@ -110,27 +120,21 @@ pub fn fig9(opts: &ExpOptions) -> Result<()> {
             }))
             .collect::<Vec<_>>(),
     );
-    // Fan the (granularity × benchmark) grid across cores,
-    // config-major so consecutive items share a context key (each dim
-    // has its own pod count; benchmark-major would rebuild the pooled
-    // fabric ring on every item).  The serial loop below reads the
-    // cells back in deterministic order.
-    let cfgs: Vec<ArchConfig> = dims.iter().map(|&d| config_for(d)).collect();
-    let grid: Vec<(usize, usize)> = (0..dims.len())
-        .flat_map(|di| (0..benches.len()).map(move |mi| (mi, di)))
-        .collect();
-    let cells: Vec<(f64, f64)> = SweepExecutor::new().run_with_ctx(&grid, |ctx, _, &(mi, di)| {
-        let cfg = &cfgs[di];
-        let s = simulate_with(ctx, cfg, &benches[mi], &sim_opts);
-        (s.utilization(cfg), s.effective_ops_at_tdp(cfg, TDP_W) / 1e12)
-    });
+    // Same declarative space as Table 2 — records are size-major
+    // (consecutive points share a pooled-context key), read back
+    // benchmark-major below for the paper's per-model rows.
+    let benches = zoo::benchmarks();
+    let names: Vec<String> = benches.iter().map(|m| m.name.clone()).collect();
+    let n_bench = benches.len();
+    let x = Explorer::new().evaluate(&granularity_space(&dims, benches))?;
     let mut wins32 = 0usize;
-    for (mi, m) in benches.iter().enumerate() {
-        let mut row = vec![m.name.clone()];
+    for (mi, name) in names.iter().enumerate() {
+        let mut row = vec![name.clone()];
         let mut best = (0usize, f64::MIN);
         for (di, &dim) in dims.iter().enumerate() {
-            let (util, eff) = cells[di * benches.len() + mi];
-            csv.row(&[m.name.clone(), format!("{dim}x{dim}"),
+            let rec = &x.records[di * n_bench + mi];
+            let (util, eff) = (rec.utilization, rec.eff_tops);
+            csv.row(&[name.clone(), format!("{dim}x{dim}"),
                       f(util, 4), f(eff, 1)])?;
             row.push(format!("{eff:.0}"));
             if eff > best.1 {
@@ -145,7 +149,7 @@ pub fn fig9(opts: &ExpOptions) -> Result<()> {
     csv.finish()?;
     println!("{table}");
     println!("32x32 wins {wins32}/{} benchmarks (paper: 9/10, BERT-large \
-              the exception)", benches.len());
+              the exception)", n_bench);
     Ok(())
 }
 
@@ -158,5 +162,15 @@ mod tests {
         assert_eq!(config_for(32).num_pods, 256);
         assert_eq!(config_for(128).num_pods, 32);
         assert_eq!(config_for(512).num_pods, 1, "monolithic baseline");
+    }
+
+    #[test]
+    fn granularity_space_reproduces_config_for() {
+        let benches = zoo::benchmarks();
+        let n = benches.len();
+        let e = granularity_space(&[32, 512], benches).enumerate().unwrap();
+        assert_eq!(e.points.len(), 2 * n);
+        assert_eq!(e.points[0].cfg, config_for(32));
+        assert_eq!(e.points[n].cfg, config_for(512));
     }
 }

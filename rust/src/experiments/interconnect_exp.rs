@@ -1,12 +1,16 @@
 //! Table 1 (interconnect metrics) and Fig. 12a (effective throughput
-//! vs TDP per interconnect type).
+//! vs TDP per interconnect type), declared as [`DesignSpace`] sweeps
+//! over the interconnect axis.  Points differing only in fabric share
+//! one compiled artifact per evaluator worker (the explore cache's
+//! form of fig12a's compile-once reuse).  Outputs are byte-identical
+//! to the pre-`explore` loops (`tests/golden.rs`).
 
 use super::ExpOptions;
-use crate::arch::{ArchConfig, ArrayDims};
+use crate::arch::ArrayDims;
+use crate::explore::{DesignSpace, Explorer};
 use crate::interconnect::cost::{interconnect_power_w, PodTraffic};
 use crate::interconnect::Kind;
-use crate::power::{peak_power, throughput_at_tdp, TDP_W};
-use crate::sim::{simulate_with, SimOptions, SweepExecutor};
+use crate::power::peak_power;
 use crate::util::{csv::f, CsvWriter, Table};
 use crate::workloads::zoo;
 use crate::Result;
@@ -32,6 +36,7 @@ pub fn table1(opts: &ExpOptions) -> Result<()> {
         vec!["inception", "resnet50", "densenet121", "bert-medium", "bert-base"]
     };
     let benches: Vec<_> = names.iter().map(|n| zoo::by_name(n).unwrap()).collect();
+    let n_bench = benches.len();
     let pods = 256usize;
     let mut csv = CsvWriter::create(
         format!("{}/table1.csv", opts.out_dir),
@@ -41,29 +46,22 @@ pub fn table1(opts: &ExpOptions) -> Result<()> {
     let mut table = Table::new(&[
         "type", "busy %", "cyc/op", "mW/B", "paper busy", "paper cyc", "paper mW",
     ]);
-    // Fan the (interconnect × benchmark) grid across cores with one
-    // pooled context per worker; rows assemble in KINDS order below.
-    let sim_opts = SimOptions::default();
-    let cfgs: Vec<ArchConfig> = KINDS
-        .iter()
-        .map(|&(kind, _, _, _)| {
-            let mut cfg = ArchConfig::with_array(ArrayDims::new(16, 16), pods);
-            cfg.interconnect = kind;
-            cfg
-        })
-        .collect();
-    let grid: Vec<(usize, usize)> = (0..KINDS.len())
-        .flat_map(|ki| (0..benches.len()).map(move |bi| (ki, bi)))
-        .collect();
-    let cells: Vec<(f64, f64)> = SweepExecutor::new().run_with_ctx(&grid, |ctx, _, &(ki, bi)| {
-        let s = simulate_with(ctx, &cfgs[ki], &benches[bi], &sim_opts);
-        (s.busy_pods_frac(&cfgs[ki]), s.cycles_per_tile_op())
-    });
+    // Declarative (interconnect × benchmark) grid on a 16×16 / 256-pod
+    // geometry; records are kind-major in KINDS order.
+    let kinds: Vec<Kind> = KINDS.iter().map(|&(k, _, _, _)| k).collect();
+    let space = DesignSpace::baseline()
+        .arrays(&[ArrayDims::new(16, 16)])
+        .pods(&[pods])
+        .interconnects(&kinds)
+        .workloads(benches);
+    let x = Explorer::new().evaluate(&space)?;
     for (ki, &(kind, p_busy, p_cyc, p_mw)) in KINDS.iter().enumerate() {
-        let per_bench = &cells[ki * benches.len()..(ki + 1) * benches.len()];
-        let busy =
-            100.0 * per_bench.iter().map(|&(b, _)| b).sum::<f64>() / benches.len() as f64;
-        let cyc = per_bench.iter().map(|&(_, c)| c).sum::<f64>() / benches.len() as f64;
+        let recs = &x.records[ki * n_bench..(ki + 1) * n_bench];
+        let busy = 100.0
+            * recs.iter().map(|r| r.stats.busy_pods_frac(&r.point.cfg)).sum::<f64>()
+            / n_bench as f64;
+        let cyc =
+            recs.iter().map(|r| r.stats.cycles_per_tile_op()).sum::<f64>() / n_bench as f64;
         let mw = kind.mw_per_byte(pods);
         csv.row(&[kind.to_string(), f(busy, 2), f(cyc, 2), f(mw, 2),
                   f(p_busy, 2), f(p_cyc, 2), f(p_mw, 2)])?;
@@ -98,44 +96,36 @@ pub fn fig12a(opts: &ExpOptions) -> Result<()> {
         vec!["resnet50", "bert-base", "densenet121"]
     };
     let benches: Vec<_> = names.iter().map(|n| zoo::by_name(n).unwrap()).collect();
+    let n_bench = benches.len();
     let mut csv = CsvWriter::create(
         format!("{}/fig12a.csv", opts.out_dir),
         &["interconnect", "pods", "tdp_w", "eff_tops", "icn_power_w"],
     )?;
     let mut table = Table::new(&["type", "pods", "TDP W", "eff TOps/s", "icn W"]);
-    // Compile once per (pod count × benchmark) — a Global-spec artifact
-    // is geometry-bound but interconnect-agnostic — then fan execution
-    // of each compiled artifact across every interconnect variant
-    // (`SweepExecutor::run_compiled`): the sweep pays the compile phase
-    // |pods|×|benches| times instead of ×|kinds| more.
-    let sim_opts = SimOptions::default();
-    let cfg_for = |kind: Kind, pods: usize| {
-        let mut cfg = ArchConfig::with_array(ArrayDims::new(32, 32), pods);
-        cfg.interconnect = kind;
-        cfg
+    // Declarative (pods × interconnect × benchmark) grid at 32×32.
+    // A Global-spec artifact is geometry-bound but interconnect-
+    // agnostic, so the evaluator's warm compiled cache pays the
+    // compile phase at most once per (pods × benchmark) key *per
+    // worker* and re-executes across fabrics — bounded-duplicate
+    // compilation versus the hand-rolled sweep's single global
+    // compile (`SweepExecutor::run_compiled`), in exchange for the
+    // whole grid (not just execution) fanning across cores.
+    let space = DesignSpace::baseline()
+        .square_arrays(&[32])
+        .pods(&pods_sweep)
+        .interconnects(&kinds)
+        .workloads(benches);
+    let x = Explorer::new().evaluate(&space)?;
+    let rec = |pi: usize, ki: usize, bi: usize| {
+        &x.records[(pi * kinds.len() + ki) * n_bench + bi]
     };
-    let ex = SweepExecutor::new();
-    let mut ctx = crate::sim::SimContext::new();
-    // cells[pi·|benches| + bi][ki] = utilization of bench bi on kind ki.
-    let mut cells: Vec<Vec<f64>> = Vec::with_capacity(pods_sweep.len() * benches.len());
-    for &pods in &pods_sweep {
-        let kind_cfgs: Vec<ArchConfig> =
-            kinds.iter().map(|&kind| cfg_for(kind, pods)).collect();
-        for bench in &benches {
-            let cp = crate::compile::compile_with(&mut ctx, &kind_cfgs[0], bench, &sim_opts);
-            let stats = ex.run_compiled(&cp, &kind_cfgs, &sim_opts);
-            cells.push(
-                stats.iter().zip(&kind_cfgs).map(|(s, c)| s.utilization(c)).collect(),
-            );
-        }
-    }
     for (ki, &kind) in kinds.iter().enumerate() {
         for (pi, &pods) in pods_sweep.iter().enumerate() {
-            let cfg = &cfg_for(kind, pods);
-            let util = (0..benches.len())
-                .map(|bi| cells[pi * benches.len() + bi][ki])
+            let cfg = &rec(pi, ki, 0).point.cfg;
+            let util = (0..n_bench)
+                .map(|bi| rec(pi, ki, bi).utilization)
                 .sum::<f64>()
-                / benches.len() as f64;
+                / n_bench as f64;
             let tdp = peak_power(cfg).total();
             // Fig. 12a plots effective throughput of the *provisioned*
             // silicon against its own TDP (not normalized to 400 W).

@@ -2,7 +2,7 @@
 //! Table 3 (power & area breakdown).
 
 use super::ExpOptions;
-use crate::arch::{area, ArchConfig};
+use crate::arch::{area, presets, ArchConfig};
 use crate::power::peak_power;
 use crate::sim::{memory, simulate, SimOptions};
 use crate::util::{csv::f, CsvWriter, Table};
@@ -21,7 +21,8 @@ pub fn fig13(opts: &ExpOptions) -> Result<()> {
         if opts.quick { vec![64, 256, 1024] } else { vec![64, 128, 256, 512, 1024] };
     let mut rows = vec![];
     for &kb in &sizes {
-        let cfg = ArchConfig { bank_kb: kb, ..ArchConfig::baseline() };
+        let cfg =
+            ArchConfig { bank_kb: kb, ..presets::by_name("baseline").expect("registered") };
         let stats = simulate(&cfg, &model, &SimOptions::default());
         let mem = memory::analyze(&cfg, std::slice::from_ref(&model));
         rows.push((kb, stats.achieved_ops(&cfg) / 1e12, mem.bandwidth_gbps(&cfg)));
@@ -46,7 +47,7 @@ pub fn fig13(opts: &ExpOptions) -> Result<()> {
 
 /// Table 3: power and area breakdown of the 256-pod baseline.
 pub fn table3(opts: &ExpOptions) -> Result<()> {
-    let cfg = ArchConfig::baseline();
+    let cfg = presets::by_name("baseline").expect("registered preset");
     let p = peak_power(&cfg);
     let a = area::area(&cfg);
     let rows: Vec<(&str, f64, f64, f64, f64)> = vec![

@@ -20,6 +20,15 @@
 //! Beyond the paper: `perlayer` — per-layer tiling-strategy selection
 //! (analytic + exhaustive, via the compile pipeline) vs the best
 //! global strategy, and `ablation` — scheduler design ablations.
+//!
+//! The sweep-shaped experiments (table1/table2/fig9/fig10/fig12a/
+//! fig12b) are *declarative*: each builds a
+//! [`crate::explore::DesignSpace`] over the relevant axes and formats
+//! the evaluated records, instead of hand-rolling config mutations and
+//! simulation loops.  Their CSV outputs are byte-identical to the
+//! pre-`explore` implementations (pinned by `tests/golden.rs`);
+//! shared starting points come from the [`crate::arch::presets`]
+//! registry.
 
 pub mod ablation;
 pub mod granularity;

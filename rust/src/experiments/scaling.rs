@@ -1,9 +1,13 @@
 //! Fig. 10 (effective throughput vs TDP / pod scaling) and Fig. 11
-//! (batch-size and multi-tenancy scaling).
+//! (batch-size and multi-tenancy scaling).  Fig. 10 is declared as two
+//! [`DesignSpace`] sweeps — the SOSA (array × pods) grid and the
+//! monolithic ladder — with byte-identical output to the hand-rolled
+//! loops.
 
 use super::ExpOptions;
-use crate::arch::{ArchConfig, ArrayDims};
+use crate::arch::presets;
 use crate::coordinator::{Coordinator, Request};
+use crate::explore::{DesignSpace, Explorer};
 use crate::power::peak_power;
 use crate::sim::{simulate, simulate_multi, SimOptions};
 use crate::util::{csv::f, CsvWriter, Table};
@@ -19,45 +23,54 @@ pub fn fig10(opts: &ExpOptions) -> Result<()> {
         vec!["resnet50", "resnet152", "bert-base"]
     };
     let benches: Vec<_> = names.iter().map(|n| zoo::by_name(n).unwrap()).collect();
-    let sim_opts = SimOptions::default();
+    let n_bench = benches.len();
     let mut csv = CsvWriter::create(
         format!("{}/fig10.csv", opts.out_dir),
         &["design", "pods_or_dim", "tdp_w", "eff_tops"],
     )?;
     let mut table = Table::new(&["design", "pods/dim", "TDP W", "eff TOps/s"]);
 
+    // One row per (space point ÷ benchmarks): average utilization,
+    // then effective throughput of the provisioned silicon vs its own
+    // TDP.
+    let mut emit = |tag: &str,
+                    label: String,
+                    recs: &[crate::explore::EvalRecord]|
+     -> Result<()> {
+        let cfg = &recs[0].point.cfg;
+        let util = recs.iter().map(|r| r.utilization).sum::<f64>() / n_bench as f64;
+        let tdp = peak_power(cfg).total();
+        let eff = util * cfg.peak_ops() / 1e12;
+        csv.row(&[tag.into(), label.clone(), f(tdp, 1), f(eff, 1)])?;
+        table.row(vec![tag.into(), label, format!("{tdp:.0}"), format!("{eff:.1}")]);
+        Ok(())
+    };
+
     let pod_sweep: Vec<usize> =
         if opts.quick { vec![64, 256] } else { vec![32, 64, 128, 256, 512] };
-    for (dim, tag) in [(32usize, "SOSA-32x32"), (64, "SOSA-64x64")] {
-        for &pods in &pod_sweep {
-            let cfg = ArchConfig::with_array(ArrayDims::new(dim, dim), pods);
-            let mut util = 0.0;
-            for m in &benches {
-                util += simulate(&cfg, m, &sim_opts).utilization(&cfg);
-            }
-            util /= benches.len() as f64;
-            let tdp = peak_power(&cfg).total();
-            let eff = util * cfg.peak_ops() / 1e12;
-            csv.row(&[tag.into(), pods.to_string(), f(tdp, 1), f(eff, 1)])?;
-            table.row(vec![tag.into(), pods.to_string(), format!("{tdp:.0}"),
-                           format!("{eff:.1}")]);
+    // SOSA grid: (32×32, 64×64) × pod ladder, benchmarks inner.
+    let sosa = DesignSpace::baseline()
+        .square_arrays(&[32, 64])
+        .pods(&pod_sweep)
+        .workloads(benches.clone());
+    let x = Explorer::new().evaluate(&sosa)?;
+    for (gi, &tag) in ["SOSA-32x32", "SOSA-64x64"].iter().enumerate() {
+        for (pi, &pods) in pod_sweep.iter().enumerate() {
+            let base = (gi * pod_sweep.len() + pi) * n_bench;
+            emit(tag, pods.to_string(), &x.records[base..base + n_bench])?;
         }
     }
     // Monolithic baseline: one array, dims 400..1024 (paper's range).
     let mono_dims: Vec<usize> =
         if opts.quick { vec![512] } else { vec![400, 512, 640, 768, 1024] };
-    for dim in mono_dims {
-        let cfg = ArchConfig::with_array(ArrayDims::new(dim, dim), 1);
-        let mut util = 0.0;
-        for m in &benches {
-            util += simulate(&cfg, m, &sim_opts).utilization(&cfg);
-        }
-        util /= benches.len() as f64;
-        let tdp = peak_power(&cfg).total();
-        let eff = util * cfg.peak_ops() / 1e12;
-        csv.row(&["Monolithic".into(), dim.to_string(), f(tdp, 1), f(eff, 1)])?;
-        table.row(vec!["Monolithic".into(), dim.to_string(),
-                       format!("{tdp:.0}"), format!("{eff:.1}")]);
+    let mono = DesignSpace::baseline()
+        .square_arrays(&mono_dims)
+        .pods(&[1])
+        .workloads(benches);
+    let x = Explorer::new().evaluate(&mono)?;
+    for (di, &dim) in mono_dims.iter().enumerate() {
+        let base = di * n_bench;
+        emit("Monolithic", dim.to_string(), &x.records[base..base + n_bench])?;
     }
     csv.finish()?;
     println!("{table}");
@@ -69,7 +82,7 @@ pub fn fig10(opts: &ExpOptions) -> Result<()> {
 /// Fig. 11: effective throughput vs batch size for ResNet-152 only,
 /// BERT-medium only, and both in parallel (multi-tenancy).
 pub fn fig11(opts: &ExpOptions) -> Result<()> {
-    let cfg = ArchConfig::baseline();
+    let cfg = presets::by_name("baseline").expect("registered preset");
     let sim_opts = SimOptions::default();
     let resnet = zoo::by_name("resnet152").unwrap();
     let bert = zoo::by_name("bert-medium").unwrap();

@@ -6,8 +6,9 @@
 //! compile pipeline enables.
 
 use super::ExpOptions;
-use crate::arch::{ArchConfig, ArrayDims};
+use crate::arch::{presets, ArchConfig, ArrayDims};
 use crate::compile::{SelectOptions, TilingSpec};
+use crate::explore::{DesignSpace, Explorer};
 use crate::sim::{simulate_with, SimContext, SimOptions};
 use crate::tiling::Strategy;
 use crate::util::{csv::f, CsvWriter, Table};
@@ -16,8 +17,10 @@ use crate::Result;
 
 /// Fig. 12b: sweep the partition size k around r (and include the
 /// no-partition baseline), reporting normalized effective throughput.
+/// Declared as a [`DesignSpace`] over the tiling axis (the third
+/// pillar); output byte-identical to the pre-`explore` loop.
 pub fn fig12b(opts: &ExpOptions) -> Result<()> {
-    let cfg = ArchConfig::baseline();
+    let cfg = presets::by_name("baseline").expect("registered preset");
     let r = cfg.array.r;
     let names = if opts.quick {
         vec!["resnet50", "bert-base"]
@@ -25,6 +28,7 @@ pub fn fig12b(opts: &ExpOptions) -> Result<()> {
         vec!["resnet50", "resnet152", "densenet121", "bert-medium", "bert-base"]
     };
     let benches: Vec<_> = names.iter().map(|n| zoo::by_name(n).unwrap()).collect();
+    let n_bench = benches.len();
     let ks: Vec<usize> = if opts.quick {
         vec![8, 32, 128]
     } else {
@@ -35,23 +39,32 @@ pub fn fig12b(opts: &ExpOptions) -> Result<()> {
         format!("{}/fig12b.csv", opts.out_dir),
         &["k", "eff_tops", "normalized"],
     )?;
-    let mut ctx = SimContext::new();
-    let mut results: Vec<(String, f64)> = vec![];
-    let mut sweep = |label: String, spec: TilingSpec, ctx: &mut SimContext| -> f64 {
-        let o = SimOptions { spec, ..Default::default() };
-        let mut eff = 0.0;
-        for m in &benches {
-            eff += simulate_with(ctx, &cfg, m, &o).achieved_ops(&cfg);
-        }
-        let eff = eff / benches.len() as f64 / 1e12;
-        results.push((label, eff));
-        eff
-    };
-    for &k in &ks {
-        sweep(k.to_string(), TilingSpec::Global(Strategy::Fixed(k)), &mut ctx);
-    }
-    // No-partition baseline (AI-MT-style).
-    sweep("none".into(), TilingSpec::Global(Strategy::NoPartition), &mut ctx);
+    // Tiling axis: every Fixed(k), then the no-partition baseline
+    // (AI-MT-style); records are spec-major in that order.
+    let mut specs: Vec<TilingSpec> =
+        ks.iter().map(|&k| TilingSpec::Global(Strategy::Fixed(k))).collect();
+    specs.push(TilingSpec::Global(Strategy::NoPartition));
+    let labels: Vec<String> = ks
+        .iter()
+        .map(|k| k.to_string())
+        .chain(std::iter::once("none".into()))
+        .collect();
+    let space =
+        DesignSpace::new(cfg.clone()).tiling(&specs).workloads(benches);
+    let x = Explorer::new().evaluate(&space)?;
+    let results: Vec<(String, f64)> = labels
+        .into_iter()
+        .enumerate()
+        .map(|(ti, label)| {
+            let eff = x.records[ti * n_bench..(ti + 1) * n_bench]
+                .iter()
+                .map(|rec| rec.stats.achieved_ops(&cfg))
+                .sum::<f64>()
+                / n_bench as f64
+                / 1e12;
+            (label, eff)
+        })
+        .collect();
     let best = results.iter().map(|r| r.1).fold(f64::MIN, f64::max);
     let mut table = Table::new(&["partition k", "eff TOps/s", "normalized"]);
     for (k, eff) in &results {

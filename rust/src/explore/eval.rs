@@ -1,0 +1,297 @@
+//! [`Explorer`]: evaluate a [`DesignSpace`] (or raw points) over the
+//! parallel sweep executor, with pooled simulation contexts and warm
+//! compiled-program caches per worker.
+
+use std::sync::Arc;
+
+use crate::compile::{self, CompiledProgram, TilingSpec};
+use crate::power::{peak_power, TDP_W};
+use crate::sim::{SimContext, SweepExecutor};
+use crate::stats::RunStats;
+
+use super::pareto::{Objective, ParetoFrontier};
+use super::space::{DesignPoint, DesignSpace, Skipped};
+use crate::error::Result;
+
+/// One evaluated design point: the raw [`RunStats`] plus the derived
+/// §6 metrics (throughputs in TOps/s for readability).
+#[derive(Clone, Debug)]
+pub struct EvalRecord {
+    /// The point that was evaluated.
+    pub point: DesignPoint,
+    /// Raw scheduler/memory-model statistics.
+    pub stats: RunStats,
+    /// Total execution cycles.
+    pub cycles: u64,
+    /// Wall-clock latency of the workload, seconds.
+    pub latency_s: f64,
+    /// PE-level utilization in [0, 1].
+    pub utilization: f64,
+    /// Achieved throughput on the provisioned silicon, TOps/s.
+    pub raw_tops: f64,
+    /// Peak power of the configuration, Watts.
+    pub peak_power_w: f64,
+    /// Effective throughput normalized to the TDP budget
+    /// ([`crate::power::effective_ops`]), TOps/s.
+    pub eff_tops: f64,
+    /// Effective TOps/s per Watt of TDP budget — the paper's
+    /// optimization target (equals `utilization × peak_ops /
+    /// peak_power`, independent of the budget).
+    pub eff_tops_per_w: f64,
+    /// The TDP the effective metrics were normalized to.
+    pub tdp_w: f64,
+}
+
+impl EvalRecord {
+    fn new(point: DesignPoint, stats: RunStats, tdp_w: f64) -> EvalRecord {
+        let cfg = &point.cfg;
+        let utilization = stats.utilization(cfg);
+        let latency_s = stats.exec_seconds(cfg);
+        let raw_tops = stats.achieved_ops(cfg) / 1e12;
+        let peak_power_w = peak_power(cfg).total();
+        let eff_tops = stats.effective_ops_at_tdp(cfg, tdp_w) / 1e12;
+        let eff_tops_per_w = eff_tops / tdp_w;
+        EvalRecord {
+            cycles: stats.total_cycles,
+            latency_s,
+            utilization,
+            raw_tops,
+            peak_power_w,
+            eff_tops,
+            eff_tops_per_w,
+            tdp_w,
+            stats,
+            point,
+        }
+    }
+}
+
+/// The outcome of [`Explorer::evaluate`]: one record per surviving
+/// point (in enumeration order) plus the constraint-skipped points.
+#[derive(Clone, Debug)]
+pub struct Exploration {
+    pub records: Vec<EvalRecord>,
+    pub skipped: Vec<Skipped>,
+}
+
+impl Exploration {
+    /// Pareto frontier of the records over the given objectives.
+    pub fn frontier(&self, objectives: &[Objective]) -> ParetoFrontier {
+        ParetoFrontier::extract(&self.records, objectives)
+    }
+}
+
+/// Per-worker compiled-program cache key.  The artifact depends on the
+/// geometry, the workload (by `Arc` identity — the space hands every
+/// point sharing a batched graph the same `Arc`), and the tiling spec;
+/// `Auto` artifacts are additionally pinned to the interconnect they
+/// were selected against (see [`crate::compile::CompiledFor`]), so the
+/// key includes it exactly then.
+#[derive(Clone, Debug, PartialEq)]
+struct CacheKey {
+    r: usize,
+    c: usize,
+    pods: usize,
+    model: usize,
+    spec: TilingSpec,
+    icn: Option<crate::interconnect::Kind>,
+}
+
+impl CacheKey {
+    fn for_point(p: &DesignPoint) -> CacheKey {
+        CacheKey {
+            r: p.cfg.array.r,
+            c: p.cfg.array.c,
+            pods: p.cfg.num_pods,
+            model: Arc::as_ptr(&p.workload) as usize,
+            spec: p.sim.spec.clone(),
+            icn: match p.sim.spec {
+                TilingSpec::Auto(_) => Some(p.cfg.interconnect),
+                _ => None,
+            },
+        }
+    }
+}
+
+/// Per-worker state: a pooled context plus the warm artifact cache
+/// (linear scan — spaces have few distinct compile keys, and points
+/// sharing one are evaluated back to back in enumeration order).
+struct Worker {
+    ctx: SimContext,
+    cache: Vec<(CacheKey, CompiledProgram)>,
+}
+
+impl Worker {
+    fn new() -> Worker {
+        Worker { ctx: SimContext::new(), cache: Vec::new() }
+    }
+
+    fn run(&mut self, point: &DesignPoint) -> RunStats {
+        let key = CacheKey::for_point(point);
+        if let Some(i) = self.cache.iter().position(|(k, _)| *k == key) {
+            let (_, cp) = &self.cache[i];
+            return cp.execute_with(&mut self.ctx, &point.cfg, &point.sim);
+        }
+        let cp = compile::compile_with(&mut self.ctx, &point.cfg, &point.workload, &point.sim);
+        let stats = cp.execute_with(&mut self.ctx, &point.cfg, &point.sim);
+        self.cache.push((key, cp));
+        stats
+    }
+}
+
+/// Evaluates design points on the compile → schedule → execute
+/// pipeline, fanning independent points across cores
+/// ([`SweepExecutor`]) with deterministic, enumeration-ordered results
+/// for any thread count.
+#[derive(Clone, Copy, Debug)]
+pub struct Explorer {
+    ex: SweepExecutor,
+    tdp_w: f64,
+}
+
+impl Explorer {
+    /// Explorer with the default worker count and the paper's 400 W
+    /// TDP normalization.
+    pub fn new() -> Explorer {
+        Explorer { ex: SweepExecutor::new(), tdp_w: TDP_W }
+    }
+
+    /// Explicit worker count (1 = fully sequential).
+    pub fn with_threads(threads: usize) -> Explorer {
+        Explorer { ex: SweepExecutor::with_threads(threads), tdp_w: TDP_W }
+    }
+
+    /// Override the TDP the effective metrics normalize to.
+    pub fn tdp(mut self, tdp_w: f64) -> Explorer {
+        self.tdp_w = tdp_w;
+        self
+    }
+
+    /// Enumerate and evaluate a space.
+    pub fn evaluate(&self, space: &DesignSpace) -> Result<Exploration> {
+        let e = space.enumerate()?;
+        Ok(Exploration {
+            records: self.evaluate_points(&e.points),
+            skipped: e.skipped,
+        })
+    }
+
+    /// Evaluate pre-built points (records in point order).
+    pub fn evaluate_points(&self, points: &[DesignPoint]) -> Vec<EvalRecord> {
+        let tdp = self.tdp_w;
+        self.ex.run_with_state(points, Worker::new, |w, _, p| {
+            EvalRecord::new(p.clone(), w.run(p), tdp)
+        })
+    }
+}
+
+impl Default for Explorer {
+    fn default() -> Self {
+        Explorer::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchConfig, ArrayDims};
+    use crate::interconnect::Kind;
+    use crate::sim::{simulate, SimOptions};
+    use crate::tiling::Strategy;
+    use crate::workloads::ModelGraph;
+
+    fn toy() -> ModelGraph {
+        let mut g = ModelGraph::new("toy");
+        let a = g.add("a", 100, 64, 96, vec![]);
+        g.add("b", 100, 96, 64, vec![a]);
+        g
+    }
+
+    fn fast_sim() -> SimOptions {
+        SimOptions { memory_model: false, ..SimOptions::default() }
+    }
+
+    #[test]
+    fn records_match_fused_simulation() {
+        let space = DesignSpace::new(ArchConfig::with_array(ArrayDims::new(16, 16), 16))
+            .interconnects(&[Kind::Butterfly { expansion: 2 }, Kind::Crossbar, Kind::Benes])
+            .tiling(&[
+                TilingSpec::Global(Strategy::RxR),
+                TilingSpec::Global(Strategy::Fixed(8)),
+            ])
+            .workload(toy())
+            .sim(fast_sim());
+        let x = Explorer::with_threads(2).evaluate(&space).unwrap();
+        assert_eq!(x.records.len(), 6);
+        for rec in &x.records {
+            let want = simulate(&rec.point.cfg, &rec.point.workload, &rec.point.sim);
+            assert_eq!(rec.stats, want, "{}", rec.point.label());
+            assert_eq!(rec.cycles, want.total_cycles);
+            assert!(rec.utilization > 0.0 && rec.eff_tops > 0.0);
+            assert!((rec.eff_tops_per_w * rec.tdp_w - rec.eff_tops).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_records() {
+        let space = || {
+            DesignSpace::new(ArchConfig::with_array(ArrayDims::new(16, 16), 16))
+                .interconnects(&[Kind::Butterfly { expansion: 2 }, Kind::Benes])
+                .tiling(&[
+                    TilingSpec::Global(Strategy::RxR),
+                    TilingSpec::Global(Strategy::NoPartition),
+                ])
+                .workload(toy())
+                .sim(fast_sim())
+        };
+        let seq = Explorer::with_threads(1).evaluate(&space()).unwrap();
+        let par = Explorer::with_threads(4).evaluate(&space()).unwrap();
+        assert_eq!(seq.records.len(), par.records.len());
+        for (a, b) in seq.records.iter().zip(&par.records) {
+            assert_eq!(a.stats, b.stats);
+            assert_eq!(a.point.index, b.point.index);
+        }
+    }
+
+    #[test]
+    fn compiled_cache_is_shared_across_interconnects() {
+        // A sequential explorer evaluates all interconnect variants of
+        // one geometry from a single compiled artifact; the records
+        // must still equal fused per-variant simulation (the Fig. 12a
+        // reuse, via the explore front door).
+        let space = DesignSpace::new(ArchConfig::with_array(ArrayDims::new(16, 16), 16))
+            .interconnects(&[
+                Kind::Butterfly { expansion: 2 },
+                Kind::Crossbar,
+                Kind::Mesh,
+                Kind::HTree,
+            ])
+            .workload(toy())
+            .sim(fast_sim());
+        let x = Explorer::with_threads(1).evaluate(&space).unwrap();
+        let cycles: Vec<u64> = x.records.iter().map(|r| r.cycles).collect();
+        for rec in &x.records {
+            let want = simulate(&rec.point.cfg, &rec.point.workload, &rec.point.sim);
+            assert_eq!(rec.stats, want, "{}", rec.point.label());
+        }
+        // Different fabrics genuinely differ (the cache didn't collapse
+        // execution, only compilation).
+        assert!(cycles.iter().any(|&c| c != cycles[0]));
+    }
+
+    #[test]
+    fn auto_spec_recompiles_per_interconnect() {
+        // Auto artifacts are fabric-pinned; the evaluator must not
+        // reuse one across interconnects (execute_with would panic).
+        let space = DesignSpace::new(ArchConfig::with_array(ArrayDims::new(16, 16), 16))
+            .interconnects(&[Kind::Butterfly { expansion: 2 }, Kind::Benes])
+            .tiling(&[TilingSpec::auto()])
+            .workload(toy())
+            .sim(fast_sim());
+        let x = Explorer::with_threads(1).evaluate(&space).unwrap();
+        assert_eq!(x.records.len(), 2);
+        for rec in &x.records {
+            assert_eq!(rec.stats.useful_macs, rec.point.workload.total_macs());
+        }
+    }
+}

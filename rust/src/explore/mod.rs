@@ -1,0 +1,118 @@
+//! Design-space exploration: the typed front door for the paper's
+//! joint granularity × interconnect × tiling sweep (and any other
+//! scenario over the configuration space).
+//!
+//! The paper's core contribution is a *joint* optimization over three
+//! pillars — array granularity, pod↔bank interconnect, and activation
+//! tiling — under a TDP envelope.  This module turns that sweep into a
+//! first-class API with a four-step lifecycle:
+//!
+//! ```text
+//!  point ──▶ constraint ──▶ evaluate ──▶ frontier
+//! ```
+//!
+//! 1. **Point** — a [`DesignPoint`] is one fully specified candidate:
+//!    an [`crate::arch::ArchConfig`] (array dims × pods × interconnect
+//!    × memory geometry), a [`crate::compile::TilingSpec`], a workload
+//!    with batch size, and [`crate::sim::SimOptions`].  Points are
+//!    validated on construction — an unbuildable configuration never
+//!    reaches the simulator.  A [`DesignSpace`] enumerates points from
+//!    typed axes ([`DesignSpace::arrays`], [`DesignSpace::pods`],
+//!    [`DesignSpace::interconnects`], [`DesignSpace::tiling`],
+//!    [`DesignSpace::workloads`], [`DesignSpace::batches`]) as a
+//!    cartesian product (or array↔pod zip) in deterministic order.
+//! 2. **Constraint** — predicates prune the space *before* simulation:
+//!    [`DesignSpace::under_tdp`] (strict-`<` peak-power budget, the
+//!    same semantics as [`crate::power::max_pods_under_tdp`]),
+//!    [`DesignSpace::sram_at_most`], or any custom closure via
+//!    [`DesignSpace::constrain`].  Constraints *skip with a recorded
+//!    reason* ([`Skipped`]) rather than erroring, so one declaration
+//!    can cover feasible and infeasible corners alike.
+//! 3. **Evaluate** — an [`Explorer`] runs every surviving point through
+//!    the compile → schedule → execute pipeline on the parallel
+//!    [`crate::sim::SweepExecutor`], with one pooled
+//!    [`crate::sim::SimContext`] *and* one warm
+//!    [`crate::compile::CompiledProgram`] cache per worker (points
+//!    differing only in interconnect share one artifact, the Fig. 12a
+//!    reuse).  Results are [`EvalRecord`]s — cycles, latency,
+//!    utilization, raw and effective TOps/s, effective TOps/s/W — in
+//!    deterministic point order for any thread count.
+//! 4. **Frontier** — [`ParetoFrontier::extract`] keeps the undominated
+//!    records over user-chosen [`Objective`]s (e.g. effective TOps/s/W
+//!    vs latency), and [`Report`] persists everything as CSV
+//!    ([`crate::util::csv`]) or JSON ([`crate::util::json`]).
+//!
+//! The §6 experiment suite (`table1`, `table2`, `fig9`, `fig10`,
+//! `fig12a`, `fig12b`) is implemented as thin declarative
+//! `DesignSpace` definitions over this module, and the `sosa explore`
+//! CLI exposes the same axes ad hoc:
+//!
+//! ```bash
+//! sosa explore --arrays 16x16,32x32,64x64 --pods 64,256 \
+//!     --interconnects butterfly2,benes --tiling rxr,fixed:64 \
+//!     --workloads resnet50,bert-base --tdp 400 \
+//!     --pareto --objective eff_tops_per_w,latency --format json
+//! ```
+
+pub mod eval;
+pub mod pareto;
+pub mod report;
+pub mod space;
+
+pub use eval::{EvalRecord, Exploration, Explorer};
+pub use pareto::{Objective, ParetoFrontier};
+pub use report::Report;
+pub use space::{DesignPoint, DesignSpace, Enumeration, Skipped};
+
+use crate::compile::{SelectMode, TilingSpec};
+use crate::tiling::Strategy;
+
+/// Short stable label for a tiling spec (CSV/JSON column value and the
+/// `sosa explore --tiling` grammar).
+pub fn tiling_label(spec: &TilingSpec) -> String {
+    match spec {
+        TilingSpec::Global(Strategy::RxR) => "rxr".into(),
+        TilingSpec::Global(Strategy::NoPartition) => "none".into(),
+        TilingSpec::Global(Strategy::Fixed(k)) => format!("fixed:{k}"),
+        TilingSpec::PerLayer(_) => "perlayer".into(),
+        TilingSpec::Auto(sel) => match sel.mode {
+            SelectMode::Analytic => "auto".into(),
+            SelectMode::Exhaustive => "auto:exhaustive".into(),
+        },
+    }
+}
+
+/// Parse a [`tiling_label`]-style spec (`rxr`, `none`, `fixed:K`,
+/// `auto`, `auto:exhaustive`).
+pub fn parse_tiling(s: &str) -> Option<TilingSpec> {
+    match s.to_lowercase().as_str() {
+        "rxr" => Some(TilingSpec::Global(Strategy::RxR)),
+        "none" | "nopartition" => Some(TilingSpec::Global(Strategy::NoPartition)),
+        "auto" => Some(TilingSpec::auto()),
+        "auto:exhaustive" => {
+            Some(TilingSpec::Auto(crate::compile::SelectOptions::exhaustive()))
+        }
+        other => {
+            let k = other.strip_prefix("fixed:")?;
+            k.parse::<usize>().ok().filter(|&k| k > 0).map(|k| {
+                TilingSpec::Global(Strategy::Fixed(k))
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiling_labels_round_trip() {
+        for label in ["rxr", "none", "fixed:64", "auto", "auto:exhaustive"] {
+            let spec = parse_tiling(label).unwrap_or_else(|| panic!("{label}"));
+            assert_eq!(tiling_label(&spec), label, "{label}");
+        }
+        assert!(parse_tiling("fixed:0").is_none());
+        assert!(parse_tiling("fixed:x").is_none());
+        assert!(parse_tiling("diagonal").is_none());
+    }
+}

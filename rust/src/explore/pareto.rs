@@ -1,0 +1,210 @@
+//! Pareto-frontier extraction over user-chosen objectives.
+
+use super::eval::EvalRecord;
+
+/// An optimization objective over [`EvalRecord`]s.  Each objective has
+/// a fixed direction: throughput/utilization objectives maximize,
+/// latency/power/cycles minimize.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// Effective TOps/s per Watt (maximize) — the paper's target.
+    EffTopsPerWatt,
+    /// Effective TOps/s at the TDP (maximize).
+    EffTops,
+    /// Achieved TOps/s on the provisioned silicon (maximize).
+    RawTops,
+    /// PE utilization (maximize).
+    Utilization,
+    /// Workload latency in seconds (minimize).
+    Latency,
+    /// Peak power in Watts (minimize).
+    PeakPower,
+    /// Total cycles (minimize).
+    Cycles,
+}
+
+impl Objective {
+    /// All objectives, in CLI/report order.
+    pub const ALL: &'static [Objective] = &[
+        Objective::EffTopsPerWatt,
+        Objective::EffTops,
+        Objective::RawTops,
+        Objective::Utilization,
+        Objective::Latency,
+        Objective::PeakPower,
+        Objective::Cycles,
+    ];
+
+    /// Stable CLI/report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::EffTopsPerWatt => "eff_tops_per_w",
+            Objective::EffTops => "eff_tops",
+            Objective::RawTops => "raw_tops",
+            Objective::Utilization => "util",
+            Objective::Latency => "latency",
+            Objective::PeakPower => "peak_w",
+            Objective::Cycles => "cycles",
+        }
+    }
+
+    /// Parse a [`Objective::name`].
+    pub fn parse(s: &str) -> Option<Objective> {
+        Objective::ALL.iter().copied().find(|o| o.name() == s.to_lowercase())
+    }
+
+    /// The raw metric value of a record.
+    pub fn raw(&self, r: &EvalRecord) -> f64 {
+        match self {
+            Objective::EffTopsPerWatt => r.eff_tops_per_w,
+            Objective::EffTops => r.eff_tops,
+            Objective::RawTops => r.raw_tops,
+            Objective::Utilization => r.utilization,
+            Objective::Latency => r.latency_s,
+            Objective::PeakPower => r.peak_power_w,
+            Objective::Cycles => r.cycles as f64,
+        }
+    }
+
+    /// Does this objective maximize its metric?
+    pub fn maximize(&self) -> bool {
+        !matches!(self, Objective::Latency | Objective::PeakPower | Objective::Cycles)
+    }
+
+    /// Sign-adjusted score: larger is always better.
+    pub fn score(&self, r: &EvalRecord) -> f64 {
+        if self.maximize() {
+            self.raw(r)
+        } else {
+            -self.raw(r)
+        }
+    }
+}
+
+/// The undominated subset of a record set over chosen objectives.
+///
+/// Domination is the standard strict Pareto order on sign-adjusted
+/// scores: `a` dominates `b` iff `a` is ≥ on every objective and > on
+/// at least one.  The frontier keeps every record no other record
+/// strictly dominates — ties and duplicates all survive, so the
+/// complement is exactly the dominated set.
+#[derive(Clone, Debug)]
+pub struct ParetoFrontier {
+    /// The objectives the frontier was taken over.
+    pub objectives: Vec<Objective>,
+    /// Indices into the record slice, in ascending (enumeration)
+    /// order.
+    pub members: Vec<usize>,
+}
+
+/// `a` strictly dominates `b` on larger-is-better score rows.
+fn dominates(a: &[f64], b: &[f64]) -> bool {
+    a.iter().zip(b).all(|(x, y)| x >= y) && a.iter().zip(b).any(|(x, y)| x > y)
+}
+
+/// Undominated row indices of a larger-is-better score matrix
+/// (O(n²) — exploration spaces are small).
+pub fn undominated(scores: &[Vec<f64>]) -> Vec<usize> {
+    (0..scores.len())
+        .filter(|&i| !scores.iter().any(|other| dominates(other, &scores[i])))
+        .collect()
+}
+
+impl ParetoFrontier {
+    /// Extract the frontier of `records` over `objectives`.
+    pub fn extract(records: &[EvalRecord], objectives: &[Objective]) -> ParetoFrontier {
+        let scores: Vec<Vec<f64>> = records
+            .iter()
+            .map(|r| objectives.iter().map(|o| o.score(r)).collect())
+            .collect();
+        ParetoFrontier { objectives: objectives.to_vec(), members: undominated(&scores) }
+    }
+
+    /// Is record `i` on the frontier?
+    pub fn contains(&self, i: usize) -> bool {
+        self.members.binary_search(&i).is_ok()
+    }
+
+    /// Frontier members ranked best-first by one objective (ties keep
+    /// enumeration order).
+    pub fn ranked_by(&self, records: &[EvalRecord], objective: Objective) -> Vec<usize> {
+        let mut out = self.members.clone();
+        out.sort_by(|&a, &b| {
+            objective
+                .score(&records[b])
+                .total_cmp(&objective.score(&records[a]))
+                .then(a.cmp(&b))
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::forall;
+
+    #[test]
+    fn objective_names_round_trip() {
+        for &o in Objective::ALL {
+            assert_eq!(Objective::parse(o.name()), Some(o));
+        }
+        assert_eq!(Objective::parse("EFF_TOPS"), Some(Objective::EffTops));
+        assert!(Objective::parse("goodput").is_none());
+    }
+
+    #[test]
+    fn minimizing_objectives_negate() {
+        assert!(!Objective::Latency.maximize());
+        assert!(Objective::EffTopsPerWatt.maximize());
+    }
+
+    #[test]
+    fn undominated_basics() {
+        // (1,1) dominated by (2,2); (3,0) and (0,3) incomparable.
+        let scores = vec![
+            vec![1.0, 1.0],
+            vec![2.0, 2.0],
+            vec![3.0, 0.0],
+            vec![0.0, 3.0],
+        ];
+        assert_eq!(undominated(&scores), vec![1, 2, 3]);
+        // Exact ties all survive (neither strictly dominates).
+        let ties = vec![vec![1.0, 1.0], vec![1.0, 1.0]];
+        assert_eq!(undominated(&ties), vec![0, 1]);
+        let empty: Vec<Vec<f64>> = vec![];
+        assert!(undominated(&empty).is_empty());
+    }
+
+    #[test]
+    fn prop_members_undominated_and_nonmembers_dominated() {
+        forall(60, |rng| {
+            let n = rng.range(1, 40);
+            let d = rng.range(1, 4);
+            // Coarse grid values force plenty of ties and dominance.
+            let scores: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..d).map(|_| rng.below(5) as f64).collect())
+                .collect();
+            let front = undominated(&scores);
+            for i in 0..n {
+                let on_front = front.contains(&i);
+                let dominated_by_some =
+                    scores.iter().any(|o| dominates(o, &scores[i]));
+                crate::prop_assert!(
+                    on_front != dominated_by_some,
+                    "row {i}: on_front={on_front} dominated={dominated_by_some}"
+                );
+                if on_front {
+                    // No member dominates another member.
+                    for &j in &front {
+                        crate::prop_assert!(
+                            !dominates(&scores[j], &scores[i]),
+                            "member {j} dominates member {i}"
+                        );
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,195 @@
+//! Structured exploration reports: CSV (one row per record) and JSON
+//! (records + skipped points + optional frontier).
+
+use std::path::Path;
+
+use crate::util::csv::f;
+use crate::util::{CsvWriter, Json};
+use crate::Result;
+
+use super::eval::{EvalRecord, Exploration};
+use super::pareto::ParetoFrontier;
+use super::tiling_label;
+
+/// Report writer over an [`Exploration`].
+pub struct Report<'a> {
+    x: &'a Exploration,
+    frontier: Option<&'a ParetoFrontier>,
+}
+
+/// The CSV column set (one row per evaluated point).
+pub const CSV_HEADER: &[&str] = &[
+    "array", "pods", "interconnect", "tiling", "workload", "batch", "cycles",
+    "latency_ms", "util", "raw_tops", "peak_w", "eff_tops", "eff_tops_per_w",
+    "pareto",
+];
+
+impl<'a> Report<'a> {
+    /// Report over an exploration's records.
+    pub fn new(x: &'a Exploration) -> Report<'a> {
+        Report { x, frontier: None }
+    }
+
+    /// Attach a frontier: CSV gains a `pareto` membership column and
+    /// JSON a `frontier` section.
+    pub fn with_frontier(mut self, frontier: &'a ParetoFrontier) -> Report<'a> {
+        self.frontier = Some(frontier);
+        self
+    }
+
+    /// The CSV cells for one record.
+    fn row(&self, i: usize, r: &EvalRecord) -> Vec<String> {
+        let on_front = self.frontier.map(|fr| fr.contains(i)).unwrap_or(false);
+        vec![
+            r.point.cfg.array.to_string(),
+            r.point.cfg.num_pods.to_string(),
+            r.point.cfg.interconnect.to_string(),
+            tiling_label(r.point.spec()),
+            r.point.workload.name.clone(),
+            r.point.batch.to_string(),
+            r.cycles.to_string(),
+            f(r.latency_s * 1e3, 3),
+            f(r.utilization, 4),
+            f(r.raw_tops, 1),
+            f(r.peak_power_w, 1),
+            f(r.eff_tops, 1),
+            f(r.eff_tops_per_w, 3),
+            if on_front { "1".into() } else { "0".into() },
+        ]
+    }
+
+    /// Write the record table as CSV.
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut csv = CsvWriter::create(path, CSV_HEADER)?;
+        for (i, r) in self.x.records.iter().enumerate() {
+            csv.row(&self.row(i, r))?;
+        }
+        csv.finish()
+    }
+
+    /// The JSON document: records, skipped points, and (when attached)
+    /// the frontier's objectives + member indices.
+    pub fn json(&self) -> Json {
+        let records = Json::Arr(
+            self.x
+                .records
+                .iter()
+                .enumerate()
+                .map(|(i, r)| {
+                    let mut pairs = vec![
+                        ("array", Json::str(r.point.cfg.array.to_string())),
+                        ("pods", Json::int(r.point.cfg.num_pods as u64)),
+                        ("interconnect", Json::str(r.point.cfg.interconnect.to_string())),
+                        ("tiling", Json::str(tiling_label(r.point.spec()))),
+                        ("workload", Json::str(r.point.workload.name.clone())),
+                        ("batch", Json::int(r.point.batch as u64)),
+                        ("cycles", Json::int(r.cycles)),
+                        ("latency_ms", Json::Num(r.latency_s * 1e3)),
+                        ("util", Json::Num(r.utilization)),
+                        ("raw_tops", Json::Num(r.raw_tops)),
+                        ("peak_w", Json::Num(r.peak_power_w)),
+                        ("eff_tops", Json::Num(r.eff_tops)),
+                        ("eff_tops_per_w", Json::Num(r.eff_tops_per_w)),
+                    ];
+                    if let Some(fr) = self.frontier {
+                        pairs.push(("pareto", Json::Bool(fr.contains(i))));
+                    }
+                    Json::obj(pairs)
+                })
+                .collect(),
+        );
+        let skipped = Json::Arr(
+            self.x
+                .skipped
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("point", Json::str(s.label.clone())),
+                        ("constraint", Json::str(s.constraint.clone())),
+                        ("reason", Json::str(s.reason.clone())),
+                    ])
+                })
+                .collect(),
+        );
+        let mut doc = vec![("records", records), ("skipped", skipped)];
+        if let Some(fr) = self.frontier {
+            doc.push((
+                "frontier",
+                Json::obj(vec![
+                    (
+                        "objectives",
+                        Json::Arr(
+                            fr.objectives.iter().map(|o| Json::str(o.name())).collect(),
+                        ),
+                    ),
+                    (
+                        "members",
+                        Json::Arr(
+                            fr.members.iter().map(|&i| Json::int(i as u64)).collect(),
+                        ),
+                    ),
+                ]),
+            ));
+        }
+        Json::Obj(doc.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Write the JSON document.
+    pub fn write_json(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, format!("{}\n", self.json()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchConfig, ArrayDims};
+    use crate::explore::{DesignSpace, Explorer, Objective};
+    use crate::sim::SimOptions;
+    use crate::workloads::ModelGraph;
+
+    fn small_exploration() -> Exploration {
+        let mut g = ModelGraph::new("toy");
+        g.add("fc", 64, 64, 64, vec![]);
+        let space = DesignSpace::new(ArchConfig::with_array(ArrayDims::new(16, 16), 16))
+            .pods(&[8, 16])
+            .workload(g)
+            .sim(SimOptions { memory_model: false, ..SimOptions::default() });
+        Explorer::with_threads(1).evaluate(&space).unwrap()
+    }
+
+    #[test]
+    fn csv_and_json_round_trip() {
+        let x = small_exploration();
+        let fr = x.frontier(&[Objective::EffTopsPerWatt, Objective::Latency]);
+        let dir = std::env::temp_dir().join("sosa_explore_report");
+        let report = Report::new(&x).with_frontier(&fr);
+        report.write_csv(dir.join("r.csv")).unwrap();
+        report.write_json(dir.join("r.json")).unwrap();
+        let csv = std::fs::read_to_string(dir.join("r.csv")).unwrap();
+        assert!(csv.starts_with("array,pods,"));
+        assert_eq!(csv.lines().count(), 1 + x.records.len());
+        let json = std::fs::read_to_string(dir.join("r.json")).unwrap();
+        assert!(json.contains("\"records\":["));
+        assert!(json.contains("\"frontier\":{\"objectives\":[\"eff_tops_per_w\",\"latency\"]"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn frontier_column_marks_members() {
+        let x = small_exploration();
+        let fr = x.frontier(&[Objective::EffTopsPerWatt]);
+        let dir = std::env::temp_dir().join("sosa_explore_report_front");
+        Report::new(&x).with_frontier(&fr).write_csv(dir.join("r.csv")).unwrap();
+        let csv = std::fs::read_to_string(dir.join("r.csv")).unwrap();
+        let marked = csv.lines().skip(1).filter(|l| l.ends_with(",1")).count();
+        assert_eq!(marked, fr.members.len());
+        assert!(!fr.members.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,669 @@
+//! [`DesignPoint`] and the fluent [`DesignSpace`] builder: typed axes,
+//! deterministic cartesian/zip enumeration, and skip-with-reason
+//! constraint predicates.
+
+use std::sync::Arc;
+
+use crate::arch::{ArchConfig, ArrayDims};
+use crate::compile::TilingSpec;
+use crate::error::{Error, Result};
+use crate::interconnect::Kind;
+use crate::power::{max_pods_under_tdp, peak_power};
+use crate::sim::SimOptions;
+use crate::workloads::ModelGraph;
+
+use super::tiling_label;
+
+/// One fully specified candidate design: a buildable configuration, a
+/// tiling spec (inside [`SimOptions::spec`]), and a batched workload.
+/// Validated on construction — see [`DesignPoint::new`].
+#[derive(Clone, Debug)]
+pub struct DesignPoint {
+    /// Position in the owning space's enumeration order (0 for
+    /// hand-built points).
+    pub index: usize,
+    /// The architecture (array × pods × interconnect × memory).
+    pub cfg: ArchConfig,
+    /// The workload with the batch already applied.  Shared (`Arc`) so
+    /// a space's points don't clone large graphs per point — pointer
+    /// identity also keys the evaluator's compiled-program cache.
+    pub workload: Arc<ModelGraph>,
+    /// Batch size applied to the workload (1 = the graph as declared).
+    pub batch: usize,
+    /// Simulation options; `sim.spec` carries the tiling spec.
+    pub sim: SimOptions,
+}
+
+impl DesignPoint {
+    /// Build and validate a point.  Fails (rather than letting the
+    /// scheduler panic later) on an unbuildable configuration, an
+    /// inconsistent workload, a zero batch, or a
+    /// [`TilingSpec::PerLayer`] whose length doesn't match the
+    /// workload's layer count.
+    pub fn new(
+        cfg: ArchConfig,
+        workload: Arc<ModelGraph>,
+        batch: usize,
+        sim: SimOptions,
+    ) -> Result<DesignPoint> {
+        cfg.validate()?;
+        workload.validate()?;
+        if batch == 0 {
+            return Err(Error::config("batch must be positive"));
+        }
+        if let TilingSpec::PerLayer(v) = &sim.spec {
+            if v.len() != workload.ops.len() {
+                return Err(Error::config(format!(
+                    "PerLayer spec names {} layers, workload {} has {}",
+                    v.len(),
+                    workload.name,
+                    workload.ops.len()
+                )));
+            }
+        }
+        Ok(DesignPoint { index: 0, cfg, workload, batch, sim })
+    }
+
+    /// The tiling spec (shorthand for `self.sim.spec`).
+    pub fn spec(&self) -> &TilingSpec {
+        &self.sim.spec
+    }
+
+    /// Human-readable one-line summary (skip reports, CLI output).
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{} {} {} {} b{}",
+            self.cfg.array,
+            self.cfg.num_pods,
+            self.cfg.interconnect,
+            tiling_label(&self.sim.spec),
+            self.workload.name,
+            self.batch
+        )
+    }
+}
+
+/// How the pod axis combines with the array axis.
+#[derive(Clone, Debug)]
+enum PodsAxis {
+    /// Cartesian: every array × every pod count.
+    List(Vec<usize>),
+    /// Zip: `pods[i]` pairs with `arrays[i]` (lengths must match).
+    Zip(Vec<usize>),
+    /// Per array, the largest power-of-two pod count under a TDP
+    /// (strict `<`, [`max_pods_under_tdp`]), floored at 1 so monolithic
+    /// arrays over the budget still enumerate (the constraint, if any,
+    /// then decides their fate).
+    UnderTdp(f64),
+}
+
+/// A point skipped during enumeration, with the constraint that
+/// rejected it and why.
+#[derive(Clone, Debug)]
+pub struct Skipped {
+    /// [`DesignPoint::label`]-style summary of the rejected point.
+    pub label: String,
+    /// Name of the rejecting constraint (`validate` for points that
+    /// failed [`DesignPoint::new`]).
+    pub constraint: String,
+    /// Human-readable reason.
+    pub reason: String,
+}
+
+/// The outcome of [`DesignSpace::enumerate`]: surviving points (in
+/// deterministic order, `index` set) plus every skipped point.
+#[derive(Clone, Debug)]
+pub struct Enumeration {
+    pub points: Vec<DesignPoint>,
+    pub skipped: Vec<Skipped>,
+}
+
+type ConstraintFn = Box<dyn Fn(&DesignPoint) -> Option<String>>;
+
+/// Fluent builder over the (arrays × pods × interconnects × tiling ×
+/// workloads × batches) space.
+///
+/// Unset axes default to the template's value (a single-element axis),
+/// so a space is runnable as soon as it has a workload.  Enumeration
+/// order is the declaration-independent nesting
+/// `(array, pods) → interconnect → tiling → workload → batch`,
+/// identical on every call.
+pub struct DesignSpace {
+    template: ArchConfig,
+    arrays: Vec<ArrayDims>,
+    pods: PodsAxis,
+    interconnects: Vec<Kind>,
+    tilings: Vec<TilingSpec>,
+    workloads: Vec<Arc<ModelGraph>>,
+    batches: Vec<usize>,
+    sim: SimOptions,
+    constraints: Vec<(String, ConstraintFn)>,
+}
+
+impl DesignSpace {
+    /// A space seeded from a template configuration: the template
+    /// supplies every parameter no axis overrides (bank size,
+    /// frequency, precision, DRAM bandwidth) and the default value of
+    /// each unset axis.
+    pub fn new(template: ArchConfig) -> DesignSpace {
+        DesignSpace {
+            arrays: vec![template.array],
+            pods: PodsAxis::List(vec![template.num_pods]),
+            interconnects: vec![template.interconnect],
+            tilings: vec![TilingSpec::default()],
+            workloads: vec![],
+            batches: vec![1],
+            sim: SimOptions::default(),
+            constraints: vec![],
+            template,
+        }
+    }
+
+    /// A space seeded from the paper's baseline (see
+    /// [`crate::arch::presets`]).
+    pub fn baseline() -> DesignSpace {
+        DesignSpace::new(ArchConfig::baseline())
+    }
+
+    /// Array granularity axis.
+    pub fn arrays(mut self, dims: &[ArrayDims]) -> Self {
+        self.arrays = dims.to_vec();
+        self
+    }
+
+    /// Square-array granularity axis (convenience for the paper's
+    /// `dim×dim` sweeps).
+    pub fn square_arrays(self, dims: &[usize]) -> Self {
+        let v: Vec<ArrayDims> = dims.iter().map(|&d| ArrayDims::new(d, d)).collect();
+        self.arrays(&v)
+    }
+
+    /// Pod-count axis, cartesian with the array axis.
+    pub fn pods(mut self, pods: &[usize]) -> Self {
+        self.pods = PodsAxis::List(pods.to_vec());
+        self
+    }
+
+    /// Pod-count axis zipped with the array axis: `pods[i]` pairs with
+    /// `arrays[i]` (Table 2's one-pod-count-per-granularity shape).
+    pub fn pods_zip(mut self, pods: &[usize]) -> Self {
+        self.pods = PodsAxis::Zip(pods.to_vec());
+        self
+    }
+
+    /// Derive each array's pod count as the largest power of two under
+    /// `tdp_w` (§6's provisioning rule), floored at 1.  Uses the
+    /// template's interconnect for the power model, like
+    /// [`max_pods_under_tdp`] itself.
+    pub fn pods_under_tdp(mut self, tdp_w: f64) -> Self {
+        self.pods = PodsAxis::UnderTdp(tdp_w);
+        self
+    }
+
+    /// Interconnect topology axis.
+    pub fn interconnects(mut self, kinds: &[Kind]) -> Self {
+        self.interconnects = kinds.to_vec();
+        self
+    }
+
+    /// Tiling-spec axis (§3.3 / Fig. 12b).
+    pub fn tiling(mut self, specs: &[TilingSpec]) -> Self {
+        self.tilings = specs.to_vec();
+        self
+    }
+
+    /// Workload axis.
+    pub fn workloads(mut self, models: Vec<ModelGraph>) -> Self {
+        self.workloads = models.into_iter().map(Arc::new).collect();
+        self
+    }
+
+    /// Single-workload convenience.
+    pub fn workload(self, model: ModelGraph) -> Self {
+        self.workloads(vec![model])
+    }
+
+    /// Batch-size axis (batch 1 leaves the declared graph untouched).
+    pub fn batches(mut self, batches: &[usize]) -> Self {
+        self.batches = batches.to_vec();
+        self
+    }
+
+    /// Base simulation options for every point (each point's
+    /// `sim.spec` is overridden by the tiling axis).
+    pub fn sim(mut self, sim: SimOptions) -> Self {
+        self.sim = sim;
+        self
+    }
+
+    /// Custom constraint: return `Some(reason)` to skip a point.
+    pub fn constrain(
+        mut self,
+        name: impl Into<String>,
+        f: impl Fn(&DesignPoint) -> Option<String> + 'static,
+    ) -> Self {
+        self.constraints.push((name.into(), Box::new(f)));
+        self
+    }
+
+    /// Skip points whose peak power is not strictly under `tdp_w` —
+    /// the same strict-`<` boundary as [`max_pods_under_tdp`].
+    pub fn under_tdp(self, tdp_w: f64) -> Self {
+        self.constrain("under_tdp", move |p| {
+            let peak = peak_power(&p.cfg).total();
+            if peak < tdp_w {
+                None
+            } else {
+                Some(format!("peak {peak:.1} W >= TDP {tdp_w} W"))
+            }
+        })
+    }
+
+    /// Skip points provisioning more than `bytes` of on-chip SRAM.
+    pub fn sram_at_most(self, bytes: usize) -> Self {
+        self.constrain("sram_at_most", move |p| {
+            let sram = p.cfg.sram_bytes();
+            if sram <= bytes {
+                None
+            } else {
+                Some(format!("SRAM {sram} B > budget {bytes} B"))
+            }
+        })
+    }
+
+    /// The (array, pods) pairs in enumeration order.
+    fn array_pod_pairs(&self) -> Result<Vec<(ArrayDims, usize)>> {
+        match &self.pods {
+            PodsAxis::List(pods) => Ok(self
+                .arrays
+                .iter()
+                .flat_map(|&a| pods.iter().map(move |&p| (a, p)))
+                .collect()),
+            PodsAxis::Zip(pods) => {
+                if pods.len() != self.arrays.len() {
+                    return Err(Error::config(format!(
+                        "pods_zip length {} != arrays length {}",
+                        pods.len(),
+                        self.arrays.len()
+                    )));
+                }
+                Ok(self.arrays.iter().copied().zip(pods.iter().copied()).collect())
+            }
+            PodsAxis::UnderTdp(w) => Ok(self
+                .arrays
+                .iter()
+                .map(|&a| {
+                    let t = self.cfg_for(a, 1, self.template.interconnect);
+                    (a, max_pods_under_tdp(&t, *w).max(1))
+                })
+                .collect()),
+        }
+    }
+
+    /// Cartesian-product cardinality before constraints.
+    pub fn cardinality(&self) -> usize {
+        let pairs = match &self.pods {
+            PodsAxis::List(p) => self.arrays.len() * p.len(),
+            PodsAxis::Zip(_) | PodsAxis::UnderTdp(_) => self.arrays.len(),
+        };
+        pairs
+            * self.interconnects.len()
+            * self.tilings.len()
+            * self.workloads.len()
+            * self.batches.len()
+    }
+
+    /// Derive a point configuration from the template, mirroring
+    /// [`ArchConfig::with_array`]: banks and post-processors track the
+    /// pod count (the N-to-N invariant) and U/V scale with the array
+    /// (half the dimension, at least 1).
+    fn cfg_for(&self, array: ArrayDims, pods: usize, interconnect: Kind) -> ArchConfig {
+        ArchConfig {
+            array,
+            num_pods: pods,
+            num_banks: pods,
+            num_post_processors: pods,
+            multicast_u: (array.r / 2).max(1),
+            fanin_v: (array.c / 2).max(1),
+            interconnect,
+            ..self.template.clone()
+        }
+    }
+
+    /// Enumerate the space: validate and constrain every point of the
+    /// cartesian product (or zip), in deterministic order.  Surviving
+    /// points carry their enumeration `index`; rejected points land in
+    /// [`Enumeration::skipped`] with the constraint and reason.
+    pub fn enumerate(&self) -> Result<Enumeration> {
+        if self.workloads.is_empty() {
+            return Err(Error::config("design space has no workloads"));
+        }
+        let pairs = self.array_pod_pairs()?;
+        // One shared batched graph per (workload, batch): points share
+        // the Arc, which both bounds memory and gives the evaluator's
+        // compiled-program cache a reliable identity key.
+        let mut batched: Vec<Vec<Arc<ModelGraph>>> = Vec::with_capacity(self.workloads.len());
+        for w in &self.workloads {
+            let mut per_batch = Vec::with_capacity(self.batches.len());
+            for &b in &self.batches {
+                per_batch.push(if b == 1 {
+                    Arc::clone(w)
+                } else {
+                    Arc::new(w.with_batch(b))
+                });
+            }
+            batched.push(per_batch);
+        }
+        let mut points = Vec::new();
+        let mut skipped = Vec::new();
+        let mut index = 0usize;
+        for &(array, pods) in &pairs {
+            for &icn in &self.interconnects {
+                let cfg = self.cfg_for(array, pods, icn);
+                for spec in &self.tilings {
+                    let mut sim = self.sim.clone();
+                    sim.spec = spec.clone();
+                    for (wi, w) in self.workloads.iter().enumerate() {
+                        for (bi, &batch) in self.batches.iter().enumerate() {
+                            let point = DesignPoint::new(
+                                cfg.clone(),
+                                Arc::clone(&batched[wi][bi]),
+                                batch,
+                                sim.clone(),
+                            );
+                            let mut point = match point {
+                                Ok(p) => p,
+                                Err(e) => {
+                                    skipped.push(Skipped {
+                                        label: format!(
+                                            "{array}/{pods} {icn} {} {} b{batch}",
+                                            tiling_label(spec),
+                                            w.name
+                                        ),
+                                        constraint: "validate".into(),
+                                        reason: e.to_string(),
+                                    });
+                                    continue;
+                                }
+                            };
+                            point.index = index;
+                            match self.first_violation(&point) {
+                                Some((name, reason)) => skipped.push(Skipped {
+                                    label: point.label(),
+                                    constraint: name,
+                                    reason,
+                                }),
+                                None => {
+                                    index += 1;
+                                    points.push(point);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(Enumeration { points, skipped })
+    }
+
+    /// First constraint a point violates, if any.
+    fn first_violation(&self, point: &DesignPoint) -> Option<(String, String)> {
+        for (name, check) in &self.constraints {
+            if let Some(reason) = check(point) {
+                return Some((name.clone(), reason));
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::power::TDP_W;
+    use crate::testutil::prop::forall;
+    use crate::tiling::Strategy;
+
+    fn toy(name: &str, layers: usize) -> ModelGraph {
+        let mut g = ModelGraph::new(name);
+        for i in 0..layers {
+            let deps = if i == 0 { vec![] } else { vec![i - 1] };
+            g.add(format!("l{i}"), 64, 64, 64, deps);
+        }
+        g
+    }
+
+    #[test]
+    fn point_validates_on_construction() {
+        let w = Arc::new(toy("t", 2));
+        let mut cfg = ArchConfig::with_array(ArrayDims::new(16, 16), 16);
+        assert!(DesignPoint::new(cfg.clone(), Arc::clone(&w), 1, SimOptions::default())
+            .is_ok());
+        cfg.num_pods = 100; // not a power of two
+        assert!(DesignPoint::new(cfg.clone(), Arc::clone(&w), 1, SimOptions::default())
+            .is_err());
+        cfg.num_pods = 16;
+        assert!(
+            DesignPoint::new(cfg.clone(), Arc::clone(&w), 0, SimOptions::default())
+                .is_err(),
+            "zero batch"
+        );
+        let bad_spec = SimOptions {
+            spec: TilingSpec::PerLayer(vec![Strategy::RxR]), // workload has 2 layers
+            ..SimOptions::default()
+        };
+        assert!(DesignPoint::new(cfg, w, 1, bad_spec).is_err());
+    }
+
+    #[test]
+    fn enumeration_is_cartesian_and_ordered() {
+        let space = DesignSpace::baseline()
+            .square_arrays(&[16, 32])
+            .pods(&[16, 64])
+            .interconnects(&[Kind::Butterfly { expansion: 2 }, Kind::Benes])
+            .tiling(&[
+                TilingSpec::Global(Strategy::RxR),
+                TilingSpec::Global(Strategy::NoPartition),
+            ])
+            .workloads(vec![toy("a", 1), toy("b", 2)])
+            .batches(&[1, 4]);
+        assert_eq!(space.cardinality(), 2 * 2 * 2 * 2 * 2 * 2);
+        let e = space.enumerate().unwrap();
+        assert_eq!(e.points.len(), 64);
+        assert!(e.skipped.is_empty());
+        // Indices are contiguous and the axis nesting is
+        // (array,pods) → icn → tiling → workload → batch.
+        for (i, p) in e.points.iter().enumerate() {
+            assert_eq!(p.index, i);
+        }
+        assert_eq!(e.points[0].batch, 1);
+        assert_eq!(e.points[1].batch, 4);
+        assert_eq!(e.points[0].workload.name, "a");
+        assert_eq!(e.points[2].workload.name, "b");
+        assert_eq!(e.points[1].workload.name, "a-b4", "batch applied");
+        // The second half flips the array axis last.
+        assert_eq!(e.points[0].cfg.array, ArrayDims::new(16, 16));
+        assert_eq!(e.points[63].cfg.array, ArrayDims::new(32, 32));
+    }
+
+    #[test]
+    fn zip_pairs_and_rejects_mismatch() {
+        let space = DesignSpace::baseline()
+            .square_arrays(&[32, 64])
+            .pods_zip(&[256, 128])
+            .workload(toy("t", 1));
+        let e = space.enumerate().unwrap();
+        assert_eq!(e.points.len(), 2);
+        assert_eq!(e.points[0].cfg.num_pods, 256);
+        assert_eq!(e.points[1].cfg.num_pods, 128);
+        let bad = DesignSpace::baseline()
+            .square_arrays(&[32])
+            .pods_zip(&[256, 128])
+            .workload(toy("t", 1));
+        assert!(bad.enumerate().is_err());
+    }
+
+    #[test]
+    fn pods_under_tdp_matches_power_model() {
+        let space = DesignSpace::baseline()
+            .square_arrays(&[32, 64])
+            .pods_under_tdp(TDP_W)
+            .workload(toy("t", 1));
+        let e = space.enumerate().unwrap();
+        // Table 2: 32×32 → 256 pods, 64×64 → 128 pods.
+        assert_eq!(e.points[0].cfg.num_pods, 256);
+        assert_eq!(e.points[1].cfg.num_pods, 128);
+        // U/V scale with the array like ArchConfig::with_array.
+        assert_eq!(e.points[1].cfg.multicast_u, 32);
+    }
+
+    #[test]
+    fn constraints_skip_with_reason() {
+        let space = DesignSpace::baseline()
+            .square_arrays(&[32])
+            .pods(&[64, 256, 1024])
+            .workload(toy("t", 1))
+            .under_tdp(TDP_W);
+        let e = space.enumerate().unwrap();
+        // 1024 pods of 32×32 blow the 400 W budget (256 is the §6 max).
+        assert_eq!(e.points.len(), 2);
+        assert_eq!(e.skipped.len(), 1);
+        assert_eq!(e.skipped[0].constraint, "under_tdp");
+        assert!(e.skipped[0].reason.contains(">= TDP"));
+        // Surviving indices stay contiguous.
+        assert_eq!(e.points[1].index, 1);
+    }
+
+    #[test]
+    fn invalid_axis_values_skip_as_validate() {
+        let space = DesignSpace::baseline()
+            .square_arrays(&[32])
+            .pods(&[100]) // not a power of two
+            .workload(toy("t", 1));
+        let e = space.enumerate().unwrap();
+        assert!(e.points.is_empty());
+        assert_eq!(e.skipped[0].constraint, "validate");
+    }
+
+    #[test]
+    fn sram_and_custom_constraints() {
+        let space = DesignSpace::baseline()
+            .square_arrays(&[32])
+            .pods(&[64, 256])
+            .workload(toy("t", 1))
+            .sram_at_most(100 * 256 * 1024) // < 256 banks × 256 KiB
+            .constrain("even_pods_only", |p| {
+                if p.cfg.num_pods % 128 == 0 {
+                    Some("multiple of 128".into())
+                } else {
+                    None
+                }
+            });
+        let e = space.enumerate().unwrap();
+        assert_eq!(e.points.len(), 1);
+        assert_eq!(e.points[0].cfg.num_pods, 64);
+        // 256 pods violates both; the first declared constraint wins.
+        assert_eq!(e.skipped[0].constraint, "sram_at_most");
+    }
+
+    #[test]
+    fn no_workloads_is_an_error() {
+        assert!(DesignSpace::baseline().enumerate().is_err());
+    }
+
+    #[test]
+    fn prop_enumeration_deterministic_unique_and_complete() {
+        forall(40, |rng| {
+            let dims: Vec<usize> = {
+                let all = [8usize, 16, 32];
+                let n = rng.range(1, all.len());
+                all[..n].to_vec()
+            };
+            let pods: Vec<usize> = {
+                let all = [4usize, 16, 64];
+                let n = rng.range(1, all.len());
+                all[..n].to_vec()
+            };
+            let icns: Vec<Kind> = {
+                let all = [Kind::Butterfly { expansion: 2 }, Kind::Crossbar, Kind::Mesh];
+                let n = rng.range(1, all.len());
+                all[..n].to_vec()
+            };
+            let tilings: Vec<TilingSpec> = {
+                let all = [
+                    TilingSpec::Global(Strategy::RxR),
+                    TilingSpec::Global(Strategy::NoPartition),
+                    TilingSpec::Global(Strategy::Fixed(rng.range(1, 64))),
+                ];
+                let n = rng.range(1, all.len());
+                all[..n].to_vec()
+            };
+            let n_workloads = rng.range(1, 3);
+            let workloads: Vec<ModelGraph> =
+                (0..n_workloads).map(|i| toy(&format!("w{i}"), rng.range(1, 4))).collect();
+            let batches: Vec<usize> = {
+                let all = [1usize, 2, 8];
+                let n = rng.range(1, all.len());
+                all[..n].to_vec()
+            };
+            let build = || {
+                DesignSpace::baseline()
+                    .square_arrays(&dims)
+                    .pods(&pods)
+                    .interconnects(&icns)
+                    .tiling(&tilings)
+                    .workloads(workloads.clone())
+                    .batches(&batches)
+            };
+            let space = build();
+            let card = space.cardinality();
+            crate::prop_assert!(
+                card == dims.len()
+                    * pods.len()
+                    * icns.len()
+                    * tilings.len()
+                    * workloads.len()
+                    * batches.len(),
+                "cardinality {card} mismatched"
+            );
+            let a = space.enumerate().map_err(|e| e.to_string())?;
+            // Unconstrained, all-valid axes: every point enumerates.
+            crate::prop_assert!(
+                a.points.len() == card && a.skipped.is_empty(),
+                "{} points + {} skipped != {card}",
+                a.points.len(),
+                a.skipped.len()
+            );
+            // Duplicate-free: the (cfg, spec, workload, batch) key is
+            // unique across the enumeration.
+            let mut keys: Vec<String> = a
+                .points
+                .iter()
+                .map(|p| format!("{} {:?}", p.label(), p.spec()))
+                .collect();
+            keys.sort_unstable();
+            let before = keys.len();
+            keys.dedup();
+            crate::prop_assert!(keys.len() == before, "duplicate points in enumeration");
+            // Deterministic: a second enumeration (fresh builder, same
+            // axes) yields identical points in identical order.
+            let b = build().enumerate().map_err(|e| e.to_string())?;
+            crate::prop_assert!(
+                a.points.len() == b.points.len(),
+                "re-enumeration changed length"
+            );
+            for (x, y) in a.points.iter().zip(&b.points) {
+                crate::prop_assert!(
+                    x.index == y.index
+                        && x.cfg == y.cfg
+                        && x.batch == y.batch
+                        && x.sim == y.sim
+                        && *x.workload == *y.workload,
+                    "re-enumeration changed point {}",
+                    x.index
+                );
+            }
+            Ok(())
+        });
+    }
+}

@@ -42,6 +42,10 @@
 //!   sweep executor (`sim::sweep`) on the hot path;
 //! * [`analytic`] — the fast isopower design-space-exploration model
 //!   behind Fig. 5;
+//! * [`explore`] — the typed design-space exploration API
+//!   ([`explore::DesignSpace`] axes → constraints → [`explore::Explorer`]
+//!   evaluation → [`explore::ParetoFrontier`]), the front door the §6
+//!   experiment declarations and `sosa explore` are built on;
 //! * [`power`] — the calibrated energy/power model (§5, Table 2/3);
 //! * [`coordinator`] — offline single- and multi-tenant serving
 //!   frontend (§6.1), a thin wrapper over the serving engine;
@@ -66,6 +70,7 @@ pub mod coordinator;
 pub mod e2e;
 pub mod error;
 pub mod experiments;
+pub mod explore;
 pub mod interconnect;
 pub mod power;
 pub mod runtime;
@@ -81,3 +86,4 @@ pub mod workloads;
 pub use arch::{ArchConfig, ArrayDims};
 pub use compile::{CompiledProgram, TilingSpec};
 pub use error::{Error, Result};
+pub use explore::{DesignPoint, DesignSpace, Explorer, ParetoFrontier};

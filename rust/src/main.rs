@@ -2,6 +2,9 @@
 //!
 //! Subcommands:
 //!   simulate   — run one benchmark on a configuration, print metrics
+//!   explore    — design-space sweep: granularity × interconnect ×
+//!                tiling × workload under constraints, with Pareto
+//!                frontier extraction and CSV/JSON reports
 //!   serve      — multi-tenant serving over a request list
 //!   e2e        — functional check: scheduled tile ops on PJRT vs ref
 //!   list       — list benchmark models
@@ -9,12 +12,16 @@
 //! (Experiments reproducing the paper's tables/figures live in the
 //! `sosa-experiments` binary.)
 
-use sosa::arch::{ArchConfig, ArrayDims};
+use sosa::arch::{presets, ArchConfig, ArrayDims};
 use sosa::coordinator::{Coordinator, Request};
+use sosa::explore::{
+    parse_tiling, tiling_label, DesignSpace, Explorer, Objective, Report,
+};
 use sosa::interconnect::Kind;
 use sosa::power::TDP_W;
 use sosa::sim::{simulate, SimOptions};
 use sosa::util::cli::Args;
+use sosa::util::Table;
 use sosa::workloads::zoo;
 
 fn parse_array(s: &str) -> ArrayDims {
@@ -67,6 +74,174 @@ fn cmd_simulate(args: &Args) {
     println!("  achieved     : {:.1} TOps/s", stats.achieved_ops(&cfg) / 1e12);
     println!("  effective@{:.0}W: {:.1} TOps/s", TDP_W,
              stats.effective_ops_at_tdp(&cfg, TDP_W) / 1e12);
+}
+
+/// Split a `--key a,b,c` list option (None when absent).
+fn parse_list<'a>(args: &'a Args, key: &str) -> Option<Vec<&'a str>> {
+    args.get(key)
+        .map(|v| v.split(',').map(str::trim).filter(|s| !s.is_empty()).collect())
+}
+
+/// `sosa explore`: build a [`DesignSpace`] from axis flags, evaluate
+/// it, optionally extract a Pareto frontier, and write CSV/JSON.
+fn cmd_explore(args: &Args) {
+    let preset = args.get_or("preset", "baseline");
+    let template = presets::by_name(preset).unwrap_or_else(|| {
+        panic!("unknown preset {preset} (have: {})", presets::NAMES.join(", "))
+    });
+    let mut space = DesignSpace::new(template);
+    let quick = args.flag("quick");
+    if quick {
+        // The CI smoke space: 2 arrays × 2 interconnects × 2 tilings
+        // on 16 pods of one cheap benchmark.
+        space = space
+            .square_arrays(&[16, 32])
+            .pods(&[16])
+            .interconnects(&[Kind::Butterfly { expansion: 2 }, Kind::Benes])
+            .tiling(&[
+                parse_tiling("rxr").unwrap(),
+                parse_tiling("none").unwrap(),
+            ])
+            .workloads(vec![zoo::by_name("bert-medium").expect("zoo model")]);
+    }
+    if let Some(arrays) = parse_list(args, "arrays") {
+        let dims: Vec<ArrayDims> = arrays.iter().map(|s| parse_array(s)).collect();
+        space = space.arrays(&dims);
+    }
+    if let Some(pods) = parse_list(args, "pods") {
+        let pods: Vec<usize> =
+            pods.iter().map(|s| s.parse().expect("pod count")).collect();
+        space = space.pods(&pods);
+    } else if let Some(w) = args.get_parse::<f64>("pods-under-tdp") {
+        space = space.pods_under_tdp(w);
+    }
+    if let Some(icns) = parse_list(args, "interconnects") {
+        let kinds: Vec<Kind> = icns.iter().map(|s| parse_interconnect(s)).collect();
+        space = space.interconnects(&kinds);
+    }
+    if let Some(tilings) = parse_list(args, "tiling") {
+        let specs: Vec<_> = tilings
+            .iter()
+            .map(|s| {
+                parse_tiling(s)
+                    .unwrap_or_else(|| panic!("unknown tiling {s} (rxr|none|fixed:K|auto)"))
+            })
+            .collect();
+        space = space.tiling(&specs);
+    }
+    if let Some(names) = parse_list(args, "workloads") {
+        let models = names
+            .iter()
+            .map(|n| zoo::by_name(n).unwrap_or_else(|| panic!("unknown model {n}")))
+            .collect();
+        space = space.workloads(models);
+    }
+    if let Some(batches) = parse_list(args, "batches") {
+        let batches: Vec<usize> =
+            batches.iter().map(|s| s.parse().expect("batch size")).collect();
+        space = space.batches(&batches);
+    }
+    let tdp = args.get_parse::<f64>("tdp");
+    if let Some(w) = tdp {
+        space = space.under_tdp(w);
+    }
+    if let Some(kb) = args.get_parse::<usize>("sram-max-kb") {
+        space = space.sram_at_most(kb * 1024);
+    }
+    let objectives: Vec<Objective> = parse_list(args, "objective")
+        .unwrap_or_else(|| vec!["eff_tops_per_w"])
+        .iter()
+        .map(|s| {
+            Objective::parse(s).unwrap_or_else(|| {
+                panic!(
+                    "unknown objective {s} (have: {})",
+                    Objective::ALL.iter().map(|o| o.name()).collect::<Vec<_>>().join(", ")
+                )
+            })
+        })
+        .collect();
+    let objectives = if objectives.is_empty() {
+        vec![Objective::EffTopsPerWatt]
+    } else {
+        objectives
+    };
+
+    let mut explorer = match args.get_parse::<usize>("threads") {
+        Some(n) => Explorer::with_threads(n),
+        None => Explorer::new(),
+    };
+    if let Some(w) = tdp {
+        explorer = explorer.tdp(w);
+    }
+    let enumeration = space.enumerate().expect("invalid design space");
+    println!(
+        "exploring {} points ({} before constraints)…",
+        enumeration.points.len(),
+        space.cardinality()
+    );
+    let x = sosa::explore::Exploration {
+        records: explorer.evaluate_points(&enumeration.points),
+        skipped: enumeration.skipped,
+    };
+
+    let mut table = Table::new(&[
+        "array", "pods", "interconnect", "tiling", "workload", "batch",
+        "util%", "eff TOps/s", "eff TOps/s/W", "latency ms",
+    ]);
+    for r in &x.records {
+        table.row(vec![
+            r.point.cfg.array.to_string(),
+            r.point.cfg.num_pods.to_string(),
+            r.point.cfg.interconnect.to_string(),
+            tiling_label(r.point.spec()),
+            r.point.workload.name.clone(),
+            r.point.batch.to_string(),
+            format!("{:.1}", r.utilization * 100.0),
+            format!("{:.1}", r.eff_tops),
+            format!("{:.3}", r.eff_tops_per_w),
+            format!("{:.3}", r.latency_s * 1e3),
+        ]);
+    }
+    println!("{table}");
+    for s in &x.skipped {
+        println!("skipped [{}] {}: {}", s.constraint, s.label, s.reason);
+    }
+
+    let frontier = x.frontier(&objectives);
+    if args.flag("pareto") {
+        println!(
+            "\nPareto frontier over ({}) — ranked by {}:",
+            objectives.iter().map(|o| o.name()).collect::<Vec<_>>().join(", "),
+            objectives[0].name()
+        );
+        for &i in &frontier.ranked_by(&x.records, objectives[0]) {
+            let r = &x.records[i];
+            println!(
+                "  {}  ({} = {:.3})",
+                r.point.label(),
+                objectives[0].name(),
+                objectives[0].raw(r)
+            );
+        }
+    }
+
+    let out = args.get_or("out", "results");
+    let format = args.get_or("format", "csv");
+    assert!(
+        matches!(format, "csv" | "json" | "both"),
+        "unknown --format {format} (use csv|json|both)"
+    );
+    let report = Report::new(&x).with_frontier(&frontier);
+    if format == "csv" || format == "both" {
+        let path = format!("{out}/explore.csv");
+        report.write_csv(&path).expect("write csv");
+        println!("wrote {path}");
+    }
+    if format == "json" || format == "both" {
+        let path = format!("{out}/explore.json");
+        report.write_json(&path).expect("write json");
+        println!("wrote {path}");
+    }
 }
 
 fn cmd_serve(args: &Args) {
@@ -142,14 +317,22 @@ fn main() {
     let args = Args::from_env();
     match args.positional.first().map(|s| s.as_str()) {
         Some("simulate") => cmd_simulate(&args),
+        Some("explore") => cmd_explore(&args),
         Some("serve") => cmd_serve(&args),
         Some("e2e") => cmd_e2e(&args),
         Some("list") => cmd_list(),
         _ => {
-            eprintln!("usage: sosa <simulate|serve|e2e|list> [options]");
+            eprintln!("usage: sosa <simulate|explore|serve|e2e|list> [options]");
             eprintln!("  simulate --model resnet50 --array 32x32 --pods 256 \\");
             eprintln!("           [--interconnect butterfly2|benes|crossbar|mesh|htree]");
             eprintln!("           [--batch N] [--bank-kb 256] [--per-layer]");
+            eprintln!("  explore  [--preset baseline|sosa-256|sosa-512|tpu-like|monolithic]");
+            eprintln!("           [--arrays 16x16,32x32] [--pods 64,256 | --pods-under-tdp W]");
+            eprintln!("           [--interconnects butterfly2,benes,...]");
+            eprintln!("           [--tiling rxr,none,fixed:K,auto] [--workloads a,b]");
+            eprintln!("           [--batches 1,8] [--tdp 400] [--sram-max-kb N]");
+            eprintln!("           [--objective eff_tops_per_w,latency] [--pareto]");
+            eprintln!("           [--format csv|json|both] [--out results] [--quick]");
             eprintln!("  serve    --models resnet152,bert-medium [--single-tenant]");
             eprintln!("  e2e      [--artifacts artifacts]");
             eprintln!("  list");

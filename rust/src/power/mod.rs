@@ -59,14 +59,29 @@ pub fn peak_power(cfg: &ArchConfig) -> PowerBreakdown {
     PowerBreakdown { mac_w, sram_w, interconnect_w, post_processor_w, pod_ctrl_w }
 }
 
+/// The power-of-two search cap for [`max_pods_under_tdp`]: 2^20 pods
+/// is far beyond any feasible die, so the search never exceeds it even
+/// for an unbounded TDP.
+pub const MAX_PODS_SEARCH_CAP: usize = 1 << 20;
+
 /// Largest power-of-two pod count whose peak power fits under `tdp_w`
 /// (§6: "the largest power-of-two number that results in a peak power
 /// consumption smaller than the TDP").
+///
+/// Pinned semantics (the `explore` subsystem's `under_tdp` constraint
+/// relies on both):
+///
+/// * the TDP boundary is **strict `<`** — a configuration whose peak
+///   power exactly equals `tdp_w` is rejected, matching the paper's
+///   "smaller than the TDP" wording (see
+///   `exact_tdp_boundary_is_rejected`);
+/// * the doubling search stops at [`MAX_PODS_SEARCH_CAP`], which is
+///   therefore the return value for an effectively unbounded budget;
+/// * returns `0` when even one pod exceeds the budget.
 pub fn max_pods_under_tdp(template: &ArchConfig, tdp_w: f64) -> usize {
     let mut pods = 1usize;
     let mut best = 0usize;
-    // Cap the search: 2^20 pods is far beyond any feasible die.
-    while pods <= 1 << 20 {
+    while pods <= MAX_PODS_SEARCH_CAP {
         let cfg = ArchConfig {
             num_pods: pods,
             num_banks: pods,
@@ -168,6 +183,31 @@ mod tests {
         assert!((t.peak_ops_at_tdp / 1e12 - 806.0).abs() < 25.0, "{}", t.peak_ops_at_tdp / 1e12);
         let t = throughput_at_tdp(&cfg(512, 512, 1), TDP_W);
         assert!((t.peak_ops_at_tdp / 1e12 - 1853.0).abs() < 60.0, "{}", t.peak_ops_at_tdp / 1e12);
+    }
+
+    #[test]
+    fn exact_tdp_boundary_is_rejected() {
+        // Strict `<`: a config whose peak power exactly equals the TDP
+        // does not fit.  Use the 32×32/256 peak as the budget — the
+        // search must stop one doubling short of the boundary config.
+        let template = cfg(32, 32, 1);
+        let peak_at_256 = peak_power(&cfg(32, 32, 256)).total();
+        assert_eq!(max_pods_under_tdp(&template, peak_at_256), 128);
+        // Nudging the budget above the boundary admits the config.
+        assert_eq!(
+            max_pods_under_tdp(&template, peak_at_256 * (1.0 + 1e-12)),
+            256
+        );
+    }
+
+    #[test]
+    fn search_cap_and_zero_budget() {
+        let template = cfg(32, 32, 1);
+        // Unbounded budget: the power-of-two search stops at the cap.
+        assert_eq!(max_pods_under_tdp(&template, f64::INFINITY), MAX_PODS_SEARCH_CAP);
+        // A budget even one pod exceeds yields 0 (callers must .max(1)
+        // if they need a buildable config).
+        assert_eq!(max_pods_under_tdp(&template, 0.0), 0);
     }
 
     #[test]

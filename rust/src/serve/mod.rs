@@ -49,8 +49,8 @@ pub use engine::{
     EngineReport, ServedRequest,
 };
 pub use partition::{
-    partition_pods, serve_partitioned, serve_partitioned_cached, serve_partitioned_threads,
-    sub_config, PartitionPlan, TenantPartition,
+    partition_pods, partition_pods_under_tdp, serve_partitioned, serve_partitioned_cached,
+    serve_partitioned_threads, sub_config, PartitionPlan, TenantPartition,
 };
 pub use slo::{
     analyze, capacity_qps, load_sweep, max_sustainable_qps, percentile, sweep_table,

@@ -19,6 +19,7 @@
 
 use crate::arch::ArchConfig;
 use crate::error::{Error, Result};
+use crate::power::max_pods_under_tdp;
 use crate::sim::SweepExecutor;
 use crate::util::{ilog2, is_pow2};
 
@@ -120,6 +121,33 @@ pub fn partition_pods(num_pods: usize, tenants: &[Tenant]) -> Result<PartitionPl
             .map(|(tenant, pods)| TenantPartition { tenant, pods })
             .collect(),
     })
+}
+
+/// As [`partition_pods`], but the pod budget is first capped to a TDP
+/// envelope: the largest power of two whose peak power fits strictly
+/// under `tdp_w` ([`max_pods_under_tdp`], the §6 provisioning rule and
+/// the `explore` subsystem's `under_tdp` semantics), never exceeding
+/// the machine's own `cfg.num_pods`.  Partitions then split the capped
+/// budget, so a deployment throttled below its silicon (power capping,
+/// shared racks) still yields valid power-of-two sub-accelerators.
+pub fn partition_pods_under_tdp(
+    cfg: &ArchConfig,
+    tenants: &[Tenant],
+    tdp_w: f64,
+) -> Result<PartitionPlan> {
+    let template = ArchConfig {
+        num_pods: 1,
+        num_banks: 1,
+        num_post_processors: 1,
+        ..cfg.clone()
+    };
+    let budget = max_pods_under_tdp(&template, tdp_w).min(cfg.num_pods);
+    if budget == 0 {
+        return Err(Error::config(format!(
+            "TDP {tdp_w} W admits zero pods of {}", cfg.array
+        )));
+    }
+    partition_pods(budget, tenants)
 }
 
 /// Derive the sub-accelerator configuration for a partition: same pod
@@ -320,6 +348,26 @@ mod tests {
         assert!(partition_pods(2, &none).is_err(), "no tenants");
         let four = vec![tenant("a", 1.0), tenant("b", 1.0), tenant("c", 1.0), tenant("d", 1.0)];
         assert!(partition_pods(2, &four).is_err(), "more tenants than pods");
+    }
+
+    #[test]
+    fn tdp_capped_partitioning() {
+        use crate::power::{peak_power, TDP_W};
+        let cfg = ArchConfig::baseline(); // 256 pods of 32×32
+        let tenants = vec![tenant("a", 1.0), tenant("b", 1.0)];
+        // The paper's 400 W budget admits the full machine.
+        let full = partition_pods_under_tdp(&cfg, &tenants, TDP_W).unwrap();
+        assert_eq!(full, partition_pods(256, &tenants).unwrap());
+        // A throttled envelope just above the 64-pod peak caps the
+        // budget at 64 pods → 32/32 split.
+        let sub64 = ArchConfig { num_pods: 64, num_banks: 64,
+                                 num_post_processors: 64, ..cfg.clone() };
+        let cap = peak_power(&sub64).total() * (1.0 + 1e-9);
+        let plan = partition_pods_under_tdp(&cfg, &tenants, cap).unwrap();
+        assert_eq!(plan.pods_used(), 64);
+        assert_eq!(plan.parts[0].pods, 32);
+        // A budget below one pod's peak is an error, not a 0-pod plan.
+        assert!(partition_pods_under_tdp(&cfg, &tenants, 0.1).is_err());
     }
 
     #[test]

@@ -1,5 +1,8 @@
-//! Minimal CSV writer for experiment results (no serde offline; the
-//! format is trivial and the columns are all numeric/short strings).
+//! Minimal CSV writer for experiment results (no serde offline), with
+//! RFC 4180 quoting: fields containing commas, double quotes or line
+//! breaks are wrapped in quotes with inner quotes doubled.  Plain
+//! fields are written verbatim, so outputs that never needed quoting
+//! are byte-identical to the pre-quoting writer.
 
 use std::fs::File;
 use std::io::{BufWriter, Write};
@@ -7,8 +10,22 @@ use std::path::Path;
 
 use crate::Result;
 
-/// Writes rows to a CSV file, escaping nothing (values must not contain
-/// commas/newlines — enforced by debug assertion).
+/// Quote one field per RFC 4180 when it contains `,`, `"`, `\n` or
+/// `\r`; otherwise return it unchanged.
+pub fn quote_field(v: &str) -> String {
+    if v.contains(',') || v.contains('"') || v.contains('\n') || v.contains('\r') {
+        format!("\"{}\"", v.replace('"', "\"\""))
+    } else {
+        v.to_string()
+    }
+}
+
+/// One CSV line (no trailing newline) from raw field values.
+pub fn format_row(values: &[String]) -> String {
+    values.iter().map(|v| quote_field(v)).collect::<Vec<_>>().join(",")
+}
+
+/// Writes rows to a CSV file with RFC 4180 quoting.
 pub struct CsvWriter {
     out: BufWriter<File>,
     cols: usize,
@@ -22,15 +39,15 @@ impl CsvWriter {
             std::fs::create_dir_all(parent)?;
         }
         let mut out = BufWriter::new(File::create(path)?);
-        writeln!(out, "{}", header.join(","))?;
+        let cells: Vec<String> = header.iter().map(|h| h.to_string()).collect();
+        writeln!(out, "{}", format_row(&cells))?;
         Ok(CsvWriter { out, cols: header.len() })
     }
 
     /// Write one row; must match the header width.
     pub fn row(&mut self, values: &[String]) -> Result<()> {
         debug_assert_eq!(values.len(), self.cols, "csv row width mismatch");
-        debug_assert!(values.iter().all(|v| !v.contains(',') && !v.contains('\n')));
-        writeln!(self.out, "{}", values.join(","))?;
+        writeln!(self.out, "{}", format_row(values))?;
         Ok(())
     }
 
@@ -60,6 +77,34 @@ mod tests {
         w.finish().unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text, "a,b\n1,2\n1.23,0.500\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rfc4180_quoting() {
+        // The release-build corruption case: a field containing `","`
+        // must survive a write/parse round trip intact.
+        assert_eq!(quote_field("plain"), "plain");
+        assert_eq!(quote_field("a,b"), "\"a,b\"");
+        assert_eq!(quote_field("\",\""), "\"\"\",\"\"\"");
+        assert_eq!(quote_field("say \"hi\""), "\"say \"\"hi\"\"\"");
+        assert_eq!(quote_field("two\nlines"), "\"two\nlines\"");
+        assert_eq!(
+            format_row(&["a,b".into(), "c".into()]),
+            "\"a,b\",c"
+        );
+    }
+
+    #[test]
+    fn quoted_fields_round_trip_through_file() {
+        let dir = std::env::temp_dir().join("sosa_csv_quote_test");
+        let path = dir.join("q.csv");
+        let mut w = CsvWriter::create(&path, &["name", "v"]).unwrap();
+        w.row(&["Butterfly, k=2".into(), "1".into()]).unwrap();
+        w.row(&["\",\"".into(), "2".into()]).unwrap();
+        w.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "name,v\n\"Butterfly, k=2\",1\n\"\"\",\"\"\",2\n");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

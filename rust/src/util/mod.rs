@@ -1,12 +1,15 @@
-//! Small shared utilities: bitsets, CSV/table emitters, CLI parsing.
+//! Small shared utilities: bitsets, CSV/JSON/table emitters, CLI
+//! parsing.
 
 pub mod bitset;
 pub mod cli;
 pub mod csv;
+pub mod json;
 pub mod table;
 
 pub use bitset::BitSet;
 pub use csv::CsvWriter;
+pub use json::Json;
 pub use table::Table;
 
 /// Integer ceiling division.

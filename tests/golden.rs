@@ -1,0 +1,394 @@
+//! Golden-file tests for the `explore` migration: the declarative
+//! `DesignSpace` experiments must produce CSVs **byte-identical** to
+//! the pre-migration hand-rolled loops.
+//!
+//! Two layers of pinning:
+//!
+//! 1. **Legacy reference** — `mod legacy` preserves the pre-migration
+//!    row-generation code verbatim (config mutation, sweep order,
+//!    float accumulation order, formatting).  Each test renders the
+//!    legacy CSV in-process and compares it byte-for-byte against the
+//!    migrated experiment's file.  This is the authoritative
+//!    pre-vs-post migration check and runs everywhere.
+//! 2. **Committed snapshots** — `tests/golden/*.csv` pin the quick
+//!    outputs across *future* refactors.  Missing files are blessed on
+//!    first run (see `tests/golden/README.md`); present files must
+//!    match exactly.  Re-bless intentional changes with
+//!    `SOSA_BLESS_GOLDEN=1 cargo test --test golden`.
+//!
+//! All comparisons use `--quick` sweeps to keep test time sane; the
+//! full sweeps share every code path with quick (only the axis lists
+//! shrink).
+
+use std::path::{Path, PathBuf};
+
+use sosa::arch::{ArchConfig, ArrayDims};
+use sosa::experiments::{run, ExpOptions};
+use sosa::util::csv::f;
+
+/// Run one experiment in quick mode into a fresh temp dir and return
+/// the produced CSV bytes.
+fn run_quick(id: &str, csv_name: &str) -> String {
+    let dir = std::env::temp_dir().join(format!("sosa_golden_{id}"));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let opts = ExpOptions { out_dir: dir.to_str().unwrap().into(), quick: true };
+    run(id, &opts).unwrap_or_else(|e| panic!("{id}: {e}"));
+    let text = std::fs::read_to_string(dir.join(csv_name)).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    text
+}
+
+fn golden_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../tests/golden")
+}
+
+/// Compare `produced` against the committed snapshot, blessing it when
+/// absent (or when `SOSA_BLESS_GOLDEN` is set).
+fn golden_check(name: &str, produced: &str) {
+    let path = golden_dir().join(name);
+    let bless = std::env::var_os("SOSA_BLESS_GOLDEN").is_some();
+    if bless || !path.exists() {
+        std::fs::create_dir_all(golden_dir()).unwrap();
+        std::fs::write(&path, produced).unwrap();
+        eprintln!("blessed golden snapshot {}", path.display());
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        produced, want,
+        "{name}: output drifted from the committed golden snapshot \
+         (re-bless intentional changes with SOSA_BLESS_GOLDEN=1)"
+    );
+}
+
+/// The pre-migration experiment implementations, preserved verbatim as
+/// CSV-string renderers.  Pooled/parallel execution is bit-identical
+/// to cold sequential simulation (a repo invariant asserted by
+/// `prop_schedule_deterministic` and `pooled_simulation_matches_cold`),
+/// so the references use plain `simulate` calls while keeping the
+/// original iteration order, accumulation order, and formatting.
+mod legacy {
+    use super::*;
+    use sosa::interconnect::cost::{interconnect_power_w, PodTraffic};
+    use sosa::interconnect::Kind;
+    use sosa::power::{max_pods_under_tdp, peak_power, throughput_at_tdp, TDP_W};
+    use sosa::sim::{simulate, SimOptions};
+    use sosa::tiling::Strategy;
+    use sosa::workloads::zoo;
+    use sosa::TilingSpec;
+
+    fn push_row(out: &mut String, cells: &[String]) {
+        out.push_str(&cells.join(","));
+        out.push('\n');
+    }
+
+    /// Pre-migration `granularity::config_for`.
+    fn config_for(dim: usize) -> ArchConfig {
+        let pods = if dim >= 512 {
+            1
+        } else {
+            let template = ArchConfig::with_array(ArrayDims::new(dim, dim), 1);
+            max_pods_under_tdp(&template, TDP_W).max(1)
+        };
+        ArchConfig::with_array(ArrayDims::new(dim, dim), pods)
+    }
+
+    const SIZES: &[(usize, f64, f64)] = &[
+        (512, 10.3, 191.3),
+        (256, 14.0, 183.0),
+        (128, 13.8, 205.0),
+        (64, 17.4, 200.9),
+        (32, 39.4, 317.4),
+        (16, 40.0, 198.9),
+    ];
+
+    pub fn table2_quick_csv() -> String {
+        let benches = zoo::benchmarks();
+        let sim_opts = SimOptions::default();
+        let mut out = String::new();
+        out.push_str(
+            "array,pods,peak_w,peak_tops_at_400w,util,eff_tops,paper_util,paper_eff_tops\n",
+        );
+        let sizes: Vec<_> = SIZES.iter().filter(|s| s.0 >= 32).cloned().collect();
+        for (dim, paper_util, paper_eff) in sizes {
+            let cfg = config_for(dim);
+            let mut util = 0.0;
+            for m in &benches {
+                util += simulate(&cfg, m, &sim_opts).utilization(&cfg);
+            }
+            let util = util / benches.len() as f64;
+            let tp = throughput_at_tdp(&cfg, TDP_W);
+            let eff = util * tp.peak_ops_at_tdp / 1e12;
+            push_row(&mut out, &[
+                format!("{dim}x{dim}"),
+                cfg.num_pods.to_string(),
+                f(tp.peak_power_w, 1),
+                f(tp.peak_ops_at_tdp / 1e12, 0),
+                f(util * 100.0, 1),
+                f(eff, 1),
+                f(paper_util, 1),
+                f(paper_eff, 1),
+            ]);
+        }
+        out
+    }
+
+    pub fn fig9_quick_csv() -> String {
+        let benches = zoo::benchmarks();
+        let sim_opts = SimOptions::default();
+        let dims = [32usize, 128];
+        let mut out = String::new();
+        out.push_str("model,array,util,eff_tops\n");
+        // Pre-migration order: cells computed config-major, rows
+        // written model-major.
+        let cfgs: Vec<ArchConfig> = dims.iter().map(|&d| config_for(d)).collect();
+        let mut cells = vec![(0.0f64, 0.0f64); dims.len() * benches.len()];
+        for (di, cfg) in cfgs.iter().enumerate() {
+            for (mi, m) in benches.iter().enumerate() {
+                let s = simulate(cfg, m, &sim_opts);
+                cells[di * benches.len() + mi] =
+                    (s.utilization(cfg), s.effective_ops_at_tdp(cfg, TDP_W) / 1e12);
+            }
+        }
+        for (mi, m) in benches.iter().enumerate() {
+            for (di, &dim) in dims.iter().enumerate() {
+                let (util, eff) = cells[di * benches.len() + mi];
+                push_row(&mut out, &[
+                    m.name.clone(),
+                    format!("{dim}x{dim}"),
+                    f(util, 4),
+                    f(eff, 1),
+                ]);
+            }
+        }
+        out
+    }
+
+    pub fn table1_quick_csv() -> String {
+        const KINDS: &[(Kind, f64, f64, f64)] = &[
+            (Kind::Butterfly { expansion: 1 }, 66.81, 19.72, 0.23),
+            (Kind::Butterfly { expansion: 2 }, 72.41, 20.17, 0.52),
+            (Kind::Butterfly { expansion: 4 }, 72.26, 20.27, 1.15),
+            (Kind::Butterfly { expansion: 8 }, 72.43, 20.48, 2.53),
+            (Kind::Crossbar, 72.38, 19.73, 7.36),
+            (Kind::Benes, 72.38, 30.00, 0.92),
+        ];
+        let benches: Vec<_> = ["resnet50", "bert-base"]
+            .iter()
+            .map(|n| zoo::by_name(n).unwrap())
+            .collect();
+        let pods = 256usize;
+        let sim_opts = SimOptions::default();
+        let mut out = String::new();
+        out.push_str(
+            "interconnect,busy_pct,cycles_per_tile_op,mw_per_byte,\
+             paper_busy,paper_cycles,paper_mw\n",
+        );
+        for &(kind, p_busy, p_cyc, p_mw) in KINDS {
+            let mut cfg = ArchConfig::with_array(ArrayDims::new(16, 16), pods);
+            cfg.interconnect = kind;
+            let cells: Vec<(f64, f64)> = benches
+                .iter()
+                .map(|b| {
+                    let s = simulate(&cfg, b, &sim_opts);
+                    (s.busy_pods_frac(&cfg), s.cycles_per_tile_op())
+                })
+                .collect();
+            let busy =
+                100.0 * cells.iter().map(|&(b, _)| b).sum::<f64>() / benches.len() as f64;
+            let cyc = cells.iter().map(|&(_, c)| c).sum::<f64>() / benches.len() as f64;
+            let mw = kind.mw_per_byte(pods);
+            push_row(&mut out, &[
+                kind.to_string(),
+                f(busy, 2),
+                f(cyc, 2),
+                f(mw, 2),
+                f(p_busy, 2),
+                f(p_cyc, 2),
+                f(p_mw, 2),
+            ]);
+        }
+        out
+    }
+
+    pub fn fig10_quick_csv() -> String {
+        let benches = vec![zoo::by_name("resnet152").unwrap()];
+        let sim_opts = SimOptions::default();
+        let mut out = String::new();
+        out.push_str("design,pods_or_dim,tdp_w,eff_tops\n");
+        let pod_sweep = [64usize, 256];
+        for (dim, tag) in [(32usize, "SOSA-32x32"), (64, "SOSA-64x64")] {
+            for &pods in &pod_sweep {
+                let cfg = ArchConfig::with_array(ArrayDims::new(dim, dim), pods);
+                let mut util = 0.0;
+                for m in &benches {
+                    util += simulate(&cfg, m, &sim_opts).utilization(&cfg);
+                }
+                util /= benches.len() as f64;
+                let tdp = peak_power(&cfg).total();
+                let eff = util * cfg.peak_ops() / 1e12;
+                push_row(&mut out, &[tag.into(), pods.to_string(), f(tdp, 1), f(eff, 1)]);
+            }
+        }
+        for dim in [512usize] {
+            let cfg = ArchConfig::with_array(ArrayDims::new(dim, dim), 1);
+            let mut util = 0.0;
+            for m in &benches {
+                util += simulate(&cfg, m, &sim_opts).utilization(&cfg);
+            }
+            util /= benches.len() as f64;
+            let tdp = peak_power(&cfg).total();
+            let eff = util * cfg.peak_ops() / 1e12;
+            push_row(&mut out, &["Monolithic".into(), dim.to_string(), f(tdp, 1), f(eff, 1)]);
+        }
+        out
+    }
+
+    pub fn fig12a_quick_csv() -> String {
+        let kinds: Vec<Kind> = vec![
+            Kind::Butterfly { expansion: 1 },
+            Kind::Butterfly { expansion: 2 },
+            Kind::Butterfly { expansion: 4 },
+            Kind::Benes,
+            Kind::Crossbar,
+            Kind::Mesh,
+            Kind::HTree,
+        ];
+        let pods_sweep = [64usize, 256];
+        let benches = vec![zoo::by_name("resnet50").unwrap()];
+        let sim_opts = SimOptions::default();
+        let cfg_for = |kind: Kind, pods: usize| {
+            let mut cfg = ArchConfig::with_array(ArrayDims::new(32, 32), pods);
+            cfg.interconnect = kind;
+            cfg
+        };
+        let mut out = String::new();
+        out.push_str("interconnect,pods,tdp_w,eff_tops,icn_power_w\n");
+        // cells[pi·|benches| + bi][ki] = utilization on kind ki.
+        let mut cells: Vec<Vec<f64>> = Vec::new();
+        for &pods in &pods_sweep {
+            for bench in &benches {
+                cells.push(
+                    kinds
+                        .iter()
+                        .map(|&kind| {
+                            let cfg = cfg_for(kind, pods);
+                            simulate(&cfg, bench, &sim_opts).utilization(&cfg)
+                        })
+                        .collect(),
+                );
+            }
+        }
+        for (ki, &kind) in kinds.iter().enumerate() {
+            for (pi, &pods) in pods_sweep.iter().enumerate() {
+                let cfg = &cfg_for(kind, pods);
+                let util = (0..benches.len())
+                    .map(|bi| cells[pi * benches.len() + bi][ki])
+                    .sum::<f64>()
+                    / benches.len() as f64;
+                let tdp = peak_power(cfg).total();
+                let eff = util * cfg.peak_ops() / 1e12;
+                let icn_w = interconnect_power_w(
+                    kind, pods, PodTraffic::steady_state(32, 32, cfg.precision), 1.0);
+                push_row(&mut out, &[
+                    kind.to_string(),
+                    pods.to_string(),
+                    f(tdp, 1),
+                    f(eff, 1),
+                    f(icn_w, 1),
+                ]);
+            }
+        }
+        out
+    }
+
+    pub fn fig12b_quick_csv() -> String {
+        let cfg = ArchConfig::baseline();
+        let names = ["resnet50", "bert-base"];
+        let benches: Vec<_> = names.iter().map(|n| zoo::by_name(n).unwrap()).collect();
+        let ks = [8usize, 32, 128];
+        let mut out = String::new();
+        out.push_str("k,eff_tops,normalized\n");
+        let mut results: Vec<(String, f64)> = vec![];
+        let mut sweep = |label: String, spec: TilingSpec| {
+            let o = SimOptions { spec, ..Default::default() };
+            let mut eff = 0.0;
+            for m in &benches {
+                eff += simulate(&cfg, m, &o).achieved_ops(&cfg);
+            }
+            results.push((label, eff / benches.len() as f64 / 1e12));
+        };
+        for &k in &ks {
+            sweep(k.to_string(), TilingSpec::Global(Strategy::Fixed(k)));
+        }
+        sweep("none".into(), TilingSpec::Global(Strategy::NoPartition));
+        let best = results.iter().map(|r| r.1).fold(f64::MIN, f64::max);
+        for (k, eff) in &results {
+            push_row(&mut out, &[k.clone(), f(*eff, 1), f(eff / best, 3)]);
+        }
+        out
+    }
+}
+
+#[test]
+fn table2_matches_pre_migration_and_golden() {
+    let produced = run_quick("table2", "table2.csv");
+    assert_eq!(
+        produced,
+        legacy::table2_quick_csv(),
+        "migrated table2 CSV differs from the pre-migration implementation"
+    );
+    golden_check("table2_quick.csv", &produced);
+}
+
+#[test]
+fn fig9_matches_pre_migration_and_golden() {
+    let produced = run_quick("fig9", "fig9.csv");
+    assert_eq!(
+        produced,
+        legacy::fig9_quick_csv(),
+        "migrated fig9 CSV differs from the pre-migration implementation"
+    );
+    golden_check("fig9_quick.csv", &produced);
+}
+
+#[test]
+fn table1_matches_pre_migration() {
+    let produced = run_quick("table1", "table1.csv");
+    assert_eq!(
+        produced,
+        legacy::table1_quick_csv(),
+        "migrated table1 CSV differs from the pre-migration implementation"
+    );
+}
+
+#[test]
+fn fig10_matches_pre_migration() {
+    let produced = run_quick("fig10", "fig10.csv");
+    assert_eq!(
+        produced,
+        legacy::fig10_quick_csv(),
+        "migrated fig10 CSV differs from the pre-migration implementation"
+    );
+}
+
+#[test]
+fn fig12a_matches_pre_migration() {
+    let produced = run_quick("fig12a", "fig12a.csv");
+    assert_eq!(
+        produced,
+        legacy::fig12a_quick_csv(),
+        "migrated fig12a CSV differs from the pre-migration implementation"
+    );
+}
+
+#[test]
+fn fig12b_matches_pre_migration() {
+    let produced = run_quick("fig12b", "fig12b.csv");
+    assert_eq!(
+        produced,
+        legacy::fig12b_quick_csv(),
+        "migrated fig12b CSV differs from the pre-migration implementation"
+    );
+}

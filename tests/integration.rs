@@ -114,6 +114,60 @@ fn per_layer_selection_never_worse_than_global_rxr() {
 }
 
 #[test]
+fn explore_joint_sweep_under_tdp_with_frontier() {
+    // Acceptance: one DesignSpace expresses a joint granularity ×
+    // interconnect × tiling sweep under a TDP constraint and yields a
+    // Pareto frontier ranked by effective TOps/s/W.
+    use sosa::explore::{DesignSpace, Explorer, Objective};
+    use sosa::tiling::Strategy as TStrategy;
+    let space = DesignSpace::baseline()
+        .square_arrays(&[16, 32])
+        .pods(&[16, 1024])
+        .interconnects(&[Kind::Butterfly { expansion: 2 }, Kind::Benes])
+        .tiling(&[
+            TilingSpec::Global(TStrategy::RxR),
+            TilingSpec::Global(TStrategy::Fixed(8)),
+        ])
+        .workloads(vec![zoo::by_name("bert-medium").unwrap()])
+        .sim(SimOptions { memory_model: false, ..Default::default() })
+        .under_tdp(TDP_W);
+    let x = Explorer::new().evaluate(&space).unwrap();
+    // 1024 pods blow the 400 W budget at either granularity (Table 2
+    // caps 32×32 at 256 and 16×16 at 512 pods); the 16-pod corners all
+    // survive.  Records + skips must cover the full 2×2×2×2 product.
+    assert_eq!(x.records.len() + x.skipped.len(), 16);
+    assert!(x.skipped.iter().all(|s| s.constraint == "under_tdp"));
+    assert!(!x.skipped.is_empty(), "the 1024-pod corners must be pruned");
+    for r in &x.records {
+        assert!(r.peak_power_w < TDP_W, "{}", r.point.label());
+        assert_eq!(r.stats.useful_macs, r.point.workload.total_macs());
+    }
+    let front = x.frontier(&[Objective::EffTopsPerWatt, Objective::Latency]);
+    assert!(!front.members.is_empty());
+    let ranked = front.ranked_by(&x.records, Objective::EffTopsPerWatt);
+    assert_eq!(ranked.len(), front.members.len());
+    for w in ranked.windows(2) {
+        assert!(
+            x.records[w[0]].eff_tops_per_w >= x.records[w[1]].eff_tops_per_w,
+            "frontier ranking must be best-first"
+        );
+    }
+    // Frontier correctness on the actual records: members undominated.
+    for &i in &front.members {
+        for r in &x.records {
+            let better_eff = r.eff_tops_per_w > x.records[i].eff_tops_per_w;
+            let better_lat = r.latency_s < x.records[i].latency_s;
+            let no_worse = r.eff_tops_per_w >= x.records[i].eff_tops_per_w
+                && r.latency_s <= x.records[i].latency_s;
+            assert!(
+                !(no_worse && (better_eff || better_lat)),
+                "frontier member {i} is dominated"
+            );
+        }
+    }
+}
+
+#[test]
 fn compiled_program_reuse_matches_fused_simulation() {
     // compile once → execute across interconnect variants and repeated
     // runs; every execution must equal the fused simulate() result.
