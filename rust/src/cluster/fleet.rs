@@ -1,0 +1,607 @@
+//! The [`Fleet`]: N independent SOSA accelerator nodes, each wrapping
+//! its own serving [`Engine`] (own [`crate::ArchConfig`], own warm
+//! [`CostCache`], own pooled simulation context), behind a cluster
+//! dispatch layer.
+//!
+//! Serving a trace is a three-phase pipeline:
+//!
+//! 1. **Place** — decide which nodes host which tenant models
+//!    ([`Placement::Replicate`]: every node holds every model;
+//!    [`Placement::Partition`]: each tenant lives on exactly one node,
+//!    assigned greedily by weight against node capacity).
+//! 2. **Dispatch** — a sequential discrete-event pass routes every
+//!    arrival to one hosting node under the configured
+//!    [`Policy`] (see [`super::router`]); the assignment is a pure
+//!    function of (arrivals, placement, policy), independent of how
+//!    the nodes are later simulated.
+//! 3. **Simulate** — each node's engine runs its assigned sub-trace.
+//!    Nodes share nothing, so they fan out across cores on
+//!    [`SweepExecutor`] and the reports are merged **by node index** —
+//!    bit-identical results for any thread count (`SOSA_THREADS`).
+
+use crate::arch::ArchConfig;
+use crate::error::{Error, Result};
+use crate::power::peak_power;
+use crate::serve::{
+    capacity_qps, Arrival, CostCache, Engine, EngineConfig, EngineReport, ServedRequest, Tenant,
+};
+use crate::sim::SweepExecutor;
+
+use super::router::{Policy, Router};
+
+/// One accelerator in the fleet.
+#[derive(Clone, Debug)]
+pub struct NodeSpec {
+    /// Display name (reports, CSVs).
+    pub name: String,
+    /// The node's architecture; nodes may be heterogeneous.
+    pub cfg: ArchConfig,
+}
+
+impl NodeSpec {
+    /// Named node over a configuration.
+    pub fn new(name: impl Into<String>, cfg: ArchConfig) -> NodeSpec {
+        NodeSpec { name: name.into(), cfg }
+    }
+}
+
+/// How tenant models map onto fleet nodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// Every node hosts a replica of every tenant model: any node can
+    /// serve any request (maximum routing freedom, maximum per-node
+    /// model memory).
+    Replicate,
+    /// Each tenant lives on exactly one node, assigned greedily by
+    /// weight against node capacity (peak ops): requests of a tenant
+    /// always route to its node (no cross-replica freedom, minimum
+    /// per-node model memory — the spatial analogue of
+    /// [`crate::serve::partition_pods`] at fleet scale).
+    Partition,
+}
+
+/// Fleet-level serving configuration.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    pub placement: Placement,
+    pub policy: Policy,
+    /// Per-node engine configuration (batching, admission, cost model).
+    pub engine: EngineConfig,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            placement: Placement::Replicate,
+            policy: Policy::JoinShortestQueue,
+            engine: EngineConfig::default(),
+        }
+    }
+}
+
+/// Per-node outcome summary of one fleet run.
+#[derive(Clone, Debug, Default)]
+pub struct NodeReport {
+    /// Node index in the fleet.
+    pub node: usize,
+    pub name: String,
+    pub pods: usize,
+    /// Requests dispatched to this node.
+    pub assigned: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    /// Seconds the node spent executing batches.
+    pub busy_s: f64,
+    /// The node's own makespan (0 when it received nothing).
+    pub makespan_s: f64,
+    pub total_ops: u64,
+    pub sim_calls: u64,
+}
+
+/// Outcome of one fleet run: the per-node summaries plus one merged
+/// [`EngineReport`] with global tenant indices, completions sorted by
+/// `(t_end, id)`, and `busy_s` pod-weighted so `busy_frac()` stays a
+/// fleet-level utilization in `[0, 1]`.
+#[derive(Clone, Debug, Default)]
+pub struct FleetReport {
+    pub nodes: Vec<NodeReport>,
+    pub report: EngineReport,
+}
+
+/// A fleet of SOSA accelerator nodes with a dispatch policy.
+pub struct Fleet {
+    nodes: Vec<NodeSpec>,
+    fcfg: FleetConfig,
+}
+
+impl Fleet {
+    /// Fleet over explicit (possibly heterogeneous) nodes.
+    pub fn new(nodes: Vec<NodeSpec>, fcfg: FleetConfig) -> Result<Fleet> {
+        if nodes.is_empty() {
+            return Err(Error::config("fleet needs at least one node"));
+        }
+        for n in &nodes {
+            n.cfg.validate()?;
+        }
+        Ok(Fleet { nodes, fcfg })
+    }
+
+    /// Homogeneous fleet: `n` identical nodes named `node0..node{n-1}`.
+    pub fn homogeneous(n: usize, cfg: ArchConfig, fcfg: FleetConfig) -> Result<Fleet> {
+        let nodes = (0..n).map(|i| NodeSpec::new(format!("node{i}"), cfg.clone())).collect();
+        Fleet::new(nodes, fcfg)
+    }
+
+    /// Number of nodes.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// True only for the (unconstructible) empty fleet.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// The node specs.
+    pub fn nodes(&self) -> &[NodeSpec] {
+        &self.nodes
+    }
+
+    /// The fleet configuration.
+    pub fn config(&self) -> &FleetConfig {
+        &self.fcfg
+    }
+
+    /// Total pods across the fleet.
+    pub fn total_pods(&self) -> usize {
+        self.nodes.iter().map(|n| n.cfg.num_pods).sum()
+    }
+
+    /// Aggregate peak power across all nodes, Watts.
+    pub fn peak_power_w(&self) -> f64 {
+        self.nodes.iter().map(|n| peak_power(&n.cfg).total()).sum()
+    }
+
+    /// Which nodes host each tenant: `hosts[tenant]` is an ascending
+    /// list of node indices.  Deterministic.
+    pub fn place(&self, tenants: &[Tenant]) -> Vec<Vec<usize>> {
+        let n = self.nodes.len();
+        match self.fcfg.placement {
+            Placement::Replicate => vec![(0..n).collect(); tenants.len()],
+            Placement::Partition => {
+                // Greedy weighted assignment: each tenant (in index
+                // order) goes to the node with the lowest assigned
+                // weight relative to its capacity; ties to the lowest
+                // node index.
+                let caps: Vec<f64> = self.nodes.iter().map(|s| s.cfg.peak_ops()).collect();
+                let mut load = vec![0.0f64; n];
+                tenants
+                    .iter()
+                    .map(|t| {
+                        let pick = (0..n)
+                            .min_by(|&a, &b| {
+                                (load[a] / caps[a])
+                                    .total_cmp(&(load[b] / caps[b]))
+                                    .then(a.cmp(&b))
+                            })
+                            .expect("fleet non-empty");
+                        load[pick] += t.weight.max(0.0);
+                        vec![pick]
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Estimated aggregate capacity (requests/s): the sum of each
+    /// node's [`capacity_qps`] over the tenants it hosts.
+    pub fn capacity_qps(&self, tenants: &[Tenant]) -> f64 {
+        let hosted = self.hosted_tenants(&self.place(tenants));
+        hosted
+            .iter()
+            .enumerate()
+            .filter(|(_, h)| !h.is_empty())
+            .map(|(ni, h)| {
+                let local: Vec<Tenant> = h.iter().map(|&k| tenants[k].clone()).collect();
+                capacity_qps(&self.nodes[ni].cfg, &local, &self.fcfg.engine)
+            })
+            .sum()
+    }
+
+    /// Invert a [`Fleet::place`] result: `hosted[node]` = ascending
+    /// global tenant indices the node hosts.
+    fn hosted_tenants(&self, hosts: &[Vec<usize>]) -> Vec<Vec<usize>> {
+        let mut hosted: Vec<Vec<usize>> = vec![vec![]; self.nodes.len()];
+        for (t, nodes) in hosts.iter().enumerate() {
+            for &n in nodes {
+                hosted[n].push(t);
+            }
+        }
+        hosted
+    }
+
+    /// Estimated per-unit service seconds for every (node, tenant):
+    /// the node's full-batch cost over the hosted model divided by the
+    /// batch size (`f64::INFINITY` for non-hosted tenants).  This
+    /// feeds the router's queue view only — the per-node simulation
+    /// uses the full cost model.
+    fn unit_estimates(&self, tenants: &[Tenant], hosted: &[Vec<usize>]) -> Vec<Vec<f64>> {
+        let b = self.fcfg.engine.policy.max_batch.max(1);
+        let mut rows: Vec<Vec<f64>> = Vec::with_capacity(hosted.len());
+        for (ni, h) in hosted.iter().enumerate() {
+            // Identical node architecture + identical hosted set ⇒
+            // identical estimates: homogeneous fleets pay one
+            // cost-model pass, not one per node.
+            let twin = (0..ni)
+                .find(|&j| hosted[j] == *h && self.nodes[j].cfg == self.nodes[ni].cfg);
+            if let Some(j) = twin {
+                rows.push(rows[j].clone());
+                continue;
+            }
+            let mut row = vec![f64::INFINITY; tenants.len()];
+            if !h.is_empty() {
+                let models = h.iter().map(|&k| tenants[k].model.clone()).collect();
+                let mut cache = CostCache::new(
+                    self.nodes[ni].cfg.clone(),
+                    models,
+                    self.fcfg.engine.sim.clone(),
+                );
+                for (local, &k) in h.iter().enumerate() {
+                    row[k] = cache.cost(&[(local, b)]).seconds / b as f64;
+                }
+            }
+            rows.push(row);
+        }
+        rows
+    }
+
+    /// Phase 1+2: place tenants and dispatch every arrival, returning
+    /// each node's sub-trace with tenant indices remapped to the
+    /// node-local model list (`hosted[node]` order).
+    fn dispatch(
+        &self,
+        tenants: &[Tenant],
+        arrivals: &[Arrival],
+        hosts: &[Vec<usize>],
+        hosted: &[Vec<usize>],
+    ) -> Vec<Vec<Arrival>> {
+        debug_assert!(arrivals.windows(2).all(|w| w[0].t <= w[1].t));
+        let unit_s = self.unit_estimates(tenants, hosted);
+        let mut router = Router::new(self.fcfg.policy.clone(), unit_s);
+        let mut per_node: Vec<Vec<Arrival>> = vec![vec![]; self.nodes.len()];
+        for a in arrivals {
+            assert!(a.tenant < tenants.len(), "arrival tenant out of range");
+            let node = router.dispatch(a, &hosts[a.tenant]);
+            let local = hosted[node]
+                .binary_search(&a.tenant)
+                .expect("dispatch picked a hosting node");
+            per_node[node].push(Arrival { tenant: local, ..*a });
+        }
+        per_node
+    }
+
+    /// Serve a time-sorted trace on the fleet (default worker count).
+    pub fn serve(&self, tenants: &[Tenant], arrivals: &[Arrival]) -> Result<FleetReport> {
+        self.serve_threads(tenants, arrivals, None)
+    }
+
+    /// As [`Fleet::serve`] with an explicit node-simulation worker
+    /// count (`None` = `SOSA_THREADS` / machine parallelism).  Nodes
+    /// simulate cold engines in parallel and merge by node index, so
+    /// the report is identical for any worker count.
+    pub fn serve_threads(
+        &self,
+        tenants: &[Tenant],
+        arrivals: &[Arrival],
+        threads: Option<usize>,
+    ) -> Result<FleetReport> {
+        if tenants.is_empty() {
+            return Err(Error::config("fleet serving needs at least one tenant"));
+        }
+        let hosts = self.place(tenants);
+        let hosted = self.hosted_tenants(&hosts);
+        let per_node = self.dispatch(tenants, arrivals, &hosts, &hosted);
+        let ex = match threads {
+            Some(n) => SweepExecutor::with_threads(n),
+            None => SweepExecutor::new(),
+        };
+        let idx: Vec<usize> = (0..self.nodes.len()).collect();
+        let reports: Vec<EngineReport> = ex.run(&idx, |_, &ni| {
+            if hosted[ni].is_empty() || per_node[ni].is_empty() {
+                return EngineReport {
+                    rejected_by_tenant: vec![0; hosted[ni].len()],
+                    ..Default::default()
+                };
+            }
+            let local: Vec<Tenant> =
+                hosted[ni].iter().map(|&k| tenants[k].clone()).collect();
+            let mut engine =
+                Engine::new(self.nodes[ni].cfg.clone(), &local, self.fcfg.engine.clone());
+            engine.run(&per_node[ni])
+        });
+        Ok(self.merge(tenants.len(), &hosted, &per_node, reports))
+    }
+
+    /// As [`Fleet::serve`], sequential, with one warm per-node
+    /// [`CostCache`] carried across calls via `caches` (length =
+    /// fleet size, start with `None`s).  Load sweeps call this per
+    /// offered rate so a node's batch compositions simulate once per
+    /// sweep worker instead of once per rate; parallelism belongs to
+    /// the caller's point fan-out.  With `engine.sim.pooling` off the
+    /// caches are ignored (cold baseline).  Results are identical to
+    /// [`Fleet::serve_threads`] at any thread count.
+    pub fn serve_cached(
+        &self,
+        tenants: &[Tenant],
+        arrivals: &[Arrival],
+        caches: &mut [Option<CostCache>],
+    ) -> Result<FleetReport> {
+        if tenants.is_empty() {
+            return Err(Error::config("fleet serving needs at least one tenant"));
+        }
+        assert_eq!(caches.len(), self.nodes.len(), "one cache slot per node");
+        let hosts = self.place(tenants);
+        let hosted = self.hosted_tenants(&hosts);
+        let per_node = self.dispatch(tenants, arrivals, &hosts, &hosted);
+        let mut reports = Vec::with_capacity(self.nodes.len());
+        for ni in 0..self.nodes.len() {
+            if hosted[ni].is_empty() || per_node[ni].is_empty() {
+                reports.push(EngineReport {
+                    rejected_by_tenant: vec![0; hosted[ni].len()],
+                    ..Default::default()
+                });
+                continue;
+            }
+            let local: Vec<Tenant> =
+                hosted[ni].iter().map(|&k| tenants[k].clone()).collect();
+            let warm = if self.fcfg.engine.sim.pooling { caches[ni].take() } else { None };
+            let mut engine = match warm {
+                Some(c) => {
+                    Engine::with_cache(&self.nodes[ni].cfg, &local, c, self.fcfg.engine.clone())
+                }
+                None => {
+                    Engine::new(self.nodes[ni].cfg.clone(), &local, self.fcfg.engine.clone())
+                }
+            };
+            reports.push(engine.run(&per_node[ni]));
+            caches[ni] = Some(engine.into_cache());
+        }
+        Ok(self.merge(tenants.len(), &hosted, &per_node, reports))
+    }
+
+    /// Phase 3: merge per-node reports (in node-index order) into the
+    /// fleet report.  Tenant indices are remapped back to global, the
+    /// merged completion list is sorted by `(t_end, id)`, and node
+    /// busy time is pod-weighted so the merged busy fraction stays a
+    /// fleet-level utilization.
+    fn merge(
+        &self,
+        n_tenants: usize,
+        hosted: &[Vec<usize>],
+        per_node: &[Vec<Arrival>],
+        reports: Vec<EngineReport>,
+    ) -> FleetReport {
+        let total_pods = self.total_pods().max(1);
+        let mut merged = EngineReport {
+            rejected_by_tenant: vec![0; n_tenants],
+            ..Default::default()
+        };
+        let mut nodes = Vec::with_capacity(self.nodes.len());
+        for (ni, rep) in reports.into_iter().enumerate() {
+            nodes.push(NodeReport {
+                node: ni,
+                name: self.nodes[ni].name.clone(),
+                pods: self.nodes[ni].cfg.num_pods,
+                assigned: per_node[ni].len() as u64,
+                completed: rep.completed.len() as u64,
+                rejected: rep.rejected,
+                batches: rep.batches,
+                busy_s: rep.busy_s,
+                makespan_s: rep.makespan_s,
+                total_ops: rep.total_ops,
+                sim_calls: rep.sim_calls,
+            });
+            merged.rejected += rep.rejected;
+            for (local, &r) in rep.rejected_by_tenant.iter().enumerate() {
+                merged.rejected_by_tenant[hosted[ni][local]] += r;
+            }
+            merged.makespan_s = merged.makespan_s.max(rep.makespan_s);
+            // Nodes run concurrently: weight each node's busy time by
+            // its pod share so busy_frac() stays in [0, 1].
+            merged.busy_s +=
+                rep.busy_s * self.nodes[ni].cfg.num_pods as f64 / total_pods as f64;
+            merged.batches += rep.batches;
+            merged.total_ops += rep.total_ops;
+            merged.sim_calls += rep.sim_calls;
+            merged.completed.extend(rep.completed.iter().map(|r| ServedRequest {
+                tenant: hosted[ni][r.tenant],
+                ..*r
+            }));
+        }
+        merged
+            .completed
+            .sort_by(|a, b| a.t_end.total_cmp(&b.t_end).then(a.id.cmp(&b.id)));
+        FleetReport { nodes, report: merged }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchConfig, ArrayDims};
+    use crate::serve::{generate, BatchPolicy, TrafficSpec};
+    use crate::sim::SimOptions;
+    use crate::workloads::ModelGraph;
+
+    fn tenant(name: &str, weight: f64) -> Tenant {
+        let mut g = ModelGraph::new(name);
+        g.add("fc", 64, 64, 64, vec![]);
+        Tenant::new(g, weight)
+    }
+
+    fn node_cfg(pods: usize) -> ArchConfig {
+        ArchConfig::with_array(ArrayDims::new(8, 8), pods)
+    }
+
+    fn fast_fcfg(policy: Policy) -> FleetConfig {
+        FleetConfig {
+            policy,
+            engine: EngineConfig {
+                policy: BatchPolicy { max_batch: 4, max_wait_s: 1e-3 },
+                sim: SimOptions { memory_model: false, ..Default::default() },
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    /// A burst of simultaneous arrivals: queues build, so queue-aware
+    /// policies have real state to react to.
+    fn trace(n: usize, tenants: &[Tenant]) -> Vec<Arrival> {
+        (0..n)
+            .map(|i| Arrival { t: 0.0, tenant: i % tenants.len(), id: i as u64, batch: 1 })
+            .collect()
+    }
+
+    #[test]
+    fn fleet_construction_validates() {
+        assert!(Fleet::new(vec![], FleetConfig::default()).is_err());
+        let mut bad = node_cfg(8);
+        bad.num_pods = 100; // not a power of two
+        assert!(Fleet::new(
+            vec![NodeSpec::new("n", bad)],
+            FleetConfig::default()
+        )
+        .is_err());
+        let f = Fleet::homogeneous(3, node_cfg(8), FleetConfig::default()).unwrap();
+        assert_eq!(f.len(), 3);
+        assert_eq!(f.total_pods(), 24);
+        assert_eq!(f.nodes()[2].name, "node2");
+        assert!(f.peak_power_w() > 0.0);
+    }
+
+    #[test]
+    fn replicate_hosts_everywhere_partition_spreads_by_weight() {
+        let f = Fleet::homogeneous(2, node_cfg(8), FleetConfig::default()).unwrap();
+        let tenants = vec![tenant("a", 1.0), tenant("b", 1.0)];
+        assert_eq!(f.place(&tenants), vec![vec![0, 1], vec![0, 1]]);
+        let f = Fleet::homogeneous(
+            2,
+            node_cfg(8),
+            FleetConfig { placement: Placement::Partition, ..Default::default() },
+        )
+        .unwrap();
+        let three = vec![tenant("a", 2.0), tenant("b", 1.0), tenant("c", 1.0)];
+        let hosts = f.place(&three);
+        // Greedy: a → node0 (tie), b → node1 (node0 loaded), c → node1
+        // (1/cap < 2/cap).
+        assert_eq!(hosts, vec![vec![0], vec![1], vec![1]]);
+    }
+
+    #[test]
+    fn heterogeneous_partition_prefers_bigger_nodes() {
+        let f = Fleet::new(
+            vec![
+                NodeSpec::new("small", node_cfg(2)),
+                NodeSpec::new("big", node_cfg(16)),
+            ],
+            FleetConfig { placement: Placement::Partition, ..Default::default() },
+        )
+        .unwrap();
+        let tenants = vec![tenant("a", 1.0), tenant("b", 1.0), tenant("c", 1.0)];
+        let hosts = f.place(&tenants);
+        // a ties to node 0; b goes to the idle big node; c joins the
+        // big node (1/16-pod load still below 1/2-pod load).
+        assert_eq!(hosts, vec![vec![0], vec![1], vec![1]]);
+    }
+
+    #[test]
+    fn fleet_serves_everything_and_accounts_per_node() {
+        let tenants = vec![tenant("a", 1.0), tenant("b", 1.0)];
+        let f = Fleet::homogeneous(2, node_cfg(8), fast_fcfg(Policy::JoinShortestQueue))
+            .unwrap();
+        let arrivals = trace(24, &tenants);
+        let rep = f.serve_threads(&tenants, &arrivals, Some(1)).unwrap();
+        assert_eq!(rep.report.completed.len(), 24);
+        assert_eq!(rep.report.rejected, 0);
+        assert_eq!(rep.nodes.len(), 2);
+        assert_eq!(rep.nodes.iter().map(|n| n.assigned).sum::<u64>(), 24);
+        assert_eq!(rep.nodes.iter().map(|n| n.completed).sum::<u64>(), 24);
+        assert!(rep.nodes.iter().all(|n| n.assigned > 0), "jsq spreads load");
+        // Completions carry global tenant indices, sorted by t_end.
+        assert!(rep.report.completed.iter().any(|r| r.tenant == 1));
+        assert!(rep.report.completed.windows(2).all(|w| w[0].t_end <= w[1].t_end));
+        let frac = rep.report.busy_frac();
+        assert!(frac > 0.0 && frac <= 1.0, "fleet busy fraction {frac}");
+    }
+
+    #[test]
+    fn thread_count_never_changes_the_report() {
+        let tenants = vec![tenant("a", 1.0), tenant("b", 2.0)];
+        let f = Fleet::homogeneous(4, node_cfg(4), fast_fcfg(Policy::JoinShortestQueue))
+            .unwrap();
+        let spec = TrafficSpec::poisson(3000.0, 0.05, 11);
+        let arrivals = generate(&spec, &tenants);
+        let seq = f.serve_threads(&tenants, &arrivals, Some(1)).unwrap();
+        let par = f.serve_threads(&tenants, &arrivals, Some(4)).unwrap();
+        assert_eq!(seq.report.completed, par.report.completed);
+        assert_eq!(seq.report.makespan_s, par.report.makespan_s);
+        assert_eq!(seq.report.total_ops, par.report.total_ops);
+        for (a, b) in seq.nodes.iter().zip(&par.nodes) {
+            assert_eq!(a.assigned, b.assigned);
+            assert_eq!(a.busy_s, b.busy_s);
+        }
+    }
+
+    #[test]
+    fn warm_caches_are_transparent() {
+        let tenants = vec![tenant("a", 1.0)];
+        let f = Fleet::homogeneous(2, node_cfg(8), fast_fcfg(Policy::RoundRobin)).unwrap();
+        let arrivals = trace(16, &tenants);
+        let cold = f.serve_threads(&tenants, &arrivals, Some(1)).unwrap();
+        let mut caches: Vec<Option<CostCache>> = vec![None, None];
+        let c1 = f.serve_cached(&tenants, &arrivals, &mut caches).unwrap();
+        let c2 = f.serve_cached(&tenants, &arrivals, &mut caches).unwrap();
+        assert_eq!(cold.report.completed, c1.report.completed);
+        assert_eq!(c1.report.completed, c2.report.completed);
+        assert_eq!(c1.report.makespan_s, c2.report.makespan_s);
+        assert_eq!(c2.report.sim_calls, 0, "warm node caches add no sims");
+    }
+
+    #[test]
+    fn partition_placement_routes_each_tenant_to_its_node() {
+        let tenants = vec![tenant("a", 1.0), tenant("b", 1.0)];
+        let f = Fleet::homogeneous(
+            2,
+            node_cfg(8),
+            FleetConfig {
+                placement: Placement::Partition,
+                ..fast_fcfg(Policy::JoinShortestQueue)
+            },
+        )
+        .unwrap();
+        let arrivals = trace(20, &tenants);
+        let rep = f.serve(&tenants, &arrivals).unwrap();
+        assert_eq!(rep.report.completed.len(), 20);
+        // Each node served exactly one tenant's half of the trace.
+        assert_eq!(rep.nodes[0].assigned, 10);
+        assert_eq!(rep.nodes[1].assigned, 10);
+    }
+
+    #[test]
+    fn empty_trace_and_capacity() {
+        let tenants = vec![tenant("a", 1.0)];
+        let f = Fleet::homogeneous(2, node_cfg(8), fast_fcfg(Policy::RoundRobin)).unwrap();
+        let rep = f.serve(&tenants, &[]).unwrap();
+        assert!(rep.report.completed.is_empty());
+        assert_eq!(rep.report.makespan_s, 0.0);
+        // Two identical replicated nodes: fleet capacity is twice one
+        // node's.
+        let one = Fleet::homogeneous(1, node_cfg(8), fast_fcfg(Policy::RoundRobin)).unwrap();
+        let c1 = one.capacity_qps(&tenants);
+        let c2 = f.capacity_qps(&tenants);
+        assert!(c1 > 0.0);
+        assert!((c2 / c1 - 2.0).abs() < 1e-9, "fleet capacity {c2} vs node {c1}");
+    }
+}

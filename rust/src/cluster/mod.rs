@@ -1,0 +1,67 @@
+//! Fleet-scale serving: a cluster of independent SOSA accelerators
+//! behind a dispatch policy — the scale-out layer *above* the paper's
+//! scale-out accelerator.
+//!
+//! One chip tops out around 600 TeraOps/s (§6); the ROADMAP's
+//! "millions of users" north star needs many.  This module simulates
+//! that fleet deterministically, reusing the single-node serving
+//! engine ([`crate::serve`]) as the per-node building block.
+//!
+//! The lifecycle is **fleet → policy → dispatch → SLO report**:
+//!
+//! ```text
+//!  Fleet (N × NodeSpec: ArchConfig per node, Replicate/Partition
+//!  │      placement of tenant models)
+//!  ├─▶ Policy (round-robin / join-shortest-queue /
+//!  │           power-of-two-choices / deadline-aware)
+//!  ├─▶ dispatch: sequential discrete-event pass assigns every arrival
+//!  │   to one hosting node against an estimated queue view
+//!  ├─▶ node simulation: each node's Engine runs its sub-trace —
+//!  │   embarrassingly parallel (SweepExecutor), merged by node index
+//!  └─▶ FleetSlo: aggregate p50/p95/p99, goodput, max sustainable QPS
+//!      (fleet_load_sweep), effective TOps/s and TOps/s/W at fleet
+//!      scale
+//! ```
+//!
+//! 1. **Fleet** — [`Fleet::new`] / [`Fleet::homogeneous`] over
+//!    [`NodeSpec`]s (heterogeneous nodes welcome); [`Placement`]
+//!    decides whether every node replicates every tenant model or each
+//!    tenant lives on exactly one node.
+//! 2. **Policy** — [`Policy`] picks the node per arrival; the
+//!    [`router`] keeps a deterministic estimated queue view so JSQ /
+//!    power-of-two / deadline-aware decisions never depend on
+//!    simulation internals or thread timing.
+//! 3. **Dispatch** — [`Fleet::serve`] first routes the whole trace
+//!    sequentially, *then* simulates the nodes in parallel
+//!    ([`crate::sim::SweepExecutor`], index-ordered merge): the same
+//!    seed + policy produce bit-identical fleet metrics regardless of
+//!    `SOSA_THREADS`.
+//! 4. **SLO report** — [`analyze_fleet`] aggregates the merged
+//!    completions ([`crate::serve::slo`] reused verbatim) and adds the
+//!    fleet-scale metrics; [`fleet_load_sweep`] probes offered rates
+//!    for the saturation knee and max sustainable QPS.
+//!
+//! ```no_run
+//! use sosa::arch::ArchConfig;
+//! use sosa::cluster::{analyze_fleet, Fleet, FleetConfig, Policy};
+//! use sosa::serve::{generate, Tenant, TrafficSpec};
+//! use sosa::workloads::zoo;
+//!
+//! let tenants = vec![Tenant::new(zoo::by_name("resnet50").unwrap(), 1.0)];
+//! let fleet = Fleet::homogeneous(
+//!     4,
+//!     ArchConfig::baseline(),
+//!     FleetConfig { policy: Policy::JoinShortestQueue, ..Default::default() },
+//! ).unwrap();
+//! let arrivals = generate(&TrafficSpec::poisson(8000.0, 1.0, 7), &tenants);
+//! let rep = fleet.serve(&tenants, &arrivals).unwrap();
+//! println!("{}", analyze_fleet(&fleet, &rep, 1.0, 5e-3));
+//! ```
+
+pub mod fleet;
+pub mod router;
+pub mod slo;
+
+pub use fleet::{Fleet, FleetConfig, FleetReport, NodeReport, NodeSpec, Placement};
+pub use router::{Policy, Router};
+pub use slo::{analyze_fleet, fleet_load_sweep, FleetSlo};

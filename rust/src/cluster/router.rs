@@ -1,0 +1,287 @@
+//! Cluster-level request routing: pluggable policies deciding which
+//! fleet node serves each arrival.
+//!
+//! The [`Router`] runs a sequential discrete-event dispatch pass over
+//! the time-sorted arrival stream *before* any node is simulated: it
+//! maintains an estimated per-node view (in-flight request FIFO +
+//! estimated drain time, derived from each node's memoized batch cost
+//! model) and applies the policy against that view.  Keeping dispatch
+//! separate from node simulation is what lets the per-node engines run
+//! embarrassingly parallel afterwards ([`crate::sim::SweepExecutor`])
+//! while the assignment — and therefore every downstream metric —
+//! stays bit-identical for any thread count.
+//!
+//! Everything is deterministic: ties break on the lowest node index,
+//! and the only randomness (power-of-two-choices sampling) comes from
+//! a seeded [`XorShift`] owned by the router.
+
+use std::collections::VecDeque;
+
+use crate::serve::Arrival;
+use crate::testutil::XorShift;
+
+/// Node-selection policy for dispatching arrivals across the fleet.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Policy {
+    /// Cycle through the candidate nodes in order, ignoring load.
+    RoundRobin,
+    /// Send to the candidate with the fewest in-flight requests
+    /// (estimated view); ties to the lowest node index.
+    JoinShortestQueue,
+    /// Sample two distinct candidates with a seeded RNG and pick the
+    /// shorter queue — near-JSQ balance at O(1) state inspection
+    /// (the classic "power of two choices" result).
+    PowerOfTwoChoices { seed: u64 },
+    /// Deadline/SLO-aware: pick the candidate with the earliest
+    /// *estimated completion time* for this request (queue drain +
+    /// the request's own estimated service), maximizing the chance it
+    /// finishes inside the deadline.
+    DeadlineAware,
+}
+
+impl Policy {
+    /// Stable CLI/report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::RoundRobin => "rr",
+            Policy::JoinShortestQueue => "jsq",
+            Policy::PowerOfTwoChoices { .. } => "p2c",
+            Policy::DeadlineAware => "slo",
+        }
+    }
+
+    /// Parse a [`Policy::name`]-style string (`rr`, `jsq`, `p2c`,
+    /// `p2c:SEED`, `slo`).
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s.to_lowercase().as_str() {
+            "rr" | "round-robin" => Some(Policy::RoundRobin),
+            "jsq" | "join-shortest-queue" => Some(Policy::JoinShortestQueue),
+            "p2c" => Some(Policy::PowerOfTwoChoices { seed: 2 }),
+            "slo" | "deadline" => Some(Policy::DeadlineAware),
+            other => {
+                let seed = other.strip_prefix("p2c:")?;
+                seed.parse::<u64>().ok().map(|seed| Policy::PowerOfTwoChoices { seed })
+            }
+        }
+    }
+}
+
+/// Deterministic dispatch state: an estimated queue view per node.
+///
+/// The view is a *model*, not the simulated truth — node engines batch
+/// dynamically, so exact completion times are only known after the
+/// per-node simulation.  The router instead charges each dispatched
+/// request its estimated per-unit service time (`unit_s[node][tenant]`,
+/// typically the node's full-batch cost divided by the batch size) and
+/// drains the in-flight FIFO as estimated completions pass.  The model
+/// is the same for every policy, so policy comparisons are apples to
+/// apples.
+pub struct Router {
+    policy: Policy,
+    rng: Option<XorShift>,
+    rr_next: usize,
+    /// Per node: estimated completion times of in-flight requests.
+    inflight: Vec<VecDeque<f64>>,
+    /// Per node: estimated time the node finishes everything assigned.
+    est_free: Vec<f64>,
+    /// `unit_s[node][tenant]`: estimated seconds per batch unit
+    /// (infinite when the node does not host the tenant).
+    unit_s: Vec<Vec<f64>>,
+}
+
+impl Router {
+    /// Router over `unit_s[node][tenant]` service estimates.
+    pub fn new(policy: Policy, unit_s: Vec<Vec<f64>>) -> Router {
+        let n = unit_s.len();
+        let rng = match &policy {
+            Policy::PowerOfTwoChoices { seed } => Some(XorShift::new(*seed)),
+            _ => None,
+        };
+        Router {
+            policy,
+            rng,
+            rr_next: 0,
+            inflight: (0..n).map(|_| VecDeque::new()).collect(),
+            est_free: vec![0.0; n],
+            unit_s,
+        }
+    }
+
+    /// Estimated in-flight requests on a node right now.
+    pub fn queue_len(&self, node: usize) -> usize {
+        self.inflight[node].len()
+    }
+
+    /// Pick a node for `a` among `candidates` (node indices, ascending)
+    /// and commit the estimated cost to its queue view.  Arrivals must
+    /// be fed in non-decreasing time order.
+    pub fn dispatch(&mut self, a: &Arrival, candidates: &[usize]) -> usize {
+        assert!(!candidates.is_empty(), "no candidate node hosts tenant {}", a.tenant);
+        // Drain estimated completions up to the arrival time on every
+        // node (not just candidates: the view must not depend on which
+        // tenants arrived in between).
+        for q in &mut self.inflight {
+            while q.front().map(|&e| e <= a.t).unwrap_or(false) {
+                q.pop_front();
+            }
+        }
+        let pick = match &self.policy {
+            Policy::RoundRobin => {
+                let i = self.rr_next % candidates.len();
+                self.rr_next = self.rr_next.wrapping_add(1);
+                candidates[i]
+            }
+            Policy::JoinShortestQueue => self.shortest_of(candidates),
+            Policy::PowerOfTwoChoices { .. } => {
+                if candidates.len() <= 2 {
+                    self.shortest_of(candidates)
+                } else {
+                    let rng = self.rng.as_mut().expect("p2c router has an rng");
+                    let i = rng.below(candidates.len());
+                    let mut j = rng.below(candidates.len() - 1);
+                    if j >= i {
+                        j += 1;
+                    }
+                    self.shortest_of(&[candidates[i.min(j)], candidates[i.max(j)]])
+                }
+            }
+            Policy::DeadlineAware => {
+                let units = a.batch.max(1) as f64;
+                *candidates
+                    .iter()
+                    .min_by(|&&x, &&y| {
+                        let ex = self.est_free[x].max(a.t) + units * self.unit_s[x][a.tenant];
+                        let ey = self.est_free[y].max(a.t) + units * self.unit_s[y][a.tenant];
+                        ex.total_cmp(&ey).then(x.cmp(&y))
+                    })
+                    .expect("candidates non-empty")
+            }
+        };
+        let units = a.batch.max(1) as f64;
+        let end = self.est_free[pick].max(a.t) + units * self.unit_s[pick][a.tenant];
+        self.est_free[pick] = end;
+        self.inflight[pick].push_back(end);
+        pick
+    }
+
+    /// Candidate with the fewest estimated in-flight requests (ties to
+    /// the lowest node index — `candidates` are ascending).
+    fn shortest_of(&self, candidates: &[usize]) -> usize {
+        *candidates
+            .iter()
+            .min_by_key(|&&n| (self.inflight[n].len(), n))
+            .expect("candidates non-empty")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arrival(t: f64, tenant: usize, id: u64) -> Arrival {
+        Arrival { t, tenant, id, batch: 1 }
+    }
+
+    /// Two nodes, one tenant, 1 ms per unit on both.
+    fn flat_router(policy: Policy) -> Router {
+        Router::new(policy, vec![vec![1e-3], vec![1e-3]])
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in [
+            Policy::RoundRobin,
+            Policy::JoinShortestQueue,
+            Policy::PowerOfTwoChoices { seed: 2 },
+            Policy::DeadlineAware,
+        ] {
+            assert_eq!(Policy::parse(p.name()).unwrap().name(), p.name());
+        }
+        assert_eq!(
+            Policy::parse("p2c:7"),
+            Some(Policy::PowerOfTwoChoices { seed: 7 })
+        );
+        assert!(Policy::parse("random").is_none());
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = flat_router(Policy::RoundRobin);
+        let picks: Vec<usize> = (0..4)
+            .map(|i| r.dispatch(&arrival(0.0, 0, i), &[0, 1]))
+            .collect();
+        assert_eq!(picks, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn jsq_prefers_emptier_node_and_low_index_on_ties() {
+        let mut r = flat_router(Policy::JoinShortestQueue);
+        assert_eq!(r.dispatch(&arrival(0.0, 0, 0), &[0, 1]), 0, "tie → node 0");
+        assert_eq!(r.dispatch(&arrival(0.0, 0, 1), &[0, 1]), 1, "node 0 busier");
+        assert_eq!(r.dispatch(&arrival(0.0, 0, 2), &[0, 1]), 0, "tie again");
+        assert_eq!(r.queue_len(0), 2);
+        assert_eq!(r.queue_len(1), 1);
+    }
+
+    #[test]
+    fn estimated_completions_drain_with_time() {
+        let mut r = flat_router(Policy::JoinShortestQueue);
+        for i in 0..4 {
+            r.dispatch(&arrival(0.0, 0, i), &[0, 1]);
+        }
+        assert_eq!(r.queue_len(0) + r.queue_len(1), 4);
+        // 10 s later everything has long drained; the view resets.
+        r.dispatch(&arrival(10.0, 0, 4), &[0, 1]);
+        assert_eq!(r.queue_len(0) + r.queue_len(1), 1);
+    }
+
+    #[test]
+    fn deadline_aware_prefers_faster_node() {
+        // Node 1 is 4× faster; an empty-queue dispatch goes there.
+        let mut r = Router::new(Policy::DeadlineAware, vec![vec![4e-3], vec![1e-3]]);
+        assert_eq!(r.dispatch(&arrival(0.0, 0, 0), &[0, 1]), 1);
+        // Pile work on node 1 until the slow node wins on drain time.
+        for i in 1..8 {
+            r.dispatch(&arrival(0.0, 0, i), &[0, 1]);
+        }
+        let slow_picked = (8..16)
+            .map(|i| r.dispatch(&arrival(0.0, 0, i), &[0, 1]))
+            .filter(|&n| n == 0)
+            .count();
+        assert!(slow_picked > 0, "backlog eventually overflows to the slow node");
+    }
+
+    #[test]
+    fn p2c_is_seed_deterministic() {
+        let run = |seed| {
+            let mut r = Router::new(
+                Policy::PowerOfTwoChoices { seed },
+                vec![vec![1e-3]; 4],
+            );
+            (0..32)
+                .map(|i| r.dispatch(&arrival(0.0, 0, i), &[0, 1, 2, 3]))
+                .collect::<Vec<usize>>()
+        };
+        assert_eq!(run(3), run(3));
+        assert_ne!(run(3), run(4), "different seeds sample differently");
+        // With ≤2 candidates p2c degenerates to jsq (no RNG draw).
+        let mut r = flat_router(Policy::PowerOfTwoChoices { seed: 1 });
+        assert_eq!(r.dispatch(&arrival(0.0, 0, 0), &[0, 1]), 0);
+        assert_eq!(r.dispatch(&arrival(0.0, 0, 1), &[0, 1]), 1);
+    }
+
+    #[test]
+    fn single_candidate_always_wins() {
+        for policy in [
+            Policy::RoundRobin,
+            Policy::JoinShortestQueue,
+            Policy::PowerOfTwoChoices { seed: 9 },
+            Policy::DeadlineAware,
+        ] {
+            let mut r = flat_router(policy);
+            for i in 0..3 {
+                assert_eq!(r.dispatch(&arrival(0.0, 0, i), &[1]), 1);
+            }
+        }
+    }
+}

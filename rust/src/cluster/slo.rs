@@ -1,0 +1,206 @@
+//! Fleet-level SLO accounting: aggregate latency percentiles, goodput
+//! and max sustainable QPS across all nodes, plus the power-normalized
+//! fleet metrics (effective TOps/s and TOps/s/W at fleet scale) and a
+//! parallel fleet load-sweep helper.
+//!
+//! The request-level statistics reuse [`crate::serve::slo`] verbatim —
+//! a fleet run merges into one [`crate::serve::EngineReport`]
+//! (see [`super::FleetReport`]), so percentiles, goodput and the
+//! sweep/knee helpers apply unchanged; this module adds what only
+//! exists at fleet scale.
+
+use crate::error::Result;
+use crate::serve::{
+    analyze, generate, CostCache, SloReport, SweepOptions, SweepPoint, Tenant, TrafficSpec,
+};
+use crate::sim::SweepExecutor;
+
+use super::fleet::{Fleet, FleetReport};
+
+/// Fleet-level SLO report: the aggregate request-level [`SloReport`]
+/// plus fleet-scale capacity/power metrics and the per-node dispatch
+/// breakdown.
+#[derive(Clone, Debug)]
+pub struct FleetSlo {
+    /// Aggregate request-level statistics over the merged completions.
+    pub slo: SloReport,
+    /// Number of nodes in the fleet.
+    pub node_count: usize,
+    /// Requests dispatched per node (node-index order).
+    pub dispatched: Vec<u64>,
+    /// Per-node busy fraction over that node's own makespan.
+    pub node_busy: Vec<f64>,
+    /// Aggregate peak power across all nodes, Watts.
+    pub fleet_peak_w: f64,
+    /// Achieved fleet throughput over the makespan, TOps/s.
+    pub eff_tops: f64,
+    /// Achieved fleet TOps/s per Watt of aggregate peak power.
+    pub eff_tops_per_w: f64,
+}
+
+/// Compute the fleet SLO report for a run.  `horizon_s` is the offered
+/// traffic duration, `deadline_s` the latency deadline for goodput.
+pub fn analyze_fleet(
+    fleet: &Fleet,
+    rep: &FleetReport,
+    horizon_s: f64,
+    deadline_s: f64,
+) -> FleetSlo {
+    let slo = analyze(&rep.report, horizon_s, deadline_s);
+    let fleet_peak_w = fleet.peak_power_w();
+    let span = horizon_s.max(rep.report.makespan_s);
+    let eff_tops = if span > 0.0 {
+        rep.report.total_ops as f64 / span / 1e12
+    } else {
+        0.0
+    };
+    FleetSlo {
+        node_count: fleet.len(),
+        dispatched: rep.nodes.iter().map(|n| n.assigned).collect(),
+        node_busy: rep
+            .nodes
+            .iter()
+            .map(|n| if n.makespan_s > 0.0 { n.busy_s / n.makespan_s } else { 0.0 })
+            .collect(),
+        fleet_peak_w,
+        eff_tops,
+        eff_tops_per_w: if fleet_peak_w > 0.0 { eff_tops / fleet_peak_w } else { 0.0 },
+        slo,
+    }
+}
+
+impl std::fmt::Display for FleetSlo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "{}", self.slo)?;
+        writeln!(
+            f,
+            "fleet    : {} nodes, peak {:.1} W, {:.2} TOps/s achieved ({:.4} TOps/s/W)",
+            self.node_count, self.fleet_peak_w, self.eff_tops, self.eff_tops_per_w
+        )?;
+        write!(f, "dispatch :")?;
+        for (i, (d, b)) in self.dispatched.iter().zip(&self.node_busy).enumerate() {
+            write!(f, " node{i} {d} ({:.0}% busy)", 100.0 * b)?;
+        }
+        Ok(())
+    }
+}
+
+/// Sweep offered Poisson load over a fleet, reporting the fleet-level
+/// latency/goodput curve (same [`SweepPoint`] shape as the single-node
+/// [`crate::serve::load_sweep`], so [`crate::serve::max_sustainable_qps`]
+/// and [`crate::serve::sweep_table`] apply unchanged).
+///
+/// Points fan out across cores; each worker carries one warm per-node
+/// [`CostCache`] set across its points (cache reuse is semantically
+/// transparent — see `Fleet::serve_cached`).  `sweep.partitioned` is
+/// ignored: fleet-level placement comes from the fleet's own
+/// [`super::Placement`].
+pub fn fleet_load_sweep(
+    fleet: &Fleet,
+    tenants: &[Tenant],
+    sweep: &SweepOptions,
+) -> Result<Vec<SweepPoint>> {
+    let ex = match sweep.threads {
+        Some(n) => SweepExecutor::with_threads(n),
+        None => SweepExecutor::new(),
+    };
+    let init = || -> Vec<Option<CostCache>> { (0..fleet.len()).map(|_| None).collect() };
+    let points: Vec<Result<SweepPoint>> =
+        ex.run_with_state(&sweep.qps, init, |caches, _, &qps| {
+            let spec = TrafficSpec::poisson(qps, sweep.duration_s, sweep.seed);
+            let arrivals = generate(&spec, tenants);
+            let rep = fleet.serve_cached(tenants, &arrivals, caches)?;
+            let slo = analyze(&rep.report, sweep.duration_s, sweep.deadline_s);
+            Ok(SweepPoint {
+                qps,
+                p50_s: slo.latency.p50,
+                p99_s: slo.latency.p99,
+                goodput_qps: slo.goodput_qps,
+                completed: slo.completed,
+                rejected: slo.rejected,
+                busy_frac: slo.busy_frac,
+            })
+        });
+    points.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchConfig, ArrayDims};
+    use crate::cluster::{FleetConfig, Policy};
+    use crate::serve::{Arrival, BatchPolicy, EngineConfig};
+    use crate::sim::SimOptions;
+    use crate::workloads::ModelGraph;
+
+    fn tenant(name: &str) -> Tenant {
+        let mut g = ModelGraph::new(name);
+        g.add("fc", 64, 64, 64, vec![]);
+        Tenant::new(g, 1.0)
+    }
+
+    fn small_fleet(n: usize) -> Fleet {
+        Fleet::homogeneous(
+            n,
+            ArchConfig::with_array(ArrayDims::new(8, 8), 8),
+            FleetConfig {
+                policy: Policy::JoinShortestQueue,
+                engine: EngineConfig {
+                    policy: BatchPolicy { max_batch: 4, max_wait_s: 1e-3 },
+                    sim: SimOptions { memory_model: false, ..Default::default() },
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn analyze_fleet_reports_power_and_dispatch() {
+        let tenants = vec![tenant("a")];
+        let fleet = small_fleet(2);
+        let arrivals: Vec<Arrival> = (0..16)
+            .map(|i| Arrival { t: i as f64 * 1e-4, tenant: 0, id: i as u64, batch: 1 })
+            .collect();
+        let rep = fleet.serve(&tenants, &arrivals).unwrap();
+        let slo = analyze_fleet(&fleet, &rep, 0.01, 1.0);
+        assert_eq!(slo.node_count, 2);
+        assert_eq!(slo.dispatched.iter().sum::<u64>(), 16);
+        assert_eq!(slo.slo.completed, 16);
+        assert!((slo.fleet_peak_w - fleet.peak_power_w()).abs() < 1e-12);
+        assert!(slo.eff_tops > 0.0);
+        assert!(slo.eff_tops_per_w > 0.0);
+        assert!(slo.node_busy.iter().all(|&b| (0.0..=1.0).contains(&b)));
+        let text = format!("{slo}");
+        assert!(text.contains("2 nodes"));
+        assert!(text.contains("dispatch"));
+    }
+
+    #[test]
+    fn fleet_sweep_is_thread_deterministic_and_knee_shaped() {
+        let tenants = vec![tenant("a")];
+        let fleet = small_fleet(2);
+        let cap = fleet.capacity_qps(&tenants);
+        assert!(cap > 0.0);
+        let mk = |threads| SweepOptions {
+            qps: vec![0.25 * cap, 0.5 * cap, 4.0 * cap],
+            duration_s: 0.05,
+            deadline_s: 0.05,
+            seed: 7,
+            partitioned: false,
+            threads: Some(threads),
+        };
+        let seq = fleet_load_sweep(&fleet, &tenants, &mk(1)).unwrap();
+        let par = fleet_load_sweep(&fleet, &tenants, &mk(4)).unwrap();
+        assert_eq!(seq.len(), 3);
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.qps, b.qps);
+            assert_eq!(a.p99_s, b.p99_s);
+            assert_eq!(a.goodput_qps, b.goodput_qps);
+            assert_eq!(a.completed, b.completed);
+        }
+        // Latency only grows toward saturation.
+        assert!(seq[2].p99_s >= seq[0].p99_s);
+    }
+}

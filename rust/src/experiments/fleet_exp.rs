@@ -1,0 +1,170 @@
+//! The `fleet` experiment: goodput-vs-node-count scaling at fleet
+//! scale — how many accelerators does the §5 workload mix need?
+//!
+//! A fixed offered load (sized to saturate even the largest probed
+//! fleet) is served by fleets of growing node count under two dispatch
+//! policies (round-robin and join-shortest-queue).  Goodput should
+//! scale close to linearly with node count until the offered rate is
+//! covered — the fleet-level analogue of the paper's intra-chip
+//! scale-out argument.  Output: `fleet.csv`
+//! (nodes × policy × goodput/latency/power rows), pinned byte-for-byte
+//! by `tests/golden.rs` like the §6 experiment CSVs.
+
+use super::ExpOptions;
+use crate::arch::{ArchConfig, ArrayDims};
+use crate::cluster::{analyze_fleet, Fleet, FleetConfig, Policy};
+use crate::serve::{default_deadline, generate, BatchPolicy, EngineConfig, Tenant, TrafficSpec};
+use crate::util::{csv::f, CsvWriter, Table};
+use crate::workloads::{bert::bert_named, zoo};
+use crate::Result;
+
+/// The workload mix the fleet serves: the full run uses the §5
+/// CNN + BERT pairing (resnet50 + bert-base, the paper's multi-tenant
+/// mix); quick mode keeps the same two-tenant shape with the Fig. 5
+/// BERT-mini/small stand-ins so the CI-sized sweep stays fast (a
+/// 299-input CNN tiled on the quick node would dominate the suite's
+/// runtime without exercising anything extra).
+fn mix(quick: bool) -> Vec<Tenant> {
+    if quick {
+        vec![
+            Tenant::new(bert_named("mini", 100), 1.0),
+            Tenant::new(bert_named("small", 100), 1.0),
+        ]
+    } else {
+        vec![
+            Tenant::new(zoo::by_name("resnet50").expect("zoo model"), 1.0),
+            Tenant::new(zoo::by_name("bert-base").expect("zoo model"), 1.0),
+        ]
+    }
+}
+
+/// Per-node architecture (quick shrinks the node, not the logic).
+fn node_config(quick: bool) -> ArchConfig {
+    if quick {
+        ArchConfig::with_array(ArrayDims::new(16, 16), 16)
+    } else {
+        ArchConfig::with_array(ArrayDims::new(32, 32), 64)
+    }
+}
+
+/// Build the fleet for one row.
+fn fleet_for(n: usize, policy: Policy, quick: bool) -> Result<Fleet> {
+    Fleet::homogeneous(
+        n,
+        node_config(quick),
+        FleetConfig {
+            policy,
+            engine: EngineConfig {
+                policy: BatchPolicy {
+                    max_batch: if quick { 4 } else { 8 },
+                    max_wait_s: 2e-3,
+                },
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+}
+
+/// Run the fleet scaling experiment.
+pub fn fleet(opts: &ExpOptions) -> Result<()> {
+    let counts: Vec<usize> = if opts.quick { vec![1, 2, 4] } else { vec![1, 2, 4, 8] };
+    let duration_s = if opts.quick { 0.05 } else { 0.5 };
+    let seed = 42u64;
+    let tenants = mix(opts.quick);
+
+    // Offered load: 1.2× the largest probed fleet's estimated
+    // capacity, held fixed across every row so goodput growth comes
+    // from added nodes, not added traffic.  Deterministic (capacity is
+    // a pure function of the configuration).
+    let max_nodes = *counts.last().expect("non-empty counts");
+    let probe = fleet_for(max_nodes, Policy::RoundRobin, opts.quick)?;
+    let node_cap = probe.capacity_qps(&tenants) / probe.len() as f64;
+    let offered = 1.2 * node_cap * max_nodes as f64;
+    // Deadline: 5× a full batch's per-request share of one node.
+    let max_batch = if opts.quick { 4 } else { 8 };
+    let deadline_s = default_deadline(max_batch, node_cap);
+
+    let mut csv = CsvWriter::create(
+        format!("{}/fleet.csv", opts.out_dir),
+        &["nodes", "policy", "offered_qps", "p50_ms", "p99_ms", "goodput_qps",
+          "completed", "rejected", "busy_pct", "fleet_peak_w", "eff_tops"],
+    )?;
+    let mut table = Table::new(&[
+        "nodes", "policy", "offered", "p50 ms", "p99 ms", "goodput", "busy %",
+        "fleet W", "TOps/s",
+    ]);
+    // One trace for every row: the spec is row-invariant and
+    // generation is seed-deterministic.
+    let arrivals = generate(&TrafficSpec::poisson(offered, duration_s, seed), &tenants);
+    for &n in &counts {
+        for policy in [Policy::RoundRobin, Policy::JoinShortestQueue] {
+            let fleet = fleet_for(n, policy.clone(), opts.quick)?;
+            let rep = fleet.serve(&tenants, &arrivals)?;
+            let slo = analyze_fleet(&fleet, &rep, duration_s, deadline_s);
+            csv.row(&[
+                n.to_string(),
+                policy.name().to_string(),
+                f(offered, 1),
+                f(slo.slo.latency.p50 * 1e3, 3),
+                f(slo.slo.latency.p99 * 1e3, 3),
+                f(slo.slo.goodput_qps, 1),
+                slo.slo.completed.to_string(),
+                slo.slo.rejected.to_string(),
+                f(100.0 * slo.slo.busy_frac, 1),
+                f(slo.fleet_peak_w, 1),
+                f(slo.eff_tops, 2),
+            ])?;
+            table.row(vec![
+                n.to_string(),
+                policy.name().to_string(),
+                format!("{offered:.0}"),
+                format!("{:.3}", slo.slo.latency.p50 * 1e3),
+                format!("{:.3}", slo.slo.latency.p99 * 1e3),
+                format!("{:.1}", slo.slo.goodput_qps),
+                format!("{:.1}", 100.0 * slo.slo.busy_frac),
+                format!("{:.1}", slo.fleet_peak_w),
+                format!("{:.2}", slo.eff_tops),
+            ]);
+        }
+    }
+    csv.finish()?;
+    println!("{table}");
+    println!(
+        "offered {offered:.0} req/s fixed across rows (1.2x the {max_nodes}-node \
+         fleet's estimated capacity); goodput should grow with node count"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_fleet_experiment_writes_csv() {
+        let dir = std::env::temp_dir().join("sosa_fleet_exp");
+        std::fs::remove_dir_all(&dir).ok();
+        let opts = ExpOptions { out_dir: dir.to_str().unwrap().into(), quick: true };
+        fleet(&opts).unwrap();
+        let text = std::fs::read_to_string(dir.join("fleet.csv")).unwrap();
+        assert!(text.starts_with("nodes,policy,offered_qps,"));
+        // 3 node counts × 2 policies + header.
+        assert_eq!(text.lines().count(), 1 + 3 * 2);
+        // Goodput is monotone in node count for each policy.
+        for policy in ["rr", "jsq"] {
+            let goodputs: Vec<f64> = text
+                .lines()
+                .skip(1)
+                .filter(|l| l.split(',').nth(1) == Some(policy))
+                .map(|l| l.split(',').nth(5).unwrap().parse().unwrap())
+                .collect();
+            assert_eq!(goodputs.len(), 3);
+            assert!(
+                goodputs.windows(2).all(|w| w[1] >= w[0]),
+                "{policy} goodput not monotone: {goodputs:?}"
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

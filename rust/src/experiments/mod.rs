@@ -19,7 +19,10 @@
 //!
 //! Beyond the paper: `perlayer` — per-layer tiling-strategy selection
 //! (analytic + exhaustive, via the compile pipeline) vs the best
-//! global strategy, and `ablation` — scheduler design ablations.
+//! global strategy, `ablation` — scheduler design ablations, and
+//! `fleet` — goodput-vs-node-count scaling of a multi-accelerator
+//! cluster under round-robin vs join-shortest-queue dispatch
+//! ([`crate::cluster`]).
 //!
 //! The sweep-shaped experiments (table1/table2/fig9/fig10/fig12a/
 //! fig12b) are *declarative*: each builds a
@@ -31,6 +34,7 @@
 //! registry.
 
 pub mod ablation;
+pub mod fleet_exp;
 pub mod granularity;
 pub mod interconnect_exp;
 pub mod memory_exp;
@@ -72,6 +76,7 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<()> {
         "table3" => memory_exp::table3(opts),
         "ablation" => ablation::ablation(opts),
         "perlayer" => tiling_exp::perlayer(opts),
+        "fleet" => fleet_exp::fleet(opts),
         other => Err(crate::Error::config(format!("unknown experiment {other}"))),
     }
 }
@@ -79,7 +84,7 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<()> {
 /// All experiment ids, in paper order (paper-beyond experiments last).
 pub const ALL: &[&str] = &[
     "fig4", "fig5", "table1", "table2", "fig9", "fig10", "fig11", "fig12a",
-    "fig12b", "fig13", "table3", "ablation", "perlayer",
+    "fig12b", "fig13", "table3", "ablation", "perlayer", "fleet",
 ];
 
 /// Run the full suite.

@@ -19,12 +19,11 @@ use crate::arch::{ArchConfig, ArrayDims};
 use crate::compile::TilingSpec;
 use crate::error::{Error, Result};
 use crate::serve::{
-    analyze, capacity_qps, generate, load_sweep, max_sustainable_qps,
-    serve_partitioned_threads, serve_shared, sweep_table, Admission, BatchPolicy, EngineConfig,
-    SweepOptions, Tenant, TrafficSpec,
+    analyze, capacity_qps, default_deadline, generate, load_sweep, max_sustainable_qps,
+    serve_partitioned_threads, serve_shared, sweep_table, write_sweep_csv, Admission,
+    BatchPolicy, EngineConfig, SweepOptions, Tenant, TrafficSpec, SWEEP_LADDER,
 };
 use crate::util::cli::Args;
-use crate::util::{csv::f, CsvWriter};
 use crate::workloads::zoo;
 
 fn parse_array(s: &str) -> Result<ArrayDims> {
@@ -88,13 +87,7 @@ pub fn serve_cmd(args: &Args, opts: &ExpOptions) -> Result<()> {
     let capacity = capacity_qps(&cfg, &tenants, &ecfg);
     let deadline_s = match args.get_parse::<f64>("deadline-ms") {
         Some(ms) => ms * 1e-3,
-        None => {
-            if capacity > 0.0 {
-                5.0 * ecfg.policy.max_batch as f64 / capacity
-            } else {
-                0.1
-            }
-        }
+        None => default_deadline(ecfg.policy.max_batch, capacity),
     };
 
     let mode = if partitioned { "partitioned" } else { "shared" };
@@ -113,7 +106,7 @@ pub fn serve_cmd(args: &Args, opts: &ExpOptions) -> Result<()> {
 
     if args.flag("sweep") {
         // Probe around the estimated capacity to expose the knee.
-        let ladder: Vec<f64> = [0.25, 0.5, 0.75, 0.9, 1.0, 1.1, 1.3, 1.6, 2.0]
+        let ladder: Vec<f64> = SWEEP_LADDER
             .iter()
             .map(|&x| x * if qps > 0.0 && args.get("qps").is_some() { qps } else { capacity })
             .collect();
@@ -137,22 +130,7 @@ pub fn serve_cmd(args: &Args, opts: &ExpOptions) -> Result<()> {
                 deadline_s * 1e3
             ),
         }
-        let mut csv = CsvWriter::create(
-            format!("{}/serve_sweep.csv", opts.out_dir),
-            &["qps", "p50_ms", "p99_ms", "goodput_qps", "completed", "rejected", "busy_pct"],
-        )?;
-        for p in &points {
-            csv.row(&[
-                f(p.qps, 1),
-                f(p.p50_s * 1e3, 3),
-                f(p.p99_s * 1e3, 3),
-                f(p.goodput_qps, 1),
-                p.completed.to_string(),
-                p.rejected.to_string(),
-                f(100.0 * p.busy_frac, 1),
-            ])?;
-        }
-        csv.finish()?;
+        write_sweep_csv(format!("{}/serve_sweep.csv", opts.out_dir), &points)?;
         return Ok(());
     }
 

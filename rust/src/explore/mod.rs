@@ -19,8 +19,14 @@
 //!    reaches the simulator.  A [`DesignSpace`] enumerates points from
 //!    typed axes ([`DesignSpace::arrays`], [`DesignSpace::pods`],
 //!    [`DesignSpace::interconnects`], [`DesignSpace::tiling`],
-//!    [`DesignSpace::workloads`], [`DesignSpace::batches`]) as a
-//!    cartesian product (or array↔pod zip) in deterministic order.
+//!    [`DesignSpace::workloads`], [`DesignSpace::batches`],
+//!    [`DesignSpace::fleet_sizes`]) as a cartesian product (or
+//!    array↔pod zip) in deterministic order.  The fleet-size axis
+//!    provisions N identical chips per point, so chip-count ×
+//!    per-chip granularity sweeps under a fleet TDP budget
+//!    ([`DesignSpace::under_fleet_tdp`]) are one declaration; the
+//!    [`crate::cluster`] simulation measures what the linear-scaling
+//!    bound ([`EvalRecord::fleet_tops`]) costs in dispatch imbalance.
 //! 2. **Constraint** — predicates prune the space *before* simulation:
 //!    [`DesignSpace::under_tdp`] (strict-`<` peak-power budget, the
 //!    same semantics as [`crate::power::max_pods_under_tdp`]),

@@ -21,6 +21,11 @@ pub enum Objective {
     PeakPower,
     /// Total cycles (minimize).
     Cycles,
+    /// Linear-scaling fleet throughput bound, `nodes × raw_tops`
+    /// (maximize) — the chip-count × granularity sweep's target.
+    FleetTops,
+    /// Aggregate fleet peak power, `nodes × peak_w` (minimize).
+    FleetPeakPower,
 }
 
 impl Objective {
@@ -33,6 +38,8 @@ impl Objective {
         Objective::Latency,
         Objective::PeakPower,
         Objective::Cycles,
+        Objective::FleetTops,
+        Objective::FleetPeakPower,
     ];
 
     /// Stable CLI/report name.
@@ -45,6 +52,8 @@ impl Objective {
             Objective::Latency => "latency",
             Objective::PeakPower => "peak_w",
             Objective::Cycles => "cycles",
+            Objective::FleetTops => "fleet_tops",
+            Objective::FleetPeakPower => "fleet_peak_w",
         }
     }
 
@@ -63,12 +72,20 @@ impl Objective {
             Objective::Latency => r.latency_s,
             Objective::PeakPower => r.peak_power_w,
             Objective::Cycles => r.cycles as f64,
+            Objective::FleetTops => r.fleet_tops,
+            Objective::FleetPeakPower => r.fleet_peak_w,
         }
     }
 
     /// Does this objective maximize its metric?
     pub fn maximize(&self) -> bool {
-        !matches!(self, Objective::Latency | Objective::PeakPower | Objective::Cycles)
+        !matches!(
+            self,
+            Objective::Latency
+                | Objective::PeakPower
+                | Objective::Cycles
+                | Objective::FleetPeakPower
+        )
     }
 
     /// Sign-adjusted score: larger is always better.

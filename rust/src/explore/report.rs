@@ -21,7 +21,7 @@ pub struct Report<'a> {
 pub const CSV_HEADER: &[&str] = &[
     "array", "pods", "interconnect", "tiling", "workload", "batch", "cycles",
     "latency_ms", "util", "raw_tops", "peak_w", "eff_tops", "eff_tops_per_w",
-    "pareto",
+    "nodes", "fleet_peak_w", "fleet_tops", "pareto",
 ];
 
 impl<'a> Report<'a> {
@@ -54,6 +54,9 @@ impl<'a> Report<'a> {
             f(r.peak_power_w, 1),
             f(r.eff_tops, 1),
             f(r.eff_tops_per_w, 3),
+            r.nodes.to_string(),
+            f(r.fleet_peak_w, 1),
+            f(r.fleet_tops, 1),
             if on_front { "1".into() } else { "0".into() },
         ]
     }
@@ -90,6 +93,9 @@ impl<'a> Report<'a> {
                         ("peak_w", Json::Num(r.peak_power_w)),
                         ("eff_tops", Json::Num(r.eff_tops)),
                         ("eff_tops_per_w", Json::Num(r.eff_tops_per_w)),
+                        ("nodes", Json::int(r.nodes as u64)),
+                        ("fleet_peak_w", Json::Num(r.fleet_peak_w)),
+                        ("fleet_tops", Json::Num(r.fleet_tops)),
                     ];
                     if let Some(fr) = self.frontier {
                         pairs.push(("pareto", Json::Bool(fr.contains(i))));

@@ -32,6 +32,12 @@ pub struct DesignPoint {
     pub batch: usize,
     /// Simulation options; `sim.spec` carries the tiling spec.
     pub sim: SimOptions,
+    /// Fleet size: how many identical chips of this configuration the
+    /// point provisions (1 = single accelerator, the default).  The
+    /// evaluator simulates one chip and scales the fleet metrics
+    /// linearly — the upper bound the [`crate::cluster`] simulation
+    /// measures against.
+    pub nodes: usize,
 }
 
 impl DesignPoint {
@@ -61,7 +67,7 @@ impl DesignPoint {
                 )));
             }
         }
-        Ok(DesignPoint { index: 0, cfg, workload, batch, sim })
+        Ok(DesignPoint { index: 0, cfg, workload, batch, sim, nodes: 1 })
     }
 
     /// The tiling spec (shorthand for `self.sim.spec`).
@@ -71,8 +77,9 @@ impl DesignPoint {
 
     /// Human-readable one-line summary (skip reports, CLI output).
     pub fn label(&self) -> String {
+        let fleet = if self.nodes > 1 { format!(" x{}", self.nodes) } else { String::new() };
         format!(
-            "{}/{} {} {} {} b{}",
+            "{}/{} {} {} {} b{}{fleet}",
             self.cfg.array,
             self.cfg.num_pods,
             self.cfg.interconnect,
@@ -136,6 +143,7 @@ pub struct DesignSpace {
     tilings: Vec<TilingSpec>,
     workloads: Vec<Arc<ModelGraph>>,
     batches: Vec<usize>,
+    fleet: Vec<usize>,
     sim: SimOptions,
     constraints: Vec<(String, ConstraintFn)>,
 }
@@ -153,6 +161,7 @@ impl DesignSpace {
             tilings: vec![TilingSpec::default()],
             workloads: vec![],
             batches: vec![1],
+            fleet: vec![1],
             sim: SimOptions::default(),
             constraints: vec![],
             template,
@@ -229,6 +238,15 @@ impl DesignSpace {
         self
     }
 
+    /// Fleet-size axis: chip counts to provision per point (default
+    /// `[1]`, a single accelerator).  Combine with
+    /// [`DesignSpace::under_fleet_tdp`] to sweep chip-count ×
+    /// per-chip granularity under a fleet-wide power budget.
+    pub fn fleet_sizes(mut self, nodes: &[usize]) -> Self {
+        self.fleet = nodes.to_vec();
+        self
+    }
+
     /// Base simulation options for every point (each point's
     /// `sim.spec` is overridden by the tiling axis).
     pub fn sim(mut self, sim: SimOptions) -> Self {
@@ -255,6 +273,23 @@ impl DesignSpace {
                 None
             } else {
                 Some(format!("peak {peak:.1} W >= TDP {tdp_w} W"))
+            }
+        })
+    }
+
+    /// Skip points whose *fleet* peak power (`nodes ×` per-chip peak)
+    /// is not strictly under `tdp_w` — [`DesignSpace::under_tdp`]
+    /// lifted to the fleet-size axis.
+    pub fn under_fleet_tdp(self, tdp_w: f64) -> Self {
+        self.constrain("under_fleet_tdp", move |p| {
+            let peak = peak_power(&p.cfg).total() * p.nodes as f64;
+            if peak < tdp_w {
+                None
+            } else {
+                Some(format!(
+                    "fleet peak {peak:.1} W ({} nodes) >= budget {tdp_w} W",
+                    p.nodes
+                ))
             }
         })
     }
@@ -311,6 +346,7 @@ impl DesignSpace {
             * self.tilings.len()
             * self.workloads.len()
             * self.batches.len()
+            * self.fleet.len()
     }
 
     /// Derive a point configuration from the template, mirroring
@@ -365,37 +401,47 @@ impl DesignSpace {
                     sim.spec = spec.clone();
                     for (wi, w) in self.workloads.iter().enumerate() {
                         for (bi, &batch) in self.batches.iter().enumerate() {
-                            let point = DesignPoint::new(
-                                cfg.clone(),
-                                Arc::clone(&batched[wi][bi]),
-                                batch,
-                                sim.clone(),
-                            );
-                            let mut point = match point {
-                                Ok(p) => p,
-                                Err(e) => {
-                                    skipped.push(Skipped {
-                                        label: format!(
-                                            "{array}/{pods} {icn} {} {} b{batch}",
-                                            tiling_label(spec),
-                                            w.name
-                                        ),
-                                        constraint: "validate".into(),
-                                        reason: e.to_string(),
-                                    });
-                                    continue;
-                                }
-                            };
-                            point.index = index;
-                            match self.first_violation(&point) {
-                                Some((name, reason)) => skipped.push(Skipped {
-                                    label: point.label(),
-                                    constraint: name,
-                                    reason,
-                                }),
-                                None => {
-                                    index += 1;
-                                    points.push(point);
+                            for &nodes in &self.fleet {
+                                let point = DesignPoint::new(
+                                    cfg.clone(),
+                                    Arc::clone(&batched[wi][bi]),
+                                    batch,
+                                    sim.clone(),
+                                )
+                                .and_then(|p| {
+                                    if nodes == 0 {
+                                        Err(Error::config("fleet size must be positive"))
+                                    } else {
+                                        Ok(p)
+                                    }
+                                });
+                                let mut point = match point {
+                                    Ok(p) => p,
+                                    Err(e) => {
+                                        skipped.push(Skipped {
+                                            label: format!(
+                                                "{array}/{pods} {icn} {} {} b{batch}",
+                                                tiling_label(spec),
+                                                w.name
+                                            ),
+                                            constraint: "validate".into(),
+                                            reason: e.to_string(),
+                                        });
+                                        continue;
+                                    }
+                                };
+                                point.index = index;
+                                point.nodes = nodes;
+                                match self.first_violation(&point) {
+                                    Some((name, reason)) => skipped.push(Skipped {
+                                        label: point.label(),
+                                        constraint: name,
+                                        reason,
+                                    }),
+                                    None => {
+                                        index += 1;
+                                        points.push(point);
+                                    }
                                 }
                             }
                         }
@@ -569,6 +615,49 @@ mod tests {
     #[test]
     fn no_workloads_is_an_error() {
         assert!(DesignSpace::baseline().enumerate().is_err());
+    }
+
+    #[test]
+    fn fleet_axis_enumerates_innermost_and_constrains_fleet_power() {
+        let space = DesignSpace::baseline()
+            .square_arrays(&[32])
+            .pods(&[64])
+            .workload(toy("t", 1))
+            .fleet_sizes(&[1, 2, 4]);
+        assert_eq!(space.cardinality(), 3);
+        let e = space.enumerate().unwrap();
+        assert_eq!(e.points.len(), 3);
+        assert_eq!(
+            e.points.iter().map(|p| p.nodes).collect::<Vec<_>>(),
+            vec![1, 2, 4]
+        );
+        assert!(!e.points[0].label().contains(" x"), "nodes=1 keeps the old label");
+        assert!(e.points[2].label().ends_with(" x4"));
+        // A fleet budget just above two chips' peak admits 1 and 2
+        // nodes but not 4.
+        let one_chip = peak_power(&e.points[0].cfg).total();
+        let budget = 2.0 * one_chip * (1.0 + 1e-9);
+        let e = DesignSpace::baseline()
+            .square_arrays(&[32])
+            .pods(&[64])
+            .workload(toy("t", 1))
+            .fleet_sizes(&[1, 2, 4])
+            .under_fleet_tdp(budget)
+            .enumerate()
+            .unwrap();
+        assert_eq!(e.points.len(), 2);
+        assert_eq!(e.skipped.len(), 1);
+        assert_eq!(e.skipped[0].constraint, "under_fleet_tdp");
+        // Fleet size 0 is a validate-skip, not a panic.
+        let e = DesignSpace::baseline()
+            .square_arrays(&[32])
+            .pods(&[64])
+            .workload(toy("t", 1))
+            .fleet_sizes(&[0, 1])
+            .enumerate()
+            .unwrap();
+        assert_eq!(e.points.len(), 1);
+        assert_eq!(e.skipped[0].constraint, "validate");
     }
 
     #[test]

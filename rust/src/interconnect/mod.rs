@@ -265,4 +265,118 @@ mod tests {
         assert!(!route_all(&mut f, &[(1, 1), (2, 1)]));
         assert_eq!(f.checkpoint(), before, "failed batch must roll back");
     }
+
+    /// Every topology, for the routability property suite.
+    const ALL_KINDS: &[Kind] = &[
+        Kind::Butterfly { expansion: 2 },
+        Kind::Benes,
+        Kind::Crossbar,
+        Kind::Mesh,
+        Kind::HTree,
+    ];
+
+    #[test]
+    fn prop_benes_routes_every_partial_permutation() {
+        // Rearrangeable non-blocking (§3.2): any partial permutation —
+        // distinct sources, distinct destinations — must route.
+        use crate::testutil::prop::{forall, partial_permutation};
+        forall(120, |rng| {
+            let n = 1usize << rng.range(1, 6); // 2..=64 ports
+            let pairs = partial_permutation(rng, n);
+            let mut f = Benes::new(n);
+            f.begin_slice();
+            crate::prop_assert!(
+                route_all(&mut f, &pairs),
+                "Benes-{n} rejected a partial permutation of {} pairs",
+                pairs.len()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_crossbar_never_blocks() {
+        // Strictly non-blocking with native multicast: any connection
+        // set with exclusive destinations routes — sources may repeat
+        // arbitrarily (multicast legs).
+        use crate::testutil::prop::{forall, permutation};
+        forall(120, |rng| {
+            let n = 1usize << rng.range(1, 6);
+            let dsts = permutation(rng, n);
+            let m = rng.range(1, n);
+            let pairs: Vec<(usize, usize)> =
+                dsts.into_iter().take(m).map(|d| (rng.below(n), d)).collect();
+            let mut f = Crossbar::new(n);
+            f.begin_slice();
+            crate::prop_assert!(
+                route_all(&mut f, &pairs),
+                "Crossbar-{n} blocked a {m}-connection multicast set"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_butterfly_success_monotone_in_expansion() {
+        // A permutation routable at expansion k stays routable at any
+        // larger k: the first k copies of a Butterfly-(k+1) evolve
+        // exactly like a Butterfly-k under first-fit copy selection,
+        // and extra copies only absorb would-be failures.
+        use crate::testutil::prop::{forall, partial_permutation};
+        forall(80, |rng| {
+            let n = 1usize << rng.range(2, 6); // 4..=64 ports
+            let pairs = partial_permutation(rng, n);
+            let mut prev = false;
+            for k in 1..=5usize {
+                let mut f = Butterfly::new(n, k);
+                f.begin_slice();
+                let ok = route_all(&mut f, &pairs);
+                crate::prop_assert!(
+                    !(prev && !ok),
+                    "Butterfly-{n}: routable at expansion {} but not {k}",
+                    k - 1
+                );
+                prev = ok;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_route_then_undo_leaves_no_residue() {
+        // On every topology: committing a connection set and rolling it
+        // back must leave the fabric indistinguishable from a fresh one
+        // — probed with a second random connection set whose
+        // per-connection outcomes must match a never-touched instance.
+        use crate::testutil::prop::{forall, partial_permutation};
+        forall(60, |rng| {
+            let n = 1usize << rng.range(2, 6);
+            let routed = partial_permutation(rng, n);
+            let probe = partial_permutation(rng, n);
+            for &kind in ALL_KINDS {
+                let mut used = kind.build(n);
+                used.begin_slice();
+                let cp = used.checkpoint();
+                for &(s, d) in &routed {
+                    used.try_connect(s, d); // success or not — both fine
+                }
+                used.rollback(cp);
+                crate::prop_assert!(
+                    used.checkpoint() == cp,
+                    "{kind}-{n}: rollback left undo-log residue"
+                );
+                let mut fresh = kind.build(n);
+                fresh.begin_slice();
+                for &(s, d) in &probe {
+                    let a = used.try_connect(s, d);
+                    let b = fresh.try_connect(s, d);
+                    crate::prop_assert!(
+                        a == b,
+                        "{kind}-{n}: undone fabric answers {a} for {s}->{d}, fresh {b}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
 }

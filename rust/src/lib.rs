@@ -54,6 +54,11 @@
 //!   batching, admission control, static pod partitioning for
 //!   multi-tenancy, and SLO accounting (latency percentiles, goodput,
 //!   load sweeps);
+//! * [`cluster`] — fleet-scale serving above [`serve`]: N accelerator
+//!   nodes behind pluggable dispatch policies (round-robin /
+//!   join-shortest-queue / power-of-two-choices / deadline-aware),
+//!   replicate-vs-partition model placement, and fleet-level SLO
+//!   accounting with deterministic parallel node simulation;
 //! * [`runtime`] — the XLA/PJRT functional runtime executing the AOT
 //!   Pallas/JAX tile artifacts from `artifacts/`;
 //! * [`e2e`] — functional execution of a schedule through the runtime,
@@ -65,6 +70,7 @@
 
 pub mod analytic;
 pub mod arch;
+pub mod cluster;
 pub mod compile;
 pub mod coordinator;
 pub mod e2e;

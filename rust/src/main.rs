@@ -3,9 +3,11 @@
 //! Subcommands:
 //!   simulate   — run one benchmark on a configuration, print metrics
 //!   explore    — design-space sweep: granularity × interconnect ×
-//!                tiling × workload under constraints, with Pareto
-//!                frontier extraction and CSV/JSON reports
+//!                tiling × workload × fleet size under constraints,
+//!                with Pareto frontier extraction and CSV/JSON reports
 //!   serve      — multi-tenant serving over a request list
+//!   cluster    — fleet-scale serving: N accelerator nodes behind a
+//!                dispatch policy (rr/jsq/p2c/slo), fleet SLO report
 //!   e2e        — functional check: scheduled tile ops on PJRT vs ref
 //!   list       — list benchmark models
 //!
@@ -148,6 +150,14 @@ fn cmd_explore(args: &Args) {
     if let Some(kb) = args.get_parse::<usize>("sram-max-kb") {
         space = space.sram_at_most(kb * 1024);
     }
+    if let Some(sizes) = parse_list(args, "fleet-sizes") {
+        let sizes: Vec<usize> =
+            sizes.iter().map(|s| s.parse().expect("fleet size")).collect();
+        space = space.fleet_sizes(&sizes);
+    }
+    if let Some(w) = args.get_parse::<f64>("fleet-tdp") {
+        space = space.under_fleet_tdp(w);
+    }
     let objectives: Vec<Objective> = parse_list(args, "objective")
         .unwrap_or_else(|| vec!["eff_tops_per_w"])
         .iter()
@@ -266,6 +276,186 @@ fn cmd_serve(args: &Args) {
     }
 }
 
+/// `sosa cluster`: fleet-scale serving over N accelerator nodes with
+/// a dispatch policy, printing the fleet SLO report (and optionally a
+/// per-node CSV / a fleet load sweep).
+fn cmd_cluster(args: &Args) {
+    use sosa::cluster::{
+        analyze_fleet, fleet_load_sweep, Fleet, FleetConfig, NodeSpec, Placement, Policy,
+    };
+    use sosa::serve::{
+        default_deadline, generate, max_sustainable_qps, sweep_table, write_sweep_csv,
+        BatchPolicy, EngineConfig, SweepOptions, Tenant, TrafficSpec, SWEEP_LADDER,
+    };
+    use sosa::util::{csv::f, CsvWriter};
+
+    let quick = args.flag("quick");
+    // Node architectures: homogeneous (--nodes N of --array/--pods) or
+    // heterogeneous (--node-pods 256,64,... — one node per entry).
+    let array = parse_array(args.get_or("array", if quick { "16x16" } else { "32x32" }));
+    let default_pods: usize = if quick { 16 } else { 256 };
+    let icn = args.get("interconnect").map(parse_interconnect);
+    let node_cfg = |pods: usize| {
+        let mut cfg = ArchConfig::with_array(array, pods);
+        if let Some(k) = icn {
+            cfg.interconnect = k;
+        }
+        cfg
+    };
+    let nodes: Vec<NodeSpec> = match parse_list(args, "node-pods") {
+        Some(list) => list
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let pods: usize = s.parse().expect("node pod count");
+                NodeSpec::new(format!("node{i}-{pods}p"), node_cfg(pods))
+            })
+            .collect(),
+        None => {
+            let n: usize = args.get_parse("nodes").unwrap_or(if quick { 2 } else { 4 });
+            (0..n).map(|i| NodeSpec::new(format!("node{i}"), node_cfg(default_pods))).collect()
+        }
+    };
+
+    let default_models = if quick { "bert-medium" } else { "resnet50,bert-base" };
+    let model_names = args.get_or("models", default_models);
+    let tenants: Vec<Tenant> = model_names
+        .split(',')
+        .map(|n| {
+            Tenant::new(
+                zoo::by_name(n.trim()).unwrap_or_else(|| panic!("unknown model {n}")),
+                1.0,
+            )
+        })
+        .collect();
+
+    let policy = Policy::parse(args.get_or("policy", "jsq"))
+        .expect("unknown policy (rr|jsq|p2c|p2c:SEED|slo)");
+    let placement = match args.get_or("placement", "replicate") {
+        "replicate" => Placement::Replicate,
+        "partition" => Placement::Partition,
+        other => panic!("unknown placement {other} (replicate|partition)"),
+    };
+    let ecfg = EngineConfig {
+        policy: BatchPolicy {
+            max_batch: args.get_parse("max-batch").unwrap_or(if quick { 4 } else { 8 }),
+            max_wait_s: args.get_parse::<f64>("max-wait-ms").unwrap_or(2.0) * 1e-3,
+        },
+        ..Default::default()
+    };
+    let fleet = Fleet::new(
+        nodes,
+        FleetConfig { placement, policy: policy.clone(), engine: ecfg.clone() },
+    )
+    .expect("invalid fleet");
+
+    let capacity = fleet.capacity_qps(&tenants);
+    let per_node_cap = capacity / fleet.len() as f64;
+    let qps: f64 = args
+        .get_parse("qps")
+        .unwrap_or(if capacity > 0.0 { 0.7 * capacity } else { 1000.0 });
+    let duration_s: f64 = args.get_parse("duration").unwrap_or(if quick { 0.05 } else { 1.0 });
+    let seed: u64 = args.get_parse("seed").unwrap_or(42);
+    let deadline_s = match args.get_parse::<f64>("deadline-ms") {
+        Some(ms) => ms * 1e-3,
+        None => default_deadline(ecfg.policy.max_batch, per_node_cap),
+    };
+
+    println!(
+        "fleet    : {} nodes ({} pods total), policy {}, placement {:?}",
+        fleet.len(),
+        fleet.total_pods(),
+        policy.name(),
+        placement
+    );
+    println!(
+        "tenants  : {model_names} — est. fleet capacity {capacity:.1} req/s, \
+         peak {:.1} W",
+        fleet.peak_power_w()
+    );
+
+    if args.flag("sweep") {
+        assert!(
+            args.get("burst-qps").is_none(),
+            "--sweep probes Poisson rates only; bursty flags (--burst-qps, \
+             --mean-burst-ms, --mean-quiet-ms) apply to single runs"
+        );
+        let ladder: Vec<f64> = SWEEP_LADDER.iter().map(|&x| x * qps).collect();
+        let sweep = SweepOptions {
+            qps: ladder,
+            duration_s,
+            deadline_s,
+            seed,
+            partitioned: false,
+            threads: args.get_parse::<usize>("threads"),
+        };
+        let points = fleet_load_sweep(&fleet, &tenants, &sweep).expect("fleet sweep");
+        println!("{}", sweep_table(&points).render());
+        match max_sustainable_qps(&points, deadline_s) {
+            Some(q) => println!(
+                "max sustainable fleet load: {q:.1} req/s at p99 <= {:.3} ms",
+                deadline_s * 1e3
+            ),
+            None => println!(
+                "no probed rate sustained p99 <= {:.3} ms without shedding",
+                deadline_s * 1e3
+            ),
+        }
+        if let Some(out) = args.get("out") {
+            let path = format!("{out}/cluster_sweep.csv");
+            write_sweep_csv(&path, &points).expect("write sweep csv");
+            println!("wrote {path}");
+        }
+        return;
+    }
+
+    let spec = match args.get_parse::<f64>("burst-qps") {
+        Some(burst) => TrafficSpec::bursty(
+            qps,
+            burst,
+            args.get_parse::<f64>("mean-burst-ms").unwrap_or(50.0) * 1e-3,
+            args.get_parse::<f64>("mean-quiet-ms").unwrap_or(200.0) * 1e-3,
+            duration_s,
+            seed,
+        ),
+        None => TrafficSpec::poisson(qps, duration_s, seed),
+    };
+    let arrivals = generate(&spec, &tenants);
+    println!("traffic  : {} arrivals over {duration_s:.2} s, seed {seed}", arrivals.len());
+    let rep = fleet
+        .serve_threads(&tenants, &arrivals, args.get_parse::<usize>("threads"))
+        .expect("fleet serve");
+    let slo = analyze_fleet(&fleet, &rep, duration_s, deadline_s);
+    println!("{slo}");
+
+    if let Some(out) = args.get("out") {
+        let path = format!("{out}/cluster.csv");
+        let mut csv = CsvWriter::create(
+            &path,
+            &["node", "name", "pods", "assigned", "completed", "rejected", "batches",
+              "busy_pct", "makespan_s"],
+        )
+        .expect("create csv");
+        for n in &rep.nodes {
+            let busy = if n.makespan_s > 0.0 { n.busy_s / n.makespan_s } else { 0.0 };
+            csv.row(&[
+                n.node.to_string(),
+                n.name.clone(),
+                n.pods.to_string(),
+                n.assigned.to_string(),
+                n.completed.to_string(),
+                n.rejected.to_string(),
+                n.batches.to_string(),
+                f(100.0 * busy, 1),
+                f(n.makespan_s, 6),
+            ])
+            .expect("csv row");
+        }
+        csv.finish().expect("finish csv");
+        println!("wrote {path}");
+    }
+}
+
 fn cmd_e2e(args: &Args) {
     // Reuse the example's logic through the library.
     use sosa::e2e::{execute_tiled, LayerParams};
@@ -319,10 +509,11 @@ fn main() {
         Some("simulate") => cmd_simulate(&args),
         Some("explore") => cmd_explore(&args),
         Some("serve") => cmd_serve(&args),
+        Some("cluster") => cmd_cluster(&args),
         Some("e2e") => cmd_e2e(&args),
         Some("list") => cmd_list(),
         _ => {
-            eprintln!("usage: sosa <simulate|explore|serve|e2e|list> [options]");
+            eprintln!("usage: sosa <simulate|explore|serve|cluster|e2e|list> [options]");
             eprintln!("  simulate --model resnet50 --array 32x32 --pods 256 \\");
             eprintln!("           [--interconnect butterfly2|benes|crossbar|mesh|htree]");
             eprintln!("           [--batch N] [--bank-kb 256] [--per-layer]");
@@ -331,9 +522,17 @@ fn main() {
             eprintln!("           [--interconnects butterfly2,benes,...]");
             eprintln!("           [--tiling rxr,none,fixed:K,auto] [--workloads a,b]");
             eprintln!("           [--batches 1,8] [--tdp 400] [--sram-max-kb N]");
+            eprintln!("           [--fleet-sizes 1,2,4 --fleet-tdp W]");
             eprintln!("           [--objective eff_tops_per_w,latency] [--pareto]");
             eprintln!("           [--format csv|json|both] [--out results] [--quick]");
             eprintln!("  serve    --models resnet152,bert-medium [--single-tenant]");
+            eprintln!("  cluster  [--nodes N | --node-pods 256,64] [--array RxC]");
+            eprintln!("           [--models a,b] [--policy rr|jsq|p2c|slo]");
+            eprintln!("           [--placement replicate|partition] [--qps Q]");
+            eprintln!("           [--burst-qps Q --mean-burst-ms MS --mean-quiet-ms MS]");
+            eprintln!("           [--duration S] [--seed S] [--max-batch N]");
+            eprintln!("           [--deadline-ms MS] [--sweep] [--threads N]");
+            eprintln!("           [--out DIR] [--quick]");
             eprintln!("  e2e      [--artifacts artifacts]");
             eprintln!("  list");
             std::process::exit(2);

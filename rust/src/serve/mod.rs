@@ -53,7 +53,8 @@ pub use partition::{
     serve_partitioned_threads, sub_config, PartitionPlan, TenantPartition,
 };
 pub use slo::{
-    analyze, capacity_qps, load_sweep, max_sustainable_qps, percentile, sweep_table,
-    LatencyStats, SloReport, SweepOptions, SweepPoint,
+    analyze, capacity_qps, default_deadline, load_sweep, max_sustainable_qps, percentile,
+    sweep_table, write_sweep_csv, LatencyStats, SloReport, SweepOptions, SweepPoint,
+    SWEEP_LADDER,
 };
 pub use traffic::{generate, Arrival, ArrivalProcess, Tenant, TrafficSpec};

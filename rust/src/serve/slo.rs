@@ -285,6 +285,45 @@ pub fn max_sustainable_qps(points: &[SweepPoint], deadline_s: f64) -> Option<f64
         .fold(None, |acc, q| Some(acc.map_or(q, |a: f64| a.max(q))))
 }
 
+/// The standard load-probe ladder, as fractions of the estimated (or
+/// requested) rate: shared by `serve --sweep` and `cluster --sweep`
+/// so single-node and fleet sweep CSVs stay rate-comparable.
+pub const SWEEP_LADDER: &[f64] = &[0.25, 0.5, 0.75, 0.9, 1.0, 1.1, 1.3, 1.6, 2.0];
+
+/// Default latency deadline when the caller gives none: 5× a full
+/// batch's per-request share of the estimated capacity (0.1 s when
+/// capacity is unknown).  Shared by the `serve` and `cluster` CLIs and
+/// the `fleet` experiment so the heuristic cannot de-sync.
+pub fn default_deadline(max_batch: usize, capacity_qps: f64) -> f64 {
+    if capacity_qps > 0.0 {
+        5.0 * max_batch as f64 / capacity_qps
+    } else {
+        0.1
+    }
+}
+
+/// Write sweep points as the standard sweep CSV (`qps,p50_ms,p99_ms,
+/// goodput_qps,completed,rejected,busy_pct`) — one writer shared by
+/// `serve --sweep` and `cluster --sweep`.
+pub fn write_sweep_csv(path: impl AsRef<std::path::Path>, points: &[SweepPoint]) -> Result<()> {
+    let mut csv = crate::util::CsvWriter::create(
+        path,
+        &["qps", "p50_ms", "p99_ms", "goodput_qps", "completed", "rejected", "busy_pct"],
+    )?;
+    for p in points {
+        csv.row(&[
+            f(p.qps, 1),
+            f(p.p50_s * 1e3, 3),
+            f(p.p99_s * 1e3, 3),
+            f(p.goodput_qps, 1),
+            p.completed.to_string(),
+            p.rejected.to_string(),
+            f(100.0 * p.busy_frac, 1),
+        ])?;
+    }
+    csv.finish()
+}
+
 /// Render sweep points as the experiments' aligned table.
 pub fn sweep_table(points: &[SweepPoint]) -> Table {
     let mut table = Table::new(&[

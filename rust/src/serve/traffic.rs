@@ -244,6 +244,125 @@ mod tests {
         assert!(max as f64 > 3.0 * mean, "max {max} mean {mean:.1}");
     }
 
+    /// Inter-arrival gaps of a time-sorted stream.
+    fn gaps(a: &[Arrival]) -> Vec<f64> {
+        let mut out = Vec::with_capacity(a.len().saturating_sub(1));
+        for w in a.windows(2) {
+            out.push(w[1].t - w[0].t);
+        }
+        out
+    }
+
+    /// Squared coefficient of variation (variance / mean²) — the
+    /// burstiness index: 1 for a Poisson process, > 1 for MMPP.
+    fn cv2(xs: &[f64]) -> f64 {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
+        var / (mean * mean)
+    }
+
+    #[test]
+    fn poisson_empirical_mean_within_tolerance() {
+        // Mean inter-arrival of a 1000 req/s Poisson stream is 1 ms;
+        // over ~8000 samples the empirical mean must land within 5%
+        // (the seed is fixed, so this is a deterministic check, but the
+        // tolerance documents the statistical contract).
+        let tenants = toy_tenants(1);
+        let a = generate(&TrafficSpec::poisson(1000.0, 8.0, 13), &tenants);
+        assert!(a.len() > 6000, "got {}", a.len());
+        let g = gaps(&a);
+        let mean = g.iter().sum::<f64>() / g.len() as f64;
+        assert!(
+            (mean - 1e-3).abs() < 1e-4,
+            "empirical mean inter-arrival {mean:.6} s vs expected 0.001 s"
+        );
+        // And the gap distribution is memoryless-shaped: CV² ≈ 1.
+        let c = cv2(&g);
+        assert!((0.85..1.15).contains(&c), "Poisson CV² {c:.3}");
+    }
+
+    #[test]
+    fn mmpp_burstiness_exceeds_poisson() {
+        // A two-state MMPP with a 40× rate ratio must show markedly
+        // over-dispersed inter-arrivals relative to a Poisson stream of
+        // any rate (CV² well above 1).
+        let tenants = toy_tenants(1);
+        let mmpp = generate(
+            &TrafficSpec::bursty(100.0, 4000.0, 0.05, 0.2, 8.0, 17),
+            &tenants,
+        );
+        let poisson = generate(&TrafficSpec::poisson(1000.0, 8.0, 17), &tenants);
+        assert!(mmpp.len() > 1000 && poisson.len() > 1000);
+        let (cb, cp) = (cv2(&gaps(&mmpp)), cv2(&gaps(&poisson)));
+        assert!(cp < 1.2, "Poisson CV² {cp:.3}");
+        assert!(cb > 2.0, "MMPP CV² {cb:.3} not bursty");
+        assert!(cb > 1.5 * cp, "MMPP CV² {cb:.3} vs Poisson {cp:.3}");
+    }
+
+    #[test]
+    fn trace_replay_is_byte_exact() {
+        // Replaying an already-sorted, already-indexed stream through
+        // the Trace process reproduces it exactly — every field.
+        let tenants = toy_tenants(2);
+        let original = generate(&TrafficSpec::poisson(500.0, 1.0, 23), &tenants);
+        assert!(!original.is_empty());
+        let replayed = generate(
+            &TrafficSpec {
+                process: ArrivalProcess::Trace(original.clone()),
+                duration_s: 1.0,
+                seed: 99, // the seed must not matter for replay
+            },
+            &tenants,
+        );
+        assert_eq!(original, replayed);
+        // A second replay of the replay is still exact (idempotent).
+        let again = generate(
+            &TrafficSpec {
+                process: ArrivalProcess::Trace(replayed.clone()),
+                duration_s: 1.0,
+                seed: 7,
+            },
+            &tenants,
+        );
+        assert_eq!(replayed, again);
+    }
+
+    #[test]
+    fn all_generators_deterministic_across_seeds() {
+        // Equal seeds reproduce byte-identical streams and different
+        // seeds differ, for every process shape.
+        let tenants = toy_tenants(2);
+        let check = |mk: &dyn Fn(u64) -> TrafficSpec| {
+            let a = generate(&mk(5), &tenants);
+            let b = generate(&mk(5), &tenants);
+            let c = generate(&mk(6), &tenants);
+            assert_eq!(a, b, "same seed must reproduce the stream");
+            assert_ne!(a, c, "different seeds must differ");
+        };
+        check(&|s| TrafficSpec::poisson(800.0, 0.5, s));
+        check(&|s| TrafficSpec::bursty(200.0, 2000.0, 0.02, 0.1, 0.5, s));
+        // Trace replay is seed-independent by construction.
+        let base = generate(&TrafficSpec::poisson(800.0, 0.5, 5), &tenants);
+        let t1 = generate(
+            &TrafficSpec {
+                process: ArrivalProcess::Trace(base.clone()),
+                duration_s: 0.5,
+                seed: 1,
+            },
+            &tenants,
+        );
+        let t2 = generate(
+            &TrafficSpec {
+                process: ArrivalProcess::Trace(base),
+                duration_s: 0.5,
+                seed: 2,
+            },
+            &tenants,
+        );
+        assert_eq!(t1, t2);
+    }
+
     #[test]
     fn trace_replay_clamps_sorts_and_reindexes() {
         let tenants = toy_tenants(2);

@@ -36,6 +36,26 @@ where
     }
 }
 
+/// Random full permutation of `0..n`.
+pub fn permutation(rng: &mut XorShift, n: usize) -> Vec<usize> {
+    let mut p: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut p);
+    p
+}
+
+/// Random *partial* permutation on `n` ports as `(src, dst)` pairs:
+/// sources and destinations each distinct, `1..=n` pairs, in random
+/// order.  This is exactly the connection-set shape the scheduler asks
+/// an interconnect to route in one time slice (single-ported banks ⇒
+/// distinct sources, exclusive writes ⇒ distinct destinations).
+pub fn partial_permutation(rng: &mut XorShift, n: usize) -> Vec<(usize, usize)> {
+    debug_assert!(n >= 1);
+    let srcs = permutation(rng, n);
+    let dsts = permutation(rng, n);
+    let m = rng.range(1, n);
+    srcs.into_iter().zip(dsts).take(m).collect()
+}
+
 /// Re-run a single case by seed (for debugging a failure).
 pub fn replay<F>(seed: u64, mut property: F) -> Result<(), String>
 where
@@ -78,6 +98,29 @@ mod tests {
             let v = rng.below(4);
             if v != 1 { Ok(()) } else { Err(format!("hit v={v}")) }
         });
+    }
+
+    #[test]
+    fn generators_produce_valid_shapes() {
+        let mut rng = XorShift::new(5);
+        for _ in 0..50 {
+            let n = rng.range(2, 32);
+            let p = permutation(&mut rng, n);
+            let mut sorted = p.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..n).collect::<Vec<_>>());
+            let pairs = partial_permutation(&mut rng, n);
+            assert!(!pairs.is_empty() && pairs.len() <= n);
+            let mut srcs: Vec<usize> = pairs.iter().map(|&(s, _)| s).collect();
+            let mut dsts: Vec<usize> = pairs.iter().map(|&(_, d)| d).collect();
+            srcs.sort_unstable();
+            dsts.sort_unstable();
+            srcs.dedup();
+            dsts.dedup();
+            assert_eq!(srcs.len(), pairs.len(), "sources distinct");
+            assert_eq!(dsts.len(), pairs.len(), "destinations distinct");
+            assert!(pairs.iter().all(|&(s, d)| s < n && d < n));
+        }
     }
 
     #[test]

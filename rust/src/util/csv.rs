@@ -1,8 +1,11 @@
-//! Minimal CSV writer for experiment results (no serde offline), with
-//! RFC 4180 quoting: fields containing commas, double quotes or line
-//! breaks are wrapped in quotes with inner quotes doubled.  Plain
-//! fields are written verbatim, so outputs that never needed quoting
-//! are byte-identical to the pre-quoting writer.
+//! Minimal CSV writer + parser for experiment/cluster reports (no
+//! serde offline), with RFC 4180 quoting: fields containing commas,
+//! double quotes or line breaks are wrapped in quotes with inner
+//! quotes doubled.  Plain fields are written verbatim, so outputs that
+//! never needed quoting are byte-identical to the pre-quoting writer.
+//! [`parse`] reads the same dialect back (quoted fields may span
+//! lines); the fuzz tests pin `parse(write(rows)) == rows` over
+//! adversarial field content.
 
 use std::fs::File;
 use std::io::{BufWriter, Write};
@@ -23,6 +26,62 @@ pub fn quote_field(v: &str) -> String {
 /// One CSV line (no trailing newline) from raw field values.
 pub fn format_row(values: &[String]) -> String {
     values.iter().map(|v| quote_field(v)).collect::<Vec<_>>().join(",")
+}
+
+/// Parse RFC 4180 CSV text back into rows of raw field values — the
+/// inverse of [`format_row`] + newline termination.  Quoted fields may
+/// contain commas, doubled quotes and line breaks; `\r\n` and `\n` row
+/// terminators are both accepted; a final row without a trailing
+/// newline is kept.  Empty input parses to no rows.
+pub fn parse(text: &str) -> Vec<Vec<String>> {
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut row: Vec<String> = Vec::new();
+    let mut field = String::new();
+    // Whether the *current* field opened with a quote (affects only
+    // how quote characters inside it are read).
+    let mut in_quotes = false;
+    let mut field_started = false;
+    let mut chars = text.chars().peekable();
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            if c == '"' {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    field.push('"');
+                } else {
+                    in_quotes = false;
+                }
+            } else {
+                field.push(c);
+            }
+            continue;
+        }
+        match c {
+            '"' if !field_started => {
+                in_quotes = true;
+                field_started = true;
+            }
+            ',' => {
+                row.push(std::mem::take(&mut field));
+                field_started = false;
+            }
+            '\r' if chars.peek() == Some(&'\n') => {}
+            '\n' => {
+                row.push(std::mem::take(&mut field));
+                rows.push(std::mem::take(&mut row));
+                field_started = false;
+            }
+            c => {
+                field.push(c);
+                field_started = true;
+            }
+        }
+    }
+    if field_started || !field.is_empty() || !row.is_empty() {
+        row.push(field);
+        rows.push(row);
+    }
+    rows
 }
 
 /// Writes rows to a CSV file with RFC 4180 quoting.
@@ -93,6 +152,56 @@ mod tests {
             format_row(&["a,b".into(), "c".into()]),
             "\"a,b\",c"
         );
+    }
+
+    #[test]
+    fn parse_reads_the_writer_dialect() {
+        assert_eq!(parse(""), Vec::<Vec<String>>::new());
+        assert_eq!(parse("a,b\n1,2\n"), vec![vec!["a", "b"], vec!["1", "2"]]);
+        assert_eq!(parse("a,b"), vec![vec!["a", "b"]], "no trailing newline");
+        assert_eq!(parse("a,b\r\nc,d\r\n"), vec![vec!["a", "b"], vec!["c", "d"]]);
+        assert_eq!(parse("\"a,b\",c\n"), vec![vec!["a,b", "c"]]);
+        assert_eq!(parse("\"say \"\"hi\"\"\"\n"), vec![vec!["say \"hi\""]]);
+        assert_eq!(parse("\"two\nlines\",x\n"), vec![vec!["two\nlines", "x"]]);
+        assert_eq!(parse(",\n"), vec![vec!["", ""]], "empty fields survive");
+        assert_eq!(parse("\"\",\"\"\n"), vec![vec!["", ""]]);
+    }
+
+    /// Adversarial field alphabet: separators, quotes, line breaks,
+    /// non-ASCII, plus plain text.
+    const NASTY: &[char] = &[
+        '"', ',', '\n', '\r', '\'', 'é', '日', '😀', 'a', 'B', ' ', ';',
+        '\t', '0', '-',
+    ];
+
+    #[test]
+    fn fuzz_rows_round_trip_through_format_and_parse() {
+        use crate::testutil::prop::forall;
+        forall(300, |rng| {
+            let n_rows = rng.range(1, 5);
+            let n_cols = rng.range(1, 5);
+            let rows: Vec<Vec<String>> = (0..n_rows)
+                .map(|_| {
+                    (0..n_cols)
+                        .map(|_| {
+                            let len = rng.below(8);
+                            (0..len).map(|_| *rng.choose(NASTY)).collect::<String>()
+                        })
+                        .collect()
+                })
+                .collect();
+            let mut text = String::new();
+            for r in &rows {
+                text.push_str(&format_row(r));
+                text.push('\n');
+            }
+            let back = parse(&text);
+            crate::prop_assert!(
+                back == rows,
+                "round trip changed {rows:?} -> {back:?} via {text:?}"
+            );
+            Ok(())
+        });
     }
 
     #[test]

@@ -1,7 +1,10 @@
-//! Minimal JSON writer (no serde offline): enough for structured
-//! experiment/exploration reports — objects, arrays, strings with
-//! RFC 8259 escaping, finite numbers (non-finite serializes as
-//! `null`, the interoperable convention).
+//! Minimal JSON writer + parser (no serde offline): enough for the
+//! structured experiment/exploration/cluster reports — objects,
+//! arrays, strings with RFC 8259 escaping, finite numbers (non-finite
+//! serializes as `null`, the interoperable convention).  The parser
+//! ([`Json::parse`]) accepts everything the writer emits (and general
+//! RFC 8259 input), so reports round-trip; the fuzz tests below pin
+//! `parse(render(v)) == v` over adversarial strings.
 
 use std::fmt;
 
@@ -38,6 +41,197 @@ impl Json {
     /// Render to a `String` (same as `to_string`, named for intent).
     pub fn render(&self) -> String {
         self.to_string()
+    }
+
+    /// Parse a JSON document.  Accepts RFC 8259 (objects, arrays,
+    /// strings with escapes incl. `\uXXXX` and surrogate pairs,
+    /// numbers, booleans, null) with arbitrary whitespace; rejects
+    /// trailing garbage.  Object key order is preserved, duplicate
+    /// keys are kept as written — `parse(render(v)) == v` for every
+    /// value the writer can emit.
+    pub fn parse(text: &str) -> std::result::Result<Json, String> {
+        let chars: Vec<char> = text.chars().collect();
+        let mut p = Parser { chars, at: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.at != p.chars.len() {
+            return Err(format!("trailing input at char {}", p.at));
+        }
+        Ok(v)
+    }
+}
+
+/// Recursive-descent JSON parser state.
+struct Parser {
+    chars: Vec<char>,
+    at: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.at).copied()
+    }
+
+    fn bump(&mut self) -> std::result::Result<char, String> {
+        let c = self.peek().ok_or_else(|| "unexpected end of input".to_string())?;
+        self.at += 1;
+        Ok(c)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(' ' | '\t' | '\n' | '\r')) {
+            self.at += 1;
+        }
+    }
+
+    fn expect(&mut self, want: char) -> std::result::Result<(), String> {
+        let got = self.bump()?;
+        if got != want {
+            return Err(format!("expected '{want}' at char {}, got '{got}'", self.at - 1));
+        }
+        Ok(())
+    }
+
+    /// Consume a keyword (`true` / `false` / `null`) after its first
+    /// character has been peeked.
+    fn keyword(&mut self, word: &str, value: Json) -> std::result::Result<Json, String> {
+        for w in word.chars() {
+            self.expect(w)?;
+        }
+        Ok(value)
+    }
+
+    fn value(&mut self) -> std::result::Result<Json, String> {
+        self.skip_ws();
+        match self.peek() {
+            Some('n') => self.keyword("null", Json::Null),
+            Some('t') => self.keyword("true", Json::Bool(true)),
+            Some('f') => self.keyword("false", Json::Bool(false)),
+            Some('"') => Ok(Json::Str(self.string()?)),
+            Some('[') => self.array(),
+            Some('{') => self.object(),
+            Some(c) if c == '-' || c.is_ascii_digit() => self.number(),
+            Some(c) => Err(format!("unexpected '{c}' at char {}", self.at)),
+            None => Err("unexpected end of input".into()),
+        }
+    }
+
+    fn number(&mut self) -> std::result::Result<Json, String> {
+        let start = self.at;
+        while matches!(
+            self.peek(),
+            Some('-' | '+' | '.' | 'e' | 'E' | '0'..='9')
+        ) {
+            self.at += 1;
+        }
+        let text: String = self.chars[start..self.at].iter().collect();
+        let n: f64 = text.parse().map_err(|_| format!("bad number '{text}'"))?;
+        if !n.is_finite() {
+            return Err(format!("non-finite number '{text}'"));
+        }
+        Ok(Json::Num(n))
+    }
+
+    fn hex4(&mut self) -> std::result::Result<u32, String> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let c = self.bump()?;
+            v = v * 16 + c.to_digit(16).ok_or_else(|| format!("bad hex digit '{c}'"))?;
+        }
+        Ok(v)
+    }
+
+    fn string(&mut self) -> std::result::Result<String, String> {
+        self.expect('"')?;
+        let mut out = String::new();
+        loop {
+            let c = self.bump()?;
+            match c {
+                '"' => return Ok(out),
+                '\\' => {
+                    let e = self.bump()?;
+                    match e {
+                        '"' => out.push('"'),
+                        '\\' => out.push('\\'),
+                        '/' => out.push('/'),
+                        'b' => out.push('\u{8}'),
+                        'f' => out.push('\u{c}'),
+                        'n' => out.push('\n'),
+                        'r' => out.push('\r'),
+                        't' => out.push('\t'),
+                        'u' => {
+                            let hi = self.hex4()?;
+                            let cp = if (0xD800..0xDC00).contains(&hi) {
+                                // Surrogate pair: a second \uXXXX must
+                                // follow with the low half.
+                                self.expect('\\')?;
+                                self.expect('u')?;
+                                let lo = self.hex4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    return Err(format!("bad low surrogate {lo:04x}"));
+                                }
+                                0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                            } else {
+                                hi
+                            };
+                            out.push(
+                                char::from_u32(cp)
+                                    .ok_or_else(|| format!("bad code point {cp:#x}"))?,
+                            );
+                        }
+                        other => return Err(format!("bad escape '\\{other}'")),
+                    }
+                }
+                c if (c as u32) < 0x20 => {
+                    return Err(format!("raw control char {:#04x} in string", c as u32));
+                }
+                c => out.push(c),
+            }
+        }
+    }
+
+    fn array(&mut self) -> std::result::Result<Json, String> {
+        self.expect('[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(']') {
+            self.at += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.bump()? {
+                ',' => {}
+                ']' => return Ok(Json::Arr(items)),
+                c => return Err(format!("expected ',' or ']', got '{c}'")),
+            }
+        }
+    }
+
+    fn object(&mut self) -> std::result::Result<Json, String> {
+        self.expect('{')?;
+        let mut pairs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some('}') {
+            self.at += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(':')?;
+            let value = self.value()?;
+            pairs.push((key, value));
+            self.skip_ws();
+            match self.bump()? {
+                ',' => {}
+                '}' => return Ok(Json::Obj(pairs)),
+                c => return Err(format!("expected ',' or '}}', got '{c}'")),
+            }
+        }
     }
 }
 
@@ -121,5 +315,81 @@ mod tests {
             ("a", Json::Arr(vec![Json::int(1), Json::str("x")])),
         ]);
         assert_eq!(j.render(), "{\"b\":2,\"a\":[1,\"x\"]}");
+    }
+
+    #[test]
+    fn parse_basics_and_whitespace() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse(" true ").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("-1.5e2").unwrap(), Json::Num(-150.0));
+        assert_eq!(Json::parse("\"a\\nb\"").unwrap(), Json::str("a\nb"));
+        assert_eq!(Json::parse("\"\\u0041\"").unwrap(), Json::str("A"));
+        assert_eq!(Json::parse("\"\\ud83d\\ude00\"").unwrap(), Json::str("😀"));
+        assert_eq!(
+            Json::parse(" { \"k\" : [ 1 , \"x\" , { } ] } ").unwrap(),
+            Json::obj(vec![(
+                "k",
+                Json::Arr(vec![Json::int(1), Json::str("x"), Json::Obj(vec![])])
+            )])
+        );
+        for bad in [
+            "", "tru", "1.2.3", "[1,]", "{\"a\":}", "\"unterminated",
+            "nullx", "[1] 2", "{\"a\" 1}", "\"\\q\"", "\"\u{1}\"",
+        ] {
+            assert!(Json::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    /// Adversarial character pool: quotes, backslashes, commas,
+    /// newlines, control chars, non-ASCII (accented / CJK / emoji),
+    /// structural JSON characters.
+    const NASTY: &[char] = &[
+        '"', '\\', ',', '\n', '\r', '\t', '\u{1}', '\u{1f}', 'é', '日', '😀',
+        'a', ' ', ':', ';', '{', '}', '[', ']', '0', '-', '.', '\u{7f}',
+    ];
+
+    fn nasty_string(rng: &mut crate::testutil::XorShift) -> String {
+        let len = rng.below(12);
+        (0..len).map(|_| *rng.choose(NASTY)).collect()
+    }
+
+    /// Random JSON value, depth-bounded; numbers kept finite (the
+    /// writer maps non-finite to null by design).
+    fn nasty_value(rng: &mut crate::testutil::XorShift, depth: usize) -> Json {
+        let pick = if depth == 0 { rng.below(4) } else { rng.below(6) };
+        match pick {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => {
+                // Mix integers, small decimals and huge magnitudes.
+                let m = (rng.next_u64() % 2_000_001) as f64 - 1_000_000.0;
+                let scale = [1.0, 0.001, 1e9][rng.below(3)];
+                Json::Num(m * scale)
+            }
+            3 => Json::Str(nasty_string(rng)),
+            4 => Json::Arr((0..rng.below(4)).map(|_| nasty_value(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(4))
+                    .map(|_| (nasty_string(rng), nasty_value(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+
+    #[test]
+    fn fuzz_render_parse_round_trips() {
+        use crate::testutil::prop::forall;
+        forall(300, |rng| {
+            let v = nasty_value(rng, 3);
+            let text = v.render();
+            let back = Json::parse(&text).map_err(|e| format!("{e} in {text:?}"))?;
+            crate::prop_assert!(back == v, "round trip changed {text:?} -> {back:?}");
+            // Render is a fixed point: parse → render is stable.
+            crate::prop_assert!(
+                back.render() == text,
+                "re-render drifted for {text:?}"
+            );
+            Ok(())
+        });
     }
 }

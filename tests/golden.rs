@@ -19,6 +19,12 @@
 //! All comparisons use `--quick` sweeps to keep test time sane; the
 //! full sweeps share every code path with quick (only the axis lists
 //! shrink).
+//!
+//! Beyond the §6 migration, the same harness pins the *serving* CSVs:
+//! `serve --sweep` against a cold-sequential reference (no warm
+//! caches, no sweep executor) and the `fleet` experiment against a
+//! sequential warm-cache fleet run — byte-equality doubles as a proof
+//! that the pooled/parallel fast paths are semantically transparent.
 
 use std::path::{Path, PathBuf};
 
@@ -303,6 +309,124 @@ mod legacy {
         out
     }
 
+    /// Independent reimplementation of the `serve --sweep` CSV for the
+    /// pinned quick arguments (`--model bert-medium --pods 16 --qps 50
+    /// --duration 0.05 --seed 7 --max-batch 4`): capacity estimate,
+    /// rate ladder, one *cold sequential* engine per point (no warm
+    /// caches, no sweep executor), identical analysis + formatting.
+    /// Byte-equality against the real subcommand pins both the
+    /// cache/thread transparency of `serve::load_sweep` and the CSV
+    /// format.
+    pub fn serve_sweep_quick_csv() -> String {
+        use sosa::serve::{
+            analyze, generate, BatchPolicy, CostCache, Engine, EngineConfig, Tenant,
+            TrafficSpec,
+        };
+        use sosa::sim::SimOptions;
+        use sosa::workloads::zoo;
+
+        let cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 16);
+        let tenants = vec![Tenant::new(zoo::by_name("bert-medium").unwrap(), 1.0)];
+        let ecfg = EngineConfig {
+            policy: BatchPolicy { max_batch: 4, max_wait_s: 2e-3 },
+            ..Default::default()
+        };
+        // Capacity of the single-tenant mix at a full batch.
+        let models = vec![tenants[0].model.clone()];
+        let mut cache = CostCache::new(cfg.clone(), models, SimOptions::default());
+        let per_req = cache.cost(&[(0usize, 4usize)]).seconds / 4.0;
+        let capacity = 1.0 / per_req;
+        let deadline_s = 5.0 * 4.0 / capacity;
+        let (qps, duration_s, seed) = (50.0f64, 0.05f64, 7u64);
+        let mut out = String::new();
+        out.push_str("qps,p50_ms,p99_ms,goodput_qps,completed,rejected,busy_pct\n");
+        for ratio in [0.25, 0.5, 0.75, 0.9, 1.0, 1.1, 1.3, 1.6, 2.0] {
+            let q = ratio * qps;
+            let arrivals = generate(&TrafficSpec::poisson(q, duration_s, seed), &tenants);
+            let rep = Engine::new(cfg.clone(), &tenants, ecfg.clone()).run(&arrivals);
+            let slo = analyze(&rep, duration_s, deadline_s);
+            push_row(&mut out, &[
+                f(q, 1),
+                f(slo.latency.p50 * 1e3, 3),
+                f(slo.latency.p99 * 1e3, 3),
+                f(slo.goodput_qps, 1),
+                slo.completed.to_string(),
+                slo.rejected.to_string(),
+                f(100.0 * slo.busy_frac, 1),
+            ]);
+        }
+        out
+    }
+
+    /// Independent reimplementation of the quick `fleet` experiment
+    /// CSV: same workload mix, node architecture, offered-rate rule
+    /// and deadline, but every fleet served through the *sequential
+    /// warm-cache* path (`Fleet::serve_cached`, caches carried across
+    /// rows and policies) instead of the experiment's parallel cold
+    /// engines.  Byte-equality pins dispatch determinism, cache
+    /// transparency and the CSV format in one comparison.
+    pub fn fleet_quick_csv() -> String {
+        use sosa::cluster::{analyze_fleet, Fleet, FleetConfig, Policy};
+        use sosa::serve::{
+            generate, BatchPolicy, CostCache, EngineConfig, Tenant, TrafficSpec,
+        };
+        use sosa::workloads::bert::bert_named;
+
+        let tenants = vec![
+            Tenant::new(bert_named("mini", 100), 1.0),
+            Tenant::new(bert_named("small", 100), 1.0),
+        ];
+        let node_cfg = ArchConfig::with_array(ArrayDims::new(16, 16), 16);
+        let ecfg = EngineConfig {
+            policy: BatchPolicy { max_batch: 4, max_wait_s: 2e-3 },
+            ..Default::default()
+        };
+        let fleet_for = |n: usize, policy: Policy| {
+            Fleet::homogeneous(
+                n,
+                node_cfg.clone(),
+                FleetConfig { policy, engine: ecfg.clone(), ..Default::default() },
+            )
+            .unwrap()
+        };
+        let probe = fleet_for(4, Policy::RoundRobin);
+        let node_cap = probe.capacity_qps(&tenants) / 4.0;
+        let offered = 1.2 * node_cap * 4.0;
+        let deadline_s = 5.0 * 4.0 / node_cap;
+        let (duration_s, seed) = (0.05f64, 42u64);
+        let mut out = String::new();
+        out.push_str(
+            "nodes,policy,offered_qps,p50_ms,p99_ms,goodput_qps,completed,rejected,\
+             busy_pct,fleet_peak_w,eff_tops\n",
+        );
+        // Warm per-node caches shared across rows: node architectures
+        // and hosted models are identical for every fleet size.
+        let mut caches: Vec<Option<CostCache>> = (0..4).map(|_| None).collect();
+        for n in [1usize, 2, 4] {
+            for policy in [Policy::RoundRobin, Policy::JoinShortestQueue] {
+                let fleet = fleet_for(n, policy.clone());
+                let arrivals =
+                    generate(&TrafficSpec::poisson(offered, duration_s, seed), &tenants);
+                let rep = fleet.serve_cached(&tenants, &arrivals, &mut caches[..n]).unwrap();
+                let slo = analyze_fleet(&fleet, &rep, duration_s, deadline_s);
+                push_row(&mut out, &[
+                    n.to_string(),
+                    policy.name().to_string(),
+                    f(offered, 1),
+                    f(slo.slo.latency.p50 * 1e3, 3),
+                    f(slo.slo.latency.p99 * 1e3, 3),
+                    f(slo.slo.goodput_qps, 1),
+                    slo.slo.completed.to_string(),
+                    slo.slo.rejected.to_string(),
+                    f(100.0 * slo.slo.busy_frac, 1),
+                    f(slo.fleet_peak_w, 1),
+                    f(slo.eff_tops, 2),
+                ]);
+            }
+        }
+        out
+    }
+
     pub fn fig12b_quick_csv() -> String {
         let cfg = ArchConfig::baseline();
         let names = ["resnet50", "bert-base"];
@@ -391,4 +515,42 @@ fn fig12b_matches_pre_migration() {
         legacy::fig12b_quick_csv(),
         "migrated fig12b CSV differs from the pre-migration implementation"
     );
+}
+
+#[test]
+fn serve_sweep_matches_reference_and_golden() {
+    use sosa::experiments::serving_exp;
+    use sosa::util::cli::Args;
+    let dir = std::env::temp_dir().join("sosa_golden_serve_sweep");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let opts = ExpOptions { out_dir: dir.to_str().unwrap().into(), quick: true };
+    let args = Args::parse(
+        "serve --model bert-medium --pods 16 --qps 50 --duration 0.05 \
+         --seed 7 --max-batch 4 --sweep"
+            .split_whitespace()
+            .map(str::to_string),
+    );
+    serving_exp::serve_cmd(&args, &opts).unwrap();
+    let produced = std::fs::read_to_string(dir.join("serve_sweep.csv")).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    assert_eq!(
+        produced,
+        legacy::serve_sweep_quick_csv(),
+        "serve --sweep CSV differs from the cold-sequential reference \
+         (warm caches / parallel points must be transparent)"
+    );
+    golden_check("serve_sweep_quick.csv", &produced);
+}
+
+#[test]
+fn fleet_matches_reference_and_golden() {
+    let produced = run_quick("fleet", "fleet.csv");
+    assert_eq!(
+        produced,
+        legacy::fleet_quick_csv(),
+        "fleet experiment CSV differs from the sequential warm-cache \
+         reference (parallel node simulation must be transparent)"
+    );
+    golden_check("fleet_quick.csv", &produced);
 }

@@ -343,6 +343,158 @@ fn load_sweep_shows_saturation_knee() {
 }
 
 #[test]
+fn fleet_metrics_bit_identical_across_thread_counts() {
+    // The PR-pinning determinism contract: same seed + same policy ⇒
+    // bit-identical cluster SLO metrics for any node-simulation worker
+    // count (the dispatch pass is sequential; node sims merge by
+    // index).
+    use sosa::cluster::{analyze_fleet, Fleet, FleetConfig, Policy};
+    use sosa::workloads::bert::bert_named;
+    let tenants = vec![
+        Tenant::new(bert_named("mini", 100), 1.0),
+        Tenant::new(bert_named("small", 100), 1.0),
+    ];
+    let fleet = Fleet::homogeneous(
+        3,
+        ArchConfig::with_array(ArrayDims::new(16, 16), 16),
+        FleetConfig {
+            policy: Policy::JoinShortestQueue,
+            engine: EngineConfig {
+                policy: BatchPolicy { max_batch: 4, max_wait_s: 1e-3 },
+                sim: SimOptions { memory_model: false, ..Default::default() },
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let arrivals = generate(&TrafficSpec::poisson(600.0, 0.1, 31), &tenants);
+    let runs: Vec<String> = [1usize, 2, 8]
+        .iter()
+        .map(|&threads| {
+            let rep = fleet.serve_threads(&tenants, &arrivals, Some(threads)).unwrap();
+            // Render every metric (percentiles, goodput, per-node
+            // dispatch, power) — string equality is bit equality.
+            format!("{}\n{:?}", analyze_fleet(&fleet, &rep, 0.1, 5e-3), rep.report.completed)
+        })
+        .collect();
+    assert_eq!(runs[0], runs[1], "1 vs 2 workers");
+    assert_eq!(runs[0], runs[2], "1 vs 8 workers");
+}
+
+#[test]
+fn fleet_goodput_scales_monotonically_with_node_count() {
+    // A two-tenant mix (the quick `fleet` experiment's BERT pair —
+    // the full experiment runs the §5 resnet50 + bert-base pairing)
+    // under a fixed offered load sized to saturate the largest fleet:
+    // adding nodes must only add goodput.
+    use sosa::cluster::{analyze_fleet, Fleet, FleetConfig, Policy};
+    use sosa::workloads::bert::bert_named;
+    let tenants = vec![
+        Tenant::new(bert_named("mini", 100), 1.0),
+        Tenant::new(bert_named("small", 100), 1.0),
+    ];
+    let node_cfg = ArchConfig::with_array(ArrayDims::new(16, 16), 16);
+    let ecfg = EngineConfig {
+        policy: BatchPolicy { max_batch: 4, max_wait_s: 1e-3 },
+        sim: SimOptions { memory_model: false, ..Default::default() },
+        ..Default::default()
+    };
+    let fleet_for = |n: usize| {
+        Fleet::homogeneous(
+            n,
+            node_cfg.clone(),
+            FleetConfig {
+                policy: Policy::JoinShortestQueue,
+                engine: ecfg.clone(),
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    };
+    let node_cap = fleet_for(1).capacity_qps(&tenants);
+    assert!(node_cap > 0.0);
+    let offered = 1.2 * 4.0 * node_cap;
+    let deadline = 5.0 * ecfg.policy.max_batch as f64 / node_cap;
+    let duration = 120.0 / offered; // ~120 requests
+    let arrivals = generate(&TrafficSpec::poisson(offered, duration, 41), &tenants);
+    let goodputs: Vec<f64> = [1usize, 2, 4]
+        .iter()
+        .map(|&n| {
+            let fleet = fleet_for(n);
+            let rep = fleet.serve(&tenants, &arrivals).unwrap();
+            let slo = analyze_fleet(&fleet, &rep, duration, deadline);
+            assert_eq!(slo.slo.completed, arrivals.len() as u64, "{n} nodes drain all");
+            slo.slo.goodput_qps
+        })
+        .collect();
+    assert!(
+        goodputs.windows(2).all(|w| w[1] >= w[0]),
+        "goodput not monotone in node count: {goodputs:?}"
+    );
+    assert!(
+        goodputs[2] > goodputs[0],
+        "4 nodes must beat 1 node outright: {goodputs:?}"
+    );
+}
+
+#[test]
+fn jsq_beats_round_robin_p99_under_bursty_mmpp() {
+    // Heterogeneous fleet (one big node, one small node) under bursty
+    // MMPP load: round-robin splits traffic evenly by count, drowning
+    // the small node during bursts, while join-shortest-queue shifts
+    // the overflow to the big node — p99 must improve.
+    use sosa::cluster::{analyze_fleet, Fleet, FleetConfig, NodeSpec, Policy};
+    use sosa::workloads::bert::bert_named;
+    let tenants = vec![Tenant::new(bert_named("mini", 100), 1.0)];
+    let ecfg = EngineConfig {
+        policy: BatchPolicy { max_batch: 4, max_wait_s: 5e-4 },
+        sim: SimOptions { memory_model: false, ..Default::default() },
+        ..Default::default()
+    };
+    let nodes = || {
+        vec![
+            NodeSpec::new("big", ArchConfig::with_array(ArrayDims::new(16, 16), 16)),
+            NodeSpec::new("small", ArchConfig::with_array(ArrayDims::new(16, 16), 2)),
+        ]
+    };
+    let fleet_with = |policy: Policy| {
+        Fleet::new(
+            nodes(),
+            FleetConfig { policy, engine: ecfg.clone(), ..Default::default() },
+        )
+        .unwrap()
+    };
+    let jsq = fleet_with(Policy::JoinShortestQueue);
+    let rr = fleet_with(Policy::RoundRobin);
+    let cap = jsq.capacity_qps(&tenants);
+    assert!(cap > 0.0);
+    // Quiet at 40% of fleet capacity, bursting to 2.4×, over ~5 mean
+    // burst/quiet cycles: RR keeps sending half of every burst to the
+    // small node (whose own capacity is ~11% of the fleet's).
+    let spec = TrafficSpec::bursty(0.4 * cap, 2.4 * cap, 0.02, 0.04, 0.3, 19);
+    let arrivals = generate(&spec, &tenants);
+    assert!(arrivals.len() > 50, "trace too small: {}", arrivals.len());
+    let deadline = 5.0 * ecfg.policy.max_batch as f64 * 2.0 / cap;
+    let duration = spec.duration_s;
+    let jsq_slo = analyze_fleet(&jsq, &jsq.serve(&tenants, &arrivals).unwrap(), duration, deadline);
+    let rr_slo = analyze_fleet(&rr, &rr.serve(&tenants, &arrivals).unwrap(), duration, deadline);
+    assert_eq!(jsq_slo.slo.completed, rr_slo.slo.completed, "both drain the trace");
+    assert!(
+        jsq_slo.slo.latency.p99 < rr_slo.slo.latency.p99,
+        "jsq p99 {:.6}s must beat rr p99 {:.6}s on a lopsided fleet",
+        jsq_slo.slo.latency.p99,
+        rr_slo.slo.latency.p99
+    );
+    assert!(
+        jsq_slo.slo.goodput_qps >= rr_slo.slo.goodput_qps,
+        "jsq goodput {:.1} vs rr {:.1}",
+        jsq_slo.slo.goodput_qps,
+        rr_slo.slo.goodput_qps
+    );
+}
+
+#[test]
 fn runtime_path_when_artifacts_present() {
     use sosa::runtime::{Mat, PjrtRuntime};
     let dir = std::path::Path::new("artifacts");
