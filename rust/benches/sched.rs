@@ -11,6 +11,7 @@
 use std::time::Instant;
 
 use sosa::arch::{ArchConfig, ArrayDims};
+use sosa::obs::NullSink;
 use sosa::serve::{capacity_qps, load_sweep, BatchPolicy, EngineConfig, SweepOptions, Tenant};
 use sosa::sim::sweep::default_threads;
 use sosa::sim::{simulate, simulate_with, SimContext, SimOptions};
@@ -38,7 +39,39 @@ fn main() {
     }
     let single_pooled_ms = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
 
-    // (2) The headline: a serving load sweep at 256 pods — cold
+    // (2) Flight-recorder A/B: the scheduler's emission hooks must be
+    // free when tracing is off.  A = no sink at all (the default); B =
+    // NullSink installed, so every hook site reaches the enabled()
+    // check and bails before building an event.  Batches interleave to
+    // cancel drift, and min-of-batches is the noise-robust estimator;
+    // the gate is <2% overhead.
+    let time_batch = |ctx: &mut SimContext| {
+        let per = 5usize;
+        let t0 = Instant::now();
+        for _ in 0..per {
+            let _ = simulate_with(ctx, &cfg, &model, &sim);
+        }
+        t0.elapsed().as_secs_f64() * 1e3 / per as f64
+    };
+    let mut ctx_a = SimContext::new();
+    let mut ctx_b = SimContext::new();
+    ctx_b.set_sink(Box::new(NullSink));
+    let _ = simulate_with(&mut ctx_a, &cfg, &model, &sim); // warm both pools
+    let _ = simulate_with(&mut ctx_b, &cfg, &model, &sim);
+    let (mut plain_ms, mut nullsink_ms) = (f64::INFINITY, f64::INFINITY);
+    for _ in 0..7 {
+        plain_ms = plain_ms.min(time_batch(&mut ctx_a));
+        nullsink_ms = nullsink_ms.min(time_batch(&mut ctx_b));
+    }
+    let trace_off_overhead = nullsink_ms / plain_ms - 1.0;
+    assert!(
+        nullsink_ms <= plain_ms * 1.02,
+        "disabled tracing costs {:.2}% (no sink {plain_ms:.3} ms, NullSink {nullsink_ms:.3} ms); \
+         gate is 2%",
+        100.0 * trace_off_overhead
+    );
+
+    // (3) The headline: a serving load sweep at 256 pods — cold
     // sequential (pooling off, 1 thread: the pre-overhaul path) vs
     // pooled parallel (warm per-worker caches/contexts, all cores).
     let tenants = vec![Tenant::new(model, 1.0)];
@@ -82,6 +115,9 @@ fn main() {
     println!("== sched bench: 256-pod serving load sweep (bert-medium, 32x32) ==");
     println!("single run     : cold {single_cold_ms:.2} ms, pooled {single_pooled_ms:.2} ms \
               ({single_speedup:.2}x)");
+    println!("tracing off    : no sink {plain_ms:.3} ms, NullSink installed {nullsink_ms:.3} ms \
+              ({:+.2}% overhead, gate 2%)",
+             100.0 * trace_off_overhead);
     println!("sweep ({} pts) : cold sequential {cold_sweep_s:.3} s, pooled parallel \
               {fast_sweep_s:.3} s ({sweep_speedup:.2}x on {threads} threads)",
              ladder.len());
@@ -104,7 +140,10 @@ fn main() {
            \"single_run_cold_ms\": {:.3},\n  \
            \"single_run_pooled_ms\": {:.3},\n  \
            \"context_reuse_speedup\": {:.2},\n  \
-           \"note\": \"regenerated by cargo bench --bench sched; points asserted bit-identical to the cold sequential baseline before timing was reported\"\n}}\n",
+           \"trace_off_plain_ms\": {:.3},\n  \
+           \"trace_off_nullsink_ms\": {:.3},\n  \
+           \"trace_off_overhead_pct\": {:.2},\n  \
+           \"note\": \"regenerated by cargo bench --bench sched; points asserted bit-identical to the cold sequential baseline before timing was reported, and the disabled-tracing A/B is asserted under 2% overhead\"\n}}\n",
         ladder.len(),
         threads,
         cold_sweep_s,
@@ -113,6 +152,9 @@ fn main() {
         single_cold_ms,
         single_pooled_ms,
         single_speedup,
+        plain_ms,
+        nullsink_ms,
+        100.0 * trace_off_overhead,
     );
     std::fs::write(&out, json).expect("write bench json");
     println!("wrote {out}");

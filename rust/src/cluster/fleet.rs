@@ -21,6 +21,7 @@
 
 use crate::arch::ArchConfig;
 use crate::error::{Error, Result};
+use crate::obs::{Event, Recorder};
 use crate::power::peak_power;
 use crate::serve::{
     capacity_qps, Arrival, CostCache, Engine, EngineConfig, EngineReport, ServedRequest, Tenant,
@@ -258,13 +259,17 @@ impl Fleet {
 
     /// Phase 1+2: place tenants and dispatch every arrival, returning
     /// each node's sub-trace with tenant indices remapped to the
-    /// node-local model list (`hosted[node]` order).
+    /// node-local model list (`hosted[node]` order).  With `events`
+    /// set, every decision is logged as an [`Event::Dispatch`] carrying
+    /// the queue-view snapshot that justified it (identical routing
+    /// either way).
     fn dispatch(
         &self,
         tenants: &[Tenant],
         arrivals: &[Arrival],
         hosts: &[Vec<usize>],
         hosted: &[Vec<usize>],
+        mut events: Option<&mut Vec<Event>>,
     ) -> Vec<Vec<Arrival>> {
         debug_assert!(arrivals.windows(2).all(|w| w[0].t <= w[1].t));
         let unit_s = self.unit_estimates(tenants, hosted);
@@ -272,7 +277,20 @@ impl Fleet {
         let mut per_node: Vec<Vec<Arrival>> = vec![vec![]; self.nodes.len()];
         for a in arrivals {
             assert!(a.tenant < tenants.len(), "arrival tenant out of range");
-            let node = router.dispatch(a, &hosts[a.tenant]);
+            let node = match events.as_deref_mut() {
+                Some(log) => {
+                    let (node, view) = router.dispatch_explained(a, &hosts[a.tenant]);
+                    log.push(Event::Dispatch {
+                        id: a.id,
+                        tenant: a.tenant as u32,
+                        node: node as u32,
+                        t: a.t,
+                        queue_view: view,
+                    });
+                    node
+                }
+                None => router.dispatch(a, &hosts[a.tenant]),
+            };
             let local = hosted[node]
                 .binary_search(&a.tenant)
                 .expect("dispatch picked a hosting node");
@@ -301,7 +319,7 @@ impl Fleet {
         }
         let hosts = self.place(tenants);
         let hosted = self.hosted_tenants(&hosts);
-        let per_node = self.dispatch(tenants, arrivals, &hosts, &hosted);
+        let per_node = self.dispatch(tenants, arrivals, &hosts, &hosted, None);
         let ex = match threads {
             Some(n) => SweepExecutor::with_threads(n),
             None => SweepExecutor::new(),
@@ -321,6 +339,78 @@ impl Fleet {
             engine.run(&per_node[ni])
         });
         Ok(self.merge(tenants.len(), &hosted, &per_node, reports))
+    }
+
+    /// As [`Fleet::serve_threads`], with the flight recorder on:
+    /// returns the report plus the merged event stream — every
+    /// [`Event::Dispatch`] (with the queue-view snapshot that justified
+    /// it) in arrival order, then each node's engine events in
+    /// node-index order, tenant indices remapped back to global.  The
+    /// stream is identical for any worker count: dispatch is
+    /// sequential by construction and node traces merge by node index.
+    pub fn serve_traced(
+        &self,
+        tenants: &[Tenant],
+        arrivals: &[Arrival],
+        threads: Option<usize>,
+    ) -> Result<(FleetReport, Vec<Event>)> {
+        if tenants.is_empty() {
+            return Err(Error::config("fleet serving needs at least one tenant"));
+        }
+        let hosts = self.place(tenants);
+        let hosted = self.hosted_tenants(&hosts);
+        let mut events = Vec::new();
+        let per_node = self.dispatch(tenants, arrivals, &hosts, &hosted, Some(&mut events));
+        let ex = match threads {
+            Some(n) => SweepExecutor::with_threads(n),
+            None => SweepExecutor::new(),
+        };
+        let idx: Vec<usize> = (0..self.nodes.len()).collect();
+        let node_runs: Vec<(EngineReport, Vec<Event>)> = ex.run(&idx, |_, &ni| {
+            if hosted[ni].is_empty() || per_node[ni].is_empty() {
+                return (
+                    EngineReport {
+                        rejected_by_tenant: vec![0; hosted[ni].len()],
+                        ..Default::default()
+                    },
+                    Vec::new(),
+                );
+            }
+            let local: Vec<Tenant> =
+                hosted[ni].iter().map(|&k| tenants[k].clone()).collect();
+            let mut engine =
+                Engine::new(self.nodes[ni].cfg.clone(), &local, self.fcfg.engine.clone());
+            let mut rec = Recorder::new();
+            let rep = engine.run_traced(&per_node[ni], &mut rec);
+            (rep, rec.into_events())
+        });
+        let mut reports = Vec::with_capacity(node_runs.len());
+        for (ni, (rep, node_events)) in node_runs.into_iter().enumerate() {
+            reports.push(rep);
+            // Engine events carry node-local tenant indices; lift them
+            // back to the fleet's global tenant space.
+            let global = |local: u32| hosted[ni][local as usize] as u32;
+            events.extend(node_events.into_iter().map(|ev| match ev {
+                Event::RequestArrive { id, tenant, t } => {
+                    Event::RequestArrive { id, tenant: global(tenant), t }
+                }
+                Event::RequestReject { id, tenant, t } => {
+                    Event::RequestReject { id, tenant: global(tenant), t }
+                }
+                Event::RequestServed { id, tenant, t_arrival, t_mfree, t_start, t_end } => {
+                    Event::RequestServed {
+                        id,
+                        tenant: global(tenant),
+                        t_arrival,
+                        t_mfree,
+                        t_start,
+                        t_end,
+                    }
+                }
+                other => other,
+            }));
+        }
+        Ok((self.merge(tenants.len(), &hosted, &per_node, reports), events))
     }
 
     /// As [`Fleet::serve`], sequential, with one warm per-node
@@ -343,7 +433,7 @@ impl Fleet {
         assert_eq!(caches.len(), self.nodes.len(), "one cache slot per node");
         let hosts = self.place(tenants);
         let hosted = self.hosted_tenants(&hosts);
-        let per_node = self.dispatch(tenants, arrivals, &hosts, &hosted);
+        let per_node = self.dispatch(tenants, arrivals, &hosts, &hosted, None);
         let mut reports = Vec::with_capacity(self.nodes.len());
         for ni in 0..self.nodes.len() {
             if hosted[ni].is_empty() || per_node[ni].is_empty() {
@@ -552,6 +642,38 @@ mod tests {
             assert_eq!(a.assigned, b.assigned);
             assert_eq!(a.busy_s, b.busy_s);
         }
+    }
+
+    #[test]
+    fn traced_serve_matches_untraced_and_any_thread_count() {
+        let tenants = vec![tenant("a", 1.0), tenant("b", 2.0)];
+        let f = Fleet::homogeneous(3, node_cfg(4), fast_fcfg(Policy::JoinShortestQueue))
+            .unwrap();
+        let arrivals = generate(&TrafficSpec::poisson(2000.0, 0.05, 5), &tenants);
+        let plain = f.serve_threads(&tenants, &arrivals, Some(1)).unwrap();
+        let (seq, seq_ev) = f.serve_traced(&tenants, &arrivals, Some(1)).unwrap();
+        let (par, par_ev) = f.serve_traced(&tenants, &arrivals, Some(4)).unwrap();
+        assert_eq!(plain.report.completed, seq.report.completed, "tracing is transparent");
+        assert_eq!(seq.report.completed, par.report.completed);
+        assert_eq!(seq_ev, par_ev, "merged trace is thread-count invariant");
+        // One dispatch decision per arrival, in arrival order, with
+        // global tenant indices throughout.
+        let dispatches: Vec<&Event> =
+            seq_ev.iter().filter(|e| matches!(e, Event::Dispatch { .. })).collect();
+        assert_eq!(dispatches.len(), arrivals.len());
+        let served = seq_ev
+            .iter()
+            .filter(|e| matches!(e, Event::RequestServed { .. }))
+            .count();
+        assert_eq!(served, seq.report.completed.len());
+        assert!(seq_ev.iter().all(|e| match e {
+            Event::Dispatch { tenant, queue_view, .. } =>
+                (*tenant as usize) < tenants.len() && !queue_view.is_empty(),
+            Event::RequestServed { tenant, .. }
+            | Event::RequestArrive { tenant, .. }
+            | Event::RequestReject { tenant, .. } => (*tenant as usize) < tenants.len(),
+            _ => true,
+        }));
     }
 
     #[test]

@@ -116,16 +116,47 @@ impl Router {
     /// and commit the estimated cost to its queue view.  Arrivals must
     /// be fed in non-decreasing time order.
     pub fn dispatch(&mut self, a: &Arrival, candidates: &[usize]) -> usize {
-        assert!(!candidates.is_empty(), "no candidate node hosts tenant {}", a.tenant);
-        // Drain estimated completions up to the arrival time on every
-        // node (not just candidates: the view must not depend on which
-        // tenants arrived in between).
+        self.drain_to(a.t);
+        let pick = self.pick(a, candidates);
+        self.commit(a, pick);
+        pick
+    }
+
+    /// [`Router::dispatch`] plus the evidence: the post-drain
+    /// per-candidate `(node, estimated in-flight)` snapshot the policy
+    /// decided on — what a dispatch trace event records so routing
+    /// decisions are auditable after the fact.  Same state transition
+    /// as `dispatch`.
+    pub fn dispatch_explained(
+        &mut self,
+        a: &Arrival,
+        candidates: &[usize],
+    ) -> (usize, Vec<(u32, u32)>) {
+        self.drain_to(a.t);
+        let view: Vec<(u32, u32)> = candidates
+            .iter()
+            .map(|&n| (n as u32, self.inflight[n].len() as u32))
+            .collect();
+        let pick = self.pick(a, candidates);
+        self.commit(a, pick);
+        (pick, view)
+    }
+
+    /// Drain estimated completions up to `t` on every node (not just
+    /// candidates: the view must not depend on which tenants arrived
+    /// in between).
+    fn drain_to(&mut self, t: f64) {
         for q in &mut self.inflight {
-            while q.front().map(|&e| e <= a.t).unwrap_or(false) {
+            while q.front().map(|&e| e <= t).unwrap_or(false) {
                 q.pop_front();
             }
         }
-        let pick = match &self.policy {
+    }
+
+    /// Apply the policy against the current (drained) view.
+    fn pick(&mut self, a: &Arrival, candidates: &[usize]) -> usize {
+        assert!(!candidates.is_empty(), "no candidate node hosts tenant {}", a.tenant);
+        match &self.policy {
             Policy::RoundRobin => {
                 let i = self.rr_next % candidates.len();
                 self.rr_next = self.rr_next.wrapping_add(1);
@@ -156,12 +187,15 @@ impl Router {
                     })
                     .expect("candidates non-empty")
             }
-        };
+        }
+    }
+
+    /// Charge the request's estimated cost to the picked node.
+    fn commit(&mut self, a: &Arrival, pick: usize) {
         let units = a.batch.max(1) as f64;
         let end = self.est_free[pick].max(a.t) + units * self.unit_s[pick][a.tenant];
         self.est_free[pick] = end;
         self.inflight[pick].push_back(end);
-        pick
     }
 
     /// Candidate with the fewest estimated in-flight requests (ties to
@@ -268,6 +302,24 @@ mod tests {
         let mut r = flat_router(Policy::PowerOfTwoChoices { seed: 1 });
         assert_eq!(r.dispatch(&arrival(0.0, 0, 0), &[0, 1]), 0);
         assert_eq!(r.dispatch(&arrival(0.0, 0, 1), &[0, 1]), 1);
+    }
+
+    #[test]
+    fn dispatch_explained_matches_dispatch_and_snapshots_queues() {
+        // Same picks as the plain path, plus the pre-commit queue view.
+        let mut plain = flat_router(Policy::JoinShortestQueue);
+        let mut explained = flat_router(Policy::JoinShortestQueue);
+        for i in 0..6 {
+            let arr = arrival(0.0, 0, i);
+            let (pick, view) = explained.dispatch_explained(&arr, &[0, 1]);
+            assert_eq!(pick, plain.dispatch(&arr, &[0, 1]));
+            assert_eq!(view.len(), 2);
+        }
+        let mut r = flat_router(Policy::JoinShortestQueue);
+        let (_, view) = r.dispatch_explained(&arrival(0.0, 0, 0), &[0, 1]);
+        assert_eq!(view, vec![(0, 0), (1, 0)], "first dispatch sees empty queues");
+        let (_, view) = r.dispatch_explained(&arrival(0.0, 0, 1), &[0, 1]);
+        assert_eq!(view, vec![(0, 1), (1, 0)], "second sees the first in flight");
     }
 
     #[test]

@@ -18,6 +18,7 @@
 
 use crate::arch::ArchConfig;
 use crate::compile::TilingSpec;
+use crate::obs::{Event, Recorder};
 use crate::serve::engine::{Admission, BatchPolicy, Engine, EngineConfig};
 use crate::serve::traffic::{Arrival, Tenant};
 use crate::sim::SimOptions;
@@ -108,9 +109,27 @@ impl Coordinator {
     /// co-schedules the whole group in one launch.  Chunking first
     /// keeps the queue scan linear in the request count.
     pub fn serve(&self, requests: &[Request]) -> ServeReport {
+        self.serve_with(requests, None)
+    }
+
+    /// [`Coordinator::serve`] with the flight recorder on: returns the
+    /// same report plus the engine's event stream stitched onto the
+    /// coordinator's global timeline.  Each group runs with its own
+    /// `t = 0` clock, so group-local event times are shifted by the
+    /// group's start offset and tenant indices are remapped to
+    /// positions in `requests` — the merged trace reads as one serving
+    /// session over the whole queue.
+    pub fn serve_traced(&self, requests: &[Request]) -> (ServeReport, Vec<Event>) {
+        let mut events = Vec::new();
+        let report = self.serve_with(requests, Some(&mut events));
+        (report, events)
+    }
+
+    fn serve_with(&self, requests: &[Request], mut events: Option<&mut Vec<Event>>) -> ServeReport {
         let mut report = ServeReport::default();
         let mut t0 = 0.0f64;
         let mut total_ops = 0u64;
+        let mut base = 0u32;
         for group in requests.chunks(self.max_tenants.max(1)) {
             let tenants: Vec<Tenant> = group
                 .iter()
@@ -129,7 +148,39 @@ impl Coordinator {
                 sim: self.opts.clone(),
                 record_group_stats: true,
             };
-            let rep = Engine::new(self.cfg.clone(), &tenants, ecfg).run(&arrivals);
+            let mut engine = Engine::new(self.cfg.clone(), &tenants, ecfg);
+            let rep = match events.as_deref_mut() {
+                None => engine.run(&arrivals),
+                Some(out) => {
+                    let mut rec = Recorder::new();
+                    let rep = engine.run_traced(&arrivals, &mut rec);
+                    for mut ev in rec.into_events() {
+                        match &mut ev {
+                            Event::RequestArrive { tenant, t, .. }
+                            | Event::RequestReject { tenant, t, .. } => {
+                                *tenant += base;
+                                *t += t0;
+                            }
+                            Event::BatchLaunch { t_start, t_end, .. } => {
+                                *t_start += t0;
+                                *t_end += t0;
+                            }
+                            Event::RequestServed {
+                                tenant, t_arrival, t_mfree, t_start, t_end, ..
+                            } => {
+                                *tenant += base;
+                                *t_arrival += t0;
+                                *t_mfree += t0;
+                                *t_start += t0;
+                                *t_end += t0;
+                            }
+                            _ => {}
+                        }
+                        out.push(ev);
+                    }
+                    rep
+                }
+            };
             for r in &rep.completed {
                 let ops = tenants[r.tenant].model.total_ops() * r.batch as u64;
                 total_ops += ops;
@@ -143,6 +194,7 @@ impl Coordinator {
             }
             report.groups.extend(rep.group_stats);
             t0 += rep.makespan_s;
+            base += group.len() as u32;
         }
         report.makespan_s = t0;
         report.achieved_ops = if t0 > 0.0 { total_ops as f64 / t0 } else { 0.0 };
@@ -206,6 +258,36 @@ mod tests {
         // But the second group starts where the first ended.
         assert!(b.t_start >= a.t_end - 1e-15);
         assert!((rep.makespan_s - (a.latency_s + b.latency_s)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn traced_serve_stitches_groups_onto_one_timeline() {
+        // Single-tenancy → two sequential groups, so the trace must
+        // shift the second group's events by the first's makespan and
+        // remap its tenant index to the queue position.
+        let (rep, events) = Coordinator::new(cfg()).single_tenant().serve_traced(&reqs());
+        let plain = Coordinator::new(cfg()).single_tenant().serve(&reqs());
+        assert_eq!(rep.completions.len(), plain.completions.len());
+        assert_eq!(rep.makespan_s, plain.makespan_s);
+        let served: Vec<(u64, u32, f64)> = events
+            .iter()
+            .filter_map(|e| match e {
+                Event::RequestServed { id, tenant, t_end, .. } => Some((*id, *tenant, *t_end)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(served.len(), 2);
+        assert_eq!(served[0].1, 0, "first request keeps queue position 0");
+        assert_eq!(served[1].1, 1, "second group's tenant 0 remapped to 1");
+        for (k, c) in rep.completions.iter().enumerate() {
+            assert_eq!(served[k].0, c.id);
+            assert!(
+                (served[k].2 - c.t_end).abs() < 1e-12,
+                "event t_end {} vs completion {}",
+                served[k].2,
+                c.t_end
+            );
+        }
     }
 
     #[test]

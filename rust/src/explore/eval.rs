@@ -5,6 +5,7 @@
 use std::sync::Arc;
 
 use crate::compile::{self, CompiledProgram, TilingSpec};
+use crate::obs::{Recorder, TraceSummary};
 use crate::power::{peak_power, TDP_W};
 use crate::sim::{SimContext, SweepExecutor};
 use crate::stats::RunStats;
@@ -49,6 +50,10 @@ pub struct EvalRecord {
     /// this is the ceiling the [`crate::cluster`] simulation (which
     /// pays dispatch imbalance and queueing) measures against.
     pub fleet_tops: f64,
+    /// Scheduler-trace digest for the point — `Some` only when the
+    /// explorer ran with [`Explorer::traced`] (full event streams
+    /// would dwarf the records, so sweeps keep the compact summary).
+    pub trace: Option<TraceSummary>,
 }
 
 impl EvalRecord {
@@ -73,6 +78,7 @@ impl EvalRecord {
             nodes,
             fleet_peak_w: peak_power_w * nodes as f64,
             fleet_tops: raw_tops * nodes as f64,
+            trace: None,
             stats,
             point,
         }
@@ -155,7 +161,7 @@ impl ExecKey {
 struct Worker {
     ctx: SimContext,
     cache: Vec<(CacheKey, CompiledProgram)>,
-    last: Option<(ExecKey, RunStats)>,
+    last: Option<(ExecKey, RunStats, Option<TraceSummary>)>,
 }
 
 impl Worker {
@@ -163,26 +169,44 @@ impl Worker {
         Worker { ctx: SimContext::new(), cache: Vec::new(), last: None }
     }
 
-    fn run(&mut self, point: &DesignPoint) -> RunStats {
+    fn run(&mut self, point: &DesignPoint, trace: bool) -> (RunStats, Option<TraceSummary>) {
         let exec_key = ExecKey::for_point(point);
-        if let Some((k, stats)) = &self.last {
-            if *k == exec_key {
-                return stats.clone();
+        if let Some((k, stats, summary)) = &self.last {
+            // Reuse the memo unless tracing asks for a summary the
+            // memoized run didn't record.
+            if *k == exec_key && (!trace || summary.is_some()) {
+                return (stats.clone(), if trace { *summary } else { None });
             }
         }
         let key = CacheKey::for_point(point);
-        let stats = if let Some(i) = self.cache.iter().position(|(k, _)| *k == key) {
-            let (_, cp) = &self.cache[i];
-            cp.execute_with(&mut self.ctx, &point.cfg, &point.sim)
-        } else {
-            let cp =
-                compile::compile_with(&mut self.ctx, &point.cfg, &point.workload, &point.sim);
-            let stats = cp.execute_with(&mut self.ctx, &point.cfg, &point.sim);
-            self.cache.push((key, cp));
-            stats
+        let cp_idx = match self.cache.iter().position(|(k, _)| *k == key) {
+            Some(i) => i,
+            None => {
+                // Compile untraced: tiling-strategy trials must not
+                // pollute the point's schedule trace.
+                let cp = compile::compile_with(
+                    &mut self.ctx,
+                    &point.cfg,
+                    &point.workload,
+                    &point.sim,
+                );
+                self.cache.push((key, cp));
+                self.cache.len() - 1
+            }
         };
-        self.last = Some((exec_key, stats.clone()));
-        stats
+        if trace {
+            self.ctx.set_sink(Box::new(Recorder::new()));
+        }
+        let stats = self.cache[cp_idx].1.execute_with(&mut self.ctx, &point.cfg, &point.sim);
+        let summary = if trace {
+            let events = self.ctx.drain_events();
+            self.ctx.take_sink();
+            Some(TraceSummary::from_events(&events))
+        } else {
+            None
+        };
+        self.last = Some((exec_key, stats.clone(), summary));
+        (stats, summary)
     }
 }
 
@@ -194,23 +218,32 @@ impl Worker {
 pub struct Explorer {
     ex: SweepExecutor,
     tdp_w: f64,
+    trace: bool,
 }
 
 impl Explorer {
     /// Explorer with the default worker count and the paper's 400 W
     /// TDP normalization.
     pub fn new() -> Explorer {
-        Explorer { ex: SweepExecutor::new(), tdp_w: TDP_W }
+        Explorer { ex: SweepExecutor::new(), tdp_w: TDP_W, trace: false }
     }
 
     /// Explicit worker count (1 = fully sequential).
     pub fn with_threads(threads: usize) -> Explorer {
-        Explorer { ex: SweepExecutor::with_threads(threads), tdp_w: TDP_W }
+        Explorer { ex: SweepExecutor::with_threads(threads), tdp_w: TDP_W, trace: false }
     }
 
     /// Override the TDP the effective metrics normalize to.
     pub fn tdp(mut self, tdp_w: f64) -> Explorer {
         self.tdp_w = tdp_w;
+        self
+    }
+
+    /// Record a per-point scheduler-trace digest
+    /// ([`EvalRecord::trace`]).  Identical stats either way; tracing
+    /// only adds the compact [`TraceSummary`] to each record.
+    pub fn traced(mut self, on: bool) -> Explorer {
+        self.trace = on;
         self
     }
 
@@ -226,8 +259,12 @@ impl Explorer {
     /// Evaluate pre-built points (records in point order).
     pub fn evaluate_points(&self, points: &[DesignPoint]) -> Vec<EvalRecord> {
         let tdp = self.tdp_w;
+        let trace = self.trace;
         self.ex.run_with_state(points, Worker::new, |w, _, p| {
-            EvalRecord::new(p.clone(), w.run(p), tdp)
+            let (stats, summary) = w.run(p, trace);
+            let mut rec = EvalRecord::new(p.clone(), stats, tdp);
+            rec.trace = summary;
+            rec
         })
     }
 }
@@ -297,6 +334,27 @@ mod tests {
         for (a, b) in seq.records.iter().zip(&par.records) {
             assert_eq!(a.stats, b.stats);
             assert_eq!(a.point.index, b.point.index);
+        }
+    }
+
+    #[test]
+    fn traced_records_carry_summaries_without_changing_stats() {
+        let space = || {
+            DesignSpace::new(ArchConfig::with_array(ArrayDims::new(16, 16), 16))
+                .interconnects(&[Kind::Butterfly { expansion: 2 }, Kind::Crossbar])
+                .workload(toy())
+                .sim(fast_sim())
+        };
+        let plain = Explorer::with_threads(2).evaluate(&space()).unwrap();
+        let traced = Explorer::with_threads(2).traced(true).evaluate(&space()).unwrap();
+        assert_eq!(plain.records.len(), traced.records.len());
+        for (p, t) in plain.records.iter().zip(&traced.records) {
+            assert_eq!(p.stats, t.stats, "tracing must not change results");
+            assert!(p.trace.is_none(), "tracing is opt-in");
+            let s = t.trace.expect("traced explorer records a summary");
+            assert_eq!(s.tile_placed, t.stats.tile_ops, "one event per placed op");
+            assert_eq!(s.deferrals, t.stats.deferred_slices);
+            assert!(s.events >= s.tile_placed + t.stats.slices);
         }
     }
 

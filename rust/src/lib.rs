@@ -59,6 +59,10 @@
 //!   join-shortest-queue / power-of-two-choices / deadline-aware),
 //!   replicate-vs-partition model placement, and fleet-level SLO
 //!   accounting with deterministic parallel node simulation;
+//! * [`obs`] — the flight recorder: deterministic sim-time tracing and
+//!   metrics across the sched → serve → cluster stack, with Perfetto
+//!   `trace.json`, utilization-timeline and latency-breakdown
+//!   exporters (`sosa trace`);
 //! * [`runtime`] — the XLA/PJRT functional runtime executing the AOT
 //!   Pallas/JAX tile artifacts from `artifacts/`;
 //! * [`e2e`] — functional execution of a schedule through the runtime,
@@ -78,6 +82,7 @@ pub mod error;
 pub mod experiments;
 pub mod explore;
 pub mod interconnect;
+pub mod obs;
 pub mod power;
 pub mod runtime;
 pub mod scheduler;

@@ -8,8 +8,16 @@
 //!   serve      — multi-tenant serving over a request list
 //!   cluster    — fleet-scale serving: N accelerator nodes behind a
 //!                dispatch policy (rr/jsq/p2c/slo), fleet SLO report
+//!   trace      — flight recorder: one traced simulation + serving run,
+//!                written as Perfetto trace.json, utilization/latency
+//!                CSVs and a metrics snapshot
 //!   e2e        — functional check: scheduled tile ops on PJRT vs ref
 //!   list       — list benchmark models
+//!
+//! `simulate`, `serve` and `cluster` also accept `--trace PATH`
+//! (Perfetto JSON of that run) and `--timeline PATH` (utilization CSV
+//! for `simulate`, per-request latency breakdown for the serving
+//! commands).
 //!
 //! (Experiments reproducing the paper's tables/figures live in the
 //! `sosa-experiments` binary.)
@@ -59,6 +67,17 @@ fn config_from(args: &Args) -> ArchConfig {
     cfg
 }
 
+/// Write a rendered observability artifact, creating parent dirs.
+fn write_artifact(path: &str, body: &str) {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).expect("create artifact dir");
+        }
+    }
+    std::fs::write(path, body).unwrap_or_else(|e| panic!("write {path}: {e}"));
+    println!("wrote {path}");
+}
+
 fn cmd_simulate(args: &Args) {
     let cfg = config_from(args);
     let name = args.get_or("model", "resnet50");
@@ -68,7 +87,13 @@ fn cmd_simulate(args: &Args) {
     if args.flag("per-layer") {
         opts.spec = sosa::compile::TilingSpec::auto();
     }
-    let stats = simulate(&cfg, &model, &opts);
+    let trace = args.get("trace");
+    let tl = args.get("timeline");
+    let (stats, events) = if trace.is_some() || tl.is_some() {
+        sosa::sim::simulate_traced(&cfg, &model, &opts)
+    } else {
+        (simulate(&cfg, &model, &opts), Vec::new())
+    };
     println!("{} on {} pods of {} ({}):", model.name, cfg.num_pods, cfg.array, cfg.interconnect);
     println!("  latency      : {:.3} ms", stats.exec_seconds(&cfg) * 1e3);
     println!("  utilization  : {:.1} %", 100.0 * stats.utilization(&cfg));
@@ -76,6 +101,17 @@ fn cmd_simulate(args: &Args) {
     println!("  achieved     : {:.1} TOps/s", stats.achieved_ops(&cfg) / 1e12);
     println!("  effective@{:.0}W: {:.1} TOps/s", TDP_W,
              stats.effective_ops_at_tdp(&cfg, TDP_W) / 1e12);
+    if let Some(path) = trace {
+        let slice_us = if stats.slices > 0 {
+            stats.exec_seconds(&cfg) * 1e6 / stats.slices as f64
+        } else {
+            1.0
+        };
+        write_artifact(path, &sosa::obs::perfetto::trace_json(&events, slice_us).render());
+    }
+    if let Some(path) = tl {
+        write_artifact(path, &sosa::obs::timeline::utilization_csv(&events, cfg.num_pods));
+    }
 }
 
 /// Split a `--key a,b,c` list option (None when absent).
@@ -267,12 +303,24 @@ fn cmd_serve(args: &Args) {
     if args.flag("single-tenant") {
         coord = coord.single_tenant();
     }
-    let rep = coord.serve(&requests);
+    let trace = args.get("trace");
+    let tl = args.get("timeline");
+    let (rep, events) = if trace.is_some() || tl.is_some() {
+        coord.serve_traced(&requests)
+    } else {
+        (coord.serve(&requests), Vec::new())
+    };
     println!("served {} requests in {:.3} ms — {:.1} TOps/s effective",
              rep.completions.len(), rep.makespan_s * 1e3, rep.achieved_ops / 1e12);
     for c in &rep.completions {
         println!("  request {}: latency {:.3} ms ({:.2} GOps)",
                  c.id, c.latency_s * 1e3, c.ops as f64 / 1e9);
+    }
+    if let Some(path) = trace {
+        write_artifact(path, &sosa::obs::perfetto::trace_json(&events, 1.0).render());
+    }
+    if let Some(path) = tl {
+        write_artifact(path, &sosa::obs::timeline::latency_csv(&events));
     }
 }
 
@@ -376,6 +424,10 @@ fn cmd_cluster(args: &Args) {
 
     if args.flag("sweep") {
         assert!(
+            args.get("trace").is_none() && args.get("timeline").is_none(),
+            "--trace/--timeline record single runs; drop --sweep to trace"
+        );
+        assert!(
             args.get("burst-qps").is_none(),
             "--sweep probes Poisson rates only; bursty flags (--burst-qps, \
              --mean-burst-ms, --mean-quiet-ms) apply to single runs"
@@ -422,11 +474,22 @@ fn cmd_cluster(args: &Args) {
     };
     let arrivals = generate(&spec, &tenants);
     println!("traffic  : {} arrivals over {duration_s:.2} s, seed {seed}", arrivals.len());
-    let rep = fleet
-        .serve_threads(&tenants, &arrivals, args.get_parse::<usize>("threads"))
-        .expect("fleet serve");
+    let trace = args.get("trace");
+    let tl = args.get("timeline");
+    let threads = args.get_parse::<usize>("threads");
+    let (rep, events) = if trace.is_some() || tl.is_some() {
+        fleet.serve_traced(&tenants, &arrivals, threads).expect("fleet serve")
+    } else {
+        (fleet.serve_threads(&tenants, &arrivals, threads).expect("fleet serve"), Vec::new())
+    };
     let slo = analyze_fleet(&fleet, &rep, duration_s, deadline_s);
     println!("{slo}");
+    if let Some(path) = trace {
+        write_artifact(path, &sosa::obs::perfetto::trace_json(&events, 1.0).render());
+    }
+    if let Some(path) = tl {
+        write_artifact(path, &sosa::obs::timeline::latency_csv(&events));
+    }
 
     if let Some(out) = args.get("out") {
         let path = format!("{out}/cluster.csv");
@@ -454,6 +517,51 @@ fn cmd_cluster(args: &Args) {
         csv.finish().expect("finish csv");
         println!("wrote {path}");
     }
+}
+
+/// `sosa trace`: record one flight — a traced simulation plus a traced
+/// serving run of the same model — and write the full artifact set
+/// (`trace.json`, `timeline.csv`, `latency.csv`, `metrics.txt`) into
+/// `--out`.  `--quick` is the fixed CI/golden workload.
+fn cmd_trace(args: &Args) {
+    use sosa::obs::flight::{flight, flight_quick};
+    use sosa::obs::Event;
+    use sosa::util::json::Json;
+
+    let a = if args.flag("quick") {
+        flight_quick()
+    } else {
+        let cfg = config_from(args);
+        let name = args.get_or("model", "resnet50");
+        let batch: usize = args.get_parse("batch").unwrap_or(1);
+        let model = zoo::by_name(name).expect("unknown model").with_batch(batch);
+        let mut opts = SimOptions::default();
+        if args.flag("per-layer") {
+            opts.spec = sosa::compile::TilingSpec::auto();
+        }
+        let qps: f64 = args.get_parse("qps").unwrap_or(400.0);
+        let duration_s: f64 = args.get_parse("duration").unwrap_or(0.1);
+        let seed: u64 = args.get_parse("seed").unwrap_or(7);
+        flight(&cfg, &model, &opts, qps, duration_s, seed)
+    };
+    // The CI smoke's contract, checked in-process too: the emitted
+    // document round-trips through the crate's own JSON parser.
+    let doc = Json::parse(&a.trace).expect("trace.json is valid JSON");
+    assert_eq!(Json::parse(&doc.render()).expect("re-parse"), doc);
+
+    let out = args.get_or("out", "results/trace");
+    a.write_to(std::path::Path::new(out)).expect("write artifacts");
+    let served = a.events.iter().filter(|e| matches!(e, Event::RequestServed { .. })).count();
+    println!(
+        "flight: {} events — {} slices, {} tile ops, {} requests served",
+        a.events.len(),
+        a.stats.slices,
+        a.stats.tile_ops,
+        served
+    );
+    println!("wrote {out}/{{trace.json,timeline.csv,latency.csv,metrics.txt}}");
+    println!("open trace.json at ui.perfetto.dev or chrome://tracing");
+    print!("{}", a.metrics);
 }
 
 fn cmd_e2e(args: &Args) {
@@ -510,13 +618,15 @@ fn main() {
         Some("explore") => cmd_explore(&args),
         Some("serve") => cmd_serve(&args),
         Some("cluster") => cmd_cluster(&args),
+        Some("trace") => cmd_trace(&args),
         Some("e2e") => cmd_e2e(&args),
         Some("list") => cmd_list(),
         _ => {
-            eprintln!("usage: sosa <simulate|explore|serve|cluster|e2e|list> [options]");
+            eprintln!("usage: sosa <simulate|explore|serve|cluster|trace|e2e|list> [options]");
             eprintln!("  simulate --model resnet50 --array 32x32 --pods 256 \\");
             eprintln!("           [--interconnect butterfly2|benes|crossbar|mesh|htree]");
             eprintln!("           [--batch N] [--bank-kb 256] [--per-layer]");
+            eprintln!("           [--trace trace.json] [--timeline timeline.csv]");
             eprintln!("  explore  [--preset baseline|sosa-256|sosa-512|tpu-like|monolithic]");
             eprintln!("           [--arrays 16x16,32x32] [--pods 64,256 | --pods-under-tdp W]");
             eprintln!("           [--interconnects butterfly2,benes,...]");
@@ -526,6 +636,7 @@ fn main() {
             eprintln!("           [--objective eff_tops_per_w,latency] [--pareto]");
             eprintln!("           [--format csv|json|both] [--out results] [--quick]");
             eprintln!("  serve    --models resnet152,bert-medium [--single-tenant]");
+            eprintln!("           [--trace trace.json] [--timeline latency.csv]");
             eprintln!("  cluster  [--nodes N | --node-pods 256,64] [--array RxC]");
             eprintln!("           [--models a,b] [--policy rr|jsq|p2c|slo]");
             eprintln!("           [--placement replicate|partition] [--qps Q]");
@@ -533,6 +644,9 @@ fn main() {
             eprintln!("           [--duration S] [--seed S] [--max-batch N]");
             eprintln!("           [--deadline-ms MS] [--sweep] [--threads N]");
             eprintln!("           [--out DIR] [--quick]");
+            eprintln!("           [--trace trace.json] [--timeline latency.csv]");
+            eprintln!("  trace    [--quick] [--model M --array RxC --pods N --per-layer]");
+            eprintln!("           [--qps Q] [--duration S] [--seed S] [--out results/trace]");
             eprintln!("  e2e      [--artifacts artifacts]");
             eprintln!("  list");
             std::process::exit(2);

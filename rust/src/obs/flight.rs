@@ -1,0 +1,170 @@
+//! One-call flight recording: run a workload with tracing on and
+//! render every artifact.
+//!
+//! This is the engine behind `sosa trace`: a scheduler-level pass
+//! (one traced simulation → pod tracks + utilization timeline) plus a
+//! request-level pass (a traced serving run of the same model →
+//! request spans + latency breakdown), merged into one Perfetto
+//! document.  The CLI and the golden tests share this code, so the
+//! committed snapshots pin the exact bytes `sosa trace --quick`
+//! writes.
+//!
+//! Both passes are single-context and sequential — nothing here
+//! depends on `SOSA_THREADS`, and all time is simulated, so the
+//! artifacts are bit-identical across machines and thread counts.
+
+use crate::arch::{ArchConfig, ArrayDims};
+use crate::serve::{generate, Engine, EngineConfig, Tenant, TrafficSpec};
+use crate::sim::{simulate_traced, SimOptions};
+use crate::stats::RunStats;
+use crate::workloads::ModelGraph;
+
+use super::{perfetto, timeline, Event, Metrics, Recorder};
+
+/// Everything one flight recording produces.
+pub struct FlightArtifacts {
+    /// Perfetto/Chrome Trace Event Format document (`trace.json`).
+    pub trace: String,
+    /// Per-slice × per-pod utilization CSV (`timeline.csv`).
+    pub timeline: String,
+    /// Per-request latency breakdown CSV (`latency.csv`).
+    pub latency: String,
+    /// Rendered metrics snapshot (`metrics.txt`).
+    pub metrics: String,
+    /// Stats of the traced simulation pass.
+    pub stats: RunStats,
+    /// The merged event stream (scheduler pass, then serving pass).
+    pub events: Vec<Event>,
+}
+
+impl FlightArtifacts {
+    /// Write the artifacts into `dir` as `trace.json`, `timeline.csv`,
+    /// `latency.csv` and `metrics.txt`.
+    pub fn write_to(&self, dir: &std::path::Path) -> crate::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join("trace.json"), &self.trace)?;
+        std::fs::write(dir.join("timeline.csv"), &self.timeline)?;
+        std::fs::write(dir.join("latency.csv"), &self.latency)?;
+        std::fs::write(dir.join("metrics.txt"), &self.metrics)?;
+        Ok(())
+    }
+}
+
+/// Record one flight: a traced simulation of `model` on `cfg`, then a
+/// traced single-tenant serving run of the same model under Poisson
+/// traffic (`qps` for `duration_s`, seeded).
+pub fn flight(
+    cfg: &ArchConfig,
+    model: &ModelGraph,
+    opts: &SimOptions,
+    qps: f64,
+    duration_s: f64,
+    seed: u64,
+) -> FlightArtifacts {
+    // Pass 1: scheduler-level trace of one simulation.
+    let (stats, mut events) = simulate_traced(cfg, model, opts);
+    let sched_len = events.len();
+
+    // Pass 2: request-level trace of a serving run.
+    let tenants = vec![Tenant::new(model.clone(), 1.0)];
+    let arrivals = generate(&TrafficSpec::poisson(qps, duration_s, seed), &tenants);
+    let ecfg = EngineConfig { sim: opts.clone(), ..Default::default() };
+    let mut engine = Engine::new(cfg.clone(), &tenants, ecfg);
+    let mut rec = Recorder::new();
+    let _report = engine.run_traced(&arrivals, &mut rec);
+    events.extend(rec.into_events());
+
+    let slice_us = if stats.slices > 0 {
+        stats.exec_seconds(cfg) * 1e6 / stats.slices as f64
+    } else {
+        1.0
+    };
+    FlightArtifacts {
+        trace: perfetto::trace_json(&events, slice_us).render(),
+        timeline: timeline::utilization_csv(&events[..sched_len], cfg.num_pods),
+        latency: timeline::latency_csv(&events[sched_len..]),
+        metrics: Metrics::from_events(&events).render(),
+        stats,
+        events,
+    }
+}
+
+/// The fixed quick workload (`sosa trace --quick`, CI smoke, golden
+/// pinning): a two-layer MLP on a 16-pod 32×32 machine with a short
+/// Poisson trace.
+pub fn flight_quick() -> FlightArtifacts {
+    let cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 16);
+    flight(&cfg, &quick_model(), &SimOptions::default(), 400.0, 0.05, 7)
+}
+
+fn quick_model() -> ModelGraph {
+    let mut g = ModelGraph::new("flight-quick");
+    let a = g.add("fc1", 128, 64, 64, vec![]);
+    g.add("fc2", 128, 64, 32, vec![a]);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn quick_flight_artifacts_are_consistent() {
+        let a = flight_quick();
+        // trace.json is valid JSON (the CI smoke's check, in-process).
+        let doc = Json::parse(&a.trace).expect("trace.json parses");
+        assert_eq!(Json::parse(&doc.render()).unwrap(), doc);
+        // Timeline conservation: busy cells == RunStats.pod_busy_slices.
+        let busy_cells = a
+            .timeline
+            .lines()
+            .skip(1)
+            .filter(|l| l.ends_with(",1"))
+            .count() as u64;
+        assert_eq!(busy_cells, a.stats.pod_busy_slices);
+        // Latency CSV has one row per completed request.
+        let served = a
+            .events
+            .iter()
+            .filter(|e| matches!(e, Event::RequestServed { .. }))
+            .count();
+        assert!(served > 0, "quick trace must serve requests");
+        assert_eq!(a.latency.lines().count(), served + 1);
+        // Metrics snapshot agrees with the event stream.
+        let m = Metrics::from_events(&a.events);
+        assert_eq!(m.counter("serve.completed"), served as u64);
+        assert_eq!(m.counter("sched.tile_ops_placed"), a.stats.tile_ops);
+    }
+
+    #[test]
+    fn flight_is_deterministic() {
+        let a = flight_quick();
+        let b = flight_quick();
+        assert_eq!(a.trace, b.trace);
+        assert_eq!(a.timeline, b.timeline);
+        assert_eq!(a.latency, b.latency);
+        assert_eq!(a.metrics, b.metrics);
+    }
+
+    #[test]
+    fn request_span_segments_sum_to_slo_latency() {
+        // Conservation: queue + batch + service == the latency the SLO
+        // layer reports for the same request (ServedRequest::latency_s).
+        let a = flight_quick();
+        let mut checked = 0;
+        for ev in &a.events {
+            if let Event::RequestServed { t_arrival, t_mfree, t_start, t_end, .. } = ev {
+                let (q, b, s) = super::timeline::breakdown(*t_arrival, *t_mfree, *t_start, *t_end);
+                let latency = t_end - t_arrival;
+                assert!(
+                    (q + b + s - latency).abs() <= 1e-12 * latency.max(1.0),
+                    "segments {q} + {b} + {s} != latency {latency}"
+                );
+                assert!(q >= 0.0 && b >= 0.0 && s >= 0.0);
+                checked += 1;
+            }
+        }
+        assert!(checked > 0);
+    }
+}

@@ -1,0 +1,241 @@
+//! Deterministic metrics registry: named counters and fixed-bucket
+//! histograms with a stable snapshot order.
+//!
+//! The registry complements [`crate::stats::RunStats`]: `RunStats`
+//! stays the scheduler's own aggregate (golden-pinned, `Eq`-compared
+//! across the pooled/parallel fast paths), while [`Metrics`] is the
+//! open-ended side channel every instrumented layer shares — counts
+//! that would otherwise accrete as ad-hoc struct fields (deferral
+//! totals, launch reasons, dispatch counts) land here, derived from
+//! the same [`Event`] stream the exporters consume
+//! ([`Metrics::from_events`]), so the two views cannot drift.
+//!
+//! Determinism: registration order is preserved and
+//! [`Metrics::snapshot`] sorts by name, so rendered snapshots are
+//! byte-identical for identical event streams — no `HashMap`
+//! iteration order anywhere.
+
+use super::Event;
+
+/// A fixed-bucket histogram: `counts[i]` holds observations `v <=
+/// bounds[i]` (first matching bucket), with one overflow bucket at the
+/// end for values above every bound.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Histogram {
+    pub name: String,
+    /// Ascending inclusive upper bounds.
+    pub bounds: Vec<f64>,
+    /// Per-bucket counts; `len == bounds.len() + 1` (last = overflow).
+    pub counts: Vec<u64>,
+    /// Total observations.
+    pub total: u64,
+}
+
+impl Histogram {
+    fn new(name: &str, bounds: &[f64]) -> Histogram {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        Histogram {
+            name: name.to_string(),
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+            total: 0,
+        }
+    }
+
+    fn observe(&mut self, v: f64) {
+        let idx = self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+}
+
+/// Counter + histogram registry with deterministic snapshots.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Metrics {
+    counters: Vec<(String, u64)>,
+    hists: Vec<Histogram>,
+}
+
+impl Metrics {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    /// Add `by` to the named counter, registering it at zero on first
+    /// use.
+    pub fn inc(&mut self, name: &str, by: u64) {
+        match self.counters.iter_mut().find(|(n, _)| n == name) {
+            Some((_, v)) => *v += by,
+            None => self.counters.push((name.to_string(), by)),
+        }
+    }
+
+    /// Record one observation in the named histogram, registering it
+    /// with `bounds` on first use (later calls reuse the registered
+    /// bounds).
+    pub fn observe(&mut self, name: &str, bounds: &[f64], v: f64) {
+        if let Some(h) = self.hists.iter_mut().find(|h| h.name == name) {
+            h.observe(v);
+            return;
+        }
+        let mut h = Histogram::new(name, bounds);
+        h.observe(v);
+        self.hists.push(h);
+    }
+
+    /// Current value of a counter (0 when never incremented).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.iter().find(|(n, _)| n == name).map(|&(_, v)| v).unwrap_or(0)
+    }
+
+    /// The named histogram, if registered.
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.hists.iter().find(|h| h.name == name)
+    }
+
+    /// Deterministic snapshot: one line per counter (`name value`) and
+    /// per histogram bucket (`name{le=BOUND} count`, with `le=+inf`
+    /// for the overflow bucket and a `name.count` total), sorted by
+    /// line text.
+    pub fn snapshot(&self) -> Vec<String> {
+        let mut lines = Vec::new();
+        for (name, v) in &self.counters {
+            lines.push(format!("{name} {v}"));
+        }
+        for h in &self.hists {
+            for (i, &c) in h.counts.iter().enumerate() {
+                match h.bounds.get(i) {
+                    Some(b) => lines.push(format!("{}{{le={b}}} {c}", h.name)),
+                    None => lines.push(format!("{}{{le=+inf}} {c}", h.name)),
+                }
+            }
+            lines.push(format!("{}.count {}", h.name, h.total));
+        }
+        lines.sort();
+        lines
+    }
+
+    /// Rendered snapshot: sorted lines, newline-terminated.
+    pub fn render(&self) -> String {
+        let mut out = self.snapshot().join("\n");
+        out.push('\n');
+        out
+    }
+
+    /// Populate a registry from a recorded event stream — the single
+    /// place trace events map to metric names, shared by every
+    /// exporter and front door.
+    pub fn from_events(events: &[Event]) -> Metrics {
+        const DEFER_BOUNDS: &[f64] = &[0.0, 1.0, 2.0, 4.0, 8.0, 16.0];
+        const UNIT_BOUNDS: &[f64] = &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0];
+        const LATENCY_BOUNDS: &[f64] = &[1e-4, 1e-3, 1e-2, 1e-1, 1.0];
+        let mut m = Metrics::new();
+        for ev in events {
+            match ev {
+                Event::SliceOpen { .. } => m.inc("sched.slices_opened", 1),
+                Event::TilePlaced { deferrals, .. } => {
+                    m.inc("sched.tile_ops_placed", 1);
+                    m.inc("sched.deferral_slices", *deferrals as u64);
+                    m.observe("sched.deferrals_per_op", DEFER_BOUNDS, *deferrals as f64);
+                }
+                Event::PpPlaced { spill, .. } => {
+                    m.inc("sched.pp_ops_placed", 1);
+                    m.inc("sched.pp_spill_slices", *spill as u64);
+                }
+                Event::RequestArrive { .. } => m.inc("serve.admitted", 1),
+                Event::RequestReject { .. } => m.inc("serve.rejected", 1),
+                Event::BatchLaunch { units, reason, .. } => {
+                    m.inc("serve.batches", 1);
+                    m.inc(&format!("serve.launch_{}", reason.name()), 1);
+                    m.observe("serve.batch_units", UNIT_BOUNDS, *units as f64);
+                }
+                Event::RequestServed { t_arrival, t_end, .. } => {
+                    m.inc("serve.completed", 1);
+                    m.observe("serve.latency_s", LATENCY_BOUNDS, t_end - t_arrival);
+                }
+                Event::Dispatch { .. } => m.inc("cluster.dispatches", 1),
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::LaunchReason;
+
+    #[test]
+    fn counters_accumulate_and_default_to_zero() {
+        let mut m = Metrics::new();
+        assert_eq!(m.counter("x"), 0);
+        m.inc("x", 2);
+        m.inc("x", 3);
+        m.inc("y", 1);
+        assert_eq!(m.counter("x"), 5);
+        assert_eq!(m.counter("y"), 1);
+    }
+
+    #[test]
+    fn histogram_buckets_are_inclusive_with_overflow() {
+        let mut m = Metrics::new();
+        let bounds = [1.0, 10.0];
+        for v in [0.5, 1.0, 5.0, 100.0] {
+            m.observe("h", &bounds, v);
+        }
+        let h = m.histogram("h").unwrap();
+        assert_eq!(h.counts, vec![2, 1, 1], "le=1: {{0.5, 1.0}}, le=10: {{5}}, +inf: {{100}}");
+        assert_eq!(h.total, 4);
+    }
+
+    #[test]
+    fn snapshot_is_sorted_regardless_of_registration_order() {
+        let mut a = Metrics::new();
+        a.inc("z", 1);
+        a.inc("a", 1);
+        let mut b = Metrics::new();
+        b.inc("a", 1);
+        b.inc("z", 1);
+        assert_eq!(a.snapshot(), b.snapshot());
+        assert_eq!(a.render(), "a 1\nz 1\n");
+    }
+
+    #[test]
+    fn from_events_maps_every_variant() {
+        let events = vec![
+            Event::SliceOpen { slice: 0 },
+            Event::TilePlaced { op: 0, layer: 0, slice: 0, pod: 0, deferrals: 3 },
+            Event::PpPlaced { pp: 0, layer: 0, slice: 1, spill: 2 },
+            Event::RequestArrive { id: 0, tenant: 0, t: 0.0 },
+            Event::RequestReject { id: 1, tenant: 0, t: 0.0 },
+            Event::BatchLaunch {
+                t_start: 0.0,
+                t_end: 1e-3,
+                units: 4,
+                reason: LaunchReason::Filled,
+            },
+            Event::RequestServed {
+                id: 0,
+                tenant: 0,
+                t_arrival: 0.0,
+                t_mfree: 0.0,
+                t_start: 0.0,
+                t_end: 1e-3,
+            },
+            Event::Dispatch { id: 0, tenant: 0, node: 1, t: 0.0, queue_view: vec![(0, 2), (1, 1)] },
+        ];
+        let m = Metrics::from_events(&events);
+        assert_eq!(m.counter("sched.slices_opened"), 1);
+        assert_eq!(m.counter("sched.tile_ops_placed"), 1);
+        assert_eq!(m.counter("sched.deferral_slices"), 3);
+        assert_eq!(m.counter("sched.pp_spill_slices"), 2);
+        assert_eq!(m.counter("serve.admitted"), 1);
+        assert_eq!(m.counter("serve.rejected"), 1);
+        assert_eq!(m.counter("serve.batches"), 1);
+        assert_eq!(m.counter("serve.launch_filled"), 1);
+        assert_eq!(m.counter("serve.completed"), 1);
+        assert_eq!(m.counter("cluster.dispatches"), 1);
+        assert_eq!(m.histogram("serve.latency_s").unwrap().total, 1);
+    }
+}

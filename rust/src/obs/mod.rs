@@ -1,0 +1,247 @@
+//! Flight recorder: deterministic tracing + metrics for the whole
+//! sched → serve → cluster stack.
+//!
+//! # Lifecycle: event → sink → export
+//!
+//! ```text
+//!  scheduler / engine / router          TraceSink                exporters
+//!  ───────────────────────────   →   ─────────────────   →   ─────────────────
+//!  typed [`Event`]s (sim-time        [`NullSink`] (off,       [`perfetto`]  trace.json
+//!  only — slice indices and          zero-cost) or            [`timeline`]  utilization CSV
+//!  simulated seconds, never          [`Recorder`] (Vec)                     latency CSV
+//!  wall clock)                                                [`Metrics`]   counters/histograms
+//! ```
+//!
+//! 1. **Event** — instrumented layers emit [`Event`] values describing
+//!    what happened *in simulated time*: the scheduler reports slice
+//!    opens and tile/pp placements, the serving engine reports request
+//!    admission and batch launches, the cluster router reports dispatch
+//!    decisions with the queue view that justified them.  No event
+//!    carries wall-clock state, so traces are bit-identical across
+//!    runs, machines and `SOSA_THREADS` values.
+//! 2. **Sink** — emitters hold a `dyn` [`TraceSink`].  The default is
+//!    no sink at all (an `Option` that is `None`, one branch on the
+//!    hot path); installing [`NullSink`] keeps emission compiled in
+//!    but drops events before construction ([`TraceSink::enabled`]
+//!    gates the `format!`-free event build); [`Recorder`] appends to a
+//!    `Vec` in emission order.
+//! 3. **Export** — a recorded event stream renders to the Chrome/
+//!    Perfetto Trace Event Format ([`perfetto::trace_json`]), a
+//!    per-slice × per-pod utilization timeline
+//!    ([`timeline::utilization_csv`]), a per-request latency breakdown
+//!    ([`timeline::latency_csv`]), and a [`Metrics`] registry snapshot
+//!    ([`Metrics::from_events`]).
+//!
+//! Parallel sweeps record per worker and merge **by item index**
+//! ([`crate::sim::SweepExecutor::run_traced`]), so multi-threaded
+//! traces are byte-identical to single-threaded ones.
+
+pub mod flight;
+pub mod metrics;
+pub mod perfetto;
+pub mod timeline;
+
+pub use metrics::{Histogram, Metrics};
+
+/// Why the serving engine launched a batch group, in the launch
+/// condition's evaluation order: the batch filled (`ready >=
+/// max_batch`), the trace drained (no future arrival could join), or
+/// the head-of-line request hit `max_wait_s`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LaunchReason {
+    Filled,
+    Drained,
+    Timeout,
+}
+
+impl LaunchReason {
+    /// Stable report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            LaunchReason::Filled => "filled",
+            LaunchReason::Drained => "drained",
+            LaunchReason::Timeout => "timeout",
+        }
+    }
+}
+
+/// One trace event.  Scheduler events carry slice indices (convert to
+/// seconds with the run's `cycles_per_slice` / clock); serving and
+/// cluster events carry simulated seconds.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// The scheduler opened a new time slice.
+    SliceOpen { slice: u32 },
+    /// A tile op landed on `(slice, pod)` after `deferrals` failed
+    /// slices.  `deferrals > 0` doubles as the route-fallback signal:
+    /// each deferral means no pod in that slice had the op's three
+    /// bank connections simultaneously routable (bank-port conflict or
+    /// fabric congestion), so the op fell through to the next slice.
+    TilePlaced { op: u32, layer: u32, slice: u32, pod: u32, deferrals: u32 },
+    /// A post-processing op completed in `slice`; `spill` counts the
+    /// extra slices its pair-slots overflowed into when the PP
+    /// capacity could not hold the merge in one slice.
+    PpPlaced { pp: u32, layer: u32, slice: u32, spill: u32 },
+    /// Serving: a request was admitted to its tenant queue.
+    RequestArrive { id: u64, tenant: u32, t: f64 },
+    /// Serving: admission control shed a request.
+    RequestReject { id: u64, tenant: u32, t: f64 },
+    /// Serving: a batch group of `units` total batch units launched.
+    BatchLaunch { t_start: f64, t_end: f64, units: u32, reason: LaunchReason },
+    /// Serving: a request completed.  `t_mfree` is when the
+    /// accelerator came free for this request's batch, splitting the
+    /// end-to-end latency into queue-wait (`max(0, t_mfree −
+    /// t_arrival)`), batch-wait (`t_start − max(t_arrival, t_mfree)`)
+    /// and service (`t_end − t_start`) — see
+    /// [`timeline::breakdown`].
+    RequestServed { id: u64, tenant: u32, t_arrival: f64, t_mfree: f64, t_start: f64, t_end: f64 },
+    /// Cluster: the router sent request `id` to `node`.  `queue_view`
+    /// is the per-candidate `(node, estimated in-flight)` snapshot —
+    /// after draining estimated completions up to `t` — that the
+    /// policy decided on.
+    Dispatch { id: u64, tenant: u32, node: u32, t: f64, queue_view: Vec<(u32, u32)> },
+}
+
+/// Destination for trace events.
+///
+/// Implementations must not consult wall-clock time or any other
+/// nondeterministic state: a sink observes the simulation, it never
+/// influences it.
+pub trait TraceSink: Send {
+    /// Record one event.
+    fn event(&mut self, ev: Event);
+
+    /// Whether the sink wants events at all.  Emitters check this
+    /// before *constructing* an event, so a disabled sink costs one
+    /// virtual call and no allocation per hook site.
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    /// Take the recorded events out of the sink (empty for sinks that
+    /// do not retain events).
+    fn drain(&mut self) -> Vec<Event> {
+        Vec::new()
+    }
+}
+
+/// A sink that drops everything — the A/B overhead baseline
+/// (`benches/sched.rs` pins installed-but-disabled within 2% of no
+/// sink at all).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn event(&mut self, _ev: Event) {}
+
+    fn enabled(&self) -> bool {
+        false
+    }
+}
+
+/// The recording sink: appends events in emission order.
+#[derive(Clone, Debug, Default)]
+pub struct Recorder {
+    events: Vec<Event>,
+}
+
+impl Recorder {
+    /// An empty recorder.
+    pub fn new() -> Self {
+        Recorder { events: Vec::new() }
+    }
+
+    /// Events recorded so far, in emission order.
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    /// Consume the recorder, returning its events.
+    pub fn into_events(self) -> Vec<Event> {
+        self.events
+    }
+}
+
+impl TraceSink for Recorder {
+    fn event(&mut self, ev: Event) {
+        self.events.push(ev);
+    }
+
+    fn drain(&mut self) -> Vec<Event> {
+        std::mem::take(&mut self.events)
+    }
+}
+
+/// Compact scheduler-trace digest — what
+/// [`crate::explore::EvalRecord`] carries when per-point tracing is
+/// on (full event streams would dwarf the records).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceSummary {
+    /// Total events recorded for the point.
+    pub events: u64,
+    /// Tile-op placements.
+    pub tile_placed: u64,
+    /// Total slices tile ops were deferred past (congestion).
+    pub deferrals: u64,
+    /// PP pair-slot spill slices (merge capacity pressure).
+    pub pp_spill_slices: u64,
+}
+
+impl TraceSummary {
+    /// Summarize an event stream.
+    pub fn from_events(events: &[Event]) -> TraceSummary {
+        let mut s = TraceSummary { events: events.len() as u64, ..Default::default() };
+        for ev in events {
+            match ev {
+                Event::TilePlaced { deferrals, .. } => {
+                    s.tile_placed += 1;
+                    s.deferrals += *deferrals as u64;
+                }
+                Event::PpPlaced { spill, .. } => s.pp_spill_slices += *spill as u64,
+                _ => {}
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn null_sink_is_disabled_and_retains_nothing() {
+        let mut s = NullSink;
+        assert!(!s.enabled());
+        s.event(Event::SliceOpen { slice: 0 });
+        assert!(s.drain().is_empty());
+    }
+
+    #[test]
+    fn recorder_keeps_emission_order() {
+        let mut r = Recorder::new();
+        assert!(r.enabled());
+        r.event(Event::SliceOpen { slice: 0 });
+        r.event(Event::TilePlaced { op: 3, layer: 1, slice: 0, pod: 2, deferrals: 1 });
+        assert_eq!(r.events().len(), 2);
+        assert_eq!(r.events()[0], Event::SliceOpen { slice: 0 });
+        let drained = r.drain();
+        assert_eq!(drained.len(), 2);
+        assert!(r.events().is_empty(), "drain empties the recorder");
+    }
+
+    #[test]
+    fn trace_summary_counts_placements_and_deferrals() {
+        let events = vec![
+            Event::SliceOpen { slice: 0 },
+            Event::TilePlaced { op: 0, layer: 0, slice: 0, pod: 0, deferrals: 0 },
+            Event::TilePlaced { op: 1, layer: 0, slice: 2, pod: 1, deferrals: 2 },
+            Event::PpPlaced { pp: 0, layer: 0, slice: 3, spill: 1 },
+        ];
+        let s = TraceSummary::from_events(&events);
+        assert_eq!(s.events, 4);
+        assert_eq!(s.tile_placed, 2);
+        assert_eq!(s.deferrals, 2);
+        assert_eq!(s.pp_spill_slices, 1);
+    }
+}

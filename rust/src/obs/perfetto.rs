@@ -1,0 +1,231 @@
+//! Chrome/Perfetto Trace Event Format exporter.
+//!
+//! Renders a recorded [`Event`] stream to the JSON object format both
+//! `chrome://tracing` and [ui.perfetto.dev](https://ui.perfetto.dev)
+//! load: `{"traceEvents": [...], "displayTimeUnit": "ms"}`.  Track
+//! layout:
+//!
+//! * **pid 0 "pods"** — one thread per pod; each tile-op placement is
+//!   a complete (`"X"`) span one slice long, slice opens are instants
+//!   on tid 0;
+//! * **pid 1 "post-processors"** — PP completions as instants;
+//! * **pid 2 "serve-engine"** — requests as async (`"b"`/`"e"`) spans
+//!   keyed by request id (arrival → completion, with the
+//!   queue/batch/service split in the end event's args), rejections
+//!   as instants;
+//! * **pid 3 "cluster-router"** — dispatch decisions as instants on
+//!   the chosen node's thread, with the queue view in args;
+//! * **pid 4 "batches"** — batch launches as `"X"` spans.
+//!
+//! Timestamps are **simulated** microseconds (`ts`/`dur` are µs in the
+//! trace format).  Scheduler events carry slice indices; `slice_us`
+//! converts them.  Everything is a pure function of the event stream,
+//! so equal streams render byte-identical documents.
+
+use crate::util::json::Json;
+
+use super::{timeline, Event};
+
+/// Build the Trace Event Format document for an event stream.
+/// `slice_us` is the simulated duration of one scheduler slice in
+/// microseconds (use `RunStats::exec_seconds / slices`; any positive
+/// value only scales the scheduler tracks).
+pub fn trace_json(events: &[Event], slice_us: f64) -> Json {
+    let mut te: Vec<Json> = Vec::new();
+    for (pid, name) in [
+        (0u64, "pods"),
+        (1, "post-processors"),
+        (2, "serve-engine"),
+        (3, "cluster-router"),
+        (4, "batches"),
+    ] {
+        te.push(Json::obj(vec![
+            ("name", Json::str("process_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::int(pid)),
+            ("args", Json::obj(vec![("name", Json::str(name))])),
+        ]));
+    }
+    for ev in events {
+        match ev {
+            Event::SliceOpen { slice } => te.push(Json::obj(vec![
+                ("name", Json::str(format!("slice {slice}"))),
+                ("cat", Json::str("slice")),
+                ("ph", Json::str("i")),
+                ("s", Json::str("p")),
+                ("pid", Json::int(0)),
+                ("tid", Json::int(0)),
+                ("ts", Json::Num(*slice as f64 * slice_us)),
+            ])),
+            Event::TilePlaced { op, layer, slice, pod, deferrals } => te.push(Json::obj(vec![
+                ("name", Json::str(format!("L{layer} op{op}"))),
+                ("cat", Json::str("tile")),
+                ("ph", Json::str("X")),
+                ("pid", Json::int(0)),
+                ("tid", Json::int(*pod as u64)),
+                ("ts", Json::Num(*slice as f64 * slice_us)),
+                ("dur", Json::Num(slice_us)),
+                ("args", Json::obj(vec![("deferrals", Json::int(*deferrals as u64))])),
+            ])),
+            Event::PpPlaced { pp, layer, slice, spill } => te.push(Json::obj(vec![
+                ("name", Json::str(format!("pp{pp} L{layer}"))),
+                ("cat", Json::str("pp")),
+                ("ph", Json::str("i")),
+                ("s", Json::str("p")),
+                ("pid", Json::int(1)),
+                ("tid", Json::int(0)),
+                ("ts", Json::Num(*slice as f64 * slice_us)),
+                ("args", Json::obj(vec![("spill", Json::int(*spill as u64))])),
+            ])),
+            Event::RequestArrive { id, tenant, t } => te.push(Json::obj(vec![
+                ("name", Json::str(format!("req {id}"))),
+                ("cat", Json::str("request")),
+                ("ph", Json::str("b")),
+                ("id", Json::int(*id)),
+                ("pid", Json::int(2)),
+                ("tid", Json::int(*tenant as u64)),
+                ("ts", Json::Num(t * 1e6)),
+            ])),
+            Event::RequestReject { id, tenant, t } => te.push(Json::obj(vec![
+                ("name", Json::str(format!("reject {id}"))),
+                ("cat", Json::str("request")),
+                ("ph", Json::str("i")),
+                ("s", Json::str("t")),
+                ("pid", Json::int(2)),
+                ("tid", Json::int(*tenant as u64)),
+                ("ts", Json::Num(t * 1e6)),
+            ])),
+            Event::BatchLaunch { t_start, t_end, units, reason } => te.push(Json::obj(vec![
+                ("name", Json::str(format!("batch[{units}] {}", reason.name()))),
+                ("cat", Json::str("batch")),
+                ("ph", Json::str("X")),
+                ("pid", Json::int(4)),
+                ("tid", Json::int(0)),
+                ("ts", Json::Num(t_start * 1e6)),
+                ("dur", Json::Num((t_end - t_start) * 1e6)),
+            ])),
+            Event::RequestServed { id, tenant, t_arrival, t_mfree, t_start, t_end } => {
+                let (queue, batch, service) =
+                    timeline::breakdown(*t_arrival, *t_mfree, *t_start, *t_end);
+                te.push(Json::obj(vec![
+                    ("name", Json::str(format!("req {id}"))),
+                    ("cat", Json::str("request")),
+                    ("ph", Json::str("e")),
+                    ("id", Json::int(*id)),
+                    ("pid", Json::int(2)),
+                    ("tid", Json::int(*tenant as u64)),
+                    ("ts", Json::Num(t_end * 1e6)),
+                    (
+                        "args",
+                        Json::obj(vec![
+                            ("queue_us", Json::Num(queue * 1e6)),
+                            ("batch_us", Json::Num(batch * 1e6)),
+                            ("service_us", Json::Num(service * 1e6)),
+                        ]),
+                    ),
+                ]));
+            }
+            Event::Dispatch { id, tenant, node, t, queue_view } => {
+                let view: Vec<Json> = queue_view
+                    .iter()
+                    .map(|&(n, q)| Json::Arr(vec![Json::int(n as u64), Json::int(q as u64)]))
+                    .collect();
+                te.push(Json::obj(vec![
+                    ("name", Json::str(format!("req {id} → n{node}"))),
+                    ("cat", Json::str("dispatch")),
+                    ("ph", Json::str("i")),
+                    ("s", Json::str("t")),
+                    ("pid", Json::int(3)),
+                    ("tid", Json::int(*node as u64)),
+                    ("ts", Json::Num(t * 1e6)),
+                    (
+                        "args",
+                        Json::obj(vec![
+                            ("tenant", Json::int(*tenant as u64)),
+                            ("queues", Json::Arr(view)),
+                        ]),
+                    ),
+                ]));
+            }
+        }
+    }
+    Json::obj(vec![("traceEvents", Json::Arr(te)), ("displayTimeUnit", Json::str("ms"))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::LaunchReason;
+
+    fn sample_events() -> Vec<Event> {
+        vec![
+            Event::SliceOpen { slice: 0 },
+            Event::TilePlaced { op: 0, layer: 0, slice: 0, pod: 3, deferrals: 1 },
+            Event::PpPlaced { pp: 0, layer: 0, slice: 1, spill: 0 },
+            Event::RequestArrive { id: 7, tenant: 0, t: 0.001 },
+            Event::RequestReject { id: 8, tenant: 1, t: 0.001 },
+            Event::BatchLaunch {
+                t_start: 0.002,
+                t_end: 0.004,
+                units: 2,
+                reason: LaunchReason::Timeout,
+            },
+            Event::RequestServed {
+                id: 7,
+                tenant: 0,
+                t_arrival: 0.001,
+                t_mfree: 0.0015,
+                t_start: 0.002,
+                t_end: 0.004,
+            },
+            Event::Dispatch {
+                id: 7,
+                tenant: 0,
+                node: 2,
+                t: 0.001,
+                queue_view: vec![(0, 1), (2, 0)],
+            },
+        ]
+    }
+
+    #[test]
+    fn document_round_trips_through_the_parser() {
+        let doc = trace_json(&sample_events(), 0.5);
+        let text = doc.render();
+        let back = Json::parse(&text).expect("trace.json must be valid JSON");
+        assert_eq!(back, doc, "parse(render(doc)) == doc");
+    }
+
+    #[test]
+    fn document_has_trace_events_and_time_unit() {
+        let doc = trace_json(&sample_events(), 0.5);
+        match &doc {
+            Json::Obj(pairs) => {
+                assert_eq!(pairs[0].0, "traceEvents");
+                let n = match &pairs[0].1 {
+                    Json::Arr(items) => items.len(),
+                    other => panic!("traceEvents not an array: {other:?}"),
+                };
+                // 5 process_name metadata records + 8 events.
+                assert_eq!(n, 13);
+                assert_eq!(pairs[1], ("displayTimeUnit".to_string(), Json::str("ms")));
+            }
+            other => panic!("not an object: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rendering_is_deterministic() {
+        let a = trace_json(&sample_events(), 0.5).render();
+        let b = trace_json(&sample_events(), 0.5).render();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn tile_span_scales_with_slice_us() {
+        let events = vec![Event::TilePlaced { op: 0, layer: 0, slice: 2, pod: 0, deferrals: 0 }];
+        let text = trace_json(&events, 10.0).render();
+        assert!(text.contains("\"ts\":20"), "slice 2 at 10 µs/slice: {text}");
+        assert!(text.contains("\"dur\":10"), "{text}");
+    }
+}

@@ -1,0 +1,148 @@
+//! CSV exporters: the per-slice × per-pod utilization timeline (the
+//! heatmap behind Table 2's utilization numbers) and the per-request
+//! latency breakdown.
+//!
+//! Both render to `String` (callers write the file), so golden tests
+//! pin the exact bytes the CLI emits.  Rows are emitted in a fixed
+//! order — (slice, pod) ascending, requests in completion order — and
+//! every float is fixed-point formatted, so equal event streams
+//! produce byte-identical CSVs.
+
+use crate::util::csv::f;
+
+use super::Event;
+
+/// Busy grid `[slice][pod]` from `TilePlaced` events; covers every
+/// opened slice (trailing slices without placements stay all-idle).
+/// The scheduler never double-books a pod within a slice, so the cell
+/// count equals `RunStats::pod_busy_slices`.
+pub fn busy_grid(events: &[Event], num_pods: usize) -> Vec<Vec<bool>> {
+    let mut n_slices = 0usize;
+    for ev in events {
+        match ev {
+            Event::SliceOpen { slice } => n_slices = n_slices.max(*slice as usize + 1),
+            Event::TilePlaced { slice, .. } => n_slices = n_slices.max(*slice as usize + 1),
+            _ => {}
+        }
+    }
+    let mut grid = vec![vec![false; num_pods]; n_slices];
+    for ev in events {
+        if let Event::TilePlaced { slice, pod, .. } = ev {
+            grid[*slice as usize][*pod as usize] = true;
+        }
+    }
+    grid
+}
+
+/// Per-slice × per-pod utilization timeline CSV
+/// (`slice,pod,busy` with `busy` ∈ {0, 1}; full grid, so the heatmap
+/// shape is explicit).
+pub fn utilization_csv(events: &[Event], num_pods: usize) -> String {
+    let grid = busy_grid(events, num_pods);
+    let mut out = String::from("slice,pod,busy\n");
+    for (s, row) in grid.iter().enumerate() {
+        for (p, &busy) in row.iter().enumerate() {
+            out.push_str(&format!("{s},{p},{}\n", busy as u8));
+        }
+    }
+    out
+}
+
+/// Split a served request's end-to-end latency into (queue-wait,
+/// batch-wait, service) seconds.  `t_mfree` is when the accelerator
+/// came free for the request's batch: time before that is spent
+/// waiting on the machine, time after it (until `t_start`) is spent
+/// waiting for the batch to form, and the rest is execution.  The
+/// three segments sum to `t_end − t_arrival` up to float rounding.
+pub fn breakdown(t_arrival: f64, t_mfree: f64, t_start: f64, t_end: f64) -> (f64, f64, f64) {
+    let queue = (t_mfree - t_arrival).max(0.0);
+    let batch = t_start - t_arrival.max(t_mfree);
+    let service = t_end - t_start;
+    (queue, batch, service)
+}
+
+/// Per-request latency breakdown CSV from `RequestServed` events
+/// (completion order): `id,tenant,t_arrival_s,queue_s,batch_s,
+/// service_s,latency_s`, 9-decimal fixed point.
+pub fn latency_csv(events: &[Event]) -> String {
+    let mut out = String::from("id,tenant,t_arrival_s,queue_s,batch_s,service_s,latency_s\n");
+    for ev in events {
+        if let Event::RequestServed { id, tenant, t_arrival, t_mfree, t_start, t_end } = ev {
+            let (queue, batch, service) = breakdown(*t_arrival, *t_mfree, *t_start, *t_end);
+            out.push_str(&format!(
+                "{id},{tenant},{},{},{},{},{}\n",
+                f(*t_arrival, 9),
+                f(queue, 9),
+                f(batch, 9),
+                f(service, 9),
+                f(t_end - t_arrival, 9),
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn busy_grid_covers_opened_slices_and_marks_placements() {
+        let events = vec![
+            Event::SliceOpen { slice: 0 },
+            Event::TilePlaced { op: 0, layer: 0, slice: 0, pod: 1, deferrals: 0 },
+            Event::SliceOpen { slice: 1 },
+            Event::SliceOpen { slice: 2 },
+            Event::TilePlaced { op: 1, layer: 0, slice: 1, pod: 0, deferrals: 1 },
+        ];
+        let grid = busy_grid(&events, 2);
+        assert_eq!(grid.len(), 3, "slice 2 opened but idle");
+        assert_eq!(grid[0], vec![false, true]);
+        assert_eq!(grid[1], vec![true, false]);
+        assert_eq!(grid[2], vec![false, false]);
+    }
+
+    #[test]
+    fn utilization_csv_is_a_full_grid() {
+        let events = vec![
+            Event::SliceOpen { slice: 0 },
+            Event::TilePlaced { op: 0, layer: 0, slice: 0, pod: 1, deferrals: 0 },
+        ];
+        assert_eq!(utilization_csv(&events, 2), "slice,pod,busy\n0,0,0\n0,1,1\n");
+    }
+
+    #[test]
+    fn breakdown_segments_sum_to_latency() {
+        // Machine busy until 0.003, batch forms until 0.004, runs 2 ms.
+        let (q, b, s) = breakdown(0.001, 0.003, 0.004, 0.006);
+        assert!((q - 0.002).abs() < 1e-15);
+        assert!((b - 0.001).abs() < 1e-15);
+        assert!((s - 0.002).abs() < 1e-15);
+        assert!((q + b + s - 0.005).abs() < 1e-12);
+        // Machine already free at arrival: no queue-wait.
+        let (q, b, s) = breakdown(0.002, 0.001, 0.004, 0.006);
+        assert_eq!(q, 0.0);
+        assert!((b - 0.002).abs() < 1e-15);
+        assert!((s - 0.002).abs() < 1e-15);
+    }
+
+    #[test]
+    fn latency_csv_rows_only_for_served_requests() {
+        let events = vec![
+            Event::RequestArrive { id: 0, tenant: 0, t: 0.0 },
+            Event::RequestServed {
+                id: 0,
+                tenant: 0,
+                t_arrival: 0.0,
+                t_mfree: 0.0,
+                t_start: 0.001,
+                t_end: 0.003,
+            },
+        ];
+        let csv = latency_csv(&events);
+        let rows: Vec<&str> = csv.lines().collect();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0], "id,tenant,t_arrival_s,queue_s,batch_s,service_s,latency_s");
+        assert_eq!(rows[1], "0,0,0.000000000,0.000000000,0.001000000,0.002000000,0.003000000");
+    }
+}

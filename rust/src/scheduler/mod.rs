@@ -46,6 +46,7 @@ pub mod placement;
 
 use crate::arch::ArchConfig;
 use crate::interconnect::{Fabric, Kind};
+use crate::obs::{Event, TraceSink};
 use crate::stats::RunStats;
 use crate::tiling::{TileProgram, XDep};
 use crate::util::BitSet;
@@ -180,6 +181,9 @@ pub struct SimContext {
     group_ready: Vec<Vec<u32>>,
     /// Per-layer max group readiness (coarse deps).
     layer_done: Vec<u32>,
+    /// Optional trace sink; `None` (the default) keeps the hot path at
+    /// a single branch per hook site.
+    sink: Option<Box<dyn TraceSink>>,
 }
 
 impl SimContext {
@@ -192,7 +196,27 @@ impl SimContext {
             op_done: Vec::new(),
             group_ready: Vec::new(),
             layer_done: Vec::new(),
+            sink: None,
         }
+    }
+
+    /// Install a trace sink.  Scheduler runs on this context emit
+    /// [`Event`]s into it until [`Self::take_sink`]; the sink survives
+    /// [`Self::checkout`], so one recorder can span several runs (drain
+    /// between runs to separate their streams).
+    pub fn set_sink(&mut self, sink: Box<dyn TraceSink>) {
+        self.sink = Some(sink);
+    }
+
+    /// Remove and return the installed sink, if any.
+    pub fn take_sink(&mut self) -> Option<Box<dyn TraceSink>> {
+        self.sink.take()
+    }
+
+    /// Drain recorded events from the installed sink (empty when no
+    /// sink is installed or the sink retains nothing).
+    pub fn drain_events(&mut self) -> Vec<Event> {
+        self.sink.as_deref_mut().map(|s| s.drain()).unwrap_or_default()
     }
 
     /// Prepare the pooled buffers for one run: rebuild the ring when
@@ -350,7 +374,12 @@ impl<'a> Scheduler<'a> {
         Self::build(cfg, prog, opts, Ctx::Borrowed(ctx))
     }
 
-    fn build(cfg: &'a ArchConfig, prog: &'a TileProgram, opts: SchedulerOptions, ctx: Ctx<'a>) -> Self {
+    fn build(
+        cfg: &'a ArchConfig,
+        prog: &'a TileProgram,
+        opts: SchedulerOptions,
+        ctx: Ctx<'a>,
+    ) -> Self {
         let mut s = Scheduler {
             cfg,
             prog,
@@ -363,6 +392,17 @@ impl<'a> Scheduler<'a> {
         };
         s.chain_gap = s.chain_gap_slices();
         s
+    }
+
+    /// Emit a trace event if the context has an enabled sink.  Takes a
+    /// thunk so the disabled path never constructs the event.
+    #[inline]
+    fn trace(&mut self, ev: impl FnOnce() -> Event) {
+        if let Some(sink) = self.ctx.sink.as_deref_mut() {
+            if sink.enabled() {
+                sink.event(ev());
+            }
+        }
     }
 
     /// Processing order: per layer, **j-outer** (all chains advance in
@@ -391,6 +431,7 @@ impl<'a> Scheduler<'a> {
         let mut stats = RunStats::default();
         self.ctx.ring[0].reset(0);
         self.ctx.busy_per_slice.push(0);
+        self.trace(|| Event::SliceOpen { slice: 0 });
 
         // Interleave: pp ops become schedulable as chains complete; we
         // process tile ops in lockstep order and flush pp ops as their
@@ -538,6 +579,7 @@ impl<'a> Scheduler<'a> {
             let h = self.horizon;
             self.ctx.ring[idx].reset(h);
             self.ctx.busy_per_slice.push(0);
+            self.trace(|| Event::SliceOpen { slice: h });
         }
         let idx = (slice as usize) % self.opts.window;
         debug_assert_eq!(self.ctx.ring[idx].slice, slice);
@@ -553,6 +595,7 @@ impl<'a> Scheduler<'a> {
         let sub = lt.sub_of(op.j as usize);
         let p = self.placement.p_group(op.layer, op.i, op.l, lt.tn, sub, lt.ways);
         let has_psum_in = op.psum_dep.is_some();
+        let op_layer = op.layer;
 
         let mut slice = self.ready_slice(op_idx).max(self.frontier);
         let mut deferrals = 0u32;
@@ -564,6 +607,13 @@ impl<'a> Scheduler<'a> {
                 st.pods.set(pod);
                 st.pods_used += 1;
                 self.ctx.busy_per_slice[slice as usize] += 1;
+                self.trace(|| Event::TilePlaced {
+                    op: op_idx as u32,
+                    layer: op_layer,
+                    slice,
+                    pod: pod as u32,
+                    deferrals,
+                });
                 return (slice, pod as u32, deferrals);
             }
             deferrals += 1;
@@ -679,6 +729,7 @@ impl<'a> Scheduler<'a> {
         // log2(w) slices of tree latency.
         let capacity = (self.cfg.num_post_processors / 2).max(1) as u32;
         let total = pp.pp_slots();
+        let pp_layer = pp.layer;
         let earliest = (tails_done + 1 + pp.tree_depth()).max(self.frontier);
         let mut slice = earliest;
         if total <= capacity {
@@ -688,6 +739,12 @@ impl<'a> Scheduler<'a> {
                 let st = &mut self.ctx.ring[ring_idx];
                 if st.pp_used + total <= capacity {
                     st.pp_used += total;
+                    self.trace(|| Event::PpPlaced {
+                        pp: pp_idx as u32,
+                        layer: pp_layer,
+                        slice,
+                        spill: 0,
+                    });
                     return slice;
                 }
                 slice += 1;
@@ -697,14 +754,24 @@ impl<'a> Scheduler<'a> {
         // spill the remaining pair-slots into subsequent slices instead
         // of silently shrinking the merge.
         let mut remaining = total;
+        let mut used_slices = 0u32;
         loop {
             let ring_idx = self.open_slice(slice);
             let st = &mut self.ctx.ring[ring_idx];
             let free = capacity - st.pp_used;
             let take = free.min(remaining);
+            if take > 0 {
+                used_slices += 1;
+            }
             st.pp_used += take;
             remaining -= take;
             if remaining == 0 {
+                self.trace(|| Event::PpPlaced {
+                    pp: pp_idx as u32,
+                    layer: pp_layer,
+                    slice,
+                    spill: used_slices - 1,
+                });
                 return slice;
             }
             slice += 1;

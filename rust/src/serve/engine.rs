@@ -20,6 +20,7 @@ use std::collections::{HashMap, VecDeque};
 
 use crate::arch::ArchConfig;
 use crate::compile::CompiledProgram;
+use crate::obs::{Event, LaunchReason, NullSink, TraceSink};
 use crate::sim::{SimContext, SimOptions};
 use crate::stats::RunStats;
 use crate::workloads::ModelGraph;
@@ -367,6 +368,20 @@ impl Engine {
 
     /// Run the trace to completion (arrivals must be time-sorted).
     pub fn run(&mut self, arrivals: &[Arrival]) -> EngineReport {
+        self.run_traced(arrivals, &mut NullSink)
+    }
+
+    /// [`Engine::run`] with a flight-recorder sink: emits
+    /// [`Event::RequestArrive`]/[`Event::RequestReject`] at admission,
+    /// [`Event::BatchLaunch`] (with the batch-formation reason) per
+    /// launch, and [`Event::RequestServed`] per completion, carrying
+    /// `t_mfree` — when the accelerator came free for the request's
+    /// batch — so exporters can split latency into
+    /// queue-wait/batch-wait/service.  Identical report to `run` for
+    /// any sink; the engine's own [`CostCache`] context never gets a
+    /// sink (its memoized cost lookups would make scheduler-level
+    /// events depend on cache warmness).
+    pub fn run_traced(&mut self, arrivals: &[Arrival], sink: &mut dyn TraceSink) -> EngineReport {
         debug_assert!(arrivals.windows(2).all(|w| w[0].t <= w[1].t));
         let nt = self.n_tenants;
         let max_batch = self.ecfg.policy.max_batch.max(1);
@@ -395,8 +410,22 @@ impl Engine {
                 if reject {
                     report.rejected += 1;
                     report.rejected_by_tenant[a.tenant] += 1;
+                    if sink.enabled() {
+                        sink.event(Event::RequestReject {
+                            id: a.id,
+                            tenant: a.tenant as u32,
+                            t: a.t,
+                        });
+                    }
                 } else {
                     queues[a.tenant].push_back(a);
+                    if sink.enabled() {
+                        sink.event(Event::RequestArrive {
+                            id: a.id,
+                            tenant: a.tenant as u32,
+                            t: a.t,
+                        });
+                    }
                 }
             }
 
@@ -451,6 +480,29 @@ impl Engine {
                 let entry = self.cache.cost(&comp);
                 let start = t;
                 let end = start + entry.seconds;
+                if sink.enabled() {
+                    // Reason follows the launch condition's evaluation
+                    // order; `t_free` still holds the pre-launch value.
+                    let reason = if ready >= max_batch {
+                        LaunchReason::Filled
+                    } else if drained {
+                        LaunchReason::Drained
+                    } else {
+                        LaunchReason::Timeout
+                    };
+                    let units = comp.iter().map(|&(_, u)| u as u32).sum();
+                    sink.event(Event::BatchLaunch { t_start: start, t_end: end, units, reason });
+                    for a in &popped_all {
+                        sink.event(Event::RequestServed {
+                            id: a.id,
+                            tenant: a.tenant as u32,
+                            t_arrival: a.t,
+                            t_mfree: t_free,
+                            t_start: start,
+                            t_end: end,
+                        });
+                    }
+                }
                 for a in &popped_all {
                     report.completed.push(ServedRequest {
                         id: a.id,

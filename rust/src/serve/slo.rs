@@ -24,16 +24,7 @@ pub struct LatencyStats {
     pub max: f64,
 }
 
-/// Nearest-rank percentile of a **sorted** sample slice; `q` in
-/// `[0, 100]`.  Empty input yields 0 (there is no latency to report).
-pub fn percentile(sorted: &[f64], q: f64) -> f64 {
-    if sorted.is_empty() {
-        return 0.0;
-    }
-    let n = sorted.len();
-    let rank = (q / 100.0 * n as f64).ceil() as usize;
-    sorted[rank.clamp(1, n) - 1]
-}
+pub use crate::stats::percentile;
 
 impl LatencyStats {
     /// Summarize a sample set (sorts a copy; callers keep their order).

@@ -17,6 +17,7 @@ pub mod sweep;
 
 use crate::arch::ArchConfig;
 use crate::compile::{self, CompiledProgram, TilingSpec};
+use crate::obs::{Event, Recorder};
 use crate::scheduler::SchedulerOptions;
 use crate::stats::RunStats;
 use crate::workloads::ModelGraph;
@@ -68,6 +69,23 @@ pub fn simulate_with(
 ) -> RunStats {
     let cp: CompiledProgram = compile::compile_with(ctx, cfg, model, opts);
     cp.execute_with(ctx, cfg, opts)
+}
+
+/// [`simulate`] with the flight recorder on: compile *untraced*, then
+/// execute with a [`Recorder`] installed, so the returned events cover
+/// exactly the final schedule (tiling-strategy trials during
+/// compilation — e.g. under [`TilingSpec::Auto`] — don't emit).
+pub fn simulate_traced(
+    cfg: &ArchConfig,
+    model: &ModelGraph,
+    opts: &SimOptions,
+) -> (RunStats, Vec<Event>) {
+    let mut ctx = SimContext::new();
+    let cp: CompiledProgram = compile::compile_with(&mut ctx, cfg, model, opts);
+    ctx.set_sink(Box::new(Recorder::new()));
+    let stats = cp.execute_with(&mut ctx, cfg, opts);
+    let events = ctx.drain_events();
+    (stats, events)
 }
 
 /// Simulate several models co-scheduled (multi-tenancy, §6.1/Fig. 11).

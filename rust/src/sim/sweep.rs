@@ -23,6 +23,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::arch::ArchConfig;
 use crate::compile::CompiledProgram;
+use crate::obs::{Event, Recorder};
 use crate::stats::RunStats;
 
 use super::{SimContext, SimOptions};
@@ -95,6 +96,34 @@ impl SweepExecutor {
         F: Fn(&mut SimContext, usize, &T) -> R + Sync,
     {
         self.run_with_state(items, SimContext::new, f)
+    }
+
+    /// Map `f` over `items` with one *recording* pooled context per
+    /// worker; returns each point's result **with its trace events**,
+    /// in item order.  Workers record privately and results are
+    /// reassembled by item index, so concatenating the per-item event
+    /// streams yields a byte-identical trace for any thread count,
+    /// including 1 (property-tested).  `f` should drain nothing
+    /// itself; each item's events are drained after its closure
+    /// returns.
+    pub fn run_traced<T, R, F>(&self, items: &[T], f: F) -> Vec<(R, Vec<Event>)>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(&mut SimContext, usize, &T) -> R + Sync,
+    {
+        self.run_with_state(
+            items,
+            || {
+                let mut ctx = SimContext::new();
+                ctx.set_sink(Box::new(Recorder::new()));
+                ctx
+            },
+            |ctx, i, t| {
+                let r = f(ctx, i, t);
+                (r, ctx.drain_events())
+            },
+        )
     }
 
     /// Map `f` over `items` with arbitrary per-worker state created by
@@ -226,6 +255,42 @@ mod tests {
         assert_eq!(seq, par, "thread count must not change compiled execution");
         for (cfg, s) in cfgs.iter().zip(&seq) {
             assert_eq!(*s, simulate(cfg, &g, &opts), "{}", cfg.interconnect);
+        }
+    }
+
+    #[test]
+    fn traced_sweep_is_thread_count_invariant() {
+        // Same items, any worker count: identical per-item results AND
+        // a byte-identical merged trace.json (index-ordered merge).
+        use crate::obs::perfetto;
+        let cfg = ArchConfig::with_array(ArrayDims::new(16, 16), 16);
+        let opts = SimOptions { memory_model: false, ..Default::default() };
+        let models: Vec<ModelGraph> = (1..=5)
+            .map(|i| {
+                let mut g = ModelGraph::new(format!("m{i}"));
+                g.add("fc", 48 * i, 64, 64, vec![]);
+                g
+            })
+            .collect();
+        let run = |threads: usize| {
+            SweepExecutor::with_threads(threads)
+                .run_traced(&models, |ctx, _, m| simulate_with(ctx, &cfg, m, &opts))
+        };
+        let render = |points: &[(RunStats, Vec<crate::obs::Event>)]| {
+            let merged: Vec<crate::obs::Event> =
+                points.iter().flat_map(|(_, e)| e.iter().cloned()).collect();
+            perfetto::trace_json(&merged, 1.0).render()
+        };
+        let seq = run(1);
+        assert!(seq.iter().all(|(_, e)| !e.is_empty()), "every point records events");
+        let seq_trace = render(&seq);
+        for threads in [2usize, 4, 8] {
+            let par = run(threads);
+            for ((rs, es), (rp, ep)) in seq.iter().zip(&par) {
+                assert_eq!(rs, rp, "threads={threads}");
+                assert_eq!(es, ep, "threads={threads}");
+            }
+            assert_eq!(render(&par), seq_trace, "threads={threads}");
         }
     }
 

@@ -1,7 +1,28 @@
-//! Run statistics: the metrics every experiment in §6 reports.
+//! Run statistics: the metrics every experiment in §6 reports, plus
+//! the shared sample-statistics helpers ([`percentile`]) the serving
+//! and cluster SLO layers build their summaries on.
 
 use crate::arch::ArchConfig;
 use crate::power;
+
+/// Nearest-rank percentile of a **sorted** sample slice; `q` in
+/// `[0, 100]`.  Empty input yields 0 (there is no latency to report).
+///
+/// Nearest-rank semantics: the result is always an element of the
+/// input (no interpolation) — the smallest sample such that at least
+/// `q`% of the set is ≤ it, i.e. `sorted[ceil(q/100 · n) - 1]` with
+/// the rank clamped to `[1, n]`.  This is the single percentile
+/// definition in the crate; `serve::slo` and `cluster::slo` both
+/// re-export/consume it so serving-level and fleet-level reports can
+/// never drift.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let n = sorted.len();
+    let rank = (q / 100.0 * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
 
 /// Outcome of scheduling/simulating one program on one configuration.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
@@ -149,6 +170,35 @@ mod tests {
         assert_eq!(s.busy_pods_frac(&cfg), 0.0);
         assert_eq!(s.cycles_per_tile_op(), 0.0);
         assert_eq!(s.achieved_ops(&cfg), 0.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank_boundaries() {
+        // Property: for every sample size, nearest-rank p50/p95/p99 pick
+        // exactly the ceil(q·n)-th element, and p0/p100 clamp to the ends.
+        for n in 1..=100usize {
+            let sorted: Vec<f64> = (0..n).map(|i| i as f64).collect();
+            for &(q, frac) in &[(50.0, 0.50), (95.0, 0.95), (99.0, 0.99)] {
+                let rank = (frac * n as f64).ceil() as usize;
+                let expect = sorted[rank.clamp(1, n) - 1];
+                let got = percentile(&sorted, q);
+                assert_eq!(got, expect, "n={n} q={q}");
+            }
+            assert_eq!(percentile(&sorted, 0.0), sorted[0], "n={n} p0");
+            assert_eq!(percentile(&sorted, 100.0), sorted[n - 1], "n={n} p100");
+        }
+    }
+
+    #[test]
+    fn percentile_exact_small_samples() {
+        let s = [1.0, 2.0, 3.0, 4.0];
+        // ceil(0.5·4)=2 → element 2; ceil(0.95·4)=4 → element 4.
+        assert_eq!(percentile(&s, 50.0), 2.0);
+        assert_eq!(percentile(&s, 75.0), 3.0);
+        assert_eq!(percentile(&s, 95.0), 4.0);
+        assert_eq!(percentile(&s, 99.0), 4.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.5], 99.0), 7.5);
     }
 
     #[test]

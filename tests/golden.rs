@@ -25,6 +25,9 @@
 //! caches, no sweep executor) and the `fleet` experiment against a
 //! sequential warm-cache fleet run — byte-equality doubles as a proof
 //! that the pooled/parallel fast paths are semantically transparent.
+//! The flight-recorder artifact set (`sosa trace --quick`) is pinned
+//! the same way: trace/timeline/latency/metrics snapshots are all
+//! sim-time, so byte-equality is expected everywhere.
 
 use std::path::{Path, PathBuf};
 
@@ -553,4 +556,17 @@ fn fleet_matches_reference_and_golden() {
          reference (parallel node simulation must be transparent)"
     );
     golden_check("fleet_quick.csv", &produced);
+}
+
+#[test]
+fn flight_recorder_artifacts_match_golden() {
+    // The `sosa trace --quick` artifact set, byte-pinned.  Every value
+    // in these files is sim-time, so the snapshots are stable across
+    // machines and thread counts; drift means the event stream or an
+    // exporter changed semantics (re-bless only if intentional).
+    let a = sosa::obs::flight::flight_quick();
+    golden_check("trace_quick.json", &a.trace);
+    golden_check("trace_timeline_quick.csv", &a.timeline);
+    golden_check("trace_latency_quick.csv", &a.latency);
+    golden_check("trace_metrics_quick.txt", &a.metrics);
 }
