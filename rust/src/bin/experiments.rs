@@ -23,6 +23,8 @@ fn main() {
         quick: args.flag("quick"),
     };
     if args.positional.first().map(|s| s.as_str()) == Some("serve") {
+        // lint:allow(wallclock) — operator progress reporting only;
+        // never feeds back into simulated results.
         let t0 = std::time::Instant::now();
         serving_exp::serve_cmd(&args, &opts).expect("serve failed");
         eprintln!("\nserve done in {:.1?}", t0.elapsed());
@@ -37,6 +39,7 @@ fn main() {
         eprintln!("experiments: {}", ALL.join(" "));
         std::process::exit(if args.flag("list") { 0 } else { 2 });
     }
+    // lint:allow(wallclock) — operator progress reporting only.
     let t0 = std::time::Instant::now();
     for id in &args.positional {
         if id == "all" {

@@ -19,6 +19,9 @@
 //!    [`SweepExecutor`] and the reports are merged **by node index** —
 //!    bit-identical results for any thread count (`SOSA_THREADS`).
 
+// lint:allow(cast, file) — the casts here pack tenant and node
+// indices into trace events; both are bounded by the arrival list and
+// the fleet size.
 use crate::arch::ArchConfig;
 use crate::error::{Error, Result};
 use crate::obs::{Event, Recorder};
@@ -117,13 +120,18 @@ pub struct Fleet {
 }
 
 impl Fleet {
-    /// Fleet over explicit (possibly heterogeneous) nodes.
+    /// Fleet over explicit (possibly heterogeneous) nodes.  Node specs
+    /// are statically verified at construction ([`crate::verify`]):
+    /// any Error-severity diagnostic (bad geometry, non-routable pod
+    /// count, broken N-to-N invariant) rejects the fleet with the
+    /// diagnostic's rendering; warnings (TDP envelope) are tolerated.
     pub fn new(nodes: Vec<NodeSpec>, fcfg: FleetConfig) -> Result<Fleet> {
         if nodes.is_empty() {
             return Err(Error::config("fleet needs at least one node"));
         }
-        for n in &nodes {
-            n.cfg.validate()?;
+        let findings = crate::verify::Verifier::new().check_nodes(&nodes);
+        if let Some(d) = findings.first_error() {
+            return Err(Error::config(d.render()));
         }
         Ok(Fleet { nodes, fcfg })
     }

@@ -135,6 +135,8 @@ impl Router {
         self.drain_to(a.t);
         let view: Vec<(u32, u32)> = candidates
             .iter()
+            // lint:allow(cast) — node index < fleet size; queue depth
+            // is bounded by the arrival count.
             .map(|&n| (n as u32, self.inflight[n].len() as u32))
             .collect();
         let pick = self.pick(a, candidates);

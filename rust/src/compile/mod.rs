@@ -257,7 +257,7 @@ fn build(
     };
     let prog = tile_model_per_layer(graph, cfg.array.r, cfg.array.c, &strategies, cfg.num_pods);
     let estimate = analytic::estimate_per_layer(cfg, graph, &strategies);
-    CompiledProgram {
+    let cp = CompiledProgram {
         models: models.to_vec(),
         prog,
         strategies,
@@ -268,7 +268,19 @@ fn build(
             pods: cfg.num_pods,
             interconnect,
         },
+    };
+    // Static verification at the compile front door: every debug build
+    // checks every artifact (the promoted form of the old tiling
+    // debug_asserts); release builds check behind `SimOptions.verify`.
+    if cfg!(debug_assertions) || opts.verify {
+        let findings = crate::verify::verify_program(&cp, cfg);
+        assert!(
+            findings.ok(),
+            "compile produced a program the static verifier rejects:\n{}",
+            findings.render_text()
+        );
     }
+    cp
 }
 
 #[cfg(test)]

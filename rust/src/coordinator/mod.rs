@@ -194,6 +194,8 @@ impl Coordinator {
             }
             report.groups.extend(rep.group_stats);
             t0 += rep.makespan_s;
+            // lint:allow(cast) — request-group sizes are bounded by the
+            // request list length, far below u32::MAX.
             base += group.len() as u32;
         }
         report.makespan_s = t0;

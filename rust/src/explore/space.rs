@@ -294,6 +294,22 @@ impl DesignSpace {
         })
     }
 
+    /// Skip points the static verifier ([`crate::verify`]) rejects:
+    /// each Error-severity diagnostic becomes a skip-with-reason
+    /// record under the `"verify"` constraint, so infeasible corners
+    /// of a sweep surface in [`Enumeration::skipped`] instead of
+    /// panicking inside the evaluator.  Config-level checks only
+    /// (routability, N-to-N banks, U/V, Butterfly radix) — program
+    /// checks run at compile time behind `SimOptions.verify`.
+    pub fn verified(self) -> Self {
+        self.constrain("verify", move |p| {
+            let findings = crate::verify::verify_config(&p.cfg);
+            findings
+                .first_error()
+                .map(|d| format!("{}: {}", d.code, d.message))
+        })
+    }
+
     /// Skip points provisioning more than `bytes` of on-chip SRAM.
     pub fn sram_at_most(self, bytes: usize) -> Self {
         self.constrain("sram_at_most", move |p| {

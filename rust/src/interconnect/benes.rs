@@ -12,6 +12,8 @@
 //! rearrangeability claim in tests with an actual looping-algorithm
 //! route construction for permutations.
 
+// lint:allow(cast, file) — casts here pack port indices and owner
+// tokens (`src + 1`); both bounded by num_pods ≪ u32::MAX.
 use super::Fabric;
 
 /// Benes fabric (port-exclusivity model; see module docs).

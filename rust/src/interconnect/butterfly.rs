@@ -13,6 +13,9 @@
 //! prefix (same wire, same owner ⇒ same data), branching where the
 //! destination bits diverge — the natural Butterfly multicast.
 
+// lint:allow(cast, file) — casts here pack port indices and owner
+// tokens (`src + 1`); ports ≤ num_pods, which `validate()` bounds far
+// below u16/u32 limits.
 use super::Fabric;
 use crate::util::ilog2;
 

@@ -2,6 +2,8 @@
 //! (§3.2 rejects it on power; Fig. 12a shows it winning throughput by
 //! only ~4% at 2.3× the interconnect power).
 
+// lint:allow(cast, file) — casts here pack port indices and owner
+// tokens (`src + 1`); both bounded by num_pods ≪ u32::MAX.
 use super::Fabric;
 
 /// Crossbar fabric.  Any source can reach any free destination; a

@@ -8,6 +8,8 @@
 //! slice, which is why §3.2 rules the H-tree out for hundreds of pods
 //! (the scaled-up N-replicated variant costs N², also rejected).
 
+// lint:allow(cast, file) — casts here pack tree-node indices and owner
+// tokens (`src + 1`); both bounded by 2·num_pods ≪ u32::MAX.
 use super::Fabric;
 
 /// H-tree fabric.

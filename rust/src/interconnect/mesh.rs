@@ -9,6 +9,8 @@
 //! The limited bisection (√N links per cut vs N/2 for Butterfly) is what
 //! makes dense pod↔bank permutations fail here.
 
+// lint:allow(cast, file) — casts here pack link indices and owner
+// tokens (`src + 1`); both bounded by num_pods ≪ u32::MAX.
 use super::Fabric;
 
 /// XY-routed mesh fabric.

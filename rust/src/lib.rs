@@ -92,9 +92,11 @@ pub mod stats;
 pub mod testutil;
 pub mod tiling;
 pub mod util;
+pub mod verify;
 pub mod workloads;
 
 pub use arch::{ArchConfig, ArrayDims};
 pub use compile::{CompiledProgram, TilingSpec};
 pub use error::{Error, Result};
 pub use explore::{DesignPoint, DesignSpace, Explorer, ParetoFrontier};
+pub use verify::{Diagnostic, Findings, Severity, Verifier};

@@ -5,6 +5,9 @@
 //!   explore    — design-space sweep: granularity × interconnect ×
 //!                tiling × workload × fleet size under constraints,
 //!                with Pareto frontier extraction and CSV/JSON reports
+//!   check      — static verification: run the `verify` diagnostics on
+//!                a design point, a design space, or every preset ×
+//!                §5 benchmark, without simulating; exit 1 on errors
 //!   serve      — multi-tenant serving over a request list
 //!   cluster    — fleet-scale serving: N accelerator nodes behind a
 //!                dispatch policy (rr/jsq/p2c/slo), fleet SLO report
@@ -120,9 +123,10 @@ fn parse_list<'a>(args: &'a Args, key: &str) -> Option<Vec<&'a str>> {
         .map(|v| v.split(',').map(str::trim).filter(|s| !s.is_empty()).collect())
 }
 
-/// `sosa explore`: build a [`DesignSpace`] from axis flags, evaluate
-/// it, optionally extract a Pareto frontier, and write CSV/JSON.
-fn cmd_explore(args: &Args) {
+/// Build a [`DesignSpace`] from the shared axis flags (`--arrays`,
+/// `--pods`, `--interconnects`, `--tiling`, `--workloads`, `--batches`,
+/// constraint flags).  Used by both `explore` and `check --space`.
+fn space_from_args(args: &Args) -> DesignSpace {
     let preset = args.get_or("preset", "baseline");
     let template = presets::by_name(preset).unwrap_or_else(|| {
         panic!("unknown preset {preset} (have: {})", presets::NAMES.join(", "))
@@ -194,6 +198,14 @@ fn cmd_explore(args: &Args) {
     if let Some(w) = args.get_parse::<f64>("fleet-tdp") {
         space = space.under_fleet_tdp(w);
     }
+    space
+}
+
+/// `sosa explore`: build a [`DesignSpace`] from axis flags, evaluate
+/// it, optionally extract a Pareto frontier, and write CSV/JSON.
+fn cmd_explore(args: &Args) {
+    let space = space_from_args(args);
+    let tdp = args.get_parse::<f64>("tdp");
     let objectives: Vec<Objective> = parse_list(args, "objective")
         .unwrap_or_else(|| vec!["eff_tops_per_w"])
         .iter()
@@ -287,6 +299,160 @@ fn cmd_explore(args: &Args) {
         let path = format!("{out}/explore.json");
         report.write_json(&path).expect("write json");
         println!("wrote {path}");
+    }
+}
+
+/// Loose variant of [`config_from`] for `sosa check`: skips
+/// `validate()` so a broken configuration is *reported* by the
+/// verifier instead of panicking before it gets there.
+fn config_from_loose(args: &Args) -> ArchConfig {
+    if let Some(p) = args.get("preset") {
+        return presets::by_name(p).unwrap_or_else(|| {
+            panic!("unknown preset {p} (have: {})", presets::NAMES.join(", "))
+        });
+    }
+    let array = parse_array(args.get_or("array", "32x32"));
+    let pods: usize = args.get_parse("pods").unwrap_or(256);
+    let mut cfg = ArchConfig::with_array(array, pods);
+    if let Some(icn) = args.get("interconnect") {
+        cfg.interconnect = parse_interconnect(icn);
+    }
+    if let Some(kb) = args.get_parse::<usize>("bank-kb") {
+        cfg.bank_kb = kb;
+    }
+    cfg
+}
+
+/// `sosa check`: run the static verifier without simulating.
+///
+/// Modes:
+///   default — one design point: verify the configuration, and when it
+///             is clean, compile `--model` on it and verify the program
+///   --space — every point of an axis-flag design space (same flags as
+///             `explore`), each compiled and verified
+///   --all   — every preset × every §5 benchmark model
+///
+/// Exits 1 when any Error-severity diagnostic fires; Warnings (TDP,
+/// SRAM spill, pp fan-in) are reported but do not fail the check.
+fn cmd_check(args: &Args) {
+    use sosa::util::Json;
+    use sosa::verify::{Findings, Verifier};
+    let format = args.get_or("format", "text");
+    assert!(
+        matches!(format, "text" | "json"),
+        "unknown --format {format} (use text|json)"
+    );
+    let v = match args.get_parse::<f64>("tdp") {
+        Some(w) => Verifier::with_tdp(w),
+        None => Verifier::new(),
+    };
+    let mut opts = SimOptions::default();
+    if let Some(t) = args.get("tiling") {
+        opts.spec = parse_tiling(t)
+            .unwrap_or_else(|| panic!("unknown tiling {t} (rxr|none|fixed:K|auto)"));
+    }
+    // (label, findings) per checked point, in deterministic order.
+    let mut results: Vec<(String, Findings)> = Vec::new();
+    // Skip records from --space enumeration: (label, constraint, reason).
+    let mut skipped: Vec<(String, String, String)> = Vec::new();
+    if args.flag("all") {
+        for name in presets::NAMES {
+            let cfg = presets::by_name(name).expect("preset");
+            let cf = v.check_config(&cfg);
+            if !cf.ok() {
+                results.push((name.to_string(), cf));
+                continue;
+            }
+            for model in zoo::benchmarks() {
+                let cp = sosa::compile::compile(&cfg, &model, &opts);
+                let label = format!("{name} {}", model.name);
+                results.push((label, v.check_program(&cp, &cfg)));
+            }
+        }
+    } else if args.flag("space") {
+        let space = space_from_args(args).verified();
+        let enumeration = space.enumerate().expect("invalid design space");
+        for s in &enumeration.skipped {
+            skipped.push((s.label.clone(), s.constraint.clone(), s.reason.clone()));
+        }
+        for p in &enumeration.points {
+            let cp = sosa::compile::compile(&p.cfg, &p.workload, &p.sim);
+            results.push((p.label(), v.check_program(&cp, &p.cfg)));
+        }
+    } else {
+        // Single design point.  `--quick` (with no explicit point) is
+        // the CI smoke: one cheap array on one cheap benchmark.
+        let explicit = args.get("preset").is_some()
+            || args.get("array").is_some()
+            || args.get("pods").is_some();
+        let cfg = if args.flag("quick") && !explicit {
+            ArchConfig::with_array(ArrayDims::new(16, 16), 16)
+        } else {
+            config_from_loose(args)
+        };
+        let default_model = if args.flag("quick") { "bert-medium" } else { "resnet50" };
+        let name = args.get_or("model", default_model);
+        let batch: usize = args.get_parse("batch").unwrap_or(1);
+        let model = zoo::by_name(name)
+            .unwrap_or_else(|| panic!("unknown model {name}"))
+            .with_batch(batch);
+        let label = format!(
+            "{} pods={} {} {} b{}",
+            cfg.array, cfg.num_pods, cfg.interconnect, model.name, batch
+        );
+        let cf = v.check_config(&cfg);
+        let findings = if cf.ok() {
+            // Only compile once the configuration itself is sound: the
+            // tiler divides by array dims and the compile-time debug
+            // hook asserts, so a broken config must stop here.
+            let cp = sosa::compile::compile(&cfg, &model, &opts);
+            v.check_program(&cp, &cfg)
+        } else {
+            cf
+        };
+        results.push((label, findings));
+    }
+
+    let num_errors: usize = results.iter().map(|(_, f)| f.num_errors()).sum();
+    let num_warnings: usize = results.iter().map(|(_, f)| f.num_warnings()).sum();
+    if format == "json" {
+        let points: Vec<Json> =
+            results.iter().map(|(l, f)| f.to_labeled_json(l)).collect();
+        let skips: Vec<Json> = skipped
+            .iter()
+            .map(|(l, c, r)| {
+                Json::obj(vec![
+                    ("label", Json::str(l.clone())),
+                    ("constraint", Json::str(c.clone())),
+                    ("reason", Json::str(r.clone())),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("ok", Json::Bool(num_errors == 0)),
+            ("errors", Json::int(num_errors as u64)),
+            ("warnings", Json::int(num_warnings as u64)),
+            ("points", Json::Arr(points)),
+            ("skipped", Json::Arr(skips)),
+        ]);
+        println!("{}", doc.render());
+    } else {
+        for (label, f) in &results {
+            println!("{label}:");
+            print!("{}", f.render_text());
+        }
+        for (label, constraint, reason) in &skipped {
+            println!("skipped [{constraint}] {label}: {reason}");
+        }
+        println!(
+            "checked {} design point(s): {} error(s), {} warning(s)",
+            results.len(),
+            num_errors,
+            num_warnings
+        );
+    }
+    if num_errors > 0 {
+        std::process::exit(1);
     }
 }
 
@@ -616,13 +782,14 @@ fn main() {
     match args.positional.first().map(|s| s.as_str()) {
         Some("simulate") => cmd_simulate(&args),
         Some("explore") => cmd_explore(&args),
+        Some("check") => cmd_check(&args),
         Some("serve") => cmd_serve(&args),
         Some("cluster") => cmd_cluster(&args),
         Some("trace") => cmd_trace(&args),
         Some("e2e") => cmd_e2e(&args),
         Some("list") => cmd_list(),
         _ => {
-            eprintln!("usage: sosa <simulate|explore|serve|cluster|trace|e2e|list> [options]");
+            eprintln!("usage: sosa <simulate|explore|check|serve|cluster|trace|e2e|list> [options]");
             eprintln!("  simulate --model resnet50 --array 32x32 --pods 256 \\");
             eprintln!("           [--interconnect butterfly2|benes|crossbar|mesh|htree]");
             eprintln!("           [--batch N] [--bank-kb 256] [--per-layer]");
@@ -635,6 +802,10 @@ fn main() {
             eprintln!("           [--fleet-sizes 1,2,4 --fleet-tdp W]");
             eprintln!("           [--objective eff_tops_per_w,latency] [--pareto]");
             eprintln!("           [--format csv|json|both] [--out results] [--quick]");
+            eprintln!("  check    [--preset P | --array RxC --pods N [--interconnect X]]");
+            eprintln!("           [--model M --batch B --tiling rxr|none|fixed:K|auto]");
+            eprintln!("           [--space <explore axis flags> | --all | --quick]");
+            eprintln!("           [--tdp W] [--format text|json]   (exit 1 on errors)");
             eprintln!("  serve    --models resnet152,bert-medium [--single-tenant]");
             eprintln!("           [--trace trace.json] [--timeline latency.csv]");
             eprintln!("  cluster  [--nodes N | --node-pods 256,64] [--array RxC]");

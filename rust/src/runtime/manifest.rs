@@ -140,6 +140,7 @@ impl Manifest {
 
     /// All entry names (sorted).
     pub fn names(&self) -> Vec<&str> {
+        // lint:allow(hashiter) — order is restored by the sort below.
         let mut v: Vec<&str> = self.entries.keys().map(|s| s.as_str()).collect();
         v.sort_unstable();
         v

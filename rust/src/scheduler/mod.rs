@@ -510,6 +510,8 @@ impl<'a> Scheduler<'a> {
     pub fn chain_gap_slices(&self) -> u32 {
         let slice = self.slice_cycles();
         let rt = 2 * self.cfg.interconnect.latency_cycles(self.cfg.num_pods.max(2));
+        // lint:allow(cast) — interconnect latencies are a few cycles
+        // per stage over log2(pods) stages; the quotient is tiny.
         (rt.saturating_sub(slice)).div_ceil(slice) as u32
     }
 
@@ -572,7 +574,10 @@ impl<'a> Scheduler<'a> {
         debug_assert!(slice >= self.frontier);
         while slice > self.horizon {
             self.horizon += 1;
+            // lint:allow(cast) — the ring window is a small constant
+            // (SchedOptions::window, default 64).
             if self.horizon - self.frontier >= self.opts.window as u32 {
+                // lint:allow(cast)
                 self.frontier = self.horizon - self.opts.window as u32 + 1;
             }
             let idx = (self.horizon as usize) % self.opts.window;
@@ -608,12 +613,16 @@ impl<'a> Scheduler<'a> {
                 st.pods_used += 1;
                 self.ctx.busy_per_slice[slice as usize] += 1;
                 self.trace(|| Event::TilePlaced {
+                    // lint:allow(cast) — op indices fit u32: verifier
+                    // RANGE rejects programs whose ids overflow u32.
                     op: op_idx as u32,
                     layer: op_layer,
                     slice,
+                    // lint:allow(cast) — pod index < num_pods ≤ u32.
                     pod: pod as u32,
                     deferrals,
                 });
+                // lint:allow(cast)
                 return (slice, pod as u32, deferrals);
             }
             deferrals += 1;
@@ -727,7 +736,7 @@ impl<'a> Scheduler<'a> {
         // Post-processors work in pairs (§4.2) — each add/epilogue
         // occupies a pair for a slice; a w-way merge costs w slots and
         // log2(w) slices of tree latency.
-        let capacity = (self.cfg.num_post_processors / 2).max(1) as u32;
+        let capacity = pp_capacity(self.cfg);
         let total = pp.pp_slots();
         let pp_layer = pp.layer;
         let earliest = (tails_done + 1 + pp.tree_depth()).max(self.frontier);
@@ -740,6 +749,8 @@ impl<'a> Scheduler<'a> {
                 if st.pp_used + total <= capacity {
                     st.pp_used += total;
                     self.trace(|| Event::PpPlaced {
+                        // lint:allow(cast) — pp-op indices fit u32 (one
+                        // per tile group; verifier GRID bounds them).
                         pp: pp_idx as u32,
                         layer: pp_layer,
                         slice,
@@ -767,6 +778,7 @@ impl<'a> Scheduler<'a> {
             remaining -= take;
             if remaining == 0 {
                 self.trace(|| Event::PpPlaced {
+                    // lint:allow(cast)
                     pp: pp_idx as u32,
                     layer: pp_layer,
                     slice,
@@ -777,6 +789,16 @@ impl<'a> Scheduler<'a> {
             slice += 1;
         }
     }
+}
+
+/// Post-processor pair-slots available per slice: PPs work in pairs
+/// (§4.2), each add/epilogue occupying a pair for a slice.  Shared by
+/// [`Scheduler`] (placement) and [`crate::verify`] (the static fan-in
+/// check) so the two can never drift apart.
+pub fn pp_capacity(cfg: &ArchConfig) -> u32 {
+    // lint:allow(cast) — num_post_processors/2 is a hardware resource
+    // count, far below u32::MAX for any constructible config.
+    (cfg.num_post_processors / 2).max(1) as u32
 }
 
 /// Convenience: schedule a program with default options.

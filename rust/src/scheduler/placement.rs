@@ -101,7 +101,9 @@ mod tests {
         let p = Placement::new(256);
         let (tm, tn, ways) = (16usize, 8usize, 2usize); // 256 subchains
         let mut banks = std::collections::HashSet::new();
+        // lint:allow(cast) — test grid extents are small constants.
         for i in 0..tm as u16 {
+            // lint:allow(cast)
             for l in 0..tn as u16 {
                 for sub in 0..ways {
                     banks.insert(p.p_group(9, i, l, tn, sub, ways).bank);
@@ -117,9 +119,11 @@ mod tests {
         let (tm, tn) = (32usize, 7usize);
         for j in [0u16, 1, 5] {
             let xb: std::collections::HashSet<_> =
+                // lint:allow(cast) — test grid extents are small constants.
                 (0..tm as u16).map(|i| p.x_tile(4, i, j, tm).bank).collect();
             assert_eq!(xb.len(), tm);
             let wb: std::collections::HashSet<_> =
+                // lint:allow(cast)
                 (0..tn as u16).map(|l| p.w_tile(4, j, l, tn).bank).collect();
             assert_eq!(wb.len(), tn);
         }

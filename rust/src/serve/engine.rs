@@ -16,6 +16,9 @@
 //! order leaks into results — equal inputs produce byte-identical
 //! reports.
 
+// lint:allow(cast, file) — the casts here pack tenant indices and
+// pod-unit counts into trace events; both are bounded by the request
+// list length and `num_pods` (verified ≤ u32 at fleet construction).
 use std::collections::{HashMap, VecDeque};
 
 use crate::arch::ArchConfig;

@@ -152,7 +152,10 @@ pub fn partition_pods_under_tdp(
 
 /// Derive the sub-accelerator configuration for a partition: same pod
 /// microarchitecture, `pods` pods with matching bank/post-processor
-/// counts (the N-to-N invariant).
+/// counts (the N-to-N invariant).  The result is statically verified
+/// ([`crate::verify`]): any Error-severity diagnostic (non-routable
+/// pod count, broken invariants inherited from the parent config)
+/// rejects the partition.
 pub fn sub_config(cfg: &ArchConfig, pods: usize) -> Result<ArchConfig> {
     let sub = ArchConfig {
         num_pods: pods,
@@ -160,7 +163,9 @@ pub fn sub_config(cfg: &ArchConfig, pods: usize) -> Result<ArchConfig> {
         num_post_processors: pods,
         ..cfg.clone()
     };
-    sub.validate()?;
+    if let Some(d) = crate::verify::verify_config(&sub).first_error() {
+        return Err(Error::config(d.render()));
+    }
     Ok(sub)
 }
 

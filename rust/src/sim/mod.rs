@@ -41,6 +41,12 @@ pub struct SimOptions {
     /// baseline `benches/sched.rs` measures against.  Results are
     /// bit-identical either way.
     pub pooling: bool,
+    /// Run the static verifier ([`crate::verify`]) on every compiled
+    /// program in **release** builds too (debug builds always verify).
+    /// Off by default: compiled output of a valid config verifies clean
+    /// by construction, so release hot paths skip the extra O(program)
+    /// pass unless asked.
+    pub verify: bool,
 }
 
 impl Default for SimOptions {
@@ -50,6 +56,7 @@ impl Default for SimOptions {
             sched: SchedulerOptions::default(),
             memory_model: true,
             pooling: true,
+            verify: false,
         }
     }
 }

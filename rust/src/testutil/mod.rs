@@ -3,6 +3,7 @@
 //! subset we need: random case generation, failure reporting with the
 //! seed, and a simple shrink-by-halving pass for integer tuples).
 
+pub mod mutate;
 pub mod prop;
 
 /// xorshift64* PRNG — deterministic, seedable, no dependencies.

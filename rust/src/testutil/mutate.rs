@@ -1,0 +1,104 @@
+//! Program corruption seeding for [`crate::verify`] tests.
+//!
+//! Each [`Corruption`] takes a *valid* [`TileProgram`] and plants one
+//! specific defect, together with the diagnostic [`Code`] the static
+//! verifier must report for it.  The mutation suite in `verify::tests`
+//! applies every corruption to a known-good program and asserts the
+//! matching code fires — the "does each check actually catch its bug"
+//! half of the verifier's contract (the no-false-positive half is the
+//! property test over clean programs).
+//!
+//! The corruptions assume the seed program has at least one layer with
+//! a psum chain (`tk >= 2`); `seed_program` builds one.
+
+use crate::tiling::{tile_model, Strategy, TileProgram};
+use crate::verify::Code;
+use crate::workloads::ModelGraph;
+
+/// One seeded defect and the diagnostic code it must trigger.
+pub struct Corruption {
+    /// Short name for failure messages.
+    pub name: &'static str,
+    /// The diagnostic the verifier must emit for this defect.
+    pub code: Code,
+    /// Plants the defect in an otherwise valid program.
+    pub apply: fn(&mut TileProgram),
+}
+
+/// A small model whose RxR tiling on a 32×32 array has multi-tile
+/// psum chains and multiple output groups — enough structure for
+/// every corruption to land on.
+pub fn seed_model() -> ModelGraph {
+    let mut g = ModelGraph::new("mutation-seed");
+    let a = g.add("fc1", 96, 256, 96, vec![]);
+    g.add("fc2", 96, 96, 64, vec![a]);
+    g
+}
+
+/// The seed program: [`seed_model`] tiled RxR on a 32×32 array with 16
+/// pods (tk = 8 for fc1, so psum chains and subchain tails exist).
+pub fn seed_program() -> TileProgram {
+    tile_model(&seed_model(), 32, 32, Strategy::RxR, 16)
+}
+
+/// Every corruption with its expected diagnostic code.
+pub fn corruptions() -> Vec<Corruption> {
+    vec![
+        Corruption {
+            name: "drop a tile op",
+            code: Code::Grid,
+            apply: |p| {
+                p.tile_ops.pop();
+            },
+        },
+        Corruption {
+            name: "break a psum link",
+            code: Code::PsumChain,
+            apply: |p| {
+                let op = p
+                    .tile_ops
+                    .iter_mut()
+                    .find(|o| o.psum_dep.is_some())
+                    .expect("seed program must contain a psum chain");
+                op.psum_dep = None;
+            },
+        },
+        Corruption {
+            name: "overflow a dimension",
+            code: Code::FieldRange,
+            apply: |p| {
+                p.layers[0].k_part = u16::MAX as usize + 1;
+            },
+        },
+        Corruption {
+            name: "corrupt the MAC total",
+            code: Code::MacConservation,
+            apply: |p| {
+                p.total_macs = p.total_macs.wrapping_add(1);
+            },
+        },
+        Corruption {
+            name: "mismatch a merge width",
+            code: Code::MergeWidth,
+            apply: |p| {
+                p.tile_ops[0].n = p.tile_ops[0].n.wrapping_add(1);
+            },
+        },
+        Corruption {
+            name: "misnumber a tile op id",
+            code: Code::Grid,
+            apply: |p| {
+                p.tile_ops[0].id = p.tile_ops[0].id.wrapping_add(1);
+            },
+        },
+        Corruption {
+            name: "retarget a subchain tail",
+            code: Code::PsumChain,
+            apply: |p| {
+                let pp = p.pp_ops.first_mut().expect("seed program has pp ops");
+                let tail = pp.tails.first_mut().expect("pp op has tails");
+                *tail = tail.wrapping_add(1);
+            },
+        },
+    ]
+}

@@ -15,6 +15,11 @@
 //! layer-level readiness groups used by the scheduler for inter-layer
 //! pipelining.
 
+// lint:allow(cast, file) — every narrowing cast here packs a grid
+// coordinate or dimension into the u16/u32 op encoding.  All are
+// bounded by construction: `Strategy::partition` clamps `k_part` so
+// dims and grid extents fit u16, and `verify::check_tiles` re-checks
+// every field (RANGE) plus id-arithmetic overflow on each program.
 use crate::util::ceil_div;
 use crate::workloads::{GemmOp, ModelGraph};
 

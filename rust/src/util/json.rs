@@ -183,7 +183,9 @@ impl Parser {
                         other => return Err(format!("bad escape '\\{other}'")),
                     }
                 }
+                // lint:allow(cast) — char→u32 is a lossless widening.
                 c if (c as u32) < 0x20 => {
+                    // lint:allow(cast)
                     return Err(format!("raw control char {:#04x} in string", c as u32));
                 }
                 c => out.push(c),
@@ -245,6 +247,7 @@ fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
             '\n' => f.write_str("\\n")?,
             '\r' => f.write_str("\\r")?,
             '\t' => f.write_str("\\t")?,
+            // lint:allow(cast) — char→u32 is a lossless widening.
             c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
             c => write!(f, "{c}")?,
         }

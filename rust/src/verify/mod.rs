@@ -1,0 +1,1167 @@
+//! Static program verification: diagnostics for compiled programs,
+//! configurations, partitions, and fleets — **without simulating**.
+//!
+//! Lifecycle (mirrors the compile → schedule → execute pipeline):
+//!
+//! ```text
+//!   ArchConfig ──────────────┐
+//!   CompiledProgram ─────────┼──▶ Verifier ──▶ Findings { Diagnostic* }
+//!   PartitionPlan / NodeSpec ┘        │
+//!                                     ├─ compile/: debug builds always,
+//!                                     │  release behind SimOptions.verify
+//!                                     ├─ explore/: Error diagnostics become
+//!                                     │  skip-with-reason constraint records
+//!                                     ├─ serve/cluster: partitions and node
+//!                                     │  specs checked at construction
+//!                                     └─ `sosa check`: CLI front door, exits
+//!                                        nonzero on any Error diagnostic
+//! ```
+//!
+//! The checks are the static halves of invariants the simulator
+//! otherwise only enforces dynamically (debug assertions in
+//! [`crate::tiling`] and [`crate::scheduler`], MAC-conservation test
+//! suites): MAC conservation per layer, psum-chain well-formedness
+//! (acyclic, width-matched merges, post-processor fan-in vs capacity),
+//! u16/u32 field-range safety for tile dims and row-group indices, SRAM
+//! footprint feasibility, interconnect routability preconditions
+//! (power-of-two ports, Butterfly radix), and the TDP envelope.  Each
+//! failure is a structured [`Diagnostic`] with a stable [`Code`], a
+//! [`Severity`], a [`Location`] (layer / tile / pp-group / node), a
+//! message, and a fix hint — renderable as text or JSON
+//! ([`Findings::render_text`], [`Findings::to_json`]).
+//!
+//! The verifier never panics on malformed input and never reports a
+//! diagnostic on a program produced by [`crate::compile`] from a valid
+//! configuration (property-tested over the §5 zoo × all tiling
+//! strategies × all presets).
+
+use crate::arch::ArchConfig;
+use crate::cluster::NodeSpec;
+use crate::compile::CompiledProgram;
+use crate::interconnect::Kind;
+use crate::power::{self, TDP_W};
+use crate::scheduler::pp_capacity;
+use crate::serve::PartitionPlan;
+use crate::sim::memory;
+use crate::tiling::{LayerTiling, TileProgram, MAX_AGG_WAYS};
+use crate::util::{ceil_div, is_pow2, Json};
+use crate::workloads::ModelGraph;
+
+/// Stable diagnostic codes (see README "Static checks" for the table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Code {
+    /// Tile-op MACs don't sum to the layer's `m·k·n` (work lost or
+    /// duplicated — the PR 3 truncation bug class).
+    MacConservation,
+    /// Tile-op id space broken: id ≠ index, non-contiguous layer
+    /// ranges, or coordinates outside the `tm×tk×tn` grid.
+    Grid,
+    /// Psum chain malformed: a step's `psum_dep` is not its `j−1`
+    /// predecessor within the subchain, or pp-op tails don't match the
+    /// subchain tails.
+    PsumChain,
+    /// Ops merged into one `(i, l)` output group disagree on `m`/`n` —
+    /// the post-processor would add mismatched tile shapes.
+    MergeWidth,
+    /// A pp op's merge needs more pair-slots than one slice's
+    /// post-processor capacity — the merge spills across slices.
+    PpFanIn,
+    /// A tile dim or row-group count overflows its `u16` field, or an
+    /// op id overflows `u32`.
+    FieldRange,
+    /// Subchain split count (`ways`) is zero, exceeds the paper's
+    /// pair-aggregation cap, or exceeds the pod count.
+    AggWays,
+    /// Program compiled for a different geometry (array / pods /
+    /// pinned interconnect) than the config it is checked against.
+    Geometry,
+    /// Configuration invariant violated (dims, N-to-N banks, U/V,
+    /// frequency, post-processor count).
+    Config,
+    /// Interconnect routability precondition violated: non-power-of-two
+    /// ports, or a Butterfly expansion that isn't a power of two.
+    Routability,
+    /// Peak working set exceeds on-chip SRAM: the memory model will
+    /// charge spill traffic and possibly stalls.
+    SramFootprint,
+    /// Peak power exceeds the TDP envelope.
+    TdpEnvelope,
+    /// Fleet node-spec problem (empty fleet, duplicate names).
+    NodeSpec,
+    /// Partition plan problem (overflow, non-power-of-two share).
+    Partition,
+}
+
+impl Code {
+    /// Every code, in table order.
+    pub const ALL: [Code; 14] = [
+        Code::MacConservation,
+        Code::Grid,
+        Code::PsumChain,
+        Code::MergeWidth,
+        Code::PpFanIn,
+        Code::FieldRange,
+        Code::AggWays,
+        Code::Geometry,
+        Code::Config,
+        Code::Routability,
+        Code::SramFootprint,
+        Code::TdpEnvelope,
+        Code::NodeSpec,
+        Code::Partition,
+    ];
+
+    /// Stable short name (used in text/JSON rendering and goldens).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Code::MacConservation => "MAC",
+            Code::Grid => "GRID",
+            Code::PsumChain => "PSUM",
+            Code::MergeWidth => "MERGE",
+            Code::PpFanIn => "FANIN",
+            Code::FieldRange => "RANGE",
+            Code::AggWays => "WAYS",
+            Code::Geometry => "GEOM",
+            Code::Config => "CFG",
+            Code::Routability => "ROUTE",
+            Code::SramFootprint => "SRAM",
+            Code::TdpEnvelope => "TDP",
+            Code::NodeSpec => "NODE",
+            Code::Partition => "PART",
+        }
+    }
+}
+
+impl std::fmt::Display for Code {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// How bad a finding is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Feasible but hazardous: the simulator handles it (spills,
+    /// throttling) at a cost.
+    Warning,
+    /// Infeasible or corrupt: scheduling/executing this input would
+    /// panic or silently produce wrong results.
+    Error,
+}
+
+impl std::fmt::Display for Severity {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        })
+    }
+}
+
+/// Where a diagnostic points.  All fields optional: config-level
+/// findings carry none, program findings a layer (and possibly a tile
+/// op or pp group), fleet findings a node name.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Location {
+    /// Layer index into `TileProgram::layers`.
+    pub layer: Option<u32>,
+    /// Tile-op id (index into `TileProgram::tile_ops`).
+    pub tile: Option<u32>,
+    /// Pp-group index (index into `TileProgram::pp_ops` — the
+    /// post-processor slot group that finalizes one `(i, l)` output).
+    pub group: Option<u32>,
+    /// Fleet node / partition tenant name.
+    pub node: Option<String>,
+}
+
+impl Location {
+    /// No location (config-level).
+    pub fn none() -> Location {
+        Location::default()
+    }
+
+    /// A layer.
+    pub fn layer(layer: u32) -> Location {
+        Location { layer: Some(layer), ..Location::default() }
+    }
+
+    /// A tile op within a layer.
+    pub fn tile(layer: u32, tile: u32) -> Location {
+        Location { layer: Some(layer), tile: Some(tile), ..Location::default() }
+    }
+
+    /// A pp group within a layer.
+    pub fn group(layer: u32, group: u32) -> Location {
+        Location { layer: Some(layer), group: Some(group), ..Location::default() }
+    }
+
+    /// A named fleet node / tenant.
+    pub fn node(name: impl Into<String>) -> Location {
+        Location { node: Some(name.into()), ..Location::default() }
+    }
+
+    fn render(&self) -> String {
+        let mut parts = Vec::new();
+        if let Some(n) = &self.node {
+            parts.push(format!("node {n}"));
+        }
+        if let Some(l) = self.layer {
+            parts.push(format!("layer {l}"));
+        }
+        if let Some(t) = self.tile {
+            parts.push(format!("tile {t}"));
+        }
+        if let Some(g) = self.group {
+            parts.push(format!("group {g}"));
+        }
+        parts.join(", ")
+    }
+}
+
+/// One finding.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Diagnostic {
+    pub code: Code,
+    pub severity: Severity,
+    pub location: Location,
+    /// What is wrong (with the offending values).
+    pub message: String,
+    /// Typical fix.
+    pub hint: String,
+}
+
+impl Diagnostic {
+    /// One-line text rendering: `severity[CODE] at <loc>: message (hint)`.
+    pub fn render(&self) -> String {
+        let loc = self.location.render();
+        let at = if loc.is_empty() { String::new() } else { format!(" at {loc}") };
+        format!("{}[{}]{}: {} (hint: {})", self.severity, self.code, at, self.message, self.hint)
+    }
+
+    /// JSON object rendering (stable key order).
+    pub fn to_json(&self) -> Json {
+        let mut loc = Vec::new();
+        if let Some(n) = &self.location.node {
+            loc.push(("node".to_string(), Json::Str(n.clone())));
+        }
+        if let Some(l) = self.location.layer {
+            loc.push(("layer".to_string(), Json::int(l as u64)));
+        }
+        if let Some(t) = self.location.tile {
+            loc.push(("tile".to_string(), Json::int(t as u64)));
+        }
+        if let Some(g) = self.location.group {
+            loc.push(("group".to_string(), Json::int(g as u64)));
+        }
+        Json::Obj(vec![
+            ("code".to_string(), Json::str(self.code.as_str())),
+            ("severity".to_string(), Json::Str(self.severity.to_string())),
+            ("location".to_string(), Json::Obj(loc)),
+            ("message".to_string(), Json::Str(self.message.clone())),
+            ("hint".to_string(), Json::Str(self.hint.clone())),
+        ])
+    }
+}
+
+/// A verification result: every diagnostic found, in deterministic
+/// discovery order (config checks, then program layers in order, then
+/// footprint/power).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Findings {
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Findings {
+    /// True when no **Error**-severity diagnostics were found
+    /// (warnings don't fail verification).
+    pub fn ok(&self) -> bool {
+        self.first_error().is_none()
+    }
+
+    /// No diagnostics at all, warnings included.
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Number of Error-severity diagnostics.
+    pub fn num_errors(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    /// Number of Warning-severity diagnostics.
+    pub fn num_warnings(&self) -> usize {
+        self.diagnostics.len() - self.num_errors()
+    }
+
+    /// First Error-severity diagnostic, if any.
+    pub fn first_error(&self) -> Option<&Diagnostic> {
+        self.diagnostics.iter().find(|d| d.severity == Severity::Error)
+    }
+
+    /// Is a code present (any severity)?
+    pub fn has(&self, code: Code) -> bool {
+        self.diagnostics.iter().any(|d| d.code == code)
+    }
+
+    /// Append another result's diagnostics.
+    pub fn merge(&mut self, other: Findings) {
+        self.diagnostics.extend(other.diagnostics);
+    }
+
+    /// Apply a location default: fill in `node` on diagnostics that
+    /// don't carry one (fleet checks tag per-node config findings).
+    fn tag_node(mut self, name: &str) -> Findings {
+        for d in &mut self.diagnostics {
+            if d.location.node.is_none() {
+                d.location.node = Some(name.to_string());
+            }
+        }
+        self
+    }
+
+    /// Multi-line text rendering (one line per diagnostic + summary).
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&d.render());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "{} error(s), {} warning(s)\n",
+            self.num_errors(),
+            self.num_warnings()
+        ));
+        out
+    }
+
+    /// [`Findings::to_json`] wrapped with a design-point label —
+    /// the `sosa check --format json` record shape (golden-pinned).
+    pub fn to_labeled_json(&self, label: &str) -> Json {
+        Json::Obj(vec![
+            ("label".to_string(), Json::str(label)),
+            ("findings".to_string(), self.to_json()),
+        ])
+    }
+
+    /// JSON rendering: `{"ok": bool, "errors": n, "warnings": n,
+    /// "diagnostics": [...]}` with stable ordering.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("ok".to_string(), Json::Bool(self.ok())),
+            ("errors".to_string(), Json::int(self.num_errors() as u64)),
+            ("warnings".to_string(), Json::int(self.num_warnings() as u64)),
+            (
+                "diagnostics".to_string(),
+                Json::Arr(self.diagnostics.iter().map(Diagnostic::to_json).collect()),
+            ),
+        ])
+    }
+
+    fn error(&mut self, code: Code, location: Location, message: String, hint: &str) {
+        self.diagnostics.push(Diagnostic {
+            code,
+            severity: Severity::Error,
+            location,
+            message,
+            hint: hint.to_string(),
+        });
+    }
+
+    fn warning(&mut self, code: Code, location: Location, message: String, hint: &str) {
+        self.diagnostics.push(Diagnostic {
+            code,
+            severity: Severity::Warning,
+            location,
+            message,
+            hint: hint.to_string(),
+        });
+    }
+}
+
+/// The static verifier.  Stateless apart from the power envelope; all
+/// `check_*` methods are pure and deterministic.
+#[derive(Clone, Copy, Debug)]
+pub struct Verifier {
+    /// Power envelope for [`Code::TdpEnvelope`] (paper default 400 W).
+    pub tdp_w: f64,
+}
+
+impl Default for Verifier {
+    fn default() -> Self {
+        Verifier { tdp_w: TDP_W }
+    }
+}
+
+impl Verifier {
+    /// Verifier with the paper's 400 W TDP envelope.
+    pub fn new() -> Verifier {
+        Verifier::default()
+    }
+
+    /// Verifier with a custom TDP envelope.
+    pub fn with_tdp(tdp_w: f64) -> Verifier {
+        Verifier { tdp_w }
+    }
+
+    /// Check an architecture configuration: structural invariants
+    /// (the granular form of [`ArchConfig::validate`]), interconnect
+    /// routability preconditions, and the TDP envelope.
+    pub fn check_config(&self, cfg: &ArchConfig) -> Findings {
+        let mut f = Findings::default();
+        if cfg.array.r == 0 || cfg.array.c == 0 {
+            f.error(
+                Code::Config,
+                Location::none(),
+                format!("array dims must be positive, got {}", cfg.array),
+                "use a nonzero r×c pod array",
+            );
+            // Everything downstream divides by r/c; stop here.
+            return f;
+        }
+        if cfg.num_pods == 0 {
+            f.error(
+                Code::Config,
+                Location::none(),
+                "num_pods must be positive".to_string(),
+                "use at least one pod",
+            );
+            return f;
+        }
+        if !is_pow2(cfg.num_pods) {
+            f.error(
+                Code::Routability,
+                Location::none(),
+                format!(
+                    "num_pods {} is not a power of two — the X/W/P fabrics only \
+                     route power-of-two port counts",
+                    cfg.num_pods
+                ),
+                "round the pod count to a power of two",
+            );
+        }
+        if cfg.num_banks != cfg.num_pods {
+            f.error(
+                Code::Config,
+                Location::none(),
+                format!(
+                    "N-to-N design requires num_banks == num_pods, got {} banks for {} pods",
+                    cfg.num_banks, cfg.num_pods
+                ),
+                "set num_banks = num_pods (§5)",
+            );
+        }
+        if cfg.multicast_u == 0 || cfg.multicast_u > cfg.array.r {
+            f.error(
+                Code::Config,
+                Location::none(),
+                format!("multicast degree U={} outside [1, r={}]", cfg.multicast_u, cfg.array.r),
+                "scale U with the array (r/2 in the paper's designs)",
+            );
+        }
+        if cfg.fanin_v == 0 || cfg.fanin_v > cfg.array.c {
+            f.error(
+                Code::Config,
+                Location::none(),
+                format!("fan-in degree V={} outside [1, c={}]", cfg.fanin_v, cfg.array.c),
+                "scale V with the array (c/2 in the paper's designs)",
+            );
+        }
+        if cfg.freq_ghz <= 0.0 {
+            f.error(
+                Code::Config,
+                Location::none(),
+                format!("clock frequency must be positive, got {} GHz", cfg.freq_ghz),
+                "the paper clocks pods at 1 GHz",
+            );
+        }
+        if cfg.num_post_processors == 0 {
+            f.error(
+                Code::Config,
+                Location::none(),
+                "num_post_processors must be positive".to_string(),
+                "post-processors finalize every output group; match the pod count",
+            );
+        }
+        if let Kind::Butterfly { expansion } = cfg.interconnect {
+            if expansion == 0 || !is_pow2(expansion) {
+                f.error(
+                    Code::Routability,
+                    Location::none(),
+                    format!(
+                        "Butterfly expansion {expansion} must be a power of two — \
+                         stage radix divides the port count"
+                    ),
+                    "use Butterfly-1/2/4/8",
+                );
+            }
+        }
+        // Power envelope: a warning — the design still runs, but the §6
+        // provisioning rule would not admit it.
+        let peak = power::peak_power(cfg).total();
+        if peak > self.tdp_w && cfg.num_pods > 0 && is_pow2(cfg.num_pods) {
+            let template = ArchConfig {
+                num_pods: 1,
+                num_banks: 1,
+                num_post_processors: 1,
+                ..cfg.clone()
+            };
+            let fit = power::max_pods_under_tdp(&template, self.tdp_w);
+            f.warning(
+                Code::TdpEnvelope,
+                Location::none(),
+                format!(
+                    "peak power {peak:.1} W exceeds the {:.0} W TDP envelope",
+                    self.tdp_w
+                ),
+                &format!("largest power-of-two pod count under the envelope: {fit}"),
+            );
+        }
+        f
+    }
+
+    /// Check a compiled program against the configuration it is about
+    /// to run on: geometry compatibility, tile-program structure, MAC
+    /// conservation against the source models, and the SRAM footprint.
+    /// Includes [`Verifier::check_config`] on `cfg`.
+    pub fn check_program(&self, cp: &CompiledProgram, cfg: &ArchConfig) -> Findings {
+        let mut f = self.check_config(cfg);
+        if !cp.compatible_with(cfg) {
+            let pin = match cp.compiled_for.interconnect {
+                Some(k) => format!(", pinned to {k}"),
+                None => String::new(),
+            };
+            f.error(
+                Code::Geometry,
+                Location::none(),
+                format!(
+                    "program compiled for {}x{} / {} pods{pin}; config is {} / {} pods ({})",
+                    cp.compiled_for.r,
+                    cp.compiled_for.c,
+                    cp.compiled_for.pods,
+                    cfg.array,
+                    cfg.num_pods,
+                    cfg.interconnect
+                ),
+                "recompile for this geometry, or execute on the compiled-for config",
+            );
+            // Structural checks below would mis-derive grids from the
+            // wrong r/c; check against the compiled-for geometry.
+        }
+        f.merge(self.check_tiles(
+            &cp.prog,
+            cp.compiled_for.r,
+            cp.compiled_for.c,
+            cfg,
+            Some(&cp.models),
+        ));
+        f
+    }
+
+    /// Check a raw tile program against the `r×c` geometry it was tiled
+    /// for and the config it will run on.  `models`, when given, pins
+    /// total MAC conservation to the source GEMMs and the SRAM
+    /// footprint check.
+    pub fn check_tiles(
+        &self,
+        prog: &TileProgram,
+        r: usize,
+        c: usize,
+        cfg: &ArchConfig,
+        models: Option<&[ModelGraph]>,
+    ) -> Findings {
+        let mut f = Findings::default();
+        if r == 0 || c == 0 {
+            // Already reported by check_config; grids below divide by c.
+            return f;
+        }
+        let mut expect_start: u64 = 0;
+        let mut expect_pp: u64 = 0;
+        let mut total_macs: u64 = 0;
+        for (li, lt) in prog.layers.iter().enumerate() {
+            // lint:allow(cast) — layer count is bounded by the u32 op-id
+            // space this same pass checks.
+            let li32 = li as u32;
+            self.check_layer(&mut f, prog, li32, lt, r, c, cfg, expect_start, expect_pp);
+            total_macs = total_macs.saturating_add(lt.m as u64 * lt.k as u64 * lt.n as u64);
+            expect_start += lt.num_ops() as u64;
+            expect_pp += (lt.tm * lt.tn) as u64;
+        }
+        if expect_start != prog.tile_ops.len() as u64 {
+            f.error(
+                Code::Grid,
+                Location::none(),
+                format!(
+                    "program has {} tile ops but the layer grids account for {expect_start}",
+                    prog.tile_ops.len()
+                ),
+                "tile ops were dropped or duplicated outside any layer's range",
+            );
+        }
+        if expect_pp != prog.pp_ops.len() as u64 {
+            f.error(
+                Code::Grid,
+                Location::none(),
+                format!(
+                    "program has {} pp ops but the layer grids account for {expect_pp}",
+                    prog.pp_ops.len()
+                ),
+                "one pp op per (i, l) output group, in layer order",
+            );
+        }
+        if prog.total_macs != total_macs {
+            f.error(
+                Code::MacConservation,
+                Location::none(),
+                format!(
+                    "program total_macs {} != sum of layer GEMM MACs {total_macs}",
+                    prog.total_macs
+                ),
+                "retile the model; the tiling must conserve useful work exactly",
+            );
+        }
+        if let Some(models) = models {
+            let model_macs: u64 = models.iter().map(ModelGraph::total_macs).sum();
+            if prog.total_macs != model_macs {
+                f.error(
+                    Code::MacConservation,
+                    Location::none(),
+                    format!(
+                        "program total_macs {} != source model MACs {model_macs}",
+                        prog.total_macs
+                    ),
+                    "retile the model; the tiling must conserve useful work exactly",
+                );
+            }
+            // SRAM footprint: the §6.4 working-set model. Spill is
+            // feasible (the memory model charges it) — a warning.
+            let mem = memory::analyze(cfg, models);
+            if mem.spill_bytes > 0 {
+                f.warning(
+                    Code::SramFootprint,
+                    Location::none(),
+                    format!(
+                        "peak working set {} B exceeds SRAM {} B ({} B spill traffic)",
+                        mem.peak_working_set,
+                        cfg.sram_bytes(),
+                        mem.spill_bytes
+                    ),
+                    "grow bank_kb toward the §6.4 knee (256 KiB) or shrink the batch",
+                );
+            }
+        }
+        f
+    }
+
+    /// Structural checks for one layer's slice of the program.
+    #[allow(clippy::too_many_arguments)]
+    fn check_layer(
+        &self,
+        f: &mut Findings,
+        prog: &TileProgram,
+        li: u32,
+        lt: &LayerTiling,
+        r: usize,
+        c: usize,
+        cfg: &ArchConfig,
+        expect_start: u64,
+        expect_pp: u64,
+    ) {
+        let loc = || Location::layer(li);
+        let max_dim = u16::MAX as usize;
+        // --- u16/u32 field ranges (the PR 3 truncation bug class) ---
+        if lt.k_part == 0 {
+            f.error(Code::FieldRange, loc(), "k_part must be positive".to_string(), "partition sizes start at 1");
+            return;
+        }
+        if lt.k_part > max_dim || lt.tm > max_dim || lt.tk > max_dim || lt.tn > max_dim {
+            f.error(
+                Code::FieldRange,
+                loc(),
+                format!(
+                    "tile grid {}x{}x{} / k_part {} overflows the u16 tile fields",
+                    lt.tm, lt.tk, lt.tn, lt.k_part
+                ),
+                "Strategy::k_part clamps partitions so dims and indices fit u16",
+            );
+            return;
+        }
+        if lt.op_start as u64 != expect_start {
+            f.error(
+                Code::Grid,
+                loc(),
+                format!("op_start {} != previous layers' op count {expect_start}", lt.op_start),
+                "layer op ranges must be contiguous in layer order",
+            );
+            return;
+        }
+        if expect_start + lt.num_ops() as u64 > u32::MAX as u64 {
+            f.error(
+                Code::FieldRange,
+                loc(),
+                format!(
+                    "op ids {}..{} overflow u32",
+                    expect_start,
+                    expect_start + lt.num_ops() as u64
+                ),
+                "split the program; tile-op ids are u32",
+            );
+            return;
+        }
+        // --- grid consistency with the layer dims ---
+        if lt.tm != ceil_div(lt.m.max(1), lt.k_part)
+            || lt.tk != ceil_div(lt.k.max(1), r)
+            || lt.tn != ceil_div(lt.n.max(1), c)
+        {
+            f.error(
+                Code::Grid,
+                loc(),
+                format!(
+                    "grid {}x{}x{} inconsistent with dims m={} k={} n={} at k_part={}, {r}x{c}",
+                    lt.tm, lt.tk, lt.tn, lt.m, lt.k, lt.n, lt.k_part
+                ),
+                "tm=⌈m/k_part⌉, tk=⌈k/r⌉, tn=⌈n/c⌉",
+            );
+            return;
+        }
+        // --- aggregation ways ---
+        if lt.ways == 0 {
+            f.error(Code::AggWays, loc(), "ways must be positive".to_string(), "1 = pure pod-chained accumulation");
+            return;
+        }
+        if lt.ways > MAX_AGG_WAYS {
+            f.warning(
+                Code::AggWays,
+                loc(),
+                format!("ways {} exceeds the paper's pair-aggregation cap {MAX_AGG_WAYS}", lt.ways),
+                "post-processors aggregate tile pairs (§4.2)",
+            );
+        }
+        if lt.ways > cfg.num_pods.max(1) {
+            f.warning(
+                Code::AggWays,
+                loc(),
+                format!("ways {} exceeds the {} available pods", lt.ways, cfg.num_pods),
+                "parallel subchains beyond the pod count serialize",
+            );
+        }
+        // --- per-op checks: ids, coords, clipped dims, psum chains ---
+        let sub_len = lt.sub_len();
+        let mut layer_macs: u64 = 0;
+        let (lo, hi) = (lt.op_start as usize, lt.op_start as usize + lt.num_ops());
+        let Some(ops) = prog.tile_ops.get(lo..hi) else {
+            f.error(
+                Code::Grid,
+                loc(),
+                format!(
+                    "layer op range {lo}..{hi} exceeds the program's {} tile ops",
+                    prog.tile_ops.len()
+                ),
+                "tile ops were dropped from the program",
+            );
+            return;
+        };
+        for (off, op) in ops.iter().enumerate() {
+            // lint:allow(cast) — off < num_ops, which the id-overflow
+            // check above already bounds to u32.
+            let id = lt.op_start + off as u32;
+            let oloc = || Location::tile(li, id);
+            if op.id != id {
+                f.error(
+                    Code::Grid,
+                    oloc(),
+                    format!("tile op at index {id} carries id {}", op.id),
+                    "ids must equal positions in tile_ops",
+                );
+                return;
+            }
+            if op.layer != li {
+                f.error(
+                    Code::Grid,
+                    oloc(),
+                    format!("tile op {id} claims layer {} inside layer {li}'s range", op.layer),
+                    "layer op ranges must not interleave",
+                );
+                return;
+            }
+            let (i, j, l) = (op.i as usize, op.j as usize, op.l as usize);
+            if i >= lt.tm || j >= lt.tk || l >= lt.tn || lt.op_id(i, j, l) != id {
+                f.error(
+                    Code::Grid,
+                    oloc(),
+                    format!(
+                        "coords (i={i}, j={j}, l={l}) outside / inconsistent with the \
+                         {}x{}x{} grid",
+                        lt.tm, lt.tk, lt.tn
+                    ),
+                    "op_id(i,j,l) = op_start + (i·tn + l)·tk + j must be a bijection",
+                );
+                return;
+            }
+            // Edge tiles clip exactly; interior tiles are full-size.
+            let m_i = (lt.m - i * lt.k_part).min(lt.k_part);
+            let k_j = (lt.k - j * r).min(r);
+            let n_l = (lt.n - l * c).min(c);
+            if op.m as usize != m_i || op.k as usize != k_j {
+                f.error(
+                    Code::FieldRange,
+                    oloc(),
+                    format!(
+                        "tile dims m={} k={} != clipped dims m={m_i} k={k_j}",
+                        op.m, op.k
+                    ),
+                    "edge tiles clip to the remaining dim; interior tiles are full-size",
+                );
+            }
+            if op.n as usize != n_l {
+                // A wrong n width also breaks the (i, l) group merge.
+                f.error(
+                    Code::MergeWidth,
+                    oloc(),
+                    format!("tile width n={} != clipped width {n_l} of output group (i={i}, l={l})", op.n),
+                    "all ops merged into one output group must share m and n",
+                );
+            }
+            layer_macs = layer_macs.saturating_add(op.macs());
+            let expect_dep = if j % sub_len == 0 { None } else { Some(lt.op_id(i, j - 1, l)) };
+            if op.psum_dep != expect_dep {
+                f.error(
+                    Code::PsumChain,
+                    oloc(),
+                    format!(
+                        "psum_dep {:?} != expected {expect_dep:?} at (i={i}, j={j}, l={l})",
+                        op.psum_dep
+                    ),
+                    "chains follow j within subchains of ⌈tk/ways⌉ steps and are acyclic",
+                );
+            }
+        }
+        // --- MAC conservation per layer ---
+        let gemm_macs = lt.m as u64 * lt.k as u64 * lt.n as u64;
+        if layer_macs != gemm_macs {
+            f.error(
+                Code::MacConservation,
+                loc(),
+                format!("layer tile-op MACs {layer_macs} != GEMM m·k·n = {gemm_macs}"),
+                "a dropped tile or overflowed dim loses useful work",
+            );
+        }
+        // --- pp ops: one per (i, l), tails = subchain tails, fan-in ---
+        let capacity = pp_capacity(cfg);
+        let n_sub = lt.tk.div_ceil(sub_len);
+        for i in 0..lt.tm {
+            for l in 0..lt.tn {
+                let g = expect_pp as usize + lt.group(i, l);
+                // lint:allow(cast) — pp index ≤ tile-op count ≤ u32.
+                let gloc = || Location::group(li, g as u32);
+                let Some(pp) = prog.pp_ops.get(g) else {
+                    f.error(
+                        Code::Grid,
+                        gloc(),
+                        format!("missing pp op for output group (i={i}, l={l})"),
+                        "every (i, l) group needs a finalizing pp op",
+                    );
+                    return;
+                };
+                if pp.layer != li || pp.i as usize != i || pp.l as usize != l {
+                    f.error(
+                        Code::Grid,
+                        gloc(),
+                        format!(
+                            "pp op {} is (layer {}, i={}, l={}), expected (layer {li}, i={i}, l={l})",
+                            g, pp.layer, pp.i, pp.l
+                        ),
+                        "pp ops follow the layers' (i, l) emission order",
+                    );
+                    return;
+                }
+                let tails: Vec<u32> = (0..n_sub)
+                    .map(|s| {
+                        let last_j = (((s + 1) * sub_len).min(lt.tk)) - 1;
+                        lt.op_id(i, last_j, l)
+                    })
+                    .collect();
+                if pp.tails != tails {
+                    f.error(
+                        Code::PsumChain,
+                        gloc(),
+                        format!("pp tails {:?} != subchain tails {tails:?}", pp.tails),
+                        "the merge must consume exactly the last op of each subchain",
+                    );
+                }
+                if pp.pp_slots() > capacity {
+                    f.warning(
+                        Code::PpFanIn,
+                        gloc(),
+                        format!(
+                            "merge needs {} pair-slots but one slice offers {capacity}",
+                            pp.pp_slots()
+                        ),
+                        "the scheduler spills the merge across slices; add post-processors",
+                    );
+                }
+            }
+        }
+    }
+
+    /// Check fleet node specs: per-node configuration findings tagged
+    /// with the node name, plus fleet-level sanity.
+    pub fn check_nodes(&self, nodes: &[NodeSpec]) -> Findings {
+        let mut f = Findings::default();
+        if nodes.is_empty() {
+            f.error(
+                Code::NodeSpec,
+                Location::none(),
+                "fleet has no nodes".to_string(),
+                "a fleet needs at least one accelerator node",
+            );
+            return f;
+        }
+        for (a, n) in nodes.iter().enumerate() {
+            if nodes[..a].iter().any(|m| m.name == n.name) {
+                f.warning(
+                    Code::NodeSpec,
+                    Location::node(n.name.clone()),
+                    format!("duplicate node name {:?}", n.name),
+                    "reports and CSVs key on node names; make them unique",
+                );
+            }
+            f.merge(self.check_config(&n.cfg).tag_node(&n.name));
+        }
+        f
+    }
+
+    /// Check a partition plan against the machine it splits: share
+    /// sanity plus per-partition sub-configuration findings (tagged
+    /// `tenant{k}`).
+    pub fn check_partition(&self, cfg: &ArchConfig, plan: &PartitionPlan) -> Findings {
+        let mut f = Findings::default();
+        if plan.parts.is_empty() {
+            f.error(
+                Code::Partition,
+                Location::none(),
+                "partition plan is empty".to_string(),
+                "partitioning needs at least one tenant",
+            );
+            return f;
+        }
+        if plan.pods_used() > cfg.num_pods {
+            f.error(
+                Code::Partition,
+                Location::none(),
+                format!("plan assigns {} pods of {} available", plan.pods_used(), cfg.num_pods),
+                "partitions must fit the machine",
+            );
+        }
+        for part in &plan.parts {
+            let name = format!("tenant{}", part.tenant);
+            if part.pods == 0 || !is_pow2(part.pods) {
+                f.error(
+                    Code::Partition,
+                    Location::node(name.clone()),
+                    format!("partition of {} pods is not a positive power of two", part.pods),
+                    "every partition must itself be a valid N-to-N SOSA config",
+                );
+                continue;
+            }
+            let sub = ArchConfig {
+                num_pods: part.pods,
+                num_banks: part.pods,
+                num_post_processors: part.pods,
+                ..cfg.clone()
+            };
+            f.merge(self.check_config(&sub).tag_node(&name));
+        }
+        f
+    }
+}
+
+/// Convenience: [`Verifier::check_program`] with paper defaults.
+pub fn verify_program(cp: &CompiledProgram, cfg: &ArchConfig) -> Findings {
+    Verifier::new().check_program(cp, cfg)
+}
+
+/// Convenience: [`Verifier::check_config`] with paper defaults.
+pub fn verify_config(cfg: &ArchConfig) -> Findings {
+    Verifier::new().check_config(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{presets, ArrayDims};
+    use crate::compile;
+    use crate::sim::SimOptions;
+    use crate::workloads::zoo;
+
+    fn cfg(r: usize, pods: usize) -> ArchConfig {
+        ArchConfig::with_array(ArrayDims::new(r, r), pods)
+    }
+
+    #[test]
+    fn presets_are_clean_configs() {
+        for name in presets::NAMES {
+            let c = presets::by_name(name).unwrap();
+            let f = verify_config(&c);
+            assert!(f.ok(), "{name}: {}", f.render_text());
+        }
+    }
+
+    #[test]
+    fn compiled_zoo_programs_verify_clean() {
+        let c = cfg(32, 64);
+        let opts = SimOptions::default();
+        for m in zoo::benchmarks().iter().take(3) {
+            let cp = compile::compile(&c, m, &opts);
+            let f = verify_program(&cp, &c);
+            assert!(f.ok(), "{}: {}", m.name, f.render_text());
+        }
+    }
+
+    #[test]
+    fn config_diagnostics_fire() {
+        let mut c = cfg(32, 64);
+        c.num_pods = 48; // non-pow2
+        c.num_banks = 48;
+        let f = verify_config(&c);
+        assert!(!f.ok());
+        assert!(f.has(Code::Routability), "{}", f.render_text());
+
+        let mut c = cfg(32, 64);
+        c.num_banks = 32;
+        assert!(verify_config(&c).has(Code::Config));
+
+        let mut c = cfg(32, 64);
+        c.interconnect = Kind::Butterfly { expansion: 3 };
+        assert!(verify_config(&c).has(Code::Routability));
+    }
+
+    #[test]
+    fn tdp_envelope_is_a_warning_not_an_error() {
+        let c = cfg(32, 1024); // far past 400 W
+        let f = verify_config(&c);
+        assert!(f.ok(), "{}", f.render_text());
+        assert!(f.has(Code::TdpEnvelope));
+        assert!(f.num_warnings() >= 1);
+    }
+
+    #[test]
+    fn geometry_mismatch_is_detected() {
+        let a = cfg(32, 64);
+        let b = cfg(32, 128);
+        let m = zoo::by_name("bert-medium").unwrap();
+        let cp = compile::compile(&a, &m, &SimOptions::default());
+        let f = verify_program(&cp, &b);
+        assert!(f.has(Code::Geometry));
+        assert!(!f.ok());
+        // Structural checks still run against the compiled-for geometry.
+        assert!(!f.has(Code::MacConservation), "{}", f.render_text());
+    }
+
+    #[test]
+    fn sram_spill_is_a_warning() {
+        let mut c = cfg(32, 256);
+        c.bank_kb = 16; // far below the §6.4 knee
+        let m = zoo::by_name("resnet152").unwrap().with_batch(8);
+        let cp = compile::compile(&c, &m, &SimOptions::default());
+        let f = verify_program(&cp, &c);
+        assert!(f.ok(), "{}", f.render_text());
+        assert!(f.has(Code::SramFootprint));
+    }
+
+    #[test]
+    fn rendering_is_stable() {
+        let mut c = cfg(32, 64);
+        c.num_banks = 16;
+        let f = verify_config(&c);
+        let text = f.render_text();
+        assert!(text.contains("error[CFG]"), "{text}");
+        assert!(text.contains("1 error(s)"), "{text}");
+        let json = f.to_json().render();
+        assert!(json.contains("\"ok\":false"), "{json}");
+        assert!(json.contains("\"code\":\"CFG\""), "{json}");
+        // JSON survives its own parser.
+        Json::parse(&json).unwrap();
+    }
+
+    /// Every seeded corruption must trigger its diagnostic code — the
+    /// "each check catches its bug" half of the verifier contract.
+    #[test]
+    fn every_corruption_is_caught() {
+        use crate::testutil::mutate;
+        let c = cfg(32, 16);
+        let v = Verifier::new();
+        let clean = mutate::seed_program();
+        let model = mutate::seed_model();
+        let f = v.check_tiles(&clean, 32, 32, &c, Some(std::slice::from_ref(&model)));
+        assert!(f.ok(), "seed program must verify clean: {}", f.render_text());
+        for corruption in mutate::corruptions() {
+            let mut prog = clean.clone();
+            (corruption.apply)(&mut prog);
+            let f = v.check_tiles(&prog, 32, 32, &c, Some(std::slice::from_ref(&model)));
+            assert!(
+                f.has(corruption.code),
+                "{}: expected {} to fire, got:\n{}",
+                corruption.name,
+                corruption.code,
+                f.render_text()
+            );
+            assert!(!f.ok(), "{}: corruption must not verify clean", corruption.name);
+        }
+    }
+
+    /// Pp fan-in beyond capacity is reported, as a warning (the
+    /// scheduler spills the merge across slices, so it is not fatal).
+    #[test]
+    fn pp_fanin_over_capacity_warns() {
+        use crate::testutil::mutate;
+        let mut c = cfg(32, 256);
+        c.num_post_processors = 2; // pair capacity 1 < ways = 2
+        let prog = crate::tiling::tile_model(
+            &mutate::seed_model(),
+            32,
+            32,
+            crate::tiling::Strategy::RxR,
+            256,
+        );
+        assert!(prog.layers.iter().any(|lt| lt.ways > 1), "seed must aggregate");
+        let f = Verifier::new().check_tiles(&prog, 32, 32, &c, None);
+        assert!(f.ok(), "fan-in overflow must stay a warning: {}", f.render_text());
+        assert!(f.has(Code::PpFanIn), "{}", f.render_text());
+    }
+
+    /// No false positives: every §5 workload × every strategy × every
+    /// preset geometry tiles into a program the verifier accepts.
+    #[test]
+    fn clean_programs_never_flagged() {
+        use crate::testutil::prop::forall;
+        use crate::tiling::{tile_model, Strategy};
+        let models = zoo::benchmarks();
+        let configs: Vec<ArchConfig> =
+            presets::NAMES.iter().map(|n| presets::by_name(n).unwrap()).collect();
+        let v = Verifier::new();
+        forall(40, |rng| {
+            let m = &models[rng.below(models.len())];
+            let c = &configs[rng.below(configs.len())];
+            // Fixed sizes start at 32: tiny k on conv-lowered GEMMs
+            // (m ~ 10⁴) would blow the tile count into the millions —
+            // a test-time constraint, not a verifier precondition.
+            let strategy = match rng.below(3) {
+                0 => Strategy::RxR,
+                1 => Strategy::NoPartition,
+                _ => Strategy::Fixed(32 << rng.below(5)),
+            };
+            let (r, cols) = (c.array.r, c.array.c);
+            let prog = tile_model(m, r, cols, strategy, c.num_pods);
+            let f = v.check_tiles(&prog, r, cols, c, Some(std::slice::from_ref(m)));
+            crate::prop_assert!(
+                f.num_errors() == 0,
+                "{} on {} ({:?}): {}",
+                m.name,
+                c.array,
+                strategy,
+                f.render_text()
+            );
+            Ok(())
+        });
+    }
+}

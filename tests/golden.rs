@@ -558,6 +558,57 @@ fn fleet_matches_reference_and_golden() {
     golden_check("fleet_quick.csv", &produced);
 }
 
+/// Byte-for-byte reconstruction of the `sosa check --format json`
+/// document (`cmd_check` in `rust/src/main.rs`) for a list of
+/// verified points — keep the two in sync.
+fn check_doc(points: &[(String, sosa::Findings)]) -> String {
+    use sosa::util::Json;
+    let errors: usize = points.iter().map(|(_, f)| f.num_errors()).sum();
+    let warnings: usize = points.iter().map(|(_, f)| f.num_warnings()).sum();
+    let records: Vec<Json> =
+        points.iter().map(|(l, f)| f.to_labeled_json(l)).collect();
+    Json::obj(vec![
+        ("ok", Json::Bool(errors == 0)),
+        ("errors", Json::int(errors as u64)),
+        ("warnings", Json::int(warnings as u64)),
+        ("points", Json::Arr(records)),
+        ("skipped", Json::Arr(Vec::new())),
+    ])
+    .render()
+}
+
+#[test]
+fn check_json_valid_point_matches_golden() {
+    // Mirrors `sosa check --preset baseline --model bert-medium
+    // --format json`: a §5 design point that must verify clean.
+    use sosa::verify::Verifier;
+    let cfg = sosa::arch::presets::by_name("baseline").unwrap();
+    let model = sosa::workloads::zoo::by_name("bert-medium").unwrap();
+    let cp = sosa::compile::compile(&cfg, &model, &sosa::sim::SimOptions::default());
+    let f = Verifier::new().check_program(&cp, &cfg);
+    assert!(f.ok(), "baseline × bert-medium must verify clean:\n{}", f.render_text());
+    let label = format!(
+        "{} pods={} {} {} b1",
+        cfg.array, cfg.num_pods, cfg.interconnect, model.name
+    );
+    golden_check("check_valid.json", &(check_doc(&[(label, f)]) + "\n"));
+}
+
+#[test]
+fn check_json_broken_point_matches_golden() {
+    // Mirrors `sosa check --array 32x32 --pods 48 --format json`: 48
+    // pods is not a power of two, so routability preconditions fail
+    // before any compile is attempted.
+    let broken = ArchConfig::with_array(ArrayDims::new(32, 32), 48);
+    let f = sosa::verify::verify_config(&broken);
+    assert!(!f.ok(), "48 pods must be rejected");
+    let label = format!(
+        "{} pods={} {} resnet50 b1",
+        broken.array, broken.num_pods, broken.interconnect
+    );
+    golden_check("check_broken.json", &(check_doc(&[(label, f)]) + "\n"));
+}
+
 #[test]
 fn flight_recorder_artifacts_match_golden() {
     // The `sosa trace --quick` artifact set, byte-pinned.  Every value

@@ -1,0 +1,335 @@
+//! Repo task runner.  `cargo xtask lint` — the determinism lint.
+//!
+//! A cycle-level simulator must be bit-reproducible: same program +
+//! same config + same seed → same schedule, same metrics, same trace.
+//! The rules here flag the source patterns that historically break
+//! that property:
+//!
+//! | code       | pattern                                               |
+//! |------------|-------------------------------------------------------|
+//! | `hashiter` | iterating a `HashMap`/`HashSet` (`.keys()`,           |
+//! |            | `.values()`, `for _ in <map>`) — iteration order is   |
+//! |            | randomized per process                                |
+//! | `wallclock`| `Instant::now` / `SystemTime` — wall time leaks into  |
+//! |            | results                                               |
+//! | `threadid` | `thread::current().id()` / `ThreadId` — scheduling-   |
+//! |            | dependent identity                                    |
+//! | `floatsum` | float reduction over an unordered source — result     |
+//! |            | depends on visit order                                |
+//! | `cast`     | `as u16` / `as u32` narrowing casts — silent          |
+//! |            | truncation instead of a diagnostic                    |
+//!
+//! Escapes (each must carry a justification in the comment):
+//!
+//! * `// lint:allow(<code>)` on the flagged line, or on the comment
+//!   line directly above it — suppresses that one line;
+//! * `// lint:allow(<code>, file)` anywhere in a file — suppresses the
+//!   rule for the whole file.  Reserve this for files where one idiom
+//!   accounts for every hit (e.g. the interconnect owner tokens).
+//!
+//! The scanner is plain line-oriented string matching on `rust/src`
+//! (tests under `rust/tests` and the vendored `xla` stub are out of
+//! scope).  Zero dependencies so CI can run it before anything else
+//! builds.  Exit status: 0 when clean, 1 with findings, 2 on usage
+//! errors.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// A single lint hit: file, 1-based line, rule code, message.
+struct Finding {
+    file: String,
+    line: usize,
+    code: &'static str,
+    message: String,
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("lint") => {
+            let root = workspace_root();
+            let default = root.join("rust").join("src");
+            let dir = args
+                .iter()
+                .position(|a| a == "--root")
+                .and_then(|i| args.get(i + 1))
+                .map(PathBuf::from)
+                .unwrap_or(default);
+            std::process::exit(lint(&dir));
+        }
+        _ => {
+            eprintln!("usage: cargo xtask lint [--root DIR]");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// The workspace root: the parent of xtask's own manifest dir, fixed
+/// at compile time so the lint works from any working directory.
+fn workspace_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask lives one level below the workspace root")
+        .to_path_buf()
+}
+
+fn lint(dir: &Path) -> i32 {
+    let mut files = Vec::new();
+    collect_rs(dir, &mut files);
+    files.sort();
+    if files.is_empty() {
+        eprintln!("lint: no .rs files under {}", dir.display());
+        return 2;
+    }
+    let mut findings = Vec::new();
+    for path in &files {
+        let text = match fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("lint: read {}: {e}", path.display());
+                return 2;
+            }
+        };
+        lint_file(&display_path(path), &text, &mut findings);
+    }
+    for f in &findings {
+        println!("{}:{}: [{}] {}", f.file, f.line, f.code, f.message);
+    }
+    if findings.is_empty() {
+        println!("lint: {} file(s) scanned, no findings", files.len());
+        0
+    } else {
+        println!(
+            "lint: {} finding(s) in {} file(s) — fix, or justify with \
+             // lint:allow(<code>)",
+            findings.len(),
+            files.len()
+        );
+        1
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return,
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// Render a path relative to the workspace root when possible, so
+/// findings are stable across machines.
+fn display_path(path: &Path) -> String {
+    let root = workspace_root();
+    path.strip_prefix(&root)
+        .unwrap_or(path)
+        .display()
+        .to_string()
+}
+
+/// True when line `i` is suppressed for `code`: a directive on the
+/// line itself, anywhere in the contiguous comment block directly
+/// above it, or a file-scoped allow.
+fn allowed(code: &str, lines: &[&str], i: usize, file_allows: &[String]) -> bool {
+    if file_allows.iter().any(|c| c == code) {
+        return true;
+    }
+    if has_allow(lines[i], code) {
+        return true;
+    }
+    let mut j = i;
+    while j > 0 && lines[j - 1].trim_start().starts_with("//") {
+        j -= 1;
+        if has_allow(lines[j], code) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Does this line carry `lint:allow(<code>)` (line form, not file form)?
+fn has_allow(line: &str, code: &str) -> bool {
+    allow_directive(line).is_some_and(|(c, _)| c == code)
+}
+
+/// Parse a `lint:allow(code)` / `lint:allow(code, file)` directive out
+/// of a line.  Returns `(code, is_file_scoped)`.
+fn allow_directive(line: &str) -> Option<(String, bool)> {
+    let start = line.find("lint:allow(")?;
+    let rest = &line[start + "lint:allow(".len()..];
+    let end = rest.find(')')?;
+    let inner = &rest[..end];
+    let mut parts = inner.split(',').map(str::trim);
+    let code = parts.next()?.to_string();
+    let file_scoped = parts.next() == Some("file");
+    Some((code, file_scoped))
+}
+
+fn lint_file(file: &str, text: &str, findings: &mut Vec<Finding>) {
+    let lines: Vec<&str> = text.lines().collect();
+
+    // File-scoped allows and hash-collection binding names: one
+    // pre-pass over the file.
+    let mut file_allows: Vec<String> = Vec::new();
+    let mut hash_bindings: Vec<String> = Vec::new();
+    for line in &lines {
+        if let Some((code, true)) = allow_directive(line) {
+            file_allows.push(code);
+        }
+        if line.contains("HashMap") || line.contains("HashSet") {
+            if let Some(name) = let_binding_name(line) {
+                hash_bindings.push(name);
+            }
+        }
+    }
+
+    let mut push = |i: usize, code: &'static str, message: String| {
+        findings.push(Finding { file: file.to_string(), line: i + 1, code, message });
+    };
+
+    for (i, line) in lines.iter().enumerate() {
+        let trimmed = line.trim_start();
+        if trimmed.starts_with("//") {
+            continue; // comments: directives only, never findings
+        }
+        let ok = |code: &str| allowed(code, &lines, i, &file_allows);
+
+        if (line.contains(".keys()")
+            || line.contains(".values()")
+            || line.contains(".values_mut()")
+            || iterates_hash_binding(line, &hash_bindings))
+            && !ok("hashiter")
+        {
+            let msg = "HashMap/HashSet iteration is nondeterministic — sort, or use a Vec";
+            push(i, "hashiter", msg.to_string());
+        }
+        if (line.contains("Instant::now") || line.contains("SystemTime")) && !ok("wallclock") {
+            let msg = "wall-clock time breaks reproducibility — use slice counters";
+            push(i, "wallclock", msg.to_string());
+        }
+        if (line.contains("thread::current") || line.contains("ThreadId")) && !ok("threadid") {
+            let msg = "thread identity is scheduling-dependent — pass a worker index";
+            push(i, "threadid", msg.to_string());
+        }
+        if is_unordered_float_reduction(line) && !ok("floatsum") {
+            let msg = "float reduction over an unordered source — sort the keys first";
+            push(i, "floatsum", msg.to_string());
+        }
+        if (line.contains(" as u16") || line.contains(" as u32")) && !ok("cast") {
+            let msg = "narrowing cast can truncate silently — widen, checked, or justify";
+            push(i, "cast", msg.to_string());
+        }
+    }
+}
+
+/// Extract the bound name from `let [mut] name[: T] = ...` lines.
+fn let_binding_name(line: &str) -> Option<String> {
+    let t = line.trim_start();
+    let rest = t.strip_prefix("let mut ").or_else(|| t.strip_prefix("let "))?;
+    let name: String = rest
+        .chars()
+        .take_while(|c| c.is_alphanumeric() || *c == '_')
+        .collect();
+    (!name.is_empty()).then_some(name)
+}
+
+/// `for x in map` / `for x in &map` / `map.iter()` / `map.drain()` on
+/// a binding declared as a HashMap/HashSet in this file.
+fn iterates_hash_binding(line: &str, bindings: &[String]) -> bool {
+    bindings.iter().any(|b| {
+        line.contains(&format!("{b}.iter()"))
+            || line.contains(&format!("{b}.drain("))
+            || line.contains(&format!("in {b}"))
+            || line.contains(&format!("in &{b}"))
+            || line.contains(&format!("in &mut {b}"))
+    })
+}
+
+/// `.sum::<f32|f64>()` / `.fold(` / `.product::<f..>` on the same line
+/// as an unordered source (`.keys()`, `.values()`, par-iterators).
+fn is_unordered_float_reduction(line: &str) -> bool {
+    let unordered = line.contains(".keys()")
+        || line.contains(".values()")
+        || line.contains("par_iter")
+        || line.contains("par_bridge");
+    let reduces = line.contains(".sum::<f32>")
+        || line.contains(".sum::<f64>")
+        || line.contains(".product::<f")
+        || line.contains(".fold(");
+    unordered && reduces
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(file: &str, text: &str) -> Vec<(usize, &'static str)> {
+        let mut f = Vec::new();
+        lint_file(file, text, &mut f);
+        f.into_iter().map(|x| (x.line, x.code)).collect()
+    }
+
+    #[test]
+    fn flags_the_five_rules() {
+        let got = run(
+            "x.rs",
+            "let t = Instant::now();\n\
+             for k in m.keys() {}\n\
+             let id = thread::current().id();\n\
+             let s: f64 = m.values().map(|v| *v).sum::<f64>();\n\
+             let n = big as u16;\n",
+        );
+        let codes: Vec<&str> = got.iter().map(|(_, c)| *c).collect();
+        assert!(codes.contains(&"wallclock"));
+        assert!(codes.contains(&"hashiter"));
+        assert!(codes.contains(&"threadid"));
+        assert!(codes.contains(&"floatsum"));
+        assert!(codes.contains(&"cast"));
+    }
+
+    #[test]
+    fn line_allow_suppresses_same_and_next_line() {
+        let clean = run(
+            "x.rs",
+            "let n = big as u16; // lint:allow(cast) — bounded by validate()\n\
+             // lint:allow(wallclock) — progress reporting only\n\
+             let t = Instant::now();\n",
+        );
+        assert!(clean.is_empty(), "{clean:?}");
+    }
+
+    #[test]
+    fn file_allow_suppresses_everywhere_for_that_code_only() {
+        let got = run(
+            "x.rs",
+            "// lint:allow(cast, file) — all casts here are owner tokens\n\
+             let a = x as u32;\n\
+             let t = Instant::now();\n",
+        );
+        assert_eq!(got, vec![(3, "wallclock")]);
+    }
+
+    #[test]
+    fn comments_never_fire() {
+        let clean = run("x.rs", "// Instant::now() would be wrong here\n");
+        assert!(clean.is_empty());
+    }
+
+    #[test]
+    fn tracks_hash_bindings_in_for_loops() {
+        let got = run(
+            "x.rs",
+            "let mut seen = HashSet::new();\n\
+             for s in &seen {}\n",
+        );
+        assert_eq!(got, vec![(2, "hashiter")]);
+    }
+}
