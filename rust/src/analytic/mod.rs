@@ -12,10 +12,21 @@
 //! * Benes-style round-trip chain gaps.
 //!
 //! It deliberately ignores bank/routing contention and inter-layer
-//! pipelining (they roughly cancel; validated against the full
-//! scheduler within ~15% in `analytic_tracks_scheduler`).
+//! pipelining (they roughly cancel; validated per benchmark against
+//! the full scheduler in `analytic_tracks_scheduler` and pinned as a
+//! golden error table in `tests/two_tier.rs`).
+//!
+//! Saturated layers are additionally stretched by a per-topology
+//! busy-pod efficiency ([`busy_efficiency`]): rearrangeable fabrics
+//! (Butterfly-2+, Benes, Crossbar) sustain the ~72% ceiling of
+//! Table 1, the unbuffered Butterfly-1 slightly less, while the
+//! bisection-starved Mesh and H-tree block most permutations and land
+//! far lower — this is what makes the analytic model price fabrics
+//! apart (the two-tier pre-filter in [`crate::explore::twotier`]
+//! depends on that ordering being faithful).
 
 use crate::arch::ArchConfig;
+use crate::interconnect::Kind;
 use crate::power;
 use crate::tiling::{self, Strategy};
 use crate::util::ceil_div;
@@ -129,17 +140,39 @@ pub fn layer_cycles_at_slice(
     let waves = ceil_div(subchains, pods) as f64;
     let mut layer_slices = sub_len as f64 * (1.0 + gap) * waves;
     // Bank/fabric contention stretches saturated layers — the
-    // busy-pod ceiling of Table 1 (~72% for Butterfly-2), validated
-    // against the full scheduler.
+    // busy-pod ceiling of Table 1 (~72% for Butterfly-2), per
+    // topology, validated against the full scheduler.
     if subchains >= pods {
-        layer_slices /= BUSY_EFFICIENCY;
+        layer_slices /= busy_efficiency(cfg.interconnect);
     }
     layer_slices * slice
 }
 
 /// Fraction of pods the scheduler keeps busy on saturated layers
-/// (bank-port + fabric contention; cf. Table 1's busy-pod column).
+/// (bank-port + fabric contention; cf. Table 1's busy-pod column) for
+/// the rearrangeable fabrics — Butterfly-2 and up, Benes, Crossbar.
 pub const BUSY_EFFICIENCY: f64 = 0.72;
+
+/// Per-topology busy-pod efficiency on saturated layers.
+///
+/// Rearrangeable fabrics route (nearly) every permutation and sit at
+/// Table 1's ceiling; the expansion-1 butterfly drops a few points
+/// (Table 1 measures 66.8% busy pods); the blocking Mesh and H-tree
+/// reject most permutations (see the route-rate tests in
+/// [`crate::interconnect::mesh`] / [`crate::interconnect::htree`] —
+/// mesh admits ~0.2–0.9 of a random permutation at 64 ports, the
+/// root-bottlenecked H-tree well under 0.6) so the scheduler keeps far
+/// fewer pods busy.  The constants are fitted against full-scheduler
+/// runs; `topology_pricing_orders_fabrics` (unit) and the fig12a
+/// ordering test in `tests/two_tier.rs` pin the resulting order.
+pub fn busy_efficiency(kind: Kind) -> f64 {
+    match kind {
+        Kind::Butterfly { expansion: 1 } => 0.67,
+        Kind::Butterfly { .. } | Kind::Crossbar | Kind::Benes => BUSY_EFFICIENCY,
+        Kind::Mesh => 0.22,
+        Kind::HTree => 0.08,
+    }
+}
 
 /// Mirror of the tiler's chain-splitting heuristic.
 fn analytic_ways(tm: usize, tn: usize, tk: usize, pods: usize) -> usize {
@@ -197,17 +230,57 @@ mod tests {
 
     #[test]
     fn analytic_tracks_scheduler() {
-        // The analytic model must stay within ~25% of the full
-        // scheduler on the benchmarks it is used to sweep.
+        // Per-benchmark error bounds over the full §5 zoo (not one
+        // blanket ~25% figure): the workloads the compile selector and
+        // the two-tier pre-filter sweep hardest keep the tight bound;
+        // the rest of the zoo is held under a looser ceiling so an
+        // analytic-model edit that wrecks *any* benchmark fails here
+        // loudly.  The exact per-benchmark errors are additionally
+        // pinned (3 decimals) as a golden table in
+        // `tests/two_tier.rs`.
         let cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 256);
         let opts = SimOptions { memory_model: false, ..Default::default() };
-        for name in ["resnet50", "bert-base"] {
-            let m = zoo::by_name(name).unwrap();
+        for m in zoo::benchmarks() {
+            let bound = match m.name.as_str() {
+                "ResNet50" | "BERT-base-s100" => 0.25,
+                _ => 0.40,
+            };
             let sim = simulate(&cfg, &m, &opts).utilization(&cfg);
             let ana = estimate(&cfg, &m, Strategy::RxR).utilization;
             let err = (sim - ana).abs() / sim;
-            assert!(err < 0.25, "{name}: sim {sim:.3} vs analytic {ana:.3}");
+            assert!(
+                err < bound,
+                "{}: sim {sim:.3} vs analytic {ana:.3} (err {err:.3}, bound {bound})",
+                m.name
+            );
         }
+    }
+
+    #[test]
+    fn topology_pricing_orders_fabrics() {
+        // The per-topology busy efficiency must order the fabrics the
+        // way the scheduler does on saturated layers: rearrangeable
+        // fabrics cheapest (Butterfly-2 == Crossbar at equal latency
+        // exposure), Benes next (round-trip chain gap), then the
+        // blocking Mesh, then the root-bottlenecked H-tree.  A single
+        // guaranteed-saturated layer keeps the ordering free of
+        // mixed-layer cancellation.
+        let mut g = crate::workloads::ModelGraph::new("saturated");
+        g.add("big", 4096, 1024, 1024, vec![]);
+        let cycles = |kind: Kind| {
+            let mut cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 256);
+            cfg.interconnect = kind;
+            estimate(&cfg, &g, Strategy::RxR).cycles
+        };
+        let b2 = cycles(Kind::Butterfly { expansion: 2 });
+        let xbar = cycles(Kind::Crossbar);
+        let benes = cycles(Kind::Benes);
+        let mesh = cycles(Kind::Mesh);
+        let htree = cycles(Kind::HTree);
+        assert_eq!(b2, xbar, "equal efficiency and fully hidden latency");
+        assert!(b2 < benes, "b2 {b2} vs benes {benes}");
+        assert!(benes < mesh, "benes {benes} vs mesh {mesh}");
+        assert!(mesh < htree, "mesh {mesh} vs htree {htree}");
     }
 
     #[test]

@@ -69,6 +69,19 @@ pub fn analyze_fleet(
     }
 }
 
+/// Linear fleet aggregation: `(nodes × peak_w, nodes × tops)`.
+///
+/// The analytic upper bound the cycle-accurate fleet metrics measure
+/// against — [`analyze_fleet`]'s `fleet_peak_w` is exactly this sum
+/// (peak power adds across nodes) while its achieved `eff_tops` pays
+/// dispatch imbalance and queueing below the linear throughput bound.
+/// [`crate::explore::EvalRecord`]'s `fleet_peak_w`/`fleet_tops` and
+/// the two-tier analytic fast path both derive their fleet columns
+/// here so the exhaustive and analytic tiers cannot drift.
+pub fn linear_fleet(peak_w: f64, tops: f64, nodes: usize) -> (f64, f64) {
+    (peak_w * nodes as f64, tops * nodes as f64)
+}
+
 impl std::fmt::Display for FleetSlo {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         writeln!(f, "{}", self.slo)?;
@@ -175,6 +188,14 @@ mod tests {
         let text = format!("{slo}");
         assert!(text.contains("2 nodes"));
         assert!(text.contains("dispatch"));
+    }
+
+    #[test]
+    fn linear_fleet_scales_both_axes() {
+        let (w, t) = linear_fleet(350.0, 20.0, 4);
+        assert_eq!(w, 1400.0);
+        assert_eq!(t, 80.0);
+        assert_eq!(linear_fleet(350.0, 20.0, 1), (350.0, 20.0));
     }
 
     #[test]

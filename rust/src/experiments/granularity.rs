@@ -39,13 +39,33 @@ pub(crate) fn config_for(dim: usize) -> ArchConfig {
 
 /// The Table 2 / Fig. 9 design space: square arrays at the paper's
 /// granularities, each zipped with its §6 pod count (monolithic rule
-/// included), crossed with the ten benchmarks.
-fn granularity_space(dims: &[usize], benches: Vec<crate::workloads::ModelGraph>) -> DesignSpace {
+/// included), crossed with the ten benchmarks.  Public so the two-tier
+/// certification tests and `benches/explore.rs` A/B the *exact* grids
+/// the experiments run.
+pub fn granularity_space(
+    dims: &[usize],
+    benches: Vec<crate::workloads::ModelGraph>,
+) -> DesignSpace {
     let pods: Vec<usize> = dims.iter().map(|&d| config_for(d).num_pods).collect();
     DesignSpace::baseline()
         .square_arrays(dims)
         .pods_zip(&pods)
         .workloads(benches)
+}
+
+/// Table 2's granularity axis (quick drops the slow sub-32 rows) —
+/// the dims `table2` itself sweeps.
+pub fn table2_dims(quick: bool) -> Vec<usize> {
+    SIZES.iter().filter(|s| !quick || s.0 >= 32).map(|s| s.0).collect()
+}
+
+/// Fig. 9's granularity axis.
+pub fn fig9_dims(quick: bool) -> Vec<usize> {
+    if quick {
+        vec![32, 128]
+    } else {
+        vec![16, 32, 64, 128, 256, 512]
+    }
 }
 
 /// Table 2: pods / peak power / peak@400W / util / effective@400W per
@@ -68,7 +88,7 @@ pub fn table2(opts: &ExpOptions) -> Result<()> {
     // Declare the (granularity × benchmark) grid and evaluate it on
     // the explore pipeline; records are in enumeration order (size
     // outer, benchmark inner), so each size's rows slice out directly.
-    let dims: Vec<usize> = sizes.iter().map(|s| s.0).collect();
+    let dims = table2_dims(opts.quick);
     let benches = zoo::benchmarks();
     let n_bench = benches.len();
     let x = Explorer::new().evaluate(&granularity_space(&dims, benches))?;
@@ -106,8 +126,7 @@ pub fn table2(opts: &ExpOptions) -> Result<()> {
 
 /// Fig. 9: effective throughput per benchmark per array size.
 pub fn fig9(opts: &ExpOptions) -> Result<()> {
-    let dims: Vec<usize> =
-        if opts.quick { vec![32, 128] } else { vec![16, 32, 64, 128, 256, 512] };
+    let dims = fig9_dims(opts.quick);
     let mut csv = CsvWriter::create(
         format!("{}/fig9.csv", opts.out_dir),
         &["model", "array", "util", "eff_tops"],

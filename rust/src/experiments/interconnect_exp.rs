@@ -26,17 +26,30 @@ pub const KINDS: &[(Kind, f64, f64, f64)] = &[
     (Kind::Benes, 72.38, 30.00, 0.92),
 ];
 
-/// Table 1: busy pods / cycles per tile op / mW per byte, per
-/// interconnect, averaged across workloads (the paper's context —
-/// matching its ~20-cycle tile ops — is a 16×16 array).
-pub fn table1(opts: &ExpOptions) -> Result<()> {
-    let names = if opts.quick {
+/// The Table 1 design space — the exact (interconnect × benchmark)
+/// grid `table1` sweeps on its 16×16 / 256-pod geometry, records
+/// kind-major in [`KINDS`] order.  Public for the two-tier
+/// certification tests.
+pub fn table1_space(quick: bool) -> DesignSpace {
+    let names = if quick {
         vec!["resnet50", "bert-base"]
     } else {
         vec!["inception", "resnet50", "densenet121", "bert-medium", "bert-base"]
     };
     let benches: Vec<_> = names.iter().map(|n| zoo::by_name(n).unwrap()).collect();
-    let n_bench = benches.len();
+    let kinds: Vec<Kind> = KINDS.iter().map(|&(k, _, _, _)| k).collect();
+    DesignSpace::baseline()
+        .arrays(&[ArrayDims::new(16, 16)])
+        .pods(&[256])
+        .interconnects(&kinds)
+        .workloads(benches)
+}
+
+/// Table 1: busy pods / cycles per tile op / mW per byte, per
+/// interconnect, averaged across workloads (the paper's context —
+/// matching its ~20-cycle tile ops — is a 16×16 array).
+pub fn table1(opts: &ExpOptions) -> Result<()> {
+    let n_bench = if opts.quick { 2 } else { 5 };
     let pods = 256usize;
     let mut csv = CsvWriter::create(
         format!("{}/table1.csv", opts.out_dir),
@@ -48,13 +61,7 @@ pub fn table1(opts: &ExpOptions) -> Result<()> {
     ]);
     // Declarative (interconnect × benchmark) grid on a 16×16 / 256-pod
     // geometry; records are kind-major in KINDS order.
-    let kinds: Vec<Kind> = KINDS.iter().map(|&(k, _, _, _)| k).collect();
-    let space = DesignSpace::baseline()
-        .arrays(&[ArrayDims::new(16, 16)])
-        .pods(&[pods])
-        .interconnects(&kinds)
-        .workloads(benches);
-    let x = Explorer::new().evaluate(&space)?;
+    let x = Explorer::new().evaluate(&table1_space(opts.quick))?;
     for (ki, &(kind, p_busy, p_cyc, p_mw)) in KINDS.iter().enumerate() {
         let recs = &x.records[ki * n_bench..(ki + 1) * n_bench];
         let busy = 100.0
@@ -76,10 +83,9 @@ pub fn table1(opts: &ExpOptions) -> Result<()> {
     Ok(())
 }
 
-/// Fig. 12a: effective throughput vs TDP for each interconnect as pods
-/// scale 32..256 (plus expansion-factor sensitivity, Fig. 12b-left).
-pub fn fig12a(opts: &ExpOptions) -> Result<()> {
-    let kinds: Vec<Kind> = vec![
+/// Fig. 12a's interconnect axis (all five topology families).
+pub fn fig12a_kinds() -> Vec<Kind> {
+    vec![
         Kind::Butterfly { expansion: 1 },
         Kind::Butterfly { expansion: 2 },
         Kind::Butterfly { expansion: 4 },
@@ -87,16 +93,34 @@ pub fn fig12a(opts: &ExpOptions) -> Result<()> {
         Kind::Crossbar,
         Kind::Mesh,
         Kind::HTree,
-    ];
-    let pods_sweep: Vec<usize> =
-        if opts.quick { vec![64, 256] } else { vec![32, 64, 128, 256] };
-    let names = if opts.quick {
+    ]
+}
+
+/// The Fig. 12a design space — the exact (pods × interconnect ×
+/// benchmark) grid `fig12a` sweeps at 32×32.  Public for the two-tier
+/// certification tests and `benches/explore.rs`.
+pub fn fig12a_space(quick: bool) -> DesignSpace {
+    let pods_sweep: Vec<usize> = if quick { vec![64, 256] } else { vec![32, 64, 128, 256] };
+    let names = if quick {
         vec!["resnet50"]
     } else {
         vec!["resnet50", "bert-base", "densenet121"]
     };
     let benches: Vec<_> = names.iter().map(|n| zoo::by_name(n).unwrap()).collect();
-    let n_bench = benches.len();
+    DesignSpace::baseline()
+        .square_arrays(&[32])
+        .pods(&pods_sweep)
+        .interconnects(&fig12a_kinds())
+        .workloads(benches)
+}
+
+/// Fig. 12a: effective throughput vs TDP for each interconnect as pods
+/// scale 32..256 (plus expansion-factor sensitivity, Fig. 12b-left).
+pub fn fig12a(opts: &ExpOptions) -> Result<()> {
+    let kinds = fig12a_kinds();
+    let pods_sweep: Vec<usize> =
+        if opts.quick { vec![64, 256] } else { vec![32, 64, 128, 256] };
+    let n_bench = if opts.quick { 1 } else { 3 };
     let mut csv = CsvWriter::create(
         format!("{}/fig12a.csv", opts.out_dir),
         &["interconnect", "pods", "tdp_w", "eff_tops", "icn_power_w"],
@@ -110,12 +134,7 @@ pub fn fig12a(opts: &ExpOptions) -> Result<()> {
     // compilation versus the hand-rolled sweep's single global
     // compile (`SweepExecutor::run_compiled`), in exchange for the
     // whole grid (not just execution) fanning across cores.
-    let space = DesignSpace::baseline()
-        .square_arrays(&[32])
-        .pods(&pods_sweep)
-        .interconnects(&kinds)
-        .workloads(benches);
-    let x = Explorer::new().evaluate(&space)?;
+    let x = Explorer::new().evaluate(&fig12a_space(opts.quick))?;
     let rec = |pi: usize, ki: usize, bi: usize| {
         &x.records[(pi * kinds.len() + ki) * n_bench + bi]
     };

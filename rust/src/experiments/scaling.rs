@@ -14,16 +14,33 @@ use crate::util::{csv::f, CsvWriter, Table};
 use crate::workloads::zoo;
 use crate::Result;
 
-/// Fig. 10: effective throughput as the pod count (and hence TDP)
-/// scales, for SOSA 32×32 / 64×64 and the monolithic baseline.
-pub fn fig10(opts: &ExpOptions) -> Result<()> {
-    let names = if opts.quick {
+/// The two Fig. 10 design spaces — `(sosa_grid, monolithic_ladder)`,
+/// the exact sweeps `fig10` evaluates.  Public for the two-tier
+/// certification tests.
+pub fn fig10_spaces(quick: bool) -> (DesignSpace, DesignSpace) {
+    let names = if quick {
         vec!["resnet152"]
     } else {
         vec!["resnet50", "resnet152", "bert-base"]
     };
     let benches: Vec<_> = names.iter().map(|n| zoo::by_name(n).unwrap()).collect();
-    let n_bench = benches.len();
+    let pod_sweep: Vec<usize> = if quick { vec![64, 256] } else { vec![32, 64, 128, 256, 512] };
+    let sosa = DesignSpace::baseline()
+        .square_arrays(&[32, 64])
+        .pods(&pod_sweep)
+        .workloads(benches.clone());
+    let mono_dims: Vec<usize> = if quick { vec![512] } else { vec![400, 512, 640, 768, 1024] };
+    let mono = DesignSpace::baseline()
+        .square_arrays(&mono_dims)
+        .pods(&[1])
+        .workloads(benches);
+    (sosa, mono)
+}
+
+/// Fig. 10: effective throughput as the pod count (and hence TDP)
+/// scales, for SOSA 32×32 / 64×64 and the monolithic baseline.
+pub fn fig10(opts: &ExpOptions) -> Result<()> {
+    let n_bench = if opts.quick { 1 } else { 3 };
     let mut csv = CsvWriter::create(
         format!("{}/fig10.csv", opts.out_dir),
         &["design", "pods_or_dim", "tdp_w", "eff_tops"],
@@ -48,11 +65,10 @@ pub fn fig10(opts: &ExpOptions) -> Result<()> {
 
     let pod_sweep: Vec<usize> =
         if opts.quick { vec![64, 256] } else { vec![32, 64, 128, 256, 512] };
+    let mono_dims: Vec<usize> =
+        if opts.quick { vec![512] } else { vec![400, 512, 640, 768, 1024] };
     // SOSA grid: (32×32, 64×64) × pod ladder, benchmarks inner.
-    let sosa = DesignSpace::baseline()
-        .square_arrays(&[32, 64])
-        .pods(&pod_sweep)
-        .workloads(benches.clone());
+    let (sosa, mono) = fig10_spaces(opts.quick);
     let x = Explorer::new().evaluate(&sosa)?;
     for (gi, &tag) in ["SOSA-32x32", "SOSA-64x64"].iter().enumerate() {
         for (pi, &pods) in pod_sweep.iter().enumerate() {
@@ -61,12 +77,6 @@ pub fn fig10(opts: &ExpOptions) -> Result<()> {
         }
     }
     // Monolithic baseline: one array, dims 400..1024 (paper's range).
-    let mono_dims: Vec<usize> =
-        if opts.quick { vec![512] } else { vec![400, 512, 640, 768, 1024] };
-    let mono = DesignSpace::baseline()
-        .square_arrays(&mono_dims)
-        .pods(&[1])
-        .workloads(benches);
     let x = Explorer::new().evaluate(&mono)?;
     for (di, &dim) in mono_dims.iter().enumerate() {
         let base = di * n_bench;

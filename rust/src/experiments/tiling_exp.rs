@@ -15,6 +15,35 @@ use crate::util::{csv::f, CsvWriter, Table};
 use crate::workloads::zoo;
 use crate::Result;
 
+/// Fig. 12b's partition-size axis.
+pub fn fig12b_ks(quick: bool) -> Vec<usize> {
+    if quick {
+        vec![8, 32, 128]
+    } else {
+        vec![4, 8, 16, 32, 64, 128, 256, 512]
+    }
+}
+
+/// The Fig. 12b design space — the exact (tiling × benchmark) grid
+/// `fig12b` sweeps on the baseline preset: every `Fixed(k)` then the
+/// no-partition baseline, spec-major.  Public for the two-tier
+/// certification tests.
+pub fn fig12b_space(quick: bool) -> DesignSpace {
+    let cfg = presets::by_name("baseline").expect("registered preset");
+    let names = if quick {
+        vec!["resnet50", "bert-base"]
+    } else {
+        vec!["resnet50", "resnet152", "densenet121", "bert-medium", "bert-base"]
+    };
+    let benches: Vec<_> = names.iter().map(|n| zoo::by_name(n).unwrap()).collect();
+    let mut specs: Vec<TilingSpec> = fig12b_ks(quick)
+        .iter()
+        .map(|&k| TilingSpec::Global(Strategy::Fixed(k)))
+        .collect();
+    specs.push(TilingSpec::Global(Strategy::NoPartition));
+    DesignSpace::new(cfg).tiling(&specs).workloads(benches)
+}
+
 /// Fig. 12b: sweep the partition size k around r (and include the
 /// no-partition baseline), reporting normalized effective throughput.
 /// Declared as a [`DesignSpace`] over the tiling axis (the third
@@ -22,18 +51,8 @@ use crate::Result;
 pub fn fig12b(opts: &ExpOptions) -> Result<()> {
     let cfg = presets::by_name("baseline").expect("registered preset");
     let r = cfg.array.r;
-    let names = if opts.quick {
-        vec!["resnet50", "bert-base"]
-    } else {
-        vec!["resnet50", "resnet152", "densenet121", "bert-medium", "bert-base"]
-    };
-    let benches: Vec<_> = names.iter().map(|n| zoo::by_name(n).unwrap()).collect();
-    let n_bench = benches.len();
-    let ks: Vec<usize> = if opts.quick {
-        vec![8, 32, 128]
-    } else {
-        vec![4, 8, 16, 32, 64, 128, 256, 512]
-    };
+    let n_bench = if opts.quick { 2 } else { 5 };
+    let ks = fig12b_ks(opts.quick);
 
     let mut csv = CsvWriter::create(
         format!("{}/fig12b.csv", opts.out_dir),
@@ -41,17 +60,12 @@ pub fn fig12b(opts: &ExpOptions) -> Result<()> {
     )?;
     // Tiling axis: every Fixed(k), then the no-partition baseline
     // (AI-MT-style); records are spec-major in that order.
-    let mut specs: Vec<TilingSpec> =
-        ks.iter().map(|&k| TilingSpec::Global(Strategy::Fixed(k))).collect();
-    specs.push(TilingSpec::Global(Strategy::NoPartition));
     let labels: Vec<String> = ks
         .iter()
         .map(|k| k.to_string())
         .chain(std::iter::once("none".into()))
         .collect();
-    let space =
-        DesignSpace::new(cfg.clone()).tiling(&specs).workloads(benches);
-    let x = Explorer::new().evaluate(&space)?;
+    let x = Explorer::new().evaluate(&fig12b_space(opts.quick))?;
     let results: Vec<(String, f64)> = labels
         .into_iter()
         .enumerate()

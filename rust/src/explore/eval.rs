@@ -14,6 +14,32 @@ use super::pareto::{Objective, ParetoFrontier};
 use super::space::{DesignPoint, DesignSpace, Skipped};
 use crate::error::Result;
 
+/// How a record's numbers were produced — the provenance column the
+/// two-tier pipeline surfaces in every report so filtered coverage is
+/// never silently truncated (see [`super::twotier`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// Full scheduler simulation by an exhaustive [`Explorer`] run.
+    Simulated,
+    /// Analytic fast path ([`super::twotier::analytic_record`]); never
+    /// re-simulated.
+    Analytic,
+    /// Analytically scored first, then re-run on the real scheduler by
+    /// the refinement policy (the stats are genuine simulation).
+    Refined,
+}
+
+impl Tier {
+    /// Stable lowercase label used in CSV/JSON reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Simulated => "sim",
+            Tier::Analytic => "analytic",
+            Tier::Refined => "refined",
+        }
+    }
+}
+
 /// One evaluated design point: the raw [`RunStats`] plus the derived
 /// §6 metrics (throughputs in TOps/s for readability).
 #[derive(Clone, Debug)]
@@ -54,10 +80,12 @@ pub struct EvalRecord {
     /// explorer ran with [`Explorer::traced`] (full event streams
     /// would dwarf the records, so sweeps keep the compact summary).
     pub trace: Option<TraceSummary>,
+    /// Provenance of the numbers (simulated / analytic / refined).
+    pub tier: Tier,
 }
 
 impl EvalRecord {
-    fn new(point: DesignPoint, stats: RunStats, tdp_w: f64) -> EvalRecord {
+    pub(crate) fn new(point: DesignPoint, stats: RunStats, tdp_w: f64) -> EvalRecord {
         let cfg = &point.cfg;
         let utilization = stats.utilization(cfg);
         let latency_s = stats.exec_seconds(cfg);
@@ -66,6 +94,8 @@ impl EvalRecord {
         let eff_tops = stats.effective_ops_at_tdp(cfg, tdp_w) / 1e12;
         let eff_tops_per_w = eff_tops / tdp_w;
         let nodes = point.nodes.max(1);
+        let (fleet_peak_w, fleet_tops) =
+            crate::cluster::slo::linear_fleet(peak_power_w, raw_tops, nodes);
         EvalRecord {
             cycles: stats.total_cycles,
             latency_s,
@@ -76,9 +106,10 @@ impl EvalRecord {
             eff_tops_per_w,
             tdp_w,
             nodes,
-            fleet_peak_w: peak_power_w * nodes as f64,
-            fleet_tops: raw_tops * nodes as f64,
+            fleet_peak_w,
+            fleet_tops,
             trace: None,
+            tier: Tier::Simulated,
             stats,
             point,
         }
@@ -245,6 +276,19 @@ impl Explorer {
     pub fn traced(mut self, on: bool) -> Explorer {
         self.trace = on;
         self
+    }
+
+    /// The TDP effective metrics normalize to — shared with the
+    /// analytic fast path so both tiers score identically.
+    pub(crate) fn normalization_tdp(&self) -> f64 {
+        self.tdp_w
+    }
+
+    /// Lift this explorer into the two-tier pipeline: analytic scoring
+    /// of every point, scheduler refinement of the candidates `policy`
+    /// selects (see [`super::twotier`]).
+    pub fn two_tier(self, policy: super::twotier::RefinementPolicy) -> super::twotier::TwoTier {
+        super::twotier::TwoTier::new(self, policy)
     }
 
     /// Enumerate and evaluate a space.

@@ -9,6 +9,8 @@
 //!
 //! ```text
 //!  point ──▶ constraint ──▶ evaluate ──▶ frontier
+//!                              │
+//!                              └─ two-tier: score ──▶ filter ──▶ refine ──▶ certify
 //! ```
 //!
 //! 1. **Point** — a [`DesignPoint`] is one fully specified candidate:
@@ -48,6 +50,15 @@
 //!    vs latency), and [`Report`] persists everything as CSV
 //!    ([`crate::util::csv`]) or JSON ([`crate::util::json`]).
 //!
+//! Step 3 has a fast path: **two-tier evaluation**
+//! ([`Explorer::two_tier`], [`twotier`]) scores every point with the
+//! analytic model (*score*), keeps only the analytic Pareto frontier
+//! plus an ε-slack neighborhood (*filter*), re-runs the survivors on
+//! the real scheduler (*refine*), and is pinned point-identical to the
+//! exhaustive frontier on every §5 grid (*certify* —
+//! `tests/two_tier.rs`).  Records carry a [`eval::Tier`] provenance
+//! marker so reports always show what was simulated vs estimated.
+//!
 //! The §6 experiment suite (`table1`, `table2`, `fig9`, `fig10`,
 //! `fig12a`, `fig12b`) is implemented as thin declarative
 //! `DesignSpace` definitions over this module, and the `sosa explore`
@@ -64,11 +75,13 @@ pub mod eval;
 pub mod pareto;
 pub mod report;
 pub mod space;
+pub mod twotier;
 
-pub use eval::{EvalRecord, Exploration, Explorer};
+pub use eval::{EvalRecord, Exploration, Explorer, Tier};
 pub use pareto::{Objective, ParetoFrontier};
 pub use report::Report;
 pub use space::{DesignPoint, DesignSpace, Enumeration, Skipped};
+pub use twotier::{RefinementPolicy, TwoTier, TwoTierOutcome, DEFAULT_SLACK_PCT};
 
 use crate::compile::{SelectMode, TilingSpec};
 use crate::tiling::Strategy;

@@ -10,30 +10,43 @@ use crate::Result;
 use super::eval::{EvalRecord, Exploration};
 use super::pareto::ParetoFrontier;
 use super::tiling_label;
+use super::twotier::TwoTierOutcome;
 
 /// Report writer over an [`Exploration`].
 pub struct Report<'a> {
     x: &'a Exploration,
     frontier: Option<&'a ParetoFrontier>,
+    two_tier: Option<&'a TwoTierOutcome>,
 }
 
-/// The CSV column set (one row per evaluated point).
+/// The CSV column set (one row per evaluated point).  `tier` is the
+/// record's provenance (`sim`/`analytic`/`refined`) so two-tier
+/// filtering is always visible in the artifact.
 pub const CSV_HEADER: &[&str] = &[
     "array", "pods", "interconnect", "tiling", "workload", "batch", "cycles",
     "latency_ms", "util", "raw_tops", "peak_w", "eff_tops", "eff_tops_per_w",
-    "nodes", "fleet_peak_w", "fleet_tops", "pareto",
+    "nodes", "fleet_peak_w", "fleet_tops", "tier", "pareto",
 ];
 
 impl<'a> Report<'a> {
     /// Report over an exploration's records.
     pub fn new(x: &'a Exploration) -> Report<'a> {
-        Report { x, frontier: None }
+        Report { x, frontier: None, two_tier: None }
     }
 
     /// Attach a frontier: CSV gains a `pareto` membership column and
     /// JSON a `frontier` section.
     pub fn with_frontier(mut self, frontier: &'a ParetoFrontier) -> Report<'a> {
         self.frontier = Some(frontier);
+        self
+    }
+
+    /// Attach a two-tier outcome: JSON gains a `two_tier` section with
+    /// the policy, slack, refined/analytic counts and the error
+    /// histogram snapshot (the filter's accounting — skip counts are
+    /// never silently dropped from the artifact).
+    pub fn with_two_tier(mut self, outcome: &'a TwoTierOutcome) -> Report<'a> {
+        self.two_tier = Some(outcome);
         self
     }
 
@@ -57,6 +70,7 @@ impl<'a> Report<'a> {
             r.nodes.to_string(),
             f(r.fleet_peak_w, 1),
             f(r.fleet_tops, 1),
+            r.tier.name().into(),
             if on_front { "1".into() } else { "0".into() },
         ]
     }
@@ -96,6 +110,7 @@ impl<'a> Report<'a> {
                         ("nodes", Json::int(r.nodes as u64)),
                         ("fleet_peak_w", Json::Num(r.fleet_peak_w)),
                         ("fleet_tops", Json::Num(r.fleet_tops)),
+                        ("tier", Json::str(r.tier.name())),
                     ];
                     if let Some(fr) = self.frontier {
                         pairs.push(("pareto", Json::Bool(fr.contains(i))));
@@ -118,6 +133,26 @@ impl<'a> Report<'a> {
                 .collect(),
         );
         let mut doc = vec![("records", records), ("skipped", skipped)];
+        if let Some(tt) = self.two_tier {
+            doc.push((
+                "two_tier",
+                Json::obj(vec![
+                    ("policy", Json::str(tt.policy.name())),
+                    ("policy_label", Json::str(tt.policy.label())),
+                    ("slack_pct", Json::Num(tt.slack_pct)),
+                    ("points", Json::int(tt.exploration.records.len() as u64)),
+                    ("refined", Json::int(tt.refined as u64)),
+                    ("analytic_kept", Json::int(tt.analytic_only as u64)),
+                    ("rounds", Json::int(tt.rounds as u64)),
+                    (
+                        "metrics",
+                        Json::Arr(
+                            tt.metrics.snapshot().into_iter().map(Json::str).collect(),
+                        ),
+                    ),
+                ]),
+            ));
+        }
         if let Some(fr) = self.frontier {
             doc.push((
                 "frontier",
@@ -183,6 +218,45 @@ mod tests {
         let json = std::fs::read_to_string(dir.join("r.json")).unwrap();
         assert!(json.contains("\"records\":["));
         assert!(json.contains("\"frontier\":{\"objectives\":[\"eff_tops_per_w\",\"latency\"]"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tier_column_and_two_tier_section() {
+        let mut g = ModelGraph::new("toy");
+        g.add("fc", 64, 64, 64, vec![]);
+        let space = DesignSpace::new(ArchConfig::with_array(ArrayDims::new(16, 16), 16))
+            .pods(&[8, 16])
+            .workload(g)
+            .sim(SimOptions { memory_model: false, ..SimOptions::default() });
+        let objectives = [Objective::EffTopsPerWatt];
+        let tt = Explorer::with_threads(1)
+            .two_tier(crate::explore::RefinementPolicy::default())
+            .evaluate(&space, &objectives)
+            .unwrap();
+        let dir = std::env::temp_dir().join("sosa_explore_report_tier");
+        Report::new(&tt.exploration)
+            .with_frontier(&tt.frontier)
+            .with_two_tier(&tt)
+            .write_csv(dir.join("r.csv"))
+            .unwrap();
+        Report::new(&tt.exploration)
+            .with_frontier(&tt.frontier)
+            .with_two_tier(&tt)
+            .write_json(dir.join("r.json"))
+            .unwrap();
+        let csv = std::fs::read_to_string(dir.join("r.csv")).unwrap();
+        assert!(csv.lines().next().unwrap().ends_with(",tier,pareto"));
+        let tagged = csv
+            .lines()
+            .skip(1)
+            .filter(|l| l.contains(",analytic,") || l.contains(",refined,"))
+            .count();
+        assert_eq!(tagged, tt.exploration.records.len(), "every row carries a tier");
+        let json = std::fs::read_to_string(dir.join("r.json")).unwrap();
+        assert!(json.contains("\"two_tier\":{\"policy\":\"frontier\""));
+        assert!(json.contains("\"refined\":"));
+        assert!(json.contains("twotier.cycle_error_pct"));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,0 +1,507 @@
+//! Two-tier exploration: analytic pre-filter, certified scheduler
+//! refinement.
+//!
+//! The joint design space (granularity × interconnect × tiling × batch
+//! × fleet size) is too large to enumerate with the cycle-accurate
+//! scheduler, but [`crate::analytic`] tracks it closely enough to rank
+//! candidates.  The pipeline here scores **every** point analytically
+//! ([`analytic_record`] — same [`EvalRecord`] fields, `tier =
+//! analytic`), then a [`RefinementPolicy`] selects the candidates that
+//! could plausibly be Pareto-optimal and re-runs **only those** on the
+//! real scheduler through the exhaustive [`Explorer`] (warm worker
+//! pool); refined records replace their analytic counterparts before
+//! [`ParetoFrontier::extract`].
+//!
+//! ```text
+//!  score (analytic, all points)
+//!    ──▶ filter (ε-dominance with slack, or top-k)
+//!      ──▶ refine (scheduler, selected points only)
+//!        ──▶ certify (refined frontier == exhaustive frontier)
+//! ```
+//!
+//! # Why the filter is safe
+//!
+//! Every cycle-derived objective (`eff_tops_per_w`, `eff_tops`,
+//! `raw_tops`, `util`, `latency`, `cycles`, `fleet_tops`) scales as
+//! `1/cycles` with the **same** relative error, and the power
+//! objectives (`peak_w`, `fleet_peak_w`) are exact in the analytic
+//! bridge — the power model needs no simulation.  A point can
+//! therefore only be wrongly filtered if the analytic model misranks
+//! it beyond the slack margin.  The filter keeps every point not
+//! ε-dominated (beaten by a factor of `1 + slack_pct/100` on *every*
+//! objective) and, after each refinement round, **adapts**: the
+//! observed spread of sim/analytic cycle ratios across refined points
+//! sets a lower bound on the slack actually needed (systematic bias
+//! cancels in the ratio spread), and the loop re-selects with the
+//! widened slack until no fresh candidate appears.  At that fixpoint
+//! every frontier member has real scheduler numbers.
+//!
+//! Certification is load-bearing, not assumed: `tests/two_tier.rs`
+//! pins point-identity of the refined frontier against the exhaustive
+//! frontier on every §5 grid, and the per-point analytic-vs-simulated
+//! error histogram (`twotier.cycle_error_pct` in the returned
+//! [`Metrics`]) records the evidence behind [`DEFAULT_SLACK_PCT`].
+//! Reports carry a `tier` column plus the filter's skip count so
+//! coverage is never silently truncated; when in doubt (new workload
+//! classes, `Auto` tiling, untested objective mixes) run `--refine
+//! exhaustive` and diff.
+
+use crate::analytic;
+use crate::obs::Metrics;
+use crate::stats::RunStats;
+use crate::tiling::Strategy;
+
+use super::eval::{EvalRecord, Exploration, Explorer, Tier};
+use super::pareto::{Objective, ParetoFrontier};
+use super::space::{DesignPoint, DesignSpace};
+use crate::compile::TilingSpec;
+use crate::error::Result;
+
+/// Default ε-dominance slack, percent.  Chosen from the recorded
+/// analytic-vs-simulated cycle error histogram on the §5 grids (see
+/// `tests/two_tier.rs` and the pinned error table): per-benchmark
+/// error stays within the `analytic_tracks_scheduler` bounds, and the
+/// *spread* of errors inside one grid — the quantity that actually
+/// determines filter safety, since systematic bias cancels — sits
+/// well under this margin.  The adaptive loop widens it further when
+/// a grid's observed spread disagrees.
+pub const DEFAULT_SLACK_PCT: f64 = 25.0;
+
+/// Histogram bounds (percent) for `twotier.cycle_error_pct`.
+const ERROR_BOUNDS: &[f64] = &[1.0, 2.0, 5.0, 10.0, 15.0, 20.0, 25.0, 35.0, 50.0];
+
+/// How the second tier picks candidates for real scheduler runs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RefinementPolicy {
+    /// Refine every point — the A/B control: two-tier with
+    /// `Exhaustive` must equal a plain [`Explorer`] run record for
+    /// record (modulo the `tier` marker).
+    Exhaustive,
+    /// Refine the analytic Pareto frontier plus its ε-neighborhood:
+    /// a point survives unless another beats it by `1 + slack_pct/100`
+    /// on **every** objective.  The default, with adaptive widening.
+    Frontier {
+        /// ε-dominance slack, percent (see [`DEFAULT_SLACK_PCT`]).
+        slack_pct: f64,
+    },
+    /// Refine the `n` best points by the primary objective (plus the
+    /// running frontier).  Cheaper than `Frontier` on huge spaces, but
+    /// certified only for single-objective top-1 style queries.
+    TopK(usize),
+}
+
+impl Default for RefinementPolicy {
+    fn default() -> Self {
+        RefinementPolicy::Frontier { slack_pct: DEFAULT_SLACK_PCT }
+    }
+}
+
+impl RefinementPolicy {
+    /// Parse the CLI grammar: `exhaustive`, `frontier`, `topk:N`.
+    pub fn parse(s: &str) -> Option<RefinementPolicy> {
+        match s.to_lowercase().as_str() {
+            "exhaustive" => Some(RefinementPolicy::Exhaustive),
+            "frontier" => Some(RefinementPolicy::default()),
+            other => {
+                let n = other.strip_prefix("topk:")?;
+                n.parse::<usize>().ok().filter(|&n| n > 0).map(RefinementPolicy::TopK)
+            }
+        }
+    }
+
+    /// Stable policy family name (report/JSON value).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RefinementPolicy::Exhaustive => "exhaustive",
+            RefinementPolicy::Frontier { .. } => "frontier",
+            RefinementPolicy::TopK(_) => "topk",
+        }
+    }
+
+    /// Human-readable label with parameters.
+    pub fn label(&self) -> String {
+        match self {
+            RefinementPolicy::Exhaustive => "exhaustive".into(),
+            RefinementPolicy::Frontier { slack_pct } => {
+                format!("frontier(slack={slack_pct}%)")
+            }
+            RefinementPolicy::TopK(n) => format!("topk:{n}"),
+        }
+    }
+}
+
+/// The per-layer strategies the analytic scorer prices a point's
+/// tiling spec at.  `Auto` specs are proxied by uniform `r×r` — the
+/// selector's never-worse-than-`r×r` guarantee makes this a lower
+/// bound on quality, and `Auto` points are re-selected for real during
+/// refinement anyway (the §5 grids never sweep `Auto`).
+pub fn analytic_strategies(point: &DesignPoint) -> Vec<Strategy> {
+    let n = point.workload.ops.len();
+    match point.spec() {
+        TilingSpec::Global(s) => vec![*s; n],
+        TilingSpec::PerLayer(v) => v.clone(),
+        TilingSpec::Auto(_) => vec![Strategy::RxR; n],
+    }
+}
+
+/// Score one point analytically into a full [`EvalRecord`] (`tier =
+/// analytic`): [`analytic::estimate_per_layer`] supplies cycles and
+/// MACs (the workload `Arc` already carries the batch), and the
+/// derived metrics — utilization, latency, raw/effective TOps,
+/// TOps/s/W, exact peak power, linear fleet aggregates — come from the
+/// same [`EvalRecord`] math the exhaustive tier uses, so the two tiers
+/// cannot drift in anything but the cycle estimate itself.
+pub fn analytic_record(point: &DesignPoint, tdp_w: f64) -> EvalRecord {
+    let strategies = analytic_strategies(point);
+    let est = analytic::estimate_per_layer(&point.cfg, &point.workload, &strategies);
+    let stats = RunStats {
+        total_cycles: est.cycles.ceil() as u64,
+        useful_macs: est.macs,
+        ..Default::default()
+    };
+    let mut rec = EvalRecord::new(point.clone(), stats, tdp_w);
+    rec.tier = Tier::Analytic;
+    rec
+}
+
+/// The two-tier pipeline: an [`Explorer`] (tier 2) plus a
+/// [`RefinementPolicy`] (the tier-1 → tier-2 filter).  Built via
+/// [`Explorer::two_tier`].
+#[derive(Clone, Copy, Debug)]
+pub struct TwoTier {
+    explorer: Explorer,
+    policy: RefinementPolicy,
+}
+
+/// Outcome of a two-tier run: records in enumeration order (each
+/// marked `analytic` or `refined`), the frontier over them, and the
+/// filter's accounting.
+#[derive(Clone, Debug)]
+pub struct TwoTierOutcome {
+    /// One record per point, enumeration order; `tier` says which
+    /// tier produced each record's numbers.
+    pub exploration: Exploration,
+    /// Frontier over the (post-refinement) records.
+    pub frontier: ParetoFrontier,
+    /// The policy that ran.
+    pub policy: RefinementPolicy,
+    /// Final ε slack in percent (≥ the requested slack when the
+    /// adaptive loop widened it; 0 for `Exhaustive`/`TopK`).
+    pub slack_pct: f64,
+    /// Points re-run on the real scheduler.
+    pub refined: usize,
+    /// Points whose records stayed analytic (the filter's skip count).
+    pub analytic_only: usize,
+    /// Select → refine rounds until fixpoint.
+    pub rounds: usize,
+    /// Counters plus the `twotier.cycle_error_pct` histogram — the
+    /// per-point analytic-vs-simulated evidence behind the slack.
+    pub metrics: Metrics,
+}
+
+impl TwoTier {
+    pub(crate) fn new(explorer: Explorer, policy: RefinementPolicy) -> TwoTier {
+        TwoTier { explorer, policy }
+    }
+
+    /// Enumerate and evaluate a space two-tier.
+    pub fn evaluate(
+        &self,
+        space: &DesignSpace,
+        objectives: &[Objective],
+    ) -> Result<TwoTierOutcome> {
+        let e = space.enumerate()?;
+        let mut out = self.evaluate_points(&e.points, objectives);
+        out.exploration.skipped = e.skipped;
+        Ok(out)
+    }
+
+    /// Evaluate pre-built points two-tier (records in point order).
+    pub fn evaluate_points(
+        &self,
+        points: &[DesignPoint],
+        objectives: &[Objective],
+    ) -> TwoTierOutcome {
+        let tdp = self.explorer.normalization_tdp();
+        let mut records: Vec<EvalRecord> =
+            points.iter().map(|p| analytic_record(p, tdp)).collect();
+        let ana_cycles: Vec<f64> = records.iter().map(|r| r.cycles as f64).collect();
+        let mut refined = vec![false; records.len()];
+        let mut metrics = Metrics::new();
+        let mut slack_pct = match self.policy {
+            RefinementPolicy::Frontier { slack_pct } => slack_pct.max(0.0),
+            _ => 0.0,
+        };
+        let mut rounds = 0usize;
+        loop {
+            // Select candidates over the *current* records (analytic
+            // for unrefined points, real for refined ones), always
+            // unioned with the running frontier: a point the mixed
+            // record set says is optimal must never ship analytic.
+            let mut want = match self.policy {
+                RefinementPolicy::Exhaustive => (0..records.len()).collect::<Vec<_>>(),
+                RefinementPolicy::Frontier { .. } => {
+                    epsilon_survivors(&records, objectives, slack_pct)
+                }
+                RefinementPolicy::TopK(n) => top_k(&records, objectives, n),
+            };
+            for &m in &ParetoFrontier::extract(&records, objectives).members {
+                if !want.contains(&m) {
+                    want.push(m);
+                }
+            }
+            want.sort_unstable();
+            let fresh: Vec<usize> = want.into_iter().filter(|&i| !refined[i]).collect();
+            if fresh.is_empty() {
+                break;
+            }
+            rounds += 1;
+            let pts: Vec<DesignPoint> = fresh.iter().map(|&i| points[i].clone()).collect();
+            for (&i, mut rec) in fresh.iter().zip(self.explorer.evaluate_points(&pts)) {
+                let sim = rec.cycles as f64;
+                if sim > 0.0 {
+                    let err = 100.0 * (ana_cycles[i] - sim).abs() / sim;
+                    metrics.observe("twotier.cycle_error_pct", ERROR_BOUNDS, err);
+                }
+                rec.tier = Tier::Refined;
+                records[i] = rec;
+                refined[i] = true;
+            }
+            // Adaptive widening (Frontier only): the spread of
+            // sim/analytic cycle ratios over everything refined so far
+            // bounds the slack the ε-filter actually needs — relative
+            // comparisons only feel the *spread*, systematic bias
+            // cancels.  Slack only grows, the refined set only grows,
+            // so the loop reaches a fixpoint in ≤ n rounds.
+            if let RefinementPolicy::Frontier { .. } = self.policy {
+                let mut rmin = f64::INFINITY;
+                let mut rmax = 0.0f64;
+                for i in 0..records.len() {
+                    if refined[i] && ana_cycles[i] > 0.0 {
+                        let ratio = records[i].cycles as f64 / ana_cycles[i];
+                        rmin = rmin.min(ratio);
+                        rmax = rmax.max(ratio);
+                    }
+                }
+                if rmin.is_finite() && rmin > 0.0 {
+                    let needed = (rmax / rmin - 1.0) * 100.0;
+                    slack_pct = slack_pct.max(needed);
+                }
+            }
+        }
+        let refined_n = refined.iter().filter(|&&r| r).count();
+        metrics.inc("twotier.points", records.len() as u64);
+        metrics.inc("twotier.refined", refined_n as u64);
+        metrics.inc("twotier.analytic_kept", (records.len() - refined_n) as u64);
+        metrics.inc("twotier.rounds", rounds as u64);
+        let frontier = ParetoFrontier::extract(&records, objectives);
+        TwoTierOutcome {
+            analytic_only: records.len() - refined_n,
+            refined: refined_n,
+            rounds,
+            slack_pct,
+            policy: self.policy,
+            frontier,
+            exploration: Exploration { records, skipped: Vec::new() },
+            metrics,
+        }
+    }
+}
+
+/// `a` beats `b` by at least `factor` on **every** objective (with a
+/// strict term so exact ties — including all-zero metrics — never
+/// count as a beat in either direction).
+fn beats_by(a: &EvalRecord, b: &EvalRecord, objectives: &[Objective], factor: f64) -> bool {
+    objectives.iter().all(|o| {
+        let (x, y) = (o.raw(a), o.raw(b));
+        if o.maximize() {
+            x >= y * factor && x > y
+        } else {
+            x * factor <= y && x < y
+        }
+    })
+}
+
+/// Indices not ε-dominated: everything some other record does **not**
+/// beat by `1 + slack_pct/100` on every objective.  With zero slack
+/// this still over-approximates the frontier (ties survive).
+fn epsilon_survivors(
+    records: &[EvalRecord],
+    objectives: &[Objective],
+    slack_pct: f64,
+) -> Vec<usize> {
+    let factor = 1.0 + slack_pct / 100.0;
+    (0..records.len())
+        .filter(|&i| {
+            !records
+                .iter()
+                .enumerate()
+                .any(|(j, other)| j != i && beats_by(other, &records[i], objectives, factor))
+        })
+        .collect()
+}
+
+/// The `n` best indices by the primary objective (ties keep
+/// enumeration order), ascending index order.
+fn top_k(records: &[EvalRecord], objectives: &[Objective], n: usize) -> Vec<usize> {
+    let primary = objectives.first().copied().unwrap_or(Objective::EffTopsPerWatt);
+    let mut idx: Vec<usize> = (0..records.len()).collect();
+    idx.sort_by(|&a, &b| {
+        primary
+            .score(&records[b])
+            .total_cmp(&primary.score(&records[a]))
+            .then(a.cmp(&b))
+    });
+    idx.truncate(n);
+    idx.sort_unstable();
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchConfig, ArrayDims};
+    use crate::interconnect::Kind;
+    use crate::sim::SimOptions;
+    use crate::workloads::ModelGraph;
+
+    fn toy() -> ModelGraph {
+        let mut g = ModelGraph::new("toy");
+        let a = g.add("a", 100, 64, 96, vec![]);
+        g.add("b", 100, 96, 64, vec![a]);
+        g
+    }
+
+    fn toy_space() -> DesignSpace {
+        DesignSpace::new(ArchConfig::with_array(ArrayDims::new(16, 16), 16))
+            .square_arrays(&[16, 32])
+            .pods(&[16])
+            .interconnects(&[Kind::Butterfly { expansion: 2 }, Kind::Benes])
+            .workload(toy())
+            .sim(SimOptions { memory_model: false, ..SimOptions::default() })
+    }
+
+    #[test]
+    fn policy_grammar_round_trips() {
+        assert_eq!(
+            RefinementPolicy::parse("exhaustive"),
+            Some(RefinementPolicy::Exhaustive)
+        );
+        assert_eq!(
+            RefinementPolicy::parse("frontier"),
+            Some(RefinementPolicy::Frontier { slack_pct: DEFAULT_SLACK_PCT })
+        );
+        assert_eq!(RefinementPolicy::parse("topk:5"), Some(RefinementPolicy::TopK(5)));
+        assert_eq!(RefinementPolicy::parse("topk:0"), None);
+        assert_eq!(RefinementPolicy::parse("magic"), None);
+        for p in ["exhaustive", "frontier", "topk:5"] {
+            let policy = RefinementPolicy::parse(p).unwrap();
+            assert!(p.starts_with(policy.name()));
+        }
+    }
+
+    #[test]
+    fn analytic_record_matches_eval_math() {
+        // The analytic bridge must produce internally consistent
+        // derived metrics — same invariants the exhaustive tier's
+        // records satisfy — and exact power/fleet columns.
+        let e = toy_space().fleet_sizes(&[4]).enumerate().unwrap();
+        for p in &e.points {
+            let r = analytic_record(p, 400.0);
+            assert_eq!(r.tier, Tier::Analytic);
+            assert!(r.cycles > 0 && r.utilization > 0.0);
+            assert!((r.eff_tops_per_w * r.tdp_w - r.eff_tops).abs() < 1e-9);
+            assert_eq!(r.peak_power_w, crate::power::peak_power(&p.cfg).total());
+            assert_eq!(r.fleet_peak_w, r.peak_power_w * 4.0);
+            assert_eq!(r.fleet_tops, r.raw_tops * 4.0);
+            assert_eq!(r.stats.useful_macs, p.workload.total_macs());
+        }
+    }
+
+    #[test]
+    fn exhaustive_policy_equals_plain_explorer() {
+        let objectives = [Objective::EffTopsPerWatt];
+        let space = toy_space();
+        let plain = Explorer::with_threads(2).evaluate(&space).unwrap();
+        let two = Explorer::with_threads(2)
+            .two_tier(RefinementPolicy::Exhaustive)
+            .evaluate(&space, &objectives)
+            .unwrap();
+        assert_eq!(two.refined, plain.records.len());
+        assert_eq!(two.analytic_only, 0);
+        for (a, b) in plain.records.iter().zip(&two.exploration.records) {
+            assert_eq!(a.stats, b.stats, "{}", a.point.label());
+            assert_eq!(b.tier, Tier::Refined);
+        }
+        assert_eq!(two.frontier.members, plain.frontier(&objectives).members);
+    }
+
+    #[test]
+    fn frontier_policy_certifies_on_toy_space() {
+        // Tiny in-crate certification (the §5 grids live in
+        // tests/two_tier.rs): frontier point-identity plus genuine
+        // scheduler stats on every frontier member.
+        let objectives = [Objective::EffTopsPerWatt, Objective::Latency];
+        let space = toy_space();
+        let plain = Explorer::with_threads(2).evaluate(&space).unwrap();
+        let two = Explorer::with_threads(2)
+            .two_tier(RefinementPolicy::default())
+            .evaluate(&space, &objectives)
+            .unwrap();
+        assert_eq!(two.frontier.members, plain.frontier(&objectives).members);
+        for &m in &two.frontier.members {
+            let rec = &two.exploration.records[m];
+            assert_eq!(rec.tier, Tier::Refined, "frontier members must be refined");
+            assert_eq!(rec.stats, plain.records[m].stats);
+        }
+        assert_eq!(two.refined + two.analytic_only, plain.records.len());
+        assert_eq!(
+            two.metrics.counter("twotier.refined") as usize,
+            two.refined,
+            "metrics mirror the outcome counters"
+        );
+        assert_eq!(
+            two.metrics.histogram("twotier.cycle_error_pct").unwrap().total as usize,
+            two.refined
+        );
+    }
+
+    #[test]
+    fn topk_refines_at_most_k_plus_frontier() {
+        let objectives = [Objective::EffTopsPerWatt];
+        let two = Explorer::with_threads(1)
+            .two_tier(RefinementPolicy::TopK(1))
+            .evaluate(&toy_space(), &objectives)
+            .unwrap();
+        assert!(two.refined >= 1);
+        assert!(two.refined < two.exploration.records.len(), "topk:1 must filter");
+        for &m in &two.frontier.members {
+            assert_eq!(two.exploration.records[m].tier, Tier::Refined);
+        }
+    }
+
+    #[test]
+    fn epsilon_filter_keeps_ties_and_respects_slack() {
+        let e = toy_space().enumerate().unwrap();
+        let recs: Vec<EvalRecord> =
+            e.points.iter().map(|p| analytic_record(p, 400.0)).collect();
+        let objectives = [Objective::EffTopsPerWatt];
+        // Zero slack keeps at least the analytic argmax; infinite
+        // slack keeps everything.
+        let none = epsilon_survivors(&recs, &objectives, 0.0);
+        assert!(!none.is_empty());
+        let all = epsilon_survivors(&recs, &objectives, 1e9);
+        assert_eq!(all.len(), recs.len());
+        // Identical records can never eliminate each other (strict
+        // term guards exact ties).
+        let twins = vec![recs[0].clone(), recs[0].clone()];
+        assert_eq!(epsilon_survivors(&twins, &objectives, 0.0).len(), 2);
+        // Survivor count grows monotonically with slack.
+        let s10 = epsilon_survivors(&recs, &objectives, 10.0);
+        let s50 = epsilon_survivors(&recs, &objectives, 50.0);
+        assert!(none.len() <= s10.len() && s10.len() <= s50.len());
+        for i in &none {
+            assert!(s50.contains(i));
+        }
+    }
+}

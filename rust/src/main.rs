@@ -237,10 +237,50 @@ fn cmd_explore(args: &Args) {
         enumeration.points.len(),
         space.cardinality()
     );
-    let x = sosa::explore::Exploration {
-        records: explorer.evaluate_points(&enumeration.points),
-        skipped: enumeration.skipped,
-    };
+    let two_tier: Option<sosa::explore::TwoTierOutcome>;
+    let x: sosa::explore::Exploration;
+    if args.flag("two-tier") {
+        let mut policy = match args.get("refine") {
+            Some(s) => sosa::explore::RefinementPolicy::parse(s).unwrap_or_else(|| {
+                panic!("unknown --refine {s} (use exhaustive|frontier|topk:N)")
+            }),
+            None => sosa::explore::RefinementPolicy::default(),
+        };
+        if let Some(pct) = args.get_parse::<f64>("slack-pct") {
+            policy = sosa::explore::RefinementPolicy::Frontier { slack_pct: pct };
+        }
+        let mut outcome =
+            explorer.two_tier(policy).evaluate_points(&enumeration.points, &objectives);
+        outcome.exploration.skipped = enumeration.skipped;
+        println!(
+            "two-tier [{}]: {} refined, {} kept analytic over {} round(s), final slack {:.1}%",
+            outcome.policy.label(),
+            outcome.refined,
+            outcome.analytic_only,
+            outcome.rounds,
+            outcome.slack_pct
+        );
+        if let Some(h) = outcome.metrics.histogram("twotier.cycle_error_pct") {
+            let q = |q: f64| match h.quantile_bound(q) {
+                Some(b) => format!("<= {b}%"),
+                None => "above every bucket".into(),
+            };
+            println!(
+                "analytic cycle error vs scheduler: p50 {}, p95 {} ({} refined samples)",
+                q(0.5),
+                q(0.95),
+                h.total
+            );
+        }
+        x = outcome.exploration.clone();
+        two_tier = Some(outcome);
+    } else {
+        x = sosa::explore::Exploration {
+            records: explorer.evaluate_points(&enumeration.points),
+            skipped: enumeration.skipped,
+        };
+        two_tier = None;
+    }
 
     let mut table = Table::new(&[
         "array", "pods", "interconnect", "tiling", "workload", "batch",
@@ -289,7 +329,10 @@ fn cmd_explore(args: &Args) {
         matches!(format, "csv" | "json" | "both"),
         "unknown --format {format} (use csv|json|both)"
     );
-    let report = Report::new(&x).with_frontier(&frontier);
+    let mut report = Report::new(&x).with_frontier(&frontier);
+    if let Some(tt) = &two_tier {
+        report = report.with_two_tier(tt);
+    }
     if format == "csv" || format == "both" {
         let path = format!("{out}/explore.csv");
         report.write_csv(&path).expect("write csv");
@@ -801,6 +844,8 @@ fn main() {
             eprintln!("           [--batches 1,8] [--tdp 400] [--sram-max-kb N]");
             eprintln!("           [--fleet-sizes 1,2,4 --fleet-tdp W]");
             eprintln!("           [--objective eff_tops_per_w,latency] [--pareto]");
+            eprintln!("           [--two-tier [--slack-pct N]");
+            eprintln!("                       [--refine exhaustive|frontier|topk:N]]");
             eprintln!("           [--format csv|json|both] [--out results] [--quick]");
             eprintln!("  check    [--preset P | --array RxC --pods N [--interconnect X]]");
             eprintln!("           [--model M --batch B --tiling rxr|none|fixed:K|auto]");

@@ -47,6 +47,26 @@ impl Histogram {
         self.counts[idx] += 1;
         self.total += 1;
     }
+
+    /// Smallest bucket bound covering at least fraction `q` of the
+    /// observations (a conservative quantile: the true q-quantile is
+    /// `<=` the returned bound).  `None` when the histogram is empty
+    /// or only the overflow bucket reaches `q` — the caller then knows
+    /// the quantile exceeds every configured bound.
+    pub fn quantile_bound(&self, q: f64) -> Option<f64> {
+        if self.total == 0 {
+            return None;
+        }
+        let need = q * self.total as f64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen as f64 >= need {
+                return self.bounds.get(i).copied();
+            }
+        }
+        None
+    }
 }
 
 /// Counter + histogram registry with deterministic snapshots.
@@ -187,6 +207,25 @@ mod tests {
         let h = m.histogram("h").unwrap();
         assert_eq!(h.counts, vec![2, 1, 1], "le=1: {{0.5, 1.0}}, le=10: {{5}}, +inf: {{100}}");
         assert_eq!(h.total, 4);
+    }
+
+    #[test]
+    fn quantile_bound_walks_buckets_conservatively() {
+        let mut m = Metrics::new();
+        let bounds = [1.0, 10.0, 100.0];
+        for v in [0.5, 0.7, 5.0, 50.0] {
+            m.observe("h", &bounds, v);
+        }
+        let h = m.histogram("h").unwrap();
+        assert_eq!(h.quantile_bound(0.5), Some(1.0), "2/4 within le=1");
+        assert_eq!(h.quantile_bound(0.75), Some(10.0));
+        assert_eq!(h.quantile_bound(1.0), Some(100.0));
+        m.observe("h", &bounds, 1e6); // overflow bucket
+        let h = m.histogram("h").unwrap();
+        assert_eq!(h.quantile_bound(1.0), None, "p100 exceeds every bound");
+        assert_eq!(h.quantile_bound(0.8), Some(100.0));
+        let empty = Histogram::new("e", &bounds);
+        assert_eq!(empty.quantile_bound(0.5), None);
     }
 
     #[test]

@@ -1,0 +1,265 @@
+//! Two-tier exploration certification: the analytic pre-filter +
+//! scheduler refinement pipeline (`Explorer::two_tier`) must produce a
+//! Pareto frontier **point-identical** to the exhaustive run — with
+//! genuine scheduler stats on every frontier member — on every §5
+//! grid (Table 1, Table 2, Fig. 9, Fig. 10, Fig. 12a, Fig. 12b).
+//!
+//! Three layers of evidence:
+//!
+//! 1. **Certification** — each grid's quick space (the exact
+//!    `DesignSpace` the experiment sweeps, exported from
+//!    `sosa::experiments::*`) is evaluated exhaustively and two-tier;
+//!    frontiers must match member for member.  `benches/explore.rs`
+//!    repeats the A/B on the *full* fig9/fig12a grids and gates the
+//!    ≥10× speedup.
+//! 2. **Error accounting** — a pinned per-benchmark analytic-vs-
+//!    scheduler error table (`tests/golden/analytic_error.csv`)
+//!    records the evidence behind `DEFAULT_SLACK_PCT`, and a
+//!    topology-ordering check shows the per-fabric busy-efficiency
+//!    pricing ranks interconnects the way the scheduler does.
+//! 3. **Artifact pinning** — the two-tier report JSON for the CLI's
+//!    `--quick` smoke space is snapshot-pinned with its
+//!    analytic/refined/skipped accounting, so the filter can never
+//!    silently change what it skips.
+//!
+//! Snapshots follow the repo convention (`tests/golden/README.md`):
+//! blessed when absent, exact-match when present, re-bless intentional
+//! changes with `SOSA_BLESS_GOLDEN=1 cargo test --test two_tier`.
+
+use std::path::{Path, PathBuf};
+
+use sosa::analytic;
+use sosa::arch::{ArchConfig, ArrayDims};
+use sosa::experiments::granularity::{fig9_dims, granularity_space, table2_dims};
+use sosa::experiments::interconnect_exp::{fig12a_space, table1_space};
+use sosa::experiments::scaling::fig10_spaces;
+use sosa::experiments::tiling_exp::fig12b_space;
+use sosa::explore::{DesignSpace, Explorer, Objective, RefinementPolicy, Report, Tier};
+use sosa::interconnect::Kind;
+use sosa::sim::{simulate, SimOptions};
+use sosa::tiling::Strategy;
+use sosa::util::csv::f;
+use sosa::workloads::zoo;
+use sosa::TilingSpec;
+
+fn golden_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../tests/golden")
+}
+
+/// Compare `produced` against the committed snapshot, blessing it when
+/// absent (or when `SOSA_BLESS_GOLDEN` is set).
+fn golden_check(name: &str, produced: &str) {
+    let path = golden_dir().join(name);
+    let bless = std::env::var_os("SOSA_BLESS_GOLDEN").is_some();
+    if bless || !path.exists() {
+        std::fs::create_dir_all(golden_dir()).unwrap();
+        std::fs::write(&path, produced).unwrap();
+        eprintln!("blessed golden snapshot {}", path.display());
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        produced, want,
+        "{name}: output drifted from the committed golden snapshot \
+         (re-bless intentional changes with SOSA_BLESS_GOLDEN=1)"
+    );
+}
+
+/// The certification contract: on `space`, the default two-tier policy
+/// must reproduce the exhaustive frontier point for point, every
+/// frontier member must carry real (refined) scheduler stats equal to
+/// the exhaustive record, and the two runs must account for the same
+/// point set.
+fn certify(name: &str, space: &DesignSpace, objectives: &[Objective]) {
+    let plain = Explorer::new().evaluate(space).unwrap();
+    let two = Explorer::new()
+        .two_tier(RefinementPolicy::default())
+        .evaluate(space, objectives)
+        .unwrap();
+    let want = plain.frontier(objectives);
+    assert_eq!(
+        two.frontier.members, want.members,
+        "{name}: two-tier frontier diverged from exhaustive"
+    );
+    assert!(!two.frontier.members.is_empty(), "{name}: empty frontier");
+    for &m in &two.frontier.members {
+        let rec = &two.exploration.records[m];
+        assert_eq!(
+            rec.tier,
+            Tier::Refined,
+            "{name}: frontier member {m} shipped with analytic numbers"
+        );
+        assert_eq!(
+            rec.stats, plain.records[m].stats,
+            "{name}: member {m} stats differ from the exhaustive run"
+        );
+    }
+    assert_eq!(
+        two.refined + two.analytic_only,
+        plain.records.len(),
+        "{name}: tier accounting does not cover the grid"
+    );
+    assert_eq!(two.metrics.counter("twotier.points"), plain.records.len() as u64);
+}
+
+#[test]
+fn two_tier_certifies_table1() {
+    certify("table1", &table1_space(true), &[Objective::EffTopsPerWatt]);
+}
+
+#[test]
+fn two_tier_certifies_table2() {
+    let space = granularity_space(&table2_dims(true), zoo::benchmarks());
+    certify("table2", &space, &[Objective::EffTopsPerWatt]);
+}
+
+#[test]
+fn two_tier_certifies_fig9() {
+    let space = granularity_space(&fig9_dims(true), zoo::benchmarks());
+    certify("fig9", &space, &[Objective::EffTopsPerWatt]);
+}
+
+#[test]
+fn two_tier_certifies_fig10() {
+    let (sosa_grid, mono) = fig10_spaces(true);
+    certify("fig10/sosa", &sosa_grid, &[Objective::EffTopsPerWatt]);
+    certify("fig10/mono", &mono, &[Objective::EffTopsPerWatt]);
+}
+
+#[test]
+fn two_tier_certifies_fig12a() {
+    // Multi-objective on purpose: the fabric sweep is where effective
+    // throughput and power pull in different directions.
+    certify(
+        "fig12a",
+        &fig12a_space(true),
+        &[Objective::EffTopsPerWatt, Objective::Latency],
+    );
+}
+
+#[test]
+fn two_tier_certifies_fig12b() {
+    certify("fig12b", &fig12b_space(true), &[Objective::EffTopsPerWatt]);
+}
+
+/// Satellite: the per-benchmark analytic-vs-scheduler error table over
+/// the full §5 suite, pinned.  The committed CSV is the precise pin
+/// (3-decimal errors, byte-compared); the in-loop assert is only a
+/// loud ceiling — well above the intra-grid *spread* that actually
+/// bounds filter safety — so a model edit that wrecks one benchmark
+/// fails with the offending row named even on a blessing (cold) run.
+#[test]
+fn analytic_error_table_pinned() {
+    let cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 256);
+    let mut out = String::from("model,strategy,analytic_cycles,sim_cycles,rel_err\n");
+    for m in zoo::benchmarks() {
+        for (label, strategy) in [("rxr", Strategy::RxR), ("fixed:64", Strategy::Fixed(64))] {
+            let est = analytic::estimate(&cfg, &m, strategy);
+            let opts = SimOptions {
+                spec: TilingSpec::Global(strategy),
+                memory_model: false,
+                ..SimOptions::default()
+            };
+            let stats = simulate(&cfg, &m, &opts);
+            let sim = stats.total_cycles as f64;
+            assert!(sim > 0.0, "{}", m.name);
+            let err = (est.cycles - sim).abs() / sim;
+            assert!(
+                err < 0.75,
+                "{} [{label}]: analytic err {err:.3} out of bounds \
+                 (analytic {:.0} vs sim {sim:.0})",
+                m.name,
+                est.cycles
+            );
+            out.push_str(&format!(
+                "{},{label},{},{},{}\n",
+                m.name,
+                est.cycles.ceil() as u64,
+                stats.total_cycles,
+                f(err, 3)
+            ));
+        }
+    }
+    golden_check("analytic_error.csv", &out);
+}
+
+/// Satellite: the analytic model's per-topology busy-efficiency
+/// pricing must *order* fabrics the way the scheduler does on a
+/// fig12a-style point.  Near-ties (scheduler cycles within 10%) are
+/// exempt — the ε-slack covers those — but whenever the scheduler
+/// separates two fabrics clearly, the analytic ranking must agree,
+/// otherwise the pre-filter could discard the right fabric.
+#[test]
+fn analytic_topology_ordering_matches_scheduler() {
+    let kinds = [
+        Kind::Butterfly { expansion: 2 },
+        Kind::Crossbar,
+        Kind::Benes,
+        Kind::Mesh,
+        Kind::HTree,
+    ];
+    let m = zoo::by_name("resnet50").unwrap();
+    let opts = SimOptions { memory_model: false, ..SimOptions::default() };
+    let mut cfg = ArchConfig::with_array(ArrayDims::new(32, 32), 64);
+    let cycles: Vec<(Kind, f64, f64)> = kinds
+        .iter()
+        .map(|&k| {
+            cfg.interconnect = k;
+            let ana = analytic::estimate(&cfg, &m, Strategy::RxR).cycles;
+            let sim = simulate(&cfg, &m, &opts).total_cycles as f64;
+            (k, ana, sim)
+        })
+        .collect();
+    let mut separated = 0usize;
+    for (ki, ai, si) in &cycles {
+        for (kj, aj, sj) in &cycles {
+            if si * 1.10 < *sj {
+                separated += 1;
+                assert!(
+                    ai < aj,
+                    "scheduler ranks {ki} ({si:.0} cyc) clearly ahead of {kj} \
+                     ({sj:.0} cyc) but the analytic model says {ai:.0} vs {aj:.0}"
+                );
+            }
+        }
+    }
+    assert!(
+        separated > 0,
+        "degenerate point: no fabric pair separated by >10% in simulation"
+    );
+}
+
+/// Satellite: the two-tier report for the CLI `--quick` smoke space
+/// (the exact grid `sosa explore --quick --two-tier --pareto` runs in
+/// CI), pinned as JSON with its analytic/refined/skipped accounting.
+#[test]
+fn two_tier_quick_report_pinned() {
+    let space = DesignSpace::baseline()
+        .square_arrays(&[16, 32])
+        .pods(&[16])
+        .interconnects(&[Kind::Butterfly { expansion: 2 }, Kind::Benes])
+        .tiling(&[
+            TilingSpec::Global(Strategy::RxR),
+            TilingSpec::Global(Strategy::NoPartition),
+        ])
+        .workloads(vec![zoo::by_name("bert-medium").unwrap()]);
+    let objectives = [Objective::EffTopsPerWatt];
+    let two = Explorer::new()
+        .two_tier(RefinementPolicy::default())
+        .evaluate(&space, &objectives)
+        .unwrap();
+    certify("cli-quick", &space, &objectives);
+    let json = format!(
+        "{}\n",
+        Report::new(&two.exploration)
+            .with_frontier(&two.frontier)
+            .with_two_tier(&two)
+            .json()
+    );
+    assert!(json.contains("\"two_tier\":{\"policy\":\"frontier\""));
+    assert!(json.contains("\"refined\":"));
+    assert!(json.contains("\"analytic_kept\":"));
+    assert!(json.contains("\"skipped\":[]"));
+    assert!(json.contains("twotier.cycle_error_pct"));
+    golden_check("two_tier_report.json", &json);
+}
