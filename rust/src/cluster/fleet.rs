@@ -27,9 +27,11 @@ use crate::error::{Error, Result};
 use crate::obs::{Event, Recorder};
 use crate::power::peak_power;
 use crate::serve::{
-    capacity_qps, Arrival, CostCache, Engine, EngineConfig, EngineReport, ServedRequest, Tenant,
+    capacity_qps, Arrival, AutoregConfig, AutoregEngine, AutoregReport, CostCache, DecodeRequest,
+    Engine, EngineConfig, EngineReport, ServedRequest, Tenant,
 };
 use crate::sim::SweepExecutor;
+use crate::workloads::extra::DecoderSpec;
 
 use super::router::{Policy, Router};
 
@@ -524,6 +526,188 @@ impl Fleet {
     }
 }
 
+/// Per-node summary of an autoregressive fleet run.
+#[derive(Clone, Debug)]
+pub struct AutoregNodeReport {
+    pub node: usize,
+    pub name: String,
+    pub pods: usize,
+    /// Decode streams dispatched to this node.
+    pub assigned: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub iterations: u64,
+    pub evictions: u64,
+    pub busy_s: f64,
+    pub makespan_s: f64,
+    pub sim_calls: u64,
+}
+
+/// Fleet-level autoregressive serving result.
+#[derive(Clone, Debug)]
+pub struct FleetAutoregReport {
+    pub nodes: Vec<AutoregNodeReport>,
+    /// Merged view: completions re-sorted by `(t_end, id)`, makespan
+    /// from the slowest node, busy time pod-weighted so
+    /// [`AutoregReport::busy_frac`] stays a fleet-level utilization.
+    pub report: AutoregReport,
+}
+
+impl Fleet {
+    /// Dispatch decode streams: route each request, in arrival order,
+    /// to one node.  [`Policy::RoundRobin`] cycles; every other policy
+    /// routes to the node with the least outstanding *token work*
+    /// (prefill + decode tokens of everything assigned so far,
+    /// normalized by node pods; ties to the lowest index) — a decode
+    /// stream occupies its node for its whole lifetime, so balancing
+    /// token work is the decode analogue of joining the shortest
+    /// queue.
+    fn dispatch_decode(
+        &self,
+        sorted: &[DecodeRequest],
+        mut events: Option<&mut Vec<Event>>,
+    ) -> Vec<Vec<DecodeRequest>> {
+        let n = self.nodes.len();
+        let mut per_node: Vec<Vec<DecodeRequest>> = vec![vec![]; n];
+        let mut work: Vec<u64> = vec![0; n];
+        let mut rr = 0usize;
+        for r in sorted {
+            let ni = match self.fcfg.policy {
+                Policy::RoundRobin => {
+                    let k = rr % n;
+                    rr += 1;
+                    k
+                }
+                _ => (0..n)
+                    .min_by(|&a, &b| {
+                        let la = work[a] as f64 / self.nodes[a].cfg.num_pods.max(1) as f64;
+                        let lb = work[b] as f64 / self.nodes[b].cfg.num_pods.max(1) as f64;
+                        la.total_cmp(&lb).then(a.cmp(&b))
+                    })
+                    .expect("fleet is non-empty"),
+            };
+            work[ni] += (r.prefill_tokens + r.decode_steps) as u64;
+            per_node[ni].push(*r);
+            if let Some(log) = events.as_deref_mut() {
+                log.push(Event::Dispatch {
+                    id: r.id,
+                    tenant: 0,
+                    node: ni as u32,
+                    t: r.t_arrival,
+                    queue_view: per_node
+                        .iter()
+                        .enumerate()
+                        .map(|(k, q)| (k as u32, q.len() as u32))
+                        .collect(),
+                });
+            }
+        }
+        per_node
+    }
+
+    /// Serve an autoregressive request trace across the fleet: decode
+    /// streams dispatch per [`Policy`] ([`Fleet::dispatch_decode`]),
+    /// each node runs its own [`AutoregEngine`] over the shared
+    /// decoder `spec`, and per-node reports merge by node index — the
+    /// result is bit-identical for any worker count (`threads` =
+    /// `None` uses `SOSA_THREADS` / machine parallelism).
+    pub fn serve_autoreg(
+        &self,
+        spec: &DecoderSpec,
+        requests: &[DecodeRequest],
+        acfg: &AutoregConfig,
+        threads: Option<usize>,
+    ) -> Result<FleetAutoregReport> {
+        let mut sorted = requests.to_vec();
+        sorted.sort_by(|a, b| a.t_arrival.total_cmp(&b.t_arrival).then(a.id.cmp(&b.id)));
+        let per_node = self.dispatch_decode(&sorted, None);
+        let ex = match threads {
+            Some(n) => SweepExecutor::with_threads(n),
+            None => SweepExecutor::new(),
+        };
+        let idx: Vec<usize> = (0..self.nodes.len()).collect();
+        let reports: Vec<AutoregReport> = ex.run(&idx, |_, &ni| {
+            if per_node[ni].is_empty() {
+                return AutoregReport::default();
+            }
+            let mut engine = AutoregEngine::new(&self.nodes[ni].cfg, spec, acfg.clone());
+            engine.run(&per_node[ni])
+        });
+        Ok(self.merge_autoreg(&per_node, reports))
+    }
+
+    /// As [`Fleet::serve_autoreg`], with the flight recorder on:
+    /// returns the report plus the merged event stream — every
+    /// [`Event::Dispatch`] in arrival order, then each node's engine
+    /// events ([`Event::DecodeStep`] / join / leave / evict) in
+    /// node-index order.
+    pub fn serve_autoreg_traced(
+        &self,
+        spec: &DecoderSpec,
+        requests: &[DecodeRequest],
+        acfg: &AutoregConfig,
+    ) -> Result<(FleetAutoregReport, Vec<Event>)> {
+        let mut sorted = requests.to_vec();
+        sorted.sort_by(|a, b| a.t_arrival.total_cmp(&b.t_arrival).then(a.id.cmp(&b.id)));
+        let mut events = Vec::new();
+        let per_node = self.dispatch_decode(&sorted, Some(&mut events));
+        let mut reports = Vec::with_capacity(self.nodes.len());
+        for ni in 0..self.nodes.len() {
+            if per_node[ni].is_empty() {
+                reports.push(AutoregReport::default());
+                continue;
+            }
+            let mut engine = AutoregEngine::new(&self.nodes[ni].cfg, spec, acfg.clone());
+            let mut rec = Recorder::new();
+            reports.push(engine.run_traced(&per_node[ni], &mut rec));
+            events.extend(rec.into_events());
+        }
+        Ok((self.merge_autoreg(&per_node, reports), events))
+    }
+
+    fn merge_autoreg(
+        &self,
+        per_node: &[Vec<DecodeRequest>],
+        reports: Vec<AutoregReport>,
+    ) -> FleetAutoregReport {
+        let total_pods = self.total_pods().max(1);
+        let mut merged = AutoregReport::default();
+        let mut nodes = Vec::with_capacity(self.nodes.len());
+        for (ni, rep) in reports.into_iter().enumerate() {
+            nodes.push(AutoregNodeReport {
+                node: ni,
+                name: self.nodes[ni].name.clone(),
+                pods: self.nodes[ni].cfg.num_pods,
+                assigned: per_node[ni].len() as u64,
+                completed: rep.completed.len() as u64,
+                rejected: rep.rejected,
+                iterations: rep.iterations,
+                evictions: rep.evictions,
+                busy_s: rep.busy_s,
+                makespan_s: rep.makespan_s,
+                sim_calls: rep.sim_calls,
+            });
+            merged.rejected += rep.rejected;
+            merged.iterations += rep.iterations;
+            merged.prefills += rep.prefills;
+            merged.evictions += rep.evictions;
+            merged.generated_tokens += rep.generated_tokens;
+            merged.peak_kv_bytes = merged.peak_kv_bytes.max(rep.peak_kv_bytes);
+            merged.peak_batch = merged.peak_batch.max(rep.peak_batch);
+            merged.makespan_s = merged.makespan_s.max(rep.makespan_s);
+            // Nodes run concurrently: pod-weight busy time so the
+            // merged busy fraction stays in [0, 1].
+            merged.busy_s +=
+                rep.busy_s * self.nodes[ni].cfg.num_pods as f64 / total_pods as f64;
+            merged.sim_calls += rep.sim_calls;
+            merged.compile_calls += rep.compile_calls;
+            merged.completed.extend(rep.completed);
+        }
+        merged.completed.sort_by(|a, b| a.t_end.total_cmp(&b.t_end).then(a.id.cmp(&b.id)));
+        FleetAutoregReport { nodes, report: merged }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -733,5 +917,102 @@ mod tests {
         let c2 = f.capacity_qps(&tenants);
         assert!(c1 > 0.0);
         assert!((c2 / c1 - 2.0).abs() < 1e-9, "fleet capacity {c2} vs node {c1}");
+    }
+
+    fn tiny_decoder() -> DecoderSpec {
+        DecoderSpec {
+            name: "Tiny".to_string(),
+            layers: 2,
+            hidden: 64,
+            heads: 4,
+            ffn: 128,
+            gated_ffn: false,
+        }
+    }
+
+    fn decode_acfg() -> AutoregConfig {
+        AutoregConfig {
+            max_batch: 4,
+            ctx_bucket: 32,
+            sim: SimOptions { memory_model: false, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    fn decode_trace(n: usize) -> Vec<DecodeRequest> {
+        (0..n)
+            .map(|i| DecodeRequest {
+                id: i as u64,
+                t_arrival: i as f64 * 1e-5,
+                prefill_tokens: 16 + (i % 3) * 8,
+                decode_steps: 2 + (i % 4) * 4,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn autoreg_fleet_serves_every_stream_and_is_thread_invariant() {
+        let f = Fleet::homogeneous(2, node_cfg(4), fast_fcfg(Policy::JoinShortestQueue)).unwrap();
+        let spec = tiny_decoder();
+        let reqs = decode_trace(10);
+        let r1 = f.serve_autoreg(&spec, &reqs, &decode_acfg(), Some(1)).unwrap();
+        let r4 = f.serve_autoreg(&spec, &reqs, &decode_acfg(), Some(4)).unwrap();
+        assert_eq!(r1.report, r4.report, "fleet autoreg must be thread-invariant");
+        assert_eq!(r1.report.completed.len(), 10);
+        assert_eq!(r1.report.rejected, 0);
+        assert_eq!(r1.nodes.len(), 2);
+        let assigned: u64 = r1.nodes.iter().map(|n| n.assigned).sum();
+        assert_eq!(assigned, 10);
+        // Token-work balancing over identical nodes splits the burst.
+        assert!(r1.nodes.iter().all(|n| n.assigned > 0), "{:?}", r1.nodes);
+        // Pod-weighted busy keeps utilization fleet-level.
+        assert!(r1.report.busy_frac() <= 1.0 + 1e-12);
+        // Completions are globally ordered.
+        for w in r1.report.completed.windows(2) {
+            assert!(w[0].t_end <= w[1].t_end);
+        }
+    }
+
+    #[test]
+    fn autoreg_round_robin_cycles_and_trace_logs_dispatch() {
+        let f = Fleet::homogeneous(3, node_cfg(4), fast_fcfg(Policy::RoundRobin)).unwrap();
+        let spec = tiny_decoder();
+        let reqs = decode_trace(9);
+        let (rep, events) = f.serve_autoreg_traced(&spec, &reqs, &decode_acfg()).unwrap();
+        assert!(rep.nodes.iter().all(|n| n.assigned == 3), "{:?}", rep.nodes);
+        let dispatches =
+            events.iter().filter(|e| matches!(e, Event::Dispatch { .. })).count();
+        assert_eq!(dispatches, 9);
+        let steps: u64 = events
+            .iter()
+            .filter(|e| matches!(e, Event::DecodeStep { .. }))
+            .count() as u64;
+        assert_eq!(steps, rep.report.iterations);
+        // The traced run matches the untraced one bit-for-bit.
+        let plain = f.serve_autoreg(&spec, &reqs, &decode_acfg(), Some(2)).unwrap();
+        assert_eq!(plain.report, rep.report);
+    }
+
+    #[test]
+    fn autoreg_least_work_prefers_bigger_nodes() {
+        // One 8-pod node beside one 1-pod node: pod-normalized token
+        // work routes most streams to the big node.
+        let f = Fleet::new(
+            vec![
+                NodeSpec::new("big", node_cfg(8)),
+                NodeSpec::new("small", node_cfg(1)),
+            ],
+            fast_fcfg(Policy::JoinShortestQueue),
+        )
+        .unwrap();
+        let rep = f
+            .serve_autoreg(&tiny_decoder(), &decode_trace(9), &decode_acfg(), Some(1))
+            .unwrap();
+        assert!(
+            rep.nodes[0].assigned > rep.nodes[1].assigned,
+            "big node should take more streams: {:?}",
+            rep.nodes
+        );
+        assert_eq!(rep.report.completed.len(), 9);
     }
 }

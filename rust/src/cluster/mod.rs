@@ -62,6 +62,9 @@ pub mod fleet;
 pub mod router;
 pub mod slo;
 
-pub use fleet::{Fleet, FleetConfig, FleetReport, NodeReport, NodeSpec, Placement};
+pub use fleet::{
+    AutoregNodeReport, Fleet, FleetAutoregReport, FleetConfig, FleetReport, NodeReport, NodeSpec,
+    Placement,
+};
 pub use router::{Policy, Router};
-pub use slo::{analyze_fleet, fleet_load_sweep, FleetSlo};
+pub use slo::{analyze_fleet, analyze_fleet_autoreg, fleet_load_sweep, FleetAutoregSlo, FleetSlo};

@@ -11,11 +11,12 @@
 
 use crate::error::Result;
 use crate::serve::{
-    analyze, generate, CostCache, SloReport, SweepOptions, SweepPoint, Tenant, TrafficSpec,
+    analyze, analyze_autoreg, generate, AutoregSlo, CostCache, SloReport, SweepOptions,
+    SweepPoint, Tenant, TrafficSpec,
 };
 use crate::sim::SweepExecutor;
 
-use super::fleet::{Fleet, FleetReport};
+use super::fleet::{Fleet, FleetAutoregReport, FleetReport};
 
 /// Fleet-level SLO report: the aggregate request-level [`SloReport`]
 /// plus fleet-scale capacity/power metrics and the per-node dispatch
@@ -66,6 +67,73 @@ pub fn analyze_fleet(
         eff_tops,
         eff_tops_per_w: if fleet_peak_w > 0.0 { eff_tops / fleet_peak_w } else { 0.0 },
         slo,
+    }
+}
+
+/// Fleet-level autoregressive SLO report: the aggregate TTFT/TPOT
+/// statistics ([`AutoregSlo`]) plus the fleet-scale dispatch and power
+/// breakdown — the decode analogue of [`FleetSlo`].
+#[derive(Clone, Debug)]
+pub struct FleetAutoregSlo {
+    /// Aggregate TTFT/TPOT/goodput statistics over merged completions.
+    pub slo: AutoregSlo,
+    /// Number of nodes in the fleet.
+    pub node_count: usize,
+    /// Decode streams dispatched per node (node-index order).
+    pub dispatched: Vec<u64>,
+    /// Per-node busy fraction over that node's own makespan.
+    pub node_busy: Vec<f64>,
+    /// Aggregate peak power across all nodes, Watts.
+    pub fleet_peak_w: f64,
+    /// Generated tokens per second per Watt of aggregate peak power —
+    /// the decode-phase efficiency figure (decode GEMMs are too small
+    /// for the TOps/s framing to mean much).
+    pub tokens_per_s_per_w: f64,
+}
+
+/// Compute the fleet autoregressive SLO report for a run.
+/// `horizon_s` is the offered traffic duration; goodput counts
+/// completions meeting *both* the TTFT and TPOT deadlines.
+pub fn analyze_fleet_autoreg(
+    fleet: &Fleet,
+    rep: &FleetAutoregReport,
+    horizon_s: f64,
+    ttft_deadline_s: f64,
+    tpot_deadline_s: f64,
+) -> FleetAutoregSlo {
+    let slo = analyze_autoreg(&rep.report, horizon_s, ttft_deadline_s, tpot_deadline_s);
+    let fleet_peak_w = fleet.peak_power_w();
+    FleetAutoregSlo {
+        node_count: fleet.len(),
+        dispatched: rep.nodes.iter().map(|n| n.assigned).collect(),
+        node_busy: rep
+            .nodes
+            .iter()
+            .map(|n| if n.makespan_s > 0.0 { n.busy_s / n.makespan_s } else { 0.0 })
+            .collect(),
+        fleet_peak_w,
+        tokens_per_s_per_w: if fleet_peak_w > 0.0 {
+            slo.tokens_per_s / fleet_peak_w
+        } else {
+            0.0
+        },
+        slo,
+    }
+}
+
+impl std::fmt::Display for FleetAutoregSlo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "{}", self.slo)?;
+        writeln!(
+            f,
+            "fleet    : {} nodes, peak {:.1} W, {:.2} tok/s ({:.4} tok/s/W)",
+            self.node_count, self.fleet_peak_w, self.slo.tokens_per_s, self.tokens_per_s_per_w
+        )?;
+        write!(f, "dispatch :")?;
+        for (i, (d, b)) in self.dispatched.iter().zip(&self.node_busy).enumerate() {
+            write!(f, " node{i} {d} ({:.0}% busy)", 100.0 * b)?;
+        }
+        Ok(())
     }
 }
 
@@ -188,6 +256,51 @@ mod tests {
         let text = format!("{slo}");
         assert!(text.contains("2 nodes"));
         assert!(text.contains("dispatch"));
+    }
+
+    #[test]
+    fn analyze_fleet_autoreg_reports_ttft_tpot_and_dispatch() {
+        use crate::serve::{AutoregConfig, DecodeRequest};
+        use crate::workloads::extra::DecoderSpec;
+        let fleet = small_fleet(2);
+        let spec = DecoderSpec {
+            name: "Tiny".to_string(),
+            layers: 2,
+            hidden: 64,
+            heads: 4,
+            ffn: 128,
+            gated_ffn: false,
+        };
+        let reqs: Vec<DecodeRequest> = (0..8)
+            .map(|i| DecodeRequest {
+                id: i as u64,
+                t_arrival: i as f64 * 1e-5,
+                prefill_tokens: 16,
+                decode_steps: 4,
+            })
+            .collect();
+        let acfg = AutoregConfig {
+            max_batch: 4,
+            ctx_bucket: 32,
+            sim: SimOptions { memory_model: false, ..Default::default() },
+            ..Default::default()
+        };
+        let rep = fleet.serve_autoreg(&spec, &reqs, &acfg, Some(1)).unwrap();
+        let slo = analyze_fleet_autoreg(&fleet, &rep, 0.01, 1.0, 1.0);
+        assert_eq!(slo.node_count, 2);
+        assert_eq!(slo.dispatched.iter().sum::<u64>(), 8);
+        assert_eq!(slo.slo.completed, 8);
+        // Generous deadlines: everything is goodput.
+        assert_eq!(slo.slo.within_both, 8);
+        assert!(slo.slo.ttft.p50 > 0.0);
+        assert!(slo.slo.tokens_per_s > 0.0);
+        assert!((slo.fleet_peak_w - fleet.peak_power_w()).abs() < 1e-12);
+        assert!(slo.tokens_per_s_per_w > 0.0);
+        assert!(slo.node_busy.iter().all(|&b| (0.0..=1.0).contains(&b)));
+        let text = format!("{slo}");
+        assert!(text.contains("ttft"));
+        assert!(text.contains("2 nodes"));
+        assert!(text.contains("tok/s/W"));
     }
 
     #[test]

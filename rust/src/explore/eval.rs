@@ -67,6 +67,18 @@ pub struct EvalRecord {
     pub eff_tops_per_w: f64,
     /// The TDP the effective metrics were normalized to.
     pub tdp_w: f64,
+    /// Time-to-first-token bound, seconds: the full workload pass is
+    /// the prefill, so TTFT equals `latency_s`.  Surfaced as its own
+    /// field (and [`Objective::Ttft`]) so serving-oriented sweeps rank
+    /// on it by name.
+    pub ttft_s: f64,
+    /// Time-per-output-token bound, seconds: analytic latency of the
+    /// workload's decode-step view ([`crate::workloads::ModelGraph::decode_step`],
+    /// every GEMM at `m = 1`) — the small-matrix regime where systolic
+    /// utilization collapses.  Analytic in *both* tiers (a decode step
+    /// is never scheduler-simulated here; `serve::autoreg` owns the
+    /// exact model), so the two-tier pipeline cannot drift on it.
+    pub tpot_s: f64,
     /// Fleet size the point provisions (1 = single chip).
     pub nodes: usize,
     /// Aggregate fleet peak power: `nodes × peak_power_w`, Watts.
@@ -96,9 +108,14 @@ impl EvalRecord {
         let nodes = point.nodes.max(1);
         let (fleet_peak_w, fleet_tops) =
             crate::cluster::slo::linear_fleet(peak_power_w, raw_tops, nodes);
+        let step = point.workload.decode_step();
+        let est = crate::analytic::estimate(cfg, &step, crate::tiling::Strategy::RxR);
+        let tpot_s = est.cycles / (cfg.freq_ghz * 1e9);
         EvalRecord {
             cycles: stats.total_cycles,
             latency_s,
+            ttft_s: latency_s,
+            tpot_s,
             utilization,
             raw_tops,
             peak_power_w,
@@ -358,6 +375,27 @@ mod tests {
             assert!(rec.utilization > 0.0 && rec.eff_tops > 0.0);
             assert!((rec.eff_tops_per_w * rec.tdp_w - rec.eff_tops).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn serving_objectives_are_populated() {
+        let space = DesignSpace::new(ArchConfig::with_array(ArrayDims::new(16, 16), 16))
+            .workload(toy())
+            .sim(fast_sim());
+        let x = Explorer::with_threads(1).evaluate(&space).unwrap();
+        let rec = &x.records[0];
+        // TTFT is the prefill pass — the workload's own latency.
+        assert_eq!(rec.ttft_s, rec.latency_s);
+        // A decode step (m = 1 everywhere) is strictly cheaper than
+        // the full m = 100 pass.
+        assert!(rec.tpot_s > 0.0);
+        assert!(rec.tpot_s < rec.latency_s, "{} vs {}", rec.tpot_s, rec.latency_s);
+        use crate::explore::Objective;
+        assert_eq!(Objective::Ttft.raw(rec), rec.ttft_s);
+        assert_eq!(Objective::Tpot.raw(rec), rec.tpot_s);
+        assert!(!Objective::Ttft.maximize() && !Objective::Tpot.maximize());
+        assert_eq!(Objective::parse("ttft"), Some(Objective::Ttft));
+        assert_eq!(Objective::parse("tpot"), Some(Objective::Tpot));
     }
 
     #[test]

@@ -26,6 +26,12 @@ pub enum Objective {
     FleetTops,
     /// Aggregate fleet peak power, `nodes × peak_w` (minimize).
     FleetPeakPower,
+    /// Time-to-first-token bound in seconds (minimize) — the prefill
+    /// pass latency ([`EvalRecord::ttft_s`]).
+    Ttft,
+    /// Time-per-output-token bound in seconds (minimize) — the
+    /// decode-step latency ([`EvalRecord::tpot_s`]).
+    Tpot,
 }
 
 impl Objective {
@@ -40,6 +46,8 @@ impl Objective {
         Objective::Cycles,
         Objective::FleetTops,
         Objective::FleetPeakPower,
+        Objective::Ttft,
+        Objective::Tpot,
     ];
 
     /// Stable CLI/report name.
@@ -54,6 +62,8 @@ impl Objective {
             Objective::Cycles => "cycles",
             Objective::FleetTops => "fleet_tops",
             Objective::FleetPeakPower => "fleet_peak_w",
+            Objective::Ttft => "ttft",
+            Objective::Tpot => "tpot",
         }
     }
 
@@ -74,6 +84,8 @@ impl Objective {
             Objective::Cycles => r.cycles as f64,
             Objective::FleetTops => r.fleet_tops,
             Objective::FleetPeakPower => r.fleet_peak_w,
+            Objective::Ttft => r.ttft_s,
+            Objective::Tpot => r.tpot_s,
         }
     }
 
@@ -85,6 +97,8 @@ impl Objective {
                 | Objective::PeakPower
                 | Objective::Cycles
                 | Objective::FleetPeakPower
+                | Objective::Ttft
+                | Objective::Tpot
         )
     }
 

@@ -25,7 +25,7 @@ pub struct Report<'a> {
 pub const CSV_HEADER: &[&str] = &[
     "array", "pods", "interconnect", "tiling", "workload", "batch", "cycles",
     "latency_ms", "util", "raw_tops", "peak_w", "eff_tops", "eff_tops_per_w",
-    "nodes", "fleet_peak_w", "fleet_tops", "tier", "pareto",
+    "nodes", "fleet_peak_w", "fleet_tops", "ttft_ms", "tpot_ms", "tier", "pareto",
 ];
 
 impl<'a> Report<'a> {
@@ -70,6 +70,8 @@ impl<'a> Report<'a> {
             r.nodes.to_string(),
             f(r.fleet_peak_w, 1),
             f(r.fleet_tops, 1),
+            f(r.ttft_s * 1e3, 3),
+            f(r.tpot_s * 1e3, 3),
             r.tier.name().into(),
             if on_front { "1".into() } else { "0".into() },
         ]
@@ -110,6 +112,8 @@ impl<'a> Report<'a> {
                         ("nodes", Json::int(r.nodes as u64)),
                         ("fleet_peak_w", Json::Num(r.fleet_peak_w)),
                         ("fleet_tops", Json::Num(r.fleet_tops)),
+                        ("ttft_ms", Json::Num(r.ttft_s * 1e3)),
+                        ("tpot_ms", Json::Num(r.tpot_s * 1e3)),
                         ("tier", Json::str(r.tier.name())),
                     ];
                     if let Some(fr) = self.frontier {

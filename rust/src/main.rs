@@ -499,7 +499,134 @@ fn cmd_check(args: &Args) {
     }
 }
 
+/// `sosa serve --autoreg`: autoregressive serving — prefill/decode
+/// request traffic over one node, continuous vs static batching,
+/// TTFT/TPOT SLO report, and an optional load sweep A/B'ing both
+/// policies.
+fn cmd_serve_autoreg(args: &Args) {
+    use sosa::serve::{
+        analyze_autoreg, decode_sweep, decode_sweep_table, generate_decode,
+        write_decode_sweep_csv, AutoregConfig, AutoregEngine, AutoregPolicy, DecodeSweepOptions,
+        DecodeTrafficSpec,
+    };
+    use sosa::sim::SimOptions;
+    use sosa::workloads::extra::DecoderSpec;
+
+    let quick = args.flag("quick");
+    let array = parse_array(args.get_or("array", if quick { "16x16" } else { "32x32" }));
+    let pods: usize = args.get_parse("pods").unwrap_or(if quick { 16 } else { 256 });
+    let mut cfg = ArchConfig::with_array(array, pods);
+    if let Some(k) = args.get("interconnect").map(parse_interconnect) {
+        cfg.interconnect = k;
+    }
+    if let Some(kb) = args.get_parse::<usize>("bank-kb") {
+        cfg.bank_kb = kb;
+    }
+    let spec = match args.get_or("model", "gpt2") {
+        "gpt2" => DecoderSpec::gpt2_small(),
+        "llama7b" => DecoderSpec::llama7b(),
+        other => panic!("unknown decoder {other} (gpt2|llama7b)"),
+    };
+    let policy =
+        if args.flag("static") { AutoregPolicy::Static } else { AutoregPolicy::Continuous };
+    let acfg = AutoregConfig {
+        policy,
+        max_batch: args.get_parse("max-batch").unwrap_or(if quick { 4 } else { 8 }),
+        max_wait_s: args.get_parse::<f64>("max-wait-ms").unwrap_or(2.0) * 1e-3,
+        ctx_bucket: args.get_parse("ctx-bucket").unwrap_or(64),
+        optimistic: args.flag("optimistic"),
+        sim: SimOptions::default(),
+    };
+
+    let parse_range = |key: &str, default: (usize, usize)| -> (usize, usize) {
+        match args.get(key) {
+            Some(s) => {
+                let (lo, hi) = s.split_once(',').unwrap_or_else(|| panic!("--{key} LO,HI"));
+                (lo.trim().parse().expect(key), hi.trim().parse().expect(key))
+            }
+            None => default,
+        }
+    };
+    let prefill = parse_range("prefill", if quick { (16, 64) } else { (64, 256) });
+    let decode = parse_range("decode", if quick { (4, 16) } else { (8, 64) });
+
+    let mut engine = AutoregEngine::new(&cfg, &spec, acfg.clone());
+    let mean_prefill = (prefill.0 + prefill.1) / 2;
+    let mean_decode = (decode.0 + decode.1) / 2;
+    let capacity = engine.capacity_qps(mean_prefill, mean_decode);
+    let kv_tokens = engine.kv().capacity_tokens(&cfg);
+    let qps: f64 = args
+        .get_parse("qps")
+        .unwrap_or(if capacity > 0.0 { 0.7 * capacity } else { 100.0 });
+    let duration_s: f64 = args.get_parse("duration").unwrap_or(if quick { 0.2 } else { 1.0 });
+    let seed: u64 = args.get_parse("seed").unwrap_or(42);
+    let ttft_deadline_s = args.get_parse::<f64>("ttft-ms").unwrap_or(250.0) * 1e-3;
+    let tpot_deadline_s = args.get_parse::<f64>("tpot-ms").unwrap_or(50.0) * 1e-3;
+
+    println!(
+        "decoder  : {} ({} layers, hidden {}), prefill {}..{} tokens, decode {}..{} steps",
+        spec.name, spec.layers, spec.hidden, prefill.0, prefill.1, decode.0, decode.1
+    );
+    println!(
+        "node     : {} pods={} — KV capacity {} tokens, est. {:.1} streams/s",
+        cfg.array, cfg.num_pods, kv_tokens, capacity
+    );
+
+    if args.flag("sweep") {
+        let ladder: Vec<f64> =
+            sosa::serve::SWEEP_LADDER.iter().map(|&x| x * qps).collect();
+        let sweep = DecodeSweepOptions {
+            qps: ladder,
+            duration_s,
+            seed,
+            prefill,
+            decode,
+            ttft_deadline_s,
+            tpot_deadline_s,
+            threads: args.get_parse::<usize>("threads"),
+        };
+        let points = decode_sweep(&cfg, &spec, &acfg, &sweep);
+        println!("{}", decode_sweep_table(&points).render());
+        if let Some(out) = args.get("out") {
+            let path = format!("{out}/decode_sweep.csv");
+            write_decode_sweep_csv(&path, &points).expect("write decode sweep csv");
+            println!("wrote {path}");
+        }
+        return;
+    }
+
+    let spec_t = DecodeTrafficSpec { qps, duration_s, seed, prefill, decode };
+    let requests = generate_decode(&spec_t);
+    println!(
+        "traffic  : {} decode streams over {duration_s:.2} s at {qps:.1} req/s, seed {seed}",
+        requests.len()
+    );
+    let trace = args.get("trace");
+    let (rep, events) = if trace.is_some() {
+        let mut rec = sosa::obs::Recorder::new();
+        let rep = engine.run_traced(&requests, &mut rec);
+        (rep, rec.into_events())
+    } else {
+        (engine.run(&requests), Vec::new())
+    };
+    println!("policy   : {}", acfg.policy.name());
+    println!("{}", analyze_autoreg(&rep, duration_s, ttft_deadline_s, tpot_deadline_s));
+    println!(
+        "batching : {} iterations ({} prefills), peak batch {}, peak KV {} B, \
+         {} evictions, {} sim calls",
+        rep.iterations, rep.prefills, rep.peak_batch, rep.peak_kv_bytes, rep.evictions,
+        rep.sim_calls
+    );
+    if let Some(path) = trace {
+        write_artifact(path, &sosa::obs::perfetto::trace_json(&events, 1.0).render());
+    }
+}
+
 fn cmd_serve(args: &Args) {
+    if args.flag("autoreg") {
+        cmd_serve_autoreg(args);
+        return;
+    }
     let cfg = config_from(args);
     let models = args.get_or("models", "resnet152,bert-medium");
     let batch: usize = args.get_parse("batch").unwrap_or(1);
@@ -536,7 +663,130 @@ fn cmd_serve(args: &Args) {
 /// `sosa cluster`: fleet-scale serving over N accelerator nodes with
 /// a dispatch policy, printing the fleet SLO report (and optionally a
 /// per-node CSV / a fleet load sweep).
+/// `sosa cluster --autoreg`: decode streams dispatched across a fleet,
+/// each node running its own continuous/static autoregressive engine,
+/// with the fleet-level TTFT/TPOT SLO report.
+fn cmd_cluster_autoreg(args: &Args) {
+    use sosa::cluster::{analyze_fleet_autoreg, Fleet, FleetConfig, NodeSpec, Policy};
+    use sosa::serve::{generate_decode, AutoregConfig, AutoregPolicy, DecodeTrafficSpec};
+    use sosa::util::{csv::f, CsvWriter};
+    use sosa::workloads::extra::DecoderSpec;
+
+    let quick = args.flag("quick");
+    let array = parse_array(args.get_or("array", if quick { "16x16" } else { "32x32" }));
+    let default_pods: usize = if quick { 16 } else { 256 };
+    let icn = args.get("interconnect").map(parse_interconnect);
+    let node_cfg = |pods: usize| {
+        let mut cfg = ArchConfig::with_array(array, pods);
+        if let Some(k) = icn {
+            cfg.interconnect = k;
+        }
+        cfg
+    };
+    let nodes: Vec<NodeSpec> = match parse_list(args, "node-pods") {
+        Some(list) => list
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let pods: usize = s.parse().expect("node pod count");
+                NodeSpec::new(format!("node{i}-{pods}p"), node_cfg(pods))
+            })
+            .collect(),
+        None => {
+            let n: usize = args.get_parse("nodes").unwrap_or(if quick { 2 } else { 4 });
+            (0..n).map(|i| NodeSpec::new(format!("node{i}"), node_cfg(default_pods))).collect()
+        }
+    };
+    let policy = Policy::parse(args.get_or("policy", "jsq"))
+        .expect("unknown policy (rr|jsq|p2c|p2c:SEED|slo)");
+    let fleet = Fleet::new(nodes, FleetConfig { policy: policy.clone(), ..Default::default() })
+        .expect("invalid fleet");
+
+    let spec = match args.get_or("model", "gpt2") {
+        "gpt2" => DecoderSpec::gpt2_small(),
+        "llama7b" => DecoderSpec::llama7b(),
+        other => panic!("unknown decoder {other} (gpt2|llama7b)"),
+    };
+    let acfg = AutoregConfig {
+        policy: if args.flag("static") { AutoregPolicy::Static } else { AutoregPolicy::Continuous },
+        max_batch: args.get_parse("max-batch").unwrap_or(if quick { 4 } else { 8 }),
+        max_wait_s: args.get_parse::<f64>("max-wait-ms").unwrap_or(2.0) * 1e-3,
+        ctx_bucket: args.get_parse("ctx-bucket").unwrap_or(64),
+        optimistic: args.flag("optimistic"),
+        ..Default::default()
+    };
+    let qps: f64 = args.get_parse("qps").unwrap_or(if quick { 50.0 } else { 200.0 });
+    let duration_s: f64 = args.get_parse("duration").unwrap_or(if quick { 0.2 } else { 1.0 });
+    let seed: u64 = args.get_parse("seed").unwrap_or(42);
+    let traffic = DecodeTrafficSpec {
+        qps,
+        duration_s,
+        seed,
+        prefill: if quick { (16, 64) } else { (64, 256) },
+        decode: if quick { (4, 16) } else { (8, 64) },
+    };
+    let requests = generate_decode(&traffic);
+    let ttft_deadline_s = args.get_parse::<f64>("ttft-ms").unwrap_or(250.0) * 1e-3;
+    let tpot_deadline_s = args.get_parse::<f64>("tpot-ms").unwrap_or(50.0) * 1e-3;
+
+    println!(
+        "fleet    : {} nodes ({} pods total), policy {}, decoder {}, batching {}",
+        fleet.len(),
+        fleet.total_pods(),
+        policy.name(),
+        spec.name,
+        acfg.policy.name()
+    );
+    println!(
+        "traffic  : {} decode streams over {duration_s:.2} s at {qps:.1} req/s, seed {seed}",
+        requests.len()
+    );
+    let trace = args.get("trace");
+    let (rep, events) = if trace.is_some() {
+        fleet.serve_autoreg_traced(&spec, &requests, &acfg).expect("fleet autoreg")
+    } else {
+        let threads = args.get_parse::<usize>("threads");
+        (fleet.serve_autoreg(&spec, &requests, &acfg, threads).expect("fleet autoreg"), Vec::new())
+    };
+    let slo = analyze_fleet_autoreg(&fleet, &rep, duration_s, ttft_deadline_s, tpot_deadline_s);
+    println!("{slo}");
+    if let Some(path) = trace {
+        write_artifact(path, &sosa::obs::perfetto::trace_json(&events, 1.0).render());
+    }
+    if let Some(out) = args.get("out") {
+        let path = format!("{out}/cluster_autoreg.csv");
+        let mut csv = CsvWriter::create(
+            &path,
+            &["node", "name", "pods", "assigned", "completed", "rejected", "iterations",
+              "evictions", "busy_pct", "makespan_s"],
+        )
+        .expect("create csv");
+        for n in &rep.nodes {
+            let busy = if n.makespan_s > 0.0 { n.busy_s / n.makespan_s } else { 0.0 };
+            csv.row(&[
+                n.node.to_string(),
+                n.name.clone(),
+                n.pods.to_string(),
+                n.assigned.to_string(),
+                n.completed.to_string(),
+                n.rejected.to_string(),
+                n.iterations.to_string(),
+                n.evictions.to_string(),
+                f(100.0 * busy, 1),
+                f(n.makespan_s, 6),
+            ])
+            .expect("csv row");
+        }
+        csv.finish().expect("finish csv");
+        println!("wrote {path}");
+    }
+}
+
 fn cmd_cluster(args: &Args) {
+    if args.flag("autoreg") {
+        cmd_cluster_autoreg(args);
+        return;
+    }
     use sosa::cluster::{
         analyze_fleet, fleet_load_sweep, Fleet, FleetConfig, NodeSpec, Placement, Policy,
     };
@@ -853,8 +1103,14 @@ fn main() {
             eprintln!("           [--tdp W] [--format text|json]   (exit 1 on errors)");
             eprintln!("  serve    --models resnet152,bert-medium [--single-tenant]");
             eprintln!("           [--trace trace.json] [--timeline latency.csv]");
+            eprintln!("           --autoreg [--model gpt2|llama7b] [--static|--continuous]");
+            eprintln!("             [--qps Q] [--duration S] [--seed S] [--max-batch N]");
+            eprintln!("             [--prefill LO,HI] [--decode LO,HI] [--ctx-bucket N]");
+            eprintln!("             [--optimistic] [--ttft-ms MS] [--tpot-ms MS]");
+            eprintln!("             [--sweep] [--out DIR] [--quick] [--trace trace.json]");
             eprintln!("  cluster  [--nodes N | --node-pods 256,64] [--array RxC]");
             eprintln!("           [--models a,b] [--policy rr|jsq|p2c|slo]");
+            eprintln!("           [--autoreg [--model gpt2|llama7b] [--static]]");
             eprintln!("           [--placement replicate|partition] [--qps Q]");
             eprintln!("           [--burst-qps Q --mean-burst-ms MS --mean-quiet-ms MS]");
             eprintln!("           [--duration S] [--seed S] [--max-batch N]");

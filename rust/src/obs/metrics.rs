@@ -175,6 +175,13 @@ impl Metrics {
                     m.observe("serve.latency_s", LATENCY_BOUNDS, t_end - t_arrival);
                 }
                 Event::Dispatch { .. } => m.inc("cluster.dispatches", 1),
+                Event::DecodeStep { batch, .. } => {
+                    m.inc("autoreg.steps", 1);
+                    m.observe("autoreg.step_batch", UNIT_BOUNDS, *batch as f64);
+                }
+                Event::RequestJoin { .. } => m.inc("autoreg.joins", 1),
+                Event::RequestLeave { .. } => m.inc("autoreg.leaves", 1),
+                Event::KvEvict { .. } => m.inc("autoreg.kv_evictions", 1),
             }
         }
         m

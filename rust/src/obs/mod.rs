@@ -100,6 +100,20 @@ pub enum Event {
     /// after draining estimated completions up to `t` — that the
     /// policy decided on.
     Dispatch { id: u64, tenant: u32, node: u32, t: f64, queue_view: Vec<(u32, u32)> },
+    /// Autoregressive serving: one continuous-batching iteration ran
+    /// with `batch` active requests holding `kv_tokens` total cached
+    /// tokens ([`crate::serve::autoreg`]).
+    DecodeStep { iter: u64, t_start: f64, t_end: f64, batch: u32, kv_tokens: u64 },
+    /// Autoregressive serving: request `id` joined the running batch
+    /// (its prefill ran in the iteration ending at `t`).
+    RequestJoin { id: u64, t: f64 },
+    /// Autoregressive serving: request `id` generated its last token
+    /// and left the running batch, releasing its KV state.
+    RequestLeave { id: u64, t: f64 },
+    /// Autoregressive serving: request `id` was evicted mid-stream —
+    /// its `kv_bytes` of cache state no longer fit beside the rest of
+    /// the batch — and went back to the queue for a fresh prefill.
+    KvEvict { id: u64, t: f64, kv_bytes: u64 },
 }
 
 /// Destination for trace events.

@@ -125,6 +125,44 @@ pub fn trace_json(events: &[Event], slice_us: f64) -> Json {
                     ),
                 ]));
             }
+            Event::DecodeStep { iter, t_start, t_end, batch, kv_tokens } => te.push(Json::obj(vec![
+                ("name", Json::str(format!("step {iter} [{batch}]"))),
+                ("cat", Json::str("decode")),
+                ("ph", Json::str("X")),
+                ("pid", Json::int(4)),
+                ("tid", Json::int(1)),
+                ("ts", Json::Num(t_start * 1e6)),
+                ("dur", Json::Num((t_end - t_start) * 1e6)),
+                ("args", Json::obj(vec![("kv_tokens", Json::int(*kv_tokens))])),
+            ])),
+            Event::RequestJoin { id, t } => te.push(Json::obj(vec![
+                ("name", Json::str(format!("join {id}"))),
+                ("cat", Json::str("decode")),
+                ("ph", Json::str("i")),
+                ("s", Json::str("t")),
+                ("pid", Json::int(2)),
+                ("tid", Json::int(0)),
+                ("ts", Json::Num(t * 1e6)),
+            ])),
+            Event::RequestLeave { id, t } => te.push(Json::obj(vec![
+                ("name", Json::str(format!("leave {id}"))),
+                ("cat", Json::str("decode")),
+                ("ph", Json::str("i")),
+                ("s", Json::str("t")),
+                ("pid", Json::int(2)),
+                ("tid", Json::int(0)),
+                ("ts", Json::Num(t * 1e6)),
+            ])),
+            Event::KvEvict { id, t, kv_bytes } => te.push(Json::obj(vec![
+                ("name", Json::str(format!("evict {id}"))),
+                ("cat", Json::str("decode")),
+                ("ph", Json::str("i")),
+                ("s", Json::str("t")),
+                ("pid", Json::int(2)),
+                ("tid", Json::int(0)),
+                ("ts", Json::Num(t * 1e6)),
+                ("args", Json::obj(vec![("kv_bytes", Json::int(*kv_bytes))])),
+            ])),
             Event::Dispatch { id, tenant, node, t, queue_view } => {
                 let view: Vec<Json> = queue_view
                     .iter()

@@ -1,0 +1,1301 @@
+//! Autoregressive serving: prefill–decode split, KV-cache capacity,
+//! and continuous batching over the cycle-level cost model.
+//!
+//! # Request lifecycle
+//!
+//! ```text
+//!  arrival          join (prefill)        decode steps           leave
+//!  ───────── wait ─ ───────────────── ─ ────────────────────── ─ ─────
+//!  t_arrival        prefill_tokens       one token / iteration   last
+//!                   processed in one     ctx grows by 1, KV      token;
+//!                   batched pass; the    cache grows by          KV
+//!                   pass emits the       bytes_per_token         state
+//!                   FIRST token (TTFT)                           freed
+//! ```
+//!
+//! Each request is `(prefill_tokens, decode_steps)`: the prompt pass
+//! runs every GEMM at the full context length and produces the first
+//! token (its completion time defines **TTFT**, time-to-first-token);
+//! each subsequent decode iteration runs the incremental single-token
+//! graph and produces one more token (**TPOT**, time-per-output-token,
+//! is the mean inter-token gap over the decode phase).  Phase GEMMs
+//! come from [`DecoderSpec::prefill`] / [`DecoderSpec::decode`], so
+//! both phases price through the same compile → schedule → execute
+//! pipeline as every other workload.
+//!
+//! # Scheduling policies
+//!
+//! * **Continuous** ([`AutoregPolicy::Continuous`]) — iteration-level
+//!   scheduling: between any two decode iterations, newly arrived
+//!   requests join the running batch (their prefill is folded into the
+//!   iteration) and finished requests leave immediately, freeing their
+//!   KV state and batch slot.  The batch size breathes with the load.
+//! * **Static** ([`AutoregPolicy::Static`]) — the classic max-batch +
+//!   max-wait policy of [`crate::serve::engine`] applied to whole
+//!   requests: a batch forms, prefills together, then decodes with
+//!   every slot held until the *longest* member finishes.  Arrivals
+//!   during a batch wait for the next one.  This is the A/B baseline
+//!   continuous batching is measured against.
+//!
+//! # KV-cache admission
+//!
+//! Live K/V state is modelled by [`KvModel`]: every prefilled or
+//! generated token appends `bytes_per_token` and the node's aggregate
+//! SRAM bounds the total.  Admission is **reserved** by default — a
+//! request joins only if its *final* footprint (`prefill + decode`
+//! tokens) fits beside the reservations of every active request, so
+//! eviction is impossible.  With [`AutoregConfig::optimistic`] a
+//! request joins if it fits *now*; when growth later overflows the
+//! capacity the youngest request is evicted ([`Event::KvEvict`]),
+//! re-queued, and pays a fresh prefill over everything it had.
+//!
+//! # Cost model and determinism
+//!
+//! [`DecodeCostCache`] memoizes the simulated seconds of each distinct
+//! `(phase, context bucket, batch)` composition — context lengths are
+//! quantized to [`AutoregConfig::ctx_bucket`] so a million-token trace
+//! compiles a handful of graphs.  The engine itself is a sequential
+//! discrete-event loop: runs are bit-identical for any `SOSA_THREADS`,
+//! warm or cold cache (property-pinned in the tests below).
+
+// Event fields are u32 by trace-format choice; values are bounded by
+// the batch size.  lint:allow(cast, file)
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+use crate::arch::ArchConfig;
+use crate::error::Result;
+use crate::obs::{Event, NullSink, TraceSink};
+use crate::sim::memory::KvModel;
+use crate::sim::{SimContext, SimOptions, SweepExecutor};
+use crate::testutil::XorShift;
+use crate::util::{csv::f, CsvWriter, Table};
+use crate::workloads::extra::DecoderSpec;
+
+/// One autoregressive request: a prompt of `prefill_tokens` followed
+/// by `decode_steps` generated tokens (the first of which is produced
+/// by the prefill pass itself).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DecodeRequest {
+    pub id: u64,
+    /// Arrival time, seconds.
+    pub t_arrival: f64,
+    /// Prompt length, tokens (>= 1).
+    pub prefill_tokens: usize,
+    /// Tokens to generate (>= 1).
+    pub decode_steps: usize,
+}
+
+/// Batch scheduling policy for the autoregressive engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AutoregPolicy {
+    /// Iteration-level scheduling: join/leave between decode steps.
+    Continuous,
+    /// Whole-request batches: max-batch + max-wait formation, every
+    /// slot held until the longest member finishes.
+    Static,
+}
+
+impl AutoregPolicy {
+    /// Stable report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            AutoregPolicy::Continuous => "continuous",
+            AutoregPolicy::Static => "static",
+        }
+    }
+}
+
+/// Autoregressive engine configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AutoregConfig {
+    pub policy: AutoregPolicy,
+    /// Batch slots (concurrent requests in the running batch).
+    pub max_batch: usize,
+    /// Static policy only: head-of-line batch-formation wait.
+    pub max_wait_s: f64,
+    /// Context-length quantum for the cost cache: phase costs are
+    /// priced at the context rounded up to this multiple, bounding the
+    /// number of distinct compilations while keeping cost growth with
+    /// KV length.
+    pub ctx_bucket: usize,
+    /// Admit on the *current* KV footprint instead of the final one;
+    /// overflow later evicts the youngest request (continuous only —
+    /// static batches always reserve their final footprint).
+    pub optimistic: bool,
+    /// Cost-model options (shared with the whole sim stack).
+    pub sim: SimOptions,
+}
+
+impl Default for AutoregConfig {
+    fn default() -> Self {
+        AutoregConfig {
+            policy: AutoregPolicy::Continuous,
+            max_batch: 8,
+            max_wait_s: 2e-3,
+            ctx_bucket: 64,
+            optimistic: false,
+            sim: SimOptions::default(),
+        }
+    }
+}
+
+/// Memoized phase costs: simulated seconds of each distinct
+/// `(phase, context bucket, batch)` composition, compiled once on a
+/// pooled [`SimContext`] (with `sim.pooling` off it rebuilds per miss
+/// — the cold A/B baseline; results are bit-identical either way).
+#[derive(Debug)]
+pub struct DecodeCostCache {
+    cfg: ArchConfig,
+    spec: DecoderSpec,
+    opts: SimOptions,
+    bucket: usize,
+    map: HashMap<(bool, usize, usize), f64>,
+    ctx: SimContext,
+    /// Simulator (execute-phase) invocations so far.
+    pub sim_calls: u64,
+    /// Compile-phase invocations so far.
+    pub compile_calls: u64,
+}
+
+impl DecodeCostCache {
+    /// New cache for a decoder family on a configuration.
+    pub fn new(cfg: ArchConfig, spec: DecoderSpec, opts: SimOptions, ctx_bucket: usize) -> Self {
+        DecodeCostCache {
+            cfg,
+            spec,
+            opts,
+            bucket: ctx_bucket.max(1),
+            map: HashMap::new(),
+            ctx: SimContext::new(),
+            sim_calls: 0,
+            compile_calls: 0,
+        }
+    }
+
+    /// The configuration the cache prices against.
+    pub fn cfg(&self) -> &ArchConfig {
+        &self.cfg
+    }
+
+    /// The decoder family the cache prices.
+    pub fn spec(&self) -> &DecoderSpec {
+        &self.spec
+    }
+
+    /// Distinct compositions priced so far.
+    pub fn entries(&self) -> usize {
+        self.map.len()
+    }
+
+    /// `tokens` rounded up to the cache's context quantum.
+    pub fn bucketed(&self, tokens: usize) -> usize {
+        tokens.max(1).div_ceil(self.bucket) * self.bucket
+    }
+
+    /// Seconds for a batched prefill pass over `tokens` of context.
+    pub fn prefill_seconds(&mut self, tokens: usize, batch: usize) -> f64 {
+        let b = self.bucketed(tokens);
+        self.seconds(false, b, batch)
+    }
+
+    /// Seconds for one batched decode iteration at `ctx_tokens` of
+    /// cached context.
+    pub fn decode_seconds(&mut self, ctx_tokens: usize, batch: usize) -> f64 {
+        let b = self.bucketed(ctx_tokens);
+        self.seconds(true, b, batch)
+    }
+
+    fn seconds(&mut self, decode: bool, tokens: usize, batch: usize) -> f64 {
+        let key = (decode, tokens, batch);
+        if let Some(&s) = self.map.get(&key) {
+            return s;
+        }
+        if !self.opts.pooling {
+            // Cold A/B baseline: rebuild scheduler state per miss.
+            self.ctx = SimContext::new();
+        }
+        let graph = if decode { self.spec.decode(tokens) } else { self.spec.prefill(tokens) };
+        let graph = graph.with_batch(batch.max(1));
+        let refs = [&graph];
+        let cp = crate::compile::compile_multi_with(&mut self.ctx, &self.cfg, &refs, &self.opts);
+        self.compile_calls += 1;
+        let stats = cp.execute_with(&mut self.ctx, &self.cfg, &self.opts);
+        self.sim_calls += 1;
+        let s = stats.exec_seconds(&self.cfg);
+        self.map.insert(key, s);
+        s
+    }
+}
+
+/// One completed request, with its token-timing milestones.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServedDecode {
+    pub id: u64,
+    pub t_arrival: f64,
+    /// When the first token came out (end of the prefill iteration).
+    pub t_first_token: f64,
+    /// When the last token came out.
+    pub t_end: f64,
+    pub prefill_tokens: usize,
+    pub decode_steps: usize,
+    /// Times this request was KV-evicted and re-prefilled.
+    pub evictions: u32,
+}
+
+impl ServedDecode {
+    /// Time-to-first-token: arrival → first token.
+    pub fn ttft_s(&self) -> f64 {
+        self.t_first_token - self.t_arrival
+    }
+
+    /// Time-per-output-token: mean inter-token gap over the decode
+    /// phase (0 for single-token requests — there is no gap).
+    pub fn tpot_s(&self) -> f64 {
+        if self.decode_steps <= 1 {
+            return 0.0;
+        }
+        (self.t_end - self.t_first_token) / (self.decode_steps - 1) as f64
+    }
+}
+
+/// Result of one autoregressive serving run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AutoregReport {
+    /// Completed requests, in completion order.
+    pub completed: Vec<ServedDecode>,
+    /// Requests whose KV state alone exceeds the node's SRAM — never
+    /// admissible, shed at the head of the queue.
+    pub rejected: u64,
+    /// Engine iterations (each a prefill group and/or a decode step).
+    pub iterations: u64,
+    /// Prefill passes, counting re-prefills after eviction.
+    pub prefills: u64,
+    /// KV evictions (optimistic admission only).
+    pub evictions: u64,
+    /// Tokens generated across all requests.
+    pub generated_tokens: u64,
+    /// Peak live KV bytes across the run.
+    pub peak_kv_bytes: u64,
+    /// Peak running-batch size.
+    pub peak_batch: usize,
+    /// End of the last iteration, seconds.
+    pub makespan_s: f64,
+    /// Accelerator-busy seconds (sum of iteration costs).
+    pub busy_s: f64,
+    /// Simulator invocations this run (cache-miss count).
+    pub sim_calls: u64,
+    /// Compile invocations this run.
+    pub compile_calls: u64,
+}
+
+impl AutoregReport {
+    /// Busy fraction over the makespan.
+    pub fn busy_frac(&self) -> f64 {
+        if self.makespan_s > 0.0 {
+            self.busy_s / self.makespan_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Merge per-node reports into a fleet view: completions are
+    /// re-sorted by `(t_end, id)`, makespan is the slowest node, busy
+    /// seconds add (divide by node count for a fleet busy fraction),
+    /// peaks take the max.
+    pub fn merge(reports: Vec<AutoregReport>) -> AutoregReport {
+        let mut out = AutoregReport::default();
+        for r in reports {
+            out.completed.extend(r.completed);
+            out.rejected += r.rejected;
+            out.iterations += r.iterations;
+            out.prefills += r.prefills;
+            out.evictions += r.evictions;
+            out.generated_tokens += r.generated_tokens;
+            out.peak_kv_bytes = out.peak_kv_bytes.max(r.peak_kv_bytes);
+            out.peak_batch = out.peak_batch.max(r.peak_batch);
+            out.makespan_s = out.makespan_s.max(r.makespan_s);
+            out.busy_s += r.busy_s;
+            out.sim_calls += r.sim_calls;
+            out.compile_calls += r.compile_calls;
+        }
+        out.completed.sort_by(|a, b| a.t_end.total_cmp(&b.t_end).then(a.id.cmp(&b.id)));
+        out
+    }
+}
+
+/// A request in the running batch.
+#[derive(Clone, Copy, Debug)]
+struct Active {
+    id: u64,
+    t_arrival: f64,
+    prefill_tokens: usize,
+    decode_steps: usize,
+    /// Tokens generated so far (also: KV tokens beyond the prompt).
+    generated: usize,
+    t_first: Option<f64>,
+    evictions: u32,
+}
+
+impl Active {
+    /// Live KV tokens (prompt + generated).
+    fn kv_tokens(&self) -> usize {
+        self.prefill_tokens + self.generated
+    }
+}
+
+/// A request waiting to (re)join: `generated > 0` means it was evicted
+/// and must re-prefill everything it had.
+#[derive(Clone, Copy, Debug)]
+struct Waiting {
+    req: DecodeRequest,
+    generated: usize,
+    t_first: Option<f64>,
+    evictions: u32,
+}
+
+impl Waiting {
+    fn fresh(req: DecodeRequest) -> Waiting {
+        Waiting { req, generated: 0, t_first: None, evictions: 0 }
+    }
+
+    /// Tokens a (re)join's prefill pass must process.
+    fn restore_tokens(&self) -> usize {
+        self.req.prefill_tokens + self.generated
+    }
+}
+
+/// The autoregressive serving engine: a sequential discrete-event loop
+/// over [`DecodeRequest`]s, deterministic for any thread count.
+#[derive(Debug)]
+pub struct AutoregEngine {
+    acfg: AutoregConfig,
+    kv: KvModel,
+    cache: DecodeCostCache,
+}
+
+impl AutoregEngine {
+    /// New engine (fresh cost cache) for a decoder on a configuration.
+    pub fn new(cfg: &ArchConfig, spec: &DecoderSpec, acfg: AutoregConfig) -> Self {
+        let cache =
+            DecodeCostCache::new(cfg.clone(), spec.clone(), acfg.sim.clone(), acfg.ctx_bucket);
+        AutoregEngine::from_cache(cache, acfg)
+    }
+
+    /// Engine over a pre-warmed cache (e.g. from a previous run via
+    /// [`AutoregEngine::into_cache`]).  The cache's configuration,
+    /// decoder and sim options are authoritative and must match.
+    pub fn from_cache(cache: DecodeCostCache, acfg: AutoregConfig) -> Self {
+        assert_eq!(cache.opts, acfg.sim, "cache was built with different sim options");
+        assert_eq!(cache.bucket, acfg.ctx_bucket.max(1), "cache uses a different ctx bucket");
+        let kv = KvModel::for_decoder(&cache.cfg, &cache.spec);
+        AutoregEngine { acfg, kv, cache }
+    }
+
+    /// Surrender the warmed cost cache for reuse.
+    pub fn into_cache(self) -> DecodeCostCache {
+        self.cache
+    }
+
+    /// The engine's KV-cache model.
+    pub fn kv(&self) -> KvModel {
+        self.kv
+    }
+
+    /// Run a request trace without tracing.
+    pub fn run(&mut self, requests: &[DecodeRequest]) -> AutoregReport {
+        let mut sink = NullSink;
+        self.run_traced(requests, &mut sink)
+    }
+
+    /// Run a request trace, emitting [`Event::DecodeStep`] /
+    /// [`Event::RequestJoin`] / [`Event::RequestLeave`] /
+    /// [`Event::KvEvict`] into `sink`.
+    pub fn run_traced(
+        &mut self,
+        requests: &[DecodeRequest],
+        sink: &mut dyn TraceSink,
+    ) -> AutoregReport {
+        let mut sorted = requests.to_vec();
+        sorted.sort_by(|a, b| a.t_arrival.total_cmp(&b.t_arrival).then(a.id.cmp(&b.id)));
+        let sim_calls0 = self.cache.sim_calls;
+        let compile_calls0 = self.cache.compile_calls;
+        let mut rep = match self.acfg.policy {
+            AutoregPolicy::Continuous => self.run_continuous(&sorted, sink),
+            AutoregPolicy::Static => self.run_static(&sorted, sink),
+        };
+        rep.sim_calls = self.cache.sim_calls - sim_calls0;
+        rep.compile_calls = self.cache.compile_calls - compile_calls0;
+        rep
+    }
+
+    /// Estimated steady-state request throughput at the mean request
+    /// shape: the largest admissible batch amortizing one prefill and
+    /// `decode_steps - 1` decode iterations per request.
+    pub fn capacity_qps(&mut self, prefill_tokens: usize, decode_steps: usize) -> f64 {
+        let tokens = (prefill_tokens + decode_steps) as u64;
+        let b = self.acfg.max_batch.min(self.kv.max_batch(&self.cache.cfg, tokens)).max(1);
+        let per = self.cache.prefill_seconds(prefill_tokens, b)
+            + decode_steps.saturating_sub(1) as f64
+                * self.cache.decode_seconds(prefill_tokens + decode_steps, b);
+        if per > 0.0 {
+            b as f64 / per
+        } else {
+            0.0
+        }
+    }
+
+    /// Final-footprint KV tokens a request needs end to end.
+    fn final_tokens(r: &DecodeRequest) -> u64 {
+        (r.prefill_tokens + r.decode_steps) as u64
+    }
+
+    fn run_continuous(
+        &mut self,
+        sorted: &[DecodeRequest],
+        sink: &mut dyn TraceSink,
+    ) -> AutoregReport {
+        let cap = self.kv.capacity_tokens(&self.cache.cfg);
+        let mut pending: VecDeque<Waiting> = sorted.iter().map(|&r| Waiting::fresh(r)).collect();
+        let mut active: Vec<Active> = Vec::new();
+        let mut rep = AutoregReport::default();
+        let mut t = 0.0f64;
+        let mut iter: u64 = 0;
+        loop {
+            if active.is_empty() {
+                match pending.front() {
+                    None => break,
+                    Some(w) => {
+                        if w.req.t_arrival > t {
+                            t = w.req.t_arrival;
+                        }
+                    }
+                }
+            }
+            // Admission: FIFO over arrived requests, bounded by batch
+            // slots and KV capacity (reserved: final footprint;
+            // optimistic: current footprint).
+            let mut reserved: u64 = 0;
+            for a in &active {
+                reserved += if self.acfg.optimistic {
+                    a.kv_tokens() as u64
+                } else {
+                    (a.prefill_tokens + a.decode_steps) as u64
+                };
+            }
+            let mut joiners: Vec<Active> = Vec::new();
+            while active.len() + joiners.len() < self.acfg.max_batch {
+                let Some(w) = pending.front() else { break };
+                if w.req.t_arrival > t {
+                    break;
+                }
+                let need = if self.acfg.optimistic {
+                    (w.restore_tokens() + 1) as u64
+                } else {
+                    Self::final_tokens(&w.req).max((w.restore_tokens() + 1) as u64)
+                };
+                if need > cap {
+                    // Unservable even alone: KV exceeds node SRAM.
+                    pending.pop_front().expect("front checked");
+                    rep.rejected += 1;
+                    continue;
+                }
+                if reserved + need > cap {
+                    break;
+                }
+                reserved += need;
+                let w = pending.pop_front().expect("front checked");
+                joiners.push(Active {
+                    id: w.req.id,
+                    t_arrival: w.req.t_arrival,
+                    prefill_tokens: w.req.prefill_tokens,
+                    decode_steps: w.req.decode_steps,
+                    generated: w.generated,
+                    t_first: w.t_first,
+                    evictions: w.evictions,
+                });
+            }
+            if active.is_empty() && joiners.is_empty() {
+                if pending.is_empty() {
+                    break;
+                }
+                continue; // head not yet arrived or KV-blocked; re-time.
+            }
+            // One iteration: joiners prefill (grouped by context
+            // bucket), previously-active requests run one decode step.
+            let t_start = t;
+            let old_n = active.len();
+            let mut dt = 0.0f64;
+            let mut groups: BTreeMap<usize, usize> = BTreeMap::new();
+            for j in &joiners {
+                let restore = j.prefill_tokens + j.generated;
+                *groups.entry(self.cache.bucketed(restore)).or_insert(0) += 1;
+            }
+            for (&bucket, &count) in &groups {
+                dt += self.cache.prefill_seconds(bucket, count);
+                rep.prefills += count as u64;
+            }
+            if old_n > 0 {
+                let max_ctx =
+                    active.iter().map(Active::kv_tokens).max().expect("old_n > 0");
+                dt += self.cache.decode_seconds(max_ctx, old_n);
+            }
+            t = t_start + dt;
+            rep.busy_s += dt;
+            // Every participant produced one token this iteration:
+            // actives from the decode step, joiners from the prefill.
+            for a in active.iter_mut() {
+                a.generated += 1;
+            }
+            for j in joiners.iter_mut() {
+                j.generated += 1;
+                if j.t_first.is_none() {
+                    j.t_first = Some(t);
+                }
+            }
+            if sink.enabled() {
+                for j in &joiners {
+                    sink.event(Event::RequestJoin { id: j.id, t });
+                }
+            }
+            active.extend(joiners);
+            let batch = active.len();
+            rep.generated_tokens += batch as u64;
+            let live: u64 = active.iter().map(|a| a.kv_tokens() as u64).sum();
+            rep.peak_kv_bytes = rep.peak_kv_bytes.max(self.kv.footprint_bytes(live));
+            rep.peak_batch = rep.peak_batch.max(batch);
+            if sink.enabled() {
+                sink.event(Event::DecodeStep {
+                    iter,
+                    t_start,
+                    t_end: t,
+                    batch: batch as u32,
+                    kv_tokens: live,
+                });
+            }
+            iter += 1;
+            rep.iterations += 1;
+            // Leave: finished requests release their slot and KV.
+            let mut still = Vec::with_capacity(active.len());
+            for a in active.drain(..) {
+                if a.generated >= a.decode_steps {
+                    if sink.enabled() {
+                        sink.event(Event::RequestLeave { id: a.id, t });
+                    }
+                    rep.completed.push(ServedDecode {
+                        id: a.id,
+                        t_arrival: a.t_arrival,
+                        t_first_token: a.t_first.expect("completed ⇒ produced a token"),
+                        t_end: t,
+                        prefill_tokens: a.prefill_tokens,
+                        decode_steps: a.decode_steps,
+                        evictions: a.evictions,
+                    });
+                } else {
+                    still.push(a);
+                }
+            }
+            active = still;
+            // Optimistic overflow: evict youngest until the cache fits.
+            if self.acfg.optimistic {
+                let mut live: u64 = active.iter().map(|a| a.kv_tokens() as u64).sum();
+                while live > cap {
+                    let v = active.pop().expect("live > 0 ⇒ non-empty");
+                    let tokens = v.kv_tokens() as u64;
+                    live -= tokens;
+                    rep.evictions += 1;
+                    if sink.enabled() {
+                        sink.event(Event::KvEvict {
+                            id: v.id,
+                            t,
+                            kv_bytes: self.kv.footprint_bytes(tokens),
+                        });
+                    }
+                    pending.push_front(Waiting {
+                        req: DecodeRequest {
+                            id: v.id,
+                            t_arrival: v.t_arrival,
+                            prefill_tokens: v.prefill_tokens,
+                            decode_steps: v.decode_steps,
+                        },
+                        generated: v.generated,
+                        t_first: v.t_first,
+                        evictions: v.evictions + 1,
+                    });
+                }
+            }
+        }
+        rep.makespan_s = t;
+        rep
+    }
+
+    fn run_static(&mut self, sorted: &[DecodeRequest], sink: &mut dyn TraceSink) -> AutoregReport {
+        let cap = self.kv.capacity_tokens(&self.cache.cfg);
+        let mut pending: VecDeque<DecodeRequest> = sorted.iter().copied().collect();
+        let mut rep = AutoregReport::default();
+        let mut t = 0.0f64; // machine-free time
+        let mut iter: u64 = 0;
+        while let Some(&head) = pending.front() {
+            if Self::final_tokens(&head) > cap {
+                pending.pop_front();
+                rep.rejected += 1;
+                continue;
+            }
+            let head_t = head.t_arrival;
+            let mut now = t.max(head_t);
+            // Batch formation: wait for max_batch or max_wait.
+            loop {
+                let ready = pending.iter().take_while(|r| r.t_arrival <= now).count();
+                if ready >= self.acfg.max_batch
+                    || ready == pending.len()
+                    || now >= head_t + self.acfg.max_wait_s
+                {
+                    break;
+                }
+                now = pending[ready].t_arrival.min(head_t + self.acfg.max_wait_s);
+            }
+            // Membership: FIFO over arrived requests, KV-capped by the
+            // final footprint of every member (no eviction in static).
+            let mut members: Vec<DecodeRequest> = Vec::new();
+            let mut reserved: u64 = 0;
+            while members.len() < self.acfg.max_batch {
+                let Some(&r) = pending.front() else { break };
+                if r.t_arrival > now {
+                    break;
+                }
+                let need = Self::final_tokens(&r);
+                if need > cap {
+                    pending.pop_front();
+                    rep.rejected += 1;
+                    continue;
+                }
+                if reserved + need > cap {
+                    break;
+                }
+                reserved += need;
+                members.push(pending.pop_front().expect("front checked"));
+            }
+            if members.is_empty() {
+                continue;
+            }
+            let b = members.len();
+            rep.peak_batch = rep.peak_batch.max(b);
+            // Phase 1: batched prefill (grouped by context bucket);
+            // every member's first token appears when the pass ends.
+            let t_start = now;
+            let mut groups: BTreeMap<usize, usize> = BTreeMap::new();
+            for m in &members {
+                *groups.entry(self.cache.bucketed(m.prefill_tokens)).or_insert(0) += 1;
+            }
+            let mut dt = 0.0f64;
+            for (&bucket, &count) in &groups {
+                dt += self.cache.prefill_seconds(bucket, count);
+                rep.prefills += count as u64;
+            }
+            let t_first = t_start + dt;
+            let mut t_now = t_first;
+            rep.generated_tokens += b as u64;
+            let live: u64 = members.iter().map(|m| (m.prefill_tokens + 1) as u64).sum();
+            rep.peak_kv_bytes = rep.peak_kv_bytes.max(self.kv.footprint_bytes(live));
+            if sink.enabled() {
+                for m in &members {
+                    sink.event(Event::RequestJoin { id: m.id, t: t_first });
+                }
+                sink.event(Event::DecodeStep {
+                    iter,
+                    t_start,
+                    t_end: t_first,
+                    batch: b as u32,
+                    kv_tokens: live,
+                });
+            }
+            iter += 1;
+            rep.iterations += 1;
+            let finish = |r: &DecodeRequest, t_end: f64, rep: &mut AutoregReport| {
+                rep.completed.push(ServedDecode {
+                    id: r.id,
+                    t_arrival: r.t_arrival,
+                    t_first_token: t_first,
+                    t_end,
+                    prefill_tokens: r.prefill_tokens,
+                    decode_steps: r.decode_steps,
+                    evictions: 0,
+                });
+            };
+            for m in &members {
+                if m.decode_steps == 1 {
+                    if sink.enabled() {
+                        sink.event(Event::RequestLeave { id: m.id, t: t_first });
+                    }
+                    finish(m, t_first, &mut rep);
+                }
+            }
+            // Phase 2: decode iterations at the FULL batch size —
+            // finished members hold their slot and KV state until the
+            // longest member drains (the static inefficiency).
+            let d_max = members.iter().map(|r| r.decode_steps).max().expect("non-empty");
+            for step in 2..=d_max {
+                let max_ctx = members
+                    .iter()
+                    .map(|r| r.prefill_tokens + (step - 1).min(r.decode_steps))
+                    .max()
+                    .expect("non-empty");
+                let sd = self.cache.decode_seconds(max_ctx, b);
+                let s_start = t_now;
+                t_now += sd;
+                let generating =
+                    members.iter().filter(|r| r.decode_steps >= step).count() as u64;
+                rep.generated_tokens += generating;
+                let live: u64 = members
+                    .iter()
+                    .map(|r| (r.prefill_tokens + step.min(r.decode_steps)) as u64)
+                    .sum();
+                rep.peak_kv_bytes = rep.peak_kv_bytes.max(self.kv.footprint_bytes(live));
+                if sink.enabled() {
+                    sink.event(Event::DecodeStep {
+                        iter,
+                        t_start: s_start,
+                        t_end: t_now,
+                        batch: b as u32,
+                        kv_tokens: live,
+                    });
+                }
+                iter += 1;
+                rep.iterations += 1;
+                for m in &members {
+                    if m.decode_steps == step {
+                        if sink.enabled() {
+                            sink.event(Event::RequestLeave { id: m.id, t: t_now });
+                        }
+                        finish(m, t_now, &mut rep);
+                    }
+                }
+            }
+            rep.busy_s += t_now - t_start;
+            t = t_now;
+        }
+        rep.makespan_s = t;
+        rep
+    }
+}
+
+/// Open-loop autoregressive traffic: Poisson arrivals with uniformly
+/// distributed prompt and generation lengths, deterministic by seed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DecodeTrafficSpec {
+    /// Mean arrival rate, requests/second.
+    pub qps: f64,
+    /// Arrival horizon, seconds.
+    pub duration_s: f64,
+    pub seed: u64,
+    /// Inclusive prompt-length range, tokens.
+    pub prefill: (usize, usize),
+    /// Inclusive generation-length range, tokens.
+    pub decode: (usize, usize),
+}
+
+impl DecodeTrafficSpec {
+    /// Poisson spec with the default request-shape ranges.
+    pub fn poisson(qps: f64, duration_s: f64, seed: u64) -> Self {
+        DecodeTrafficSpec { qps, duration_s, seed, prefill: (64, 256), decode: (8, 64) }
+    }
+}
+
+/// Generate a seeded request trace from a traffic spec.
+pub fn generate_decode(spec: &DecodeTrafficSpec) -> Vec<DecodeRequest> {
+    let mut rng = XorShift::new(spec.seed);
+    let mut out = Vec::new();
+    if spec.qps <= 0.0 || spec.duration_s <= 0.0 {
+        return out;
+    }
+    let (plo, phi) = (spec.prefill.0.max(1), spec.prefill.1.max(spec.prefill.0).max(1));
+    let (dlo, dhi) = (spec.decode.0.max(1), spec.decode.1.max(spec.decode.0).max(1));
+    let mut t = 0.0f64;
+    let mut id = 0u64;
+    loop {
+        // Exponential inter-arrival (same variate as serve::traffic).
+        t += -(1.0 - rng.f64()).ln() / spec.qps;
+        if t >= spec.duration_s {
+            break;
+        }
+        out.push(DecodeRequest {
+            id,
+            t_arrival: t,
+            prefill_tokens: rng.range(plo, phi),
+            decode_steps: rng.range(dlo, dhi),
+        });
+        id += 1;
+    }
+    out
+}
+
+/// One decode load-sweep measurement: an offered rate under one policy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DecodeSweepPoint {
+    pub qps: f64,
+    pub policy: &'static str,
+    pub ttft_p50_s: f64,
+    pub ttft_p99_s: f64,
+    pub tpot_p50_s: f64,
+    pub tpot_p99_s: f64,
+    /// Completions meeting BOTH deadlines per second of horizon.
+    pub goodput_qps: f64,
+    pub completed: u64,
+    pub evictions: u64,
+    pub busy_frac: f64,
+}
+
+/// Decode load-sweep options.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DecodeSweepOptions {
+    /// Offered rates to measure (each runs under BOTH policies).
+    pub qps: Vec<f64>,
+    pub duration_s: f64,
+    pub seed: u64,
+    pub prefill: (usize, usize),
+    pub decode: (usize, usize),
+    pub ttft_deadline_s: f64,
+    pub tpot_deadline_s: f64,
+    /// Worker threads (None = `SOSA_THREADS` / machine default).
+    pub threads: Option<usize>,
+}
+
+/// Sweep offered load × policy: each point generates the same seeded
+/// trace and serves it under continuous and static batching, so the
+/// two policies are compared at exactly equal offered load.  Points
+/// fan across workers ([`SweepExecutor`], per-worker warm
+/// [`DecodeCostCache`]) and return in item order — results are
+/// bit-identical for any thread count.
+pub fn decode_sweep(
+    cfg: &ArchConfig,
+    spec: &DecoderSpec,
+    acfg: &AutoregConfig,
+    sweep: &DecodeSweepOptions,
+) -> Vec<DecodeSweepPoint> {
+    let policies = [AutoregPolicy::Continuous, AutoregPolicy::Static];
+    let items: Vec<(f64, AutoregPolicy)> =
+        sweep.qps.iter().flat_map(|&q| policies.iter().map(move |&p| (q, p))).collect();
+    let ex = match sweep.threads {
+        Some(n) => SweepExecutor::with_threads(n),
+        None => SweepExecutor::new(),
+    };
+    ex.run_with_state(
+        &items,
+        || None::<DecodeCostCache>,
+        |slot, _, &(qps, policy)| {
+            let cache = slot.take().unwrap_or_else(|| {
+                DecodeCostCache::new(cfg.clone(), spec.clone(), acfg.sim.clone(), acfg.ctx_bucket)
+            });
+            let mut engine =
+                AutoregEngine::from_cache(cache, AutoregConfig { policy, ..acfg.clone() });
+            let requests = generate_decode(&DecodeTrafficSpec {
+                qps,
+                duration_s: sweep.duration_s,
+                seed: sweep.seed,
+                prefill: sweep.prefill,
+                decode: sweep.decode,
+            });
+            let rep = engine.run(&requests);
+            *slot = Some(engine.into_cache());
+            let slo = crate::serve::slo::analyze_autoreg(
+                &rep,
+                sweep.duration_s,
+                sweep.ttft_deadline_s,
+                sweep.tpot_deadline_s,
+            );
+            DecodeSweepPoint {
+                qps,
+                policy: policy.name(),
+                ttft_p50_s: slo.ttft.p50,
+                ttft_p99_s: slo.ttft.p99,
+                tpot_p50_s: slo.tpot.p50,
+                tpot_p99_s: slo.tpot.p99,
+                goodput_qps: slo.goodput_qps,
+                completed: slo.completed,
+                evictions: rep.evictions,
+                busy_frac: slo.busy_frac,
+            }
+        },
+    )
+}
+
+/// Write sweep points as CSV.
+pub fn write_decode_sweep_csv(
+    path: impl AsRef<std::path::Path>,
+    points: &[DecodeSweepPoint],
+) -> Result<()> {
+    let mut csv = CsvWriter::create(path, &DECODE_SWEEP_COLUMNS)?;
+    for p in points {
+        csv.row(&decode_sweep_row(p))?;
+    }
+    csv.finish()
+}
+
+/// Column names shared by the CSV writer and the table renderer.
+pub const DECODE_SWEEP_COLUMNS: [&str; 10] = [
+    "qps",
+    "policy",
+    "ttft_p50_ms",
+    "ttft_p99_ms",
+    "tpot_p50_ms",
+    "tpot_p99_ms",
+    "goodput_qps",
+    "completed",
+    "evictions",
+    "busy_pct",
+];
+
+/// One sweep point as its CSV cells (shared with the golden tests so
+/// the pinned snapshot and [`write_decode_sweep_csv`] cannot drift).
+pub fn decode_sweep_row(p: &DecodeSweepPoint) -> [String; 10] {
+    [
+        f(p.qps, 1),
+        p.policy.to_string(),
+        f(p.ttft_p50_s * 1e3, 3),
+        f(p.ttft_p99_s * 1e3, 3),
+        f(p.tpot_p50_s * 1e3, 3),
+        f(p.tpot_p99_s * 1e3, 3),
+        f(p.goodput_qps, 1),
+        p.completed.to_string(),
+        p.evictions.to_string(),
+        f(100.0 * p.busy_frac, 1),
+    ]
+}
+
+/// Render sweep points as the experiments' aligned table.
+pub fn decode_sweep_table(points: &[DecodeSweepPoint]) -> Table {
+    let mut table = Table::new(&DECODE_SWEEP_COLUMNS);
+    for p in points {
+        table.row(decode_sweep_row(p).to_vec());
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ArrayDims;
+    use crate::obs::Recorder;
+
+    fn toy_cfg() -> ArchConfig {
+        ArchConfig::with_array(ArrayDims::new(8, 8), 4)
+    }
+
+    fn tiny_spec() -> DecoderSpec {
+        DecoderSpec {
+            name: "Tiny".to_string(),
+            layers: 2,
+            hidden: 64,
+            heads: 4,
+            ffn: 128,
+            gated_ffn: false,
+        }
+    }
+
+    fn fast_acfg() -> AutoregConfig {
+        AutoregConfig {
+            max_batch: 4,
+            ctx_bucket: 32,
+            sim: SimOptions { memory_model: false, ..SimOptions::default() },
+            ..AutoregConfig::default()
+        }
+    }
+
+    fn burst(n: u64) -> Vec<DecodeRequest> {
+        (0..n)
+            .map(|id| DecodeRequest {
+                id,
+                t_arrival: id as f64 * 1e-5,
+                prefill_tokens: 16 + (id as usize % 3) * 8,
+                // Heterogeneous lengths with a long straggler per
+                // max-batch group — the shape static slot-holding is
+                // worst at.
+                decode_steps: 2 + (id as usize % 4) * 8,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn traffic_is_seeded_and_in_range() {
+        let spec = DecodeTrafficSpec {
+            prefill: (8, 16),
+            decode: (2, 5),
+            ..DecodeTrafficSpec::poisson(500.0, 0.05, 11)
+        };
+        let a = generate_decode(&spec);
+        let b = generate_decode(&spec);
+        assert_eq!(a, b, "same seed ⇒ same trace");
+        assert!(!a.is_empty());
+        let c = generate_decode(&DecodeTrafficSpec { seed: 12, ..spec });
+        assert_ne!(a, c, "different seed ⇒ different trace");
+        for (i, r) in a.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert!(r.prefill_tokens >= 8 && r.prefill_tokens <= 16);
+            assert!(r.decode_steps >= 2 && r.decode_steps <= 5);
+            assert!(r.t_arrival >= 0.0 && r.t_arrival < spec.duration_s);
+        }
+        assert!(a.windows(2).all(|w| w[0].t_arrival <= w[1].t_arrival));
+    }
+
+    #[test]
+    fn continuous_is_deterministic_cold_and_warm() {
+        let reqs = burst(10);
+        let mut e1 = AutoregEngine::new(&toy_cfg(), &tiny_spec(), fast_acfg());
+        let cold = e1.run(&reqs);
+        // Warm: same cache, same trace — must be bit-identical and
+        // fully memoized (no new simulator invocations).
+        let warm = e1.run(&reqs);
+        assert_eq!(cold.completed, warm.completed);
+        assert_eq!(cold.makespan_s, warm.makespan_s);
+        assert_eq!(warm.sim_calls, 0, "second run must hit the cache everywhere");
+        assert!(cold.sim_calls > 0);
+        // Cache hand-off preserves results exactly.
+        let mut e2 = AutoregEngine::from_cache(e1.into_cache(), fast_acfg());
+        assert_eq!(e2.run(&reqs), warm);
+    }
+
+    #[test]
+    fn continuous_conserves_requests_and_tokens() {
+        let reqs = burst(12);
+        let mut e = AutoregEngine::new(&toy_cfg(), &tiny_spec(), fast_acfg());
+        let rep = e.run(&reqs);
+        assert_eq!(rep.completed.len() as u64 + rep.rejected, reqs.len() as u64);
+        assert_eq!(rep.rejected, 0);
+        let want: u64 = reqs.iter().map(|r| r.decode_steps as u64).sum();
+        assert_eq!(rep.generated_tokens, want, "every requested token generated exactly once");
+        for s in &rep.completed {
+            assert!(s.t_first_token >= s.t_arrival);
+            assert!(s.t_end >= s.t_first_token);
+            assert!(s.ttft_s() >= 0.0 && s.tpot_s() >= 0.0);
+        }
+        assert!(rep.busy_s <= rep.makespan_s + 1e-12);
+        assert!(rep.peak_batch >= 1 && rep.peak_batch <= fast_acfg().max_batch);
+    }
+
+    #[test]
+    fn events_match_report() {
+        let reqs = burst(6);
+        let mut e = AutoregEngine::new(&toy_cfg(), &tiny_spec(), fast_acfg());
+        let mut rec = Recorder::new();
+        let rep = e.run_traced(&reqs, &mut rec);
+        let events = rec.into_events();
+        let joins = events.iter().filter(|ev| matches!(ev, Event::RequestJoin { .. })).count();
+        let leaves = events.iter().filter(|ev| matches!(ev, Event::RequestLeave { .. })).count();
+        let steps = events.iter().filter(|ev| matches!(ev, Event::DecodeStep { .. })).count();
+        assert_eq!(joins as u64, rep.prefills);
+        assert_eq!(leaves, rep.completed.len());
+        assert_eq!(steps as u64, rep.iterations);
+    }
+
+    #[test]
+    fn kv_admission_bounds_the_batch() {
+        // Shrink the SRAM so KV capacity (not max_batch) is the
+        // binding constraint: two final footprints fill it exactly.
+        let cfg = ArchConfig { bank_kb: 1, ..toy_cfg() };
+        let spec = tiny_spec();
+        let kv = KvModel::for_decoder(&cfg, &spec);
+        let cap = kv.capacity_tokens(&cfg) as usize;
+        assert!(cap >= 8, "1 KiB banks must still hold a few tokens: {cap}");
+        let reqs: Vec<DecodeRequest> = (0..4)
+            .map(|id| DecodeRequest {
+                id,
+                t_arrival: 0.0,
+                prefill_tokens: cap / 2 - 2,
+                decode_steps: 2,
+            })
+            .collect();
+        let mut e = AutoregEngine::new(&cfg, &spec, fast_acfg());
+        let rep = e.run(&reqs);
+        assert_eq!(rep.completed.len(), 4, "all served, just not together");
+        assert_eq!(rep.rejected, 0);
+        assert!(rep.peak_batch <= 2, "KV capacity admits at most 2 at once: {}", rep.peak_batch);
+        assert!(rep.peak_kv_bytes <= cfg.sram_bytes() as u64);
+    }
+
+    #[test]
+    fn oversized_request_is_rejected_not_wedged() {
+        let cfg = ArchConfig { bank_kb: 1, ..toy_cfg() };
+        let spec = tiny_spec();
+        let kv = KvModel::for_decoder(&cfg, &spec);
+        let cap = kv.capacity_tokens(&cfg) as usize;
+        let mut reqs: Vec<DecodeRequest> = (0..3)
+            .map(|id| DecodeRequest {
+                id,
+                t_arrival: id as f64 * 1e-5,
+                prefill_tokens: 4,
+                decode_steps: 2,
+            })
+            .collect();
+        reqs.push(DecodeRequest {
+            id: 99,
+            t_arrival: 0.0,
+            prefill_tokens: cap + 1,
+            decode_steps: 2,
+        });
+        for policy in [AutoregPolicy::Continuous, AutoregPolicy::Static] {
+            let mut e = AutoregEngine::new(
+                &cfg,
+                &spec,
+                AutoregConfig { policy, ..fast_acfg() },
+            );
+            let rep = e.run(&reqs);
+            assert_eq!(rep.rejected, 1, "{policy:?}");
+            assert_eq!(rep.completed.len(), 3, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn optimistic_admission_evicts_and_still_finishes() {
+        let cfg = ArchConfig { bank_kb: 1, ..toy_cfg() };
+        let spec = tiny_spec();
+        let kv = KvModel::for_decoder(&cfg, &spec);
+        let cap = kv.capacity_tokens(&cfg) as usize;
+        assert!(cap >= 12, "test needs room for three joiners: {cap}");
+        // Three requests fit at admission but together outgrow the
+        // capacity (one token each per iteration), forcing evictions;
+        // each alone stays servable (p + steps == cap).
+        let p = cap / 3 - 2;
+        let steps = cap - p;
+        let reqs: Vec<DecodeRequest> = (0..3)
+            .map(|id| DecodeRequest { id, t_arrival: 0.0, prefill_tokens: p, decode_steps: steps })
+            .collect();
+        let acfg = AutoregConfig { optimistic: true, ..fast_acfg() };
+        let mut e = AutoregEngine::new(&cfg, &spec, acfg.clone());
+        let mut rec = Recorder::new();
+        let rep = e.run_traced(&reqs, &mut rec);
+        assert!(rep.evictions > 0, "growth past capacity must evict");
+        assert_eq!(rep.completed.len(), 3, "evicted requests re-prefill and finish");
+        assert_eq!(rep.rejected, 0);
+        let evs = rec.into_events();
+        let evict_events = evs.iter().filter(|ev| matches!(ev, Event::KvEvict { .. })).count();
+        assert_eq!(evict_events as u64, rep.evictions);
+        assert!(rep.prefills > 3, "re-prefills counted");
+        // Determinism under eviction too.
+        let mut e2 = AutoregEngine::new(&cfg, &spec, acfg);
+        assert_eq!(e2.run(&reqs), rep);
+    }
+
+    #[test]
+    fn static_holds_slots_until_longest_member_finishes() {
+        let cfg = toy_cfg();
+        let spec = tiny_spec();
+        let reqs = vec![
+            DecodeRequest { id: 0, t_arrival: 0.0, prefill_tokens: 16, decode_steps: 3 },
+            DecodeRequest { id: 1, t_arrival: 0.0, prefill_tokens: 16, decode_steps: 1 },
+        ];
+        let mut e = AutoregEngine::new(
+            &cfg,
+            &spec,
+            AutoregConfig { policy: AutoregPolicy::Static, max_batch: 2, ..fast_acfg() },
+        );
+        let rep = e.run(&reqs);
+        assert_eq!(rep.completed.len(), 2);
+        // Prefill phase + 2 decode iterations (tokens 2 and 3 of id 0).
+        assert_eq!(rep.iterations, 3);
+        let short = rep.completed.iter().find(|s| s.id == 1).expect("served");
+        let long = rep.completed.iter().find(|s| s.id == 0).expect("served");
+        assert_eq!(short.t_first_token, long.t_first_token, "batch prefills together");
+        assert_eq!(short.t_end, short.t_first_token, "single-token request ends at prefill");
+        assert!(long.t_end > long.t_first_token);
+        assert_eq!(rep.makespan_s, long.t_end);
+    }
+
+    #[test]
+    fn continuous_beats_static_on_a_loaded_trace() {
+        let cfg = toy_cfg();
+        let spec = tiny_spec();
+        let acfg = fast_acfg();
+        // Saturating burst: arrivals outpace service, so static pays
+        // batch-formation waits and slot-holding that continuous
+        // avoids — it must finish the same work sooner and deliver
+        // first tokens faster.
+        let reqs = burst(16);
+        let mut cont = AutoregEngine::new(&cfg, &spec, acfg.clone());
+        let rc = cont.run(&reqs);
+        let mut stat = AutoregEngine::from_cache(
+            cont.into_cache(),
+            AutoregConfig { policy: AutoregPolicy::Static, ..acfg },
+        );
+        let rs = stat.run(&reqs);
+        assert_eq!(rc.completed.len(), rs.completed.len());
+        assert!(
+            rc.makespan_s < rs.makespan_s,
+            "continuous {} vs static {}",
+            rc.makespan_s,
+            rs.makespan_s
+        );
+        let mean_ttft = |r: &AutoregReport| {
+            let s: f64 = r.completed.iter().map(ServedDecode::ttft_s).sum();
+            s / r.completed.len() as f64
+        };
+        assert!(mean_ttft(&rc) < mean_ttft(&rs), "iteration-level joins cut TTFT");
+    }
+
+    #[test]
+    fn decode_sweep_is_thread_invariant() {
+        let cfg = toy_cfg();
+        let spec = tiny_spec();
+        let acfg = fast_acfg();
+        let sweep = |threads| {
+            decode_sweep(
+                &cfg,
+                &spec,
+                &acfg,
+                &DecodeSweepOptions {
+                    qps: vec![200.0, 800.0],
+                    duration_s: 0.02,
+                    seed: 7,
+                    prefill: (8, 24),
+                    decode: (2, 6),
+                    ttft_deadline_s: 0.05,
+                    tpot_deadline_s: 0.01,
+                    threads: Some(threads),
+                },
+            )
+        };
+        let one = sweep(1);
+        let four = sweep(4);
+        assert_eq!(one, four, "SOSA_THREADS must not change results");
+        assert_eq!(one.len(), 4, "2 rates × 2 policies");
+        assert_eq!(one[0].policy, "continuous");
+        assert_eq!(one[1].policy, "static");
+    }
+
+    #[test]
+    fn sweep_csv_and_table_align() {
+        let p = DecodeSweepPoint {
+            qps: 100.0,
+            policy: "continuous",
+            ttft_p50_s: 1e-3,
+            ttft_p99_s: 2e-3,
+            tpot_p50_s: 1e-4,
+            tpot_p99_s: 2e-4,
+            goodput_qps: 90.0,
+            completed: 9,
+            evictions: 0,
+            busy_frac: 0.5,
+        };
+        let dir = std::env::temp_dir().join("sosa_autoreg_csv_test");
+        std::fs::create_dir_all(&dir).expect("tmp dir");
+        let path = dir.join("decode_sweep.csv");
+        write_decode_sweep_csv(&path, &[p]).expect("write");
+        let text = std::fs::read_to_string(&path).expect("read");
+        assert!(text.starts_with("qps,policy,ttft_p50_ms,"), "{text}");
+        assert!(text.contains("100.0,continuous,1.000,2.000,0.100,0.200,90.0,9,0,50.0"), "{text}");
+        let rendered = decode_sweep_table(&[p]).render();
+        assert!(rendered.contains("continuous"), "{rendered}");
+    }
+
+    #[test]
+    fn capacity_estimate_is_positive_and_batch_scaled() {
+        let mut e = AutoregEngine::new(&toy_cfg(), &tiny_spec(), fast_acfg());
+        let cap = e.capacity_qps(16, 4);
+        assert!(cap > 0.0);
+        let mut e1 = AutoregEngine::new(
+            &toy_cfg(),
+            &tiny_spec(),
+            AutoregConfig { max_batch: 1, ..fast_acfg() },
+        );
+        assert!(cap > e1.capacity_qps(16, 4), "batching amortizes per-request cost");
+    }
+}

@@ -20,7 +20,11 @@
 //!   sub-[`crate::ArchConfig`];
 //! * [`slo`] — p50/p95/p99 latency, queueing vs service decomposition,
 //!   goodput under a deadline, and a load-sweep helper that finds the
-//!   saturation knee / max sustainable QPS.
+//!   saturation knee / max sustainable QPS;
+//! * [`autoreg`] — autoregressive serving: prefill–decode request
+//!   model, KV-cache capacity admission, and continuous batching
+//!   (iteration-level join/leave) vs the static max-batch baseline,
+//!   with TTFT/TPOT SLOs ([`slo::analyze_autoreg`]).
 //!
 //! Everything is deterministic under a fixed seed: equal inputs yield
 //! byte-identical reports (no wall clock, no hash-order dependence).
@@ -39,11 +43,17 @@
 //! println!("{}", analyze(&rep, 1.0, 5e-3));
 //! ```
 
+pub mod autoreg;
 pub mod engine;
 pub mod partition;
 pub mod slo;
 pub mod traffic;
 
+pub use autoreg::{
+    decode_sweep, decode_sweep_table, generate_decode, write_decode_sweep_csv, AutoregConfig,
+    AutoregEngine, AutoregPolicy, AutoregReport, DecodeCostCache, DecodeRequest,
+    DecodeSweepOptions, DecodeSweepPoint, DecodeTrafficSpec, ServedDecode,
+};
 pub use engine::{
     serve_shared, Admission, BatchPolicy, CostCache, CostEntry, Engine, EngineConfig,
     EngineReport, ServedRequest,
@@ -53,8 +63,8 @@ pub use partition::{
     serve_partitioned_threads, sub_config, PartitionPlan, TenantPartition,
 };
 pub use slo::{
-    analyze, capacity_qps, default_deadline, load_sweep, max_sustainable_qps, percentile,
-    sweep_table, write_sweep_csv, LatencyStats, SloReport, SweepOptions, SweepPoint,
-    SWEEP_LADDER,
+    analyze, analyze_autoreg, capacity_qps, default_deadline, load_sweep, max_sustainable_qps,
+    percentile, sweep_table, write_sweep_csv, AutoregSlo, LatencyStats, SloReport, SweepOptions,
+    SweepPoint, SWEEP_LADDER,
 };
 pub use traffic::{generate, Arrival, ArrivalProcess, Tenant, TrafficSpec};

@@ -143,6 +143,141 @@ impl std::fmt::Display for SloReport {
     }
 }
 
+/// Token-level SLO report for an autoregressive serving run
+/// ([`crate::serve::autoreg`]): TTFT (time-to-first-token) and TPOT
+/// (time-per-output-token) percentiles with goodput under *separate*
+/// deadlines — a completion only counts toward goodput when it met
+/// both.
+#[derive(Clone, Debug)]
+pub struct AutoregSlo {
+    /// Arrival → first token.
+    pub ttft: LatencyStats,
+    /// Mean inter-token gap over each request's decode phase.
+    pub tpot: LatencyStats,
+    /// Requests offered (completed + rejected).
+    pub offered: u64,
+    pub completed: u64,
+    /// Requests whose KV state alone exceeds the node SRAM.
+    pub rejected: u64,
+    /// KV evictions across the run (optimistic admission only).
+    pub evictions: u64,
+    /// Completions within the TTFT deadline.
+    pub within_ttft: u64,
+    /// Completions within the TPOT deadline.
+    pub within_tpot: u64,
+    /// Completions within BOTH deadlines (the goodput numerator).
+    pub within_both: u64,
+    pub ttft_deadline_s: f64,
+    pub tpot_deadline_s: f64,
+    /// In-deadline (both) completions per second of horizon.
+    pub goodput_qps: f64,
+    /// Completions per second of horizon (deadline-blind).
+    pub throughput_qps: f64,
+    /// Generated tokens per second of horizon.
+    pub tokens_per_s: f64,
+    pub makespan_s: f64,
+    /// Accelerator busy fraction over the makespan.
+    pub busy_frac: f64,
+}
+
+/// Compute the TTFT/TPOT SLO report for an autoregressive run.
+/// `horizon_s` is the offered-traffic duration (rates normalize to it,
+/// extended to the makespan if the run overran while draining).
+pub fn analyze_autoreg(
+    rep: &crate::serve::autoreg::AutoregReport,
+    horizon_s: f64,
+    ttft_deadline_s: f64,
+    tpot_deadline_s: f64,
+) -> AutoregSlo {
+    use crate::serve::autoreg::ServedDecode;
+    let ttfts: Vec<f64> = rep.completed.iter().map(ServedDecode::ttft_s).collect();
+    let tpots: Vec<f64> = rep.completed.iter().map(ServedDecode::tpot_s).collect();
+    let mut within_ttft = 0u64;
+    let mut within_tpot = 0u64;
+    let mut within_both = 0u64;
+    for (&a, &b) in ttfts.iter().zip(&tpots) {
+        let ok_a = a <= ttft_deadline_s;
+        let ok_b = b <= tpot_deadline_s;
+        within_ttft += ok_a as u64;
+        within_tpot += ok_b as u64;
+        within_both += (ok_a && ok_b) as u64;
+    }
+    let span = horizon_s.max(rep.makespan_s);
+    let (goodput, throughput, tokens) = if span > 0.0 {
+        (
+            within_both as f64 / span,
+            rep.completed.len() as f64 / span,
+            rep.generated_tokens as f64 / span,
+        )
+    } else {
+        (0.0, 0.0, 0.0)
+    };
+    AutoregSlo {
+        ttft: LatencyStats::from_samples(&ttfts),
+        tpot: LatencyStats::from_samples(&tpots),
+        offered: rep.completed.len() as u64 + rep.rejected,
+        completed: rep.completed.len() as u64,
+        rejected: rep.rejected,
+        evictions: rep.evictions,
+        within_ttft,
+        within_tpot,
+        within_both,
+        ttft_deadline_s,
+        tpot_deadline_s,
+        goodput_qps: goodput,
+        throughput_qps: throughput,
+        tokens_per_s: tokens,
+        makespan_s: rep.makespan_s,
+        busy_frac: rep.busy_frac(),
+    }
+}
+
+impl std::fmt::Display for AutoregSlo {
+    fn fmt(&self, fm: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            fm,
+            "requests : {} offered, {} completed, {} rejected, {} evictions",
+            self.offered, self.completed, self.rejected, self.evictions
+        )?;
+        writeln!(
+            fm,
+            "ttft     : p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms  mean {:.3} ms  max {:.3} ms",
+            self.ttft.p50 * 1e3,
+            self.ttft.p95 * 1e3,
+            self.ttft.p99 * 1e3,
+            self.ttft.mean * 1e3,
+            self.ttft.max * 1e3
+        )?;
+        writeln!(
+            fm,
+            "tpot     : p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms  mean {:.3} ms  max {:.3} ms",
+            self.tpot.p50 * 1e3,
+            self.tpot.p95 * 1e3,
+            self.tpot.p99 * 1e3,
+            self.tpot.mean * 1e3,
+            self.tpot.max * 1e3
+        )?;
+        writeln!(
+            fm,
+            "goodput  : {:.1} req/s within ttft {:.3} ms AND tpot {:.3} ms ({} ttft-ok, {} tpot-ok, {} both)",
+            self.goodput_qps,
+            self.ttft_deadline_s * 1e3,
+            self.tpot_deadline_s * 1e3,
+            self.within_ttft,
+            self.within_tpot,
+            self.within_both
+        )?;
+        write!(
+            fm,
+            "machine  : makespan {:.3} s, busy {:.1} %, {:.1} req/s, {:.0} tok/s",
+            self.makespan_s,
+            100.0 * self.busy_frac,
+            self.throughput_qps,
+            self.tokens_per_s
+        )
+    }
+}
+
 /// Back-of-envelope capacity: requests/s the configuration sustains
 /// when every batch fills to `max_batch`, mixing tenants by weight.
 /// Exact for one tenant; an upper-bound estimate for shared serving.
@@ -419,5 +554,66 @@ mod tests {
         assert_eq!(max_sustainable_qps(&pts, 0.01), Some(200.0));
         assert_eq!(max_sustainable_qps(&pts, 1e-4), None);
         assert_eq!(max_sustainable_qps(&[], 0.01), None);
+    }
+
+    #[test]
+    fn autoreg_goodput_requires_both_deadlines() {
+        use crate::serve::autoreg::{AutoregReport, ServedDecode};
+        let served = |id: u64, ttft: f64, tpot: f64, steps: usize| ServedDecode {
+            id,
+            t_arrival: 0.0,
+            t_first_token: ttft,
+            t_end: ttft + tpot * (steps - 1) as f64,
+            prefill_tokens: 16,
+            decode_steps: steps,
+            evictions: 0,
+        };
+        let rep = AutoregReport {
+            // fast ttft + fast tpot / fast + slow / slow + fast.
+            completed: vec![
+                served(0, 0.001, 0.0001, 5),
+                served(1, 0.001, 0.0200, 5),
+                served(2, 0.500, 0.0001, 5),
+            ],
+            rejected: 1,
+            generated_tokens: 15,
+            makespan_s: 2.0,
+            busy_s: 1.0,
+            ..AutoregReport::default()
+        };
+        let slo = analyze_autoreg(&rep, 1.0, 0.01, 0.001);
+        assert_eq!(slo.offered, 4);
+        assert_eq!(slo.completed, 3);
+        assert_eq!(slo.rejected, 1);
+        assert_eq!(slo.within_ttft, 2);
+        assert_eq!(slo.within_tpot, 2);
+        assert_eq!(slo.within_both, 1, "goodput needs ttft AND tpot in deadline");
+        // Span extends to the 2 s makespan.
+        assert_eq!(slo.goodput_qps, 0.5);
+        assert_eq!(slo.throughput_qps, 1.5);
+        assert_eq!(slo.tokens_per_s, 7.5);
+        assert_eq!(slo.busy_frac, 0.5);
+        assert_eq!(slo.ttft.n, 3);
+        assert_eq!(slo.tpot.n, 3);
+        let text = slo.to_string();
+        assert!(text.contains("ttft"), "{text}");
+        assert!(text.contains("tpot"), "{text}");
+        assert!(text.contains("goodput"), "{text}");
+    }
+
+    #[test]
+    fn single_token_requests_have_zero_tpot() {
+        use crate::serve::autoreg::ServedDecode;
+        let s = ServedDecode {
+            id: 0,
+            t_arrival: 0.0,
+            t_first_token: 0.5,
+            t_end: 0.5,
+            prefill_tokens: 8,
+            decode_steps: 1,
+            evictions: 0,
+        };
+        assert_eq!(s.ttft_s(), 0.5);
+        assert_eq!(s.tpot_s(), 0.0, "no inter-token gap with one token");
     }
 }

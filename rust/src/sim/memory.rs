@@ -48,6 +48,14 @@ impl MemoryStats {
 }
 
 /// Analyze the models' memory behaviour on a configuration.
+///
+/// Multi-tenant accounting: footprints are **per-op** — a merged
+/// multi-tenant program passes each tenant's graph once in `models`,
+/// every op is visited exactly once, and the peak working set is the
+/// max over ops (never a sum across tenants), so shared dimensions in
+/// a merged graph are not double-counted.  Compulsory weight traffic
+/// is per-op by construction (each tenant streams its own weights).
+/// Pinned by `multi_tenant_accounting_adds_traffic_not_peaks` below.
 pub fn analyze(cfg: &ArchConfig, models: &[ModelGraph]) -> MemoryStats {
     let sram = cfg.sram_bytes() as u64;
     let ob = cfg.precision.operand_bytes as u64;
@@ -81,6 +89,54 @@ pub fn analyze(cfg: &ArchConfig, models: &[ModelGraph]) -> MemoryStats {
         }
     }
     out
+}
+
+/// KV-cache capacity model for autoregressive decode
+/// ([`crate::serve::autoreg`]).
+///
+/// Each request's cache holds one K and one V vector per layer per
+/// token; the footprint grows by [`KvModel::bytes_per_token`] on every
+/// prefilled or generated token and is only released when the request
+/// leaves the batch.  The node's aggregate SRAM bounds the total live
+/// KV state, which in turn bounds the admissible decode batch — the
+/// quantity continuous batching schedules against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvModel {
+    /// Bytes appended to the cache per token
+    /// (`2 · layers · hidden · operand_bytes`).
+    pub bytes_per_token: u64,
+}
+
+impl KvModel {
+    /// Model from an explicit per-token growth rate.
+    pub fn new(bytes_per_token: u64) -> KvModel {
+        KvModel { bytes_per_token: bytes_per_token.max(1) }
+    }
+
+    /// Model for a decoder family at the configuration's operand
+    /// precision.
+    pub fn for_decoder(cfg: &ArchConfig, spec: &crate::workloads::extra::DecoderSpec) -> KvModel {
+        KvModel::new(spec.kv_bytes_per_token(cfg.precision.operand_bytes))
+    }
+
+    /// Cache footprint after `tokens` tokens (prompt + generated).
+    pub fn footprint_bytes(&self, tokens: u64) -> u64 {
+        self.bytes_per_token.saturating_mul(tokens)
+    }
+
+    /// Total live tokens the node's SRAM can cache.
+    pub fn capacity_tokens(&self, cfg: &ArchConfig) -> u64 {
+        cfg.sram_bytes() as u64 / self.bytes_per_token
+    }
+
+    /// Largest decode batch admissible when every request holds
+    /// `tokens_per_request` tokens of KV state.
+    pub fn max_batch(&self, cfg: &ArchConfig, tokens_per_request: u64) -> usize {
+        if tokens_per_request == 0 {
+            return usize::MAX;
+        }
+        (self.capacity_tokens(cfg) / tokens_per_request) as usize
+    }
 }
 
 #[cfg(test)]
@@ -144,5 +200,53 @@ mod tests {
         let op = &g.ops[big];
         let expect = (op.m * op.k + op.k * op.n) as u64 + (op.m * op.n * 2) as u64;
         assert_eq!(m.peak_working_set, expect);
+    }
+
+    #[test]
+    fn multi_tenant_accounting_adds_traffic_not_peaks() {
+        // The merged-program audit: per-op accounting means a
+        // multi-tenant slice adds traffic linearly but never sums
+        // peak working sets across tenants (no double-counting of
+        // shared dimensions in a merged graph).
+        let cfg = cfg_with_banks(256);
+        let mut a = ModelGraph::new("a");
+        a.add("l0", 128, 256, 128, vec![]);
+        let mut b = ModelGraph::new("b");
+        b.add("l0", 512, 128, 256, vec![]);
+        let ma = analyze(&cfg, &[a.clone()]);
+        let mb = analyze(&cfg, &[b.clone()]);
+        let merged = analyze(&cfg, &[a, b]);
+        assert_eq!(merged.dram_bytes, ma.dram_bytes + mb.dram_bytes);
+        assert_eq!(merged.spill_bytes, ma.spill_bytes + mb.spill_bytes);
+        assert_eq!(merged.compute_cycles, ma.compute_cycles + mb.compute_cycles);
+        assert_eq!(
+            merged.peak_working_set,
+            ma.peak_working_set.max(mb.peak_working_set)
+        );
+    }
+
+    #[test]
+    fn kv_model_footprint_and_capacity() {
+        use crate::workloads::extra::DecoderSpec;
+        let cfg = cfg_with_banks(256);
+        let kv = KvModel::for_decoder(&cfg, &DecoderSpec::gpt2_small());
+        // INT8: 2 × 12 layers × 768 hidden bytes per token.
+        assert_eq!(kv.bytes_per_token, 2 * 12 * 768);
+        assert_eq!(kv.footprint_bytes(100), 100 * kv.bytes_per_token);
+        let cap = kv.capacity_tokens(&cfg);
+        assert_eq!(cap, cfg.sram_bytes() as u64 / kv.bytes_per_token);
+        assert_eq!(kv.max_batch(&cfg, 128), (cap / 128) as usize);
+        assert_eq!(kv.max_batch(&cfg, 0), usize::MAX);
+        // Footprint conservation: the sum of per-step growth over a
+        // request's lifetime equals its final cache state.
+        let (prefill, steps) = (96u64, 32u64);
+        let mut tokens = prefill;
+        let mut grown = kv.footprint_bytes(prefill);
+        for _ in 0..steps {
+            let before = kv.footprint_bytes(tokens);
+            tokens += 1;
+            grown += kv.footprint_bytes(tokens) - before;
+        }
+        assert_eq!(grown, kv.footprint_bytes(prefill + steps));
     }
 }

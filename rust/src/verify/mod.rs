@@ -90,11 +90,14 @@ pub enum Code {
     NodeSpec,
     /// Partition plan problem (overflow, non-power-of-two share).
     Partition,
+    /// A decode batch's KV-cache state exceeds node SRAM: the batch
+    /// can never co-reside, so admission must split or reject it.
+    KvCapacity,
 }
 
 impl Code {
     /// Every code, in table order.
-    pub const ALL: [Code; 14] = [
+    pub const ALL: [Code; 15] = [
         Code::MacConservation,
         Code::Grid,
         Code::PsumChain,
@@ -109,6 +112,7 @@ impl Code {
         Code::TdpEnvelope,
         Code::NodeSpec,
         Code::Partition,
+        Code::KvCapacity,
     ];
 
     /// Stable short name (used in text/JSON rendering and goldens).
@@ -128,6 +132,7 @@ impl Code {
             Code::TdpEnvelope => "TDP",
             Code::NodeSpec => "NODE",
             Code::Partition => "PART",
+            Code::KvCapacity => "KV",
         }
     }
 }
@@ -973,6 +978,66 @@ impl Verifier {
         }
         f
     }
+
+    /// Check a decode batch's KV-cache state against node SRAM: each
+    /// member is a `(prefill_tokens, decode_steps)` pair, charged at
+    /// its *final* footprint (the reservation
+    /// [`crate::serve::autoreg`]'s admission holds).  A member whose
+    /// state alone exceeds SRAM is unservable on this node (Error,
+    /// tagged `req{i}`); a batch whose combined state exceeds SRAM can
+    /// never co-reside (Error); a batch past the reserved-admission
+    /// threshold would only run under optimistic admission, paying
+    /// evictions (Warning).
+    pub fn check_kv_batch(
+        &self,
+        cfg: &ArchConfig,
+        spec: &crate::workloads::extra::DecoderSpec,
+        batch: &[(usize, usize)],
+    ) -> Findings {
+        let mut f = Findings::default();
+        let kv = memory::KvModel::for_decoder(cfg, spec);
+        let sram = cfg.sram_bytes() as u64;
+        let mut final_total: u64 = 0;
+        let mut start_total: u64 = 0;
+        for (i, &(prefill, steps)) in batch.iter().enumerate() {
+            let tokens = (prefill + steps) as u64;
+            let bytes = kv.footprint_bytes(tokens);
+            final_total = final_total.saturating_add(bytes);
+            // State right after the first generated token — the least
+            // an admitted member ever holds.
+            start_total = start_total.saturating_add(kv.footprint_bytes(prefill as u64 + 1));
+            if bytes > sram {
+                f.error(
+                    Code::KvCapacity,
+                    Location::node(format!("req{i}")),
+                    format!("request KV state {bytes} B ({tokens} tokens) exceeds {sram} B SRAM"),
+                    "unservable at any batch size; shrink the context or grow the banks",
+                );
+            }
+        }
+        if start_total > sram {
+            f.error(
+                Code::KvCapacity,
+                Location::none(),
+                format!(
+                    "batch of {} holds {start_total} B of KV state at first token in {sram} B SRAM",
+                    batch.len()
+                ),
+                "the batch can never co-reside; admission must split or reject it",
+            );
+        } else if final_total > sram {
+            f.warning(
+                Code::KvCapacity,
+                Location::none(),
+                format!(
+                    "batch of {} grows to {final_total} B of KV state in {sram} B SRAM",
+                    batch.len()
+                ),
+                "reserved admission would split this batch; optimistic admission pays evictions",
+            );
+        }
+        f
+    }
 }
 
 /// Convenience: [`Verifier::check_program`] with paper defaults.
@@ -1163,5 +1228,39 @@ mod tests {
             );
             Ok(())
         });
+    }
+
+    #[test]
+    fn kv_batch_capacity_tiers() {
+        use crate::workloads::extra::DecoderSpec;
+        let spec = DecoderSpec {
+            name: "Tiny".to_string(),
+            layers: 2,
+            hidden: 64,
+            heads: 4,
+            ffn: 128,
+            gated_ffn: false,
+        };
+        // 4 banks × 1 KiB = 4096 B SRAM; 256 B/token at INT8 → 16
+        // tokens of KV capacity.
+        let c = ArchConfig { bank_kb: 1, ..cfg(8, 4) };
+        let v = Verifier::new();
+        // Fits outright: 2 × (4 prefill + 2 decode) = 12 tokens.
+        let f = v.check_kv_batch(&c, &spec, &[(4, 2), (4, 2)]);
+        assert!(f.is_clean(), "{}", f.render_text());
+        // Grows past SRAM but starts inside it: warning only.
+        let f = v.check_kv_batch(&c, &spec, &[(4, 8), (4, 8)]);
+        assert!(f.ok(), "optimistic-only batch must stay a warning: {}", f.render_text());
+        assert!(f.has(Code::KvCapacity), "{}", f.render_text());
+        // Can't even co-reside at the first token: error.
+        let f = v.check_kv_batch(&c, &spec, &[(8, 2), (8, 2), (8, 2)]);
+        assert!(!f.ok(), "{}", f.render_text());
+        // One member alone exceeds SRAM: per-request error tagged req0.
+        let f = v.check_kv_batch(&c, &spec, &[(17, 2)]);
+        assert!(!f.ok());
+        assert!(f.render_text().contains("req0"), "{}", f.render_text());
+        // The code renders with its stable short name.
+        assert_eq!(Code::KvCapacity.as_str(), "KV");
+        assert_eq!(Code::ALL.len(), 15);
     }
 }

@@ -143,6 +143,119 @@ pub fn vit_base(patch: usize, input: usize) -> ModelGraph {
     vit("ViT-base", 12, 768, 12, patch, input)
 }
 
+/// A decoder-only Transformer family, parameterized so the
+/// autoregressive serving stack ([`crate::serve::autoreg`]) can derive
+/// both phase graphs from one spec:
+///
+/// * [`DecoderSpec::prefill`] — the prompt pass: every GEMM runs at the
+///   full context length (the large, high-utilization phase),
+/// * [`DecoderSpec::decode`] — one incremental token: projections and
+///   FFN collapse to `m = 1` while the attention GEMMs read the whole
+///   KV cache (`k` or `n` = context) — the small-matrix regime where
+///   systolic-array utilization collapses,
+/// * [`DecoderSpec::kv_bytes_per_token`] — the per-token K/V state the
+///   KV-cache memory model ([`crate::sim::memory`]) grows per step.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DecoderSpec {
+    /// Family name (graph names derive from it).
+    pub name: String,
+    /// Decoder layers.
+    pub layers: usize,
+    /// Model (hidden) dimension.
+    pub hidden: usize,
+    /// Attention heads (`hidden` must divide by `heads`).
+    pub heads: usize,
+    /// FFN inner dimension.
+    pub ffn: usize,
+    /// Gated FFN (three GEMMs: gate/up/down, LLaMA-style) instead of
+    /// the two-GEMM GELU MLP.
+    pub gated_ffn: bool,
+}
+
+impl DecoderSpec {
+    /// GPT-2-small-like decoder: 12 layers, hidden 768, 12 heads,
+    /// 4×hidden GELU MLP.
+    pub fn gpt2_small() -> DecoderSpec {
+        DecoderSpec {
+            name: "GPT2".into(),
+            layers: 12,
+            hidden: 768,
+            heads: 12,
+            ffn: 3072,
+            gated_ffn: false,
+        }
+    }
+
+    /// LLaMA-7B-like decoder: 32 layers, hidden 4096, 32 heads, gated
+    /// FFN at inner dimension 11008.
+    pub fn llama7b() -> DecoderSpec {
+        DecoderSpec {
+            name: "Llama7B".into(),
+            layers: 32,
+            hidden: 4096,
+            heads: 32,
+            ffn: 11008,
+            gated_ffn: true,
+        }
+    }
+
+    /// Per-head dimension.
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// The shared layer stack: `seq` query tokens attending over
+    /// `kv_len` cached tokens.
+    fn stack(&self, graph_name: String, seq: usize, kv_len: usize) -> ModelGraph {
+        assert!(self.hidden % self.heads == 0, "hidden must divide by heads");
+        assert!(seq > 0 && kv_len > 0, "token counts must be positive");
+        let (h, d) = (self.hidden, self.head_dim());
+        let mut g = ModelGraph::new(graph_name);
+        let mut prev: Option<usize> = None;
+        for l in 0..self.layers {
+            let dep = prev.map(|p| vec![p]).unwrap_or_default();
+            let q = g.add(format!("l{l}_q"), seq, h, h, dep.clone());
+            let k = g.add(format!("l{l}_k"), seq, h, h, dep.clone());
+            let v = g.add(format!("l{l}_v"), seq, h, h, dep);
+            let mut ctx_ids = Vec::with_capacity(self.heads);
+            for hd in 0..self.heads {
+                let s_id = g.add(format!("l{l}_h{hd}_scores"), seq, d, kv_len, vec![q, k]);
+                let c_id = g.add(format!("l{l}_h{hd}_ctx"), seq, kv_len, d, vec![s_id, v]);
+                ctx_ids.push(c_id);
+            }
+            let o = g.add(format!("l{l}_out"), seq, h, h, ctx_ids);
+            prev = Some(if self.gated_ffn {
+                let gate = g.add(format!("l{l}_gate"), seq, h, self.ffn, vec![o]);
+                let up = g.add(format!("l{l}_up"), seq, h, self.ffn, vec![o]);
+                g.add(format!("l{l}_down"), seq, self.ffn, h, vec![gate, up])
+            } else {
+                let f1 = g.add(format!("l{l}_ffn1"), seq, h, self.ffn, vec![o]);
+                g.add(format!("l{l}_ffn2"), seq, self.ffn, h, vec![f1])
+            });
+        }
+        g
+    }
+
+    /// The prefill phase at context length `ctx`: the whole prompt in
+    /// one pass (all GEMMs at `m = ctx`).
+    pub fn prefill(&self, ctx: usize) -> ModelGraph {
+        self.stack(format!("{}-prefill-c{ctx}", self.name), ctx, ctx)
+    }
+
+    /// One decode step with `ctx` tokens of KV state (prompt plus the
+    /// tokens generated so far, including the one being produced):
+    /// `m = 1` projections/FFN, attention over the cached context.
+    pub fn decode(&self, ctx: usize) -> ModelGraph {
+        self.stack(format!("{}-decode-c{ctx}", self.name), 1, ctx)
+    }
+
+    /// K/V cache bytes appended per generated (or prefilled) token:
+    /// one K and one V vector of `hidden` elements per layer.
+    pub fn kv_bytes_per_token(&self, operand_bytes: usize) -> u64 {
+        2 * self.layers as u64 * self.hidden as u64 * operand_bytes as u64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -231,5 +344,47 @@ mod tests {
         let tokens = |g: &ModelGraph| g.ops.iter().map(|o| o.m).max().unwrap();
         assert_eq!(tokens(&p16), 197);
         assert_eq!(tokens(&p32), 50);
+    }
+
+    #[test]
+    fn decoder_prefill_matches_gpt2_macs() {
+        // The ungated prefill stack is GEMM-identical to the BERT-style
+        // encoder the existing GPT2-small registry entry reuses.
+        let d = DecoderSpec::gpt2_small();
+        let g = d.prefill(128);
+        g.validate().unwrap();
+        assert_eq!(g.name, "GPT2-prefill-c128");
+        assert_eq!(g.total_macs(), gpt2("GPT2-small", 12, 768, 12, 128).total_macs());
+    }
+
+    #[test]
+    fn decoder_decode_step_macs_and_shape() {
+        let d = DecoderSpec::gpt2_small();
+        let g = d.decode(256);
+        g.validate().unwrap();
+        assert_eq!(g.name, "GPT2-decode-c256");
+        // Projections and FFN collapse to one token; attention spans
+        // the cached context.
+        assert!(g.ops.iter().all(|o| o.m == 1));
+        let (h, c, f) = (768u64, 256u64, 3072u64);
+        let per_layer = 4 * h * h + 2 * h * c + 2 * h * f;
+        assert_eq!(g.total_macs(), 12 * per_layer);
+        // Decode MACs grow linearly with context (the attention term).
+        assert!(d.decode(512).total_macs() > g.total_macs());
+    }
+
+    #[test]
+    fn llama7b_gated_ffn_and_kv_bytes() {
+        let d = DecoderSpec::llama7b();
+        let g = d.decode(64);
+        g.validate().unwrap();
+        // gate/up/down: three FFN GEMMs per layer.
+        assert_eq!(g.ops.iter().filter(|o| o.name.ends_with("_down")).count(), 32);
+        assert_eq!(g.ops.iter().filter(|o| o.name.ends_with("_gate")).count(), 32);
+        let prefill = d.prefill(64);
+        prefill.validate().unwrap();
+        // INT8 K/V state: 2 vectors × layers × hidden bytes per token.
+        assert_eq!(d.kv_bytes_per_token(1), 2 * 32 * 4096);
+        assert_eq!(DecoderSpec::gpt2_small().kv_bytes_per_token(1), 2 * 12 * 768);
     }
 }

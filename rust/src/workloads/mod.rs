@@ -130,6 +130,22 @@ impl ModelGraph {
         g
     }
 
+    /// Autoregressive decode-step view: every GEMM collapsed to one
+    /// row (`m = 1`) — the single-token incremental pass whose latency
+    /// bounds TPOT.  An approximation for generic graphs (real decoder
+    /// attention keeps the context in `k`/`n`; see
+    /// [`crate::workloads::extra::DecoderSpec::decode`] for the exact
+    /// phase graph) but exact for the projection/FFN GEMMs that
+    /// dominate, and cheap enough to score every explore point.
+    pub fn decode_step(&self) -> ModelGraph {
+        let mut g = self.clone();
+        g.name = format!("{}-step", self.name);
+        for op in &mut g.ops {
+            op.m = 1;
+        }
+        g
+    }
+
     /// Fig. 4 statistics: ops-weighted percentiles of a dimension.
     pub fn dim_percentiles(&self, dim: impl Fn(&GemmOp) -> usize) -> DimStats {
         let mut pairs: Vec<(usize, u64)> =

@@ -26,7 +26,10 @@ pub fn benchmarks() -> Vec<ModelGraph> {
 }
 
 /// Zoo extensions beyond the §5 suite: scenario coverage for serving
-/// and per-layer tiling experiments.
+/// and per-layer tiling experiments.  The `-prefill-`/`-decode-`
+/// entries are the autoregressive phase graphs ([`extra::DecoderSpec`])
+/// at their default context lengths; [`crate::serve::autoreg`]
+/// re-derives them at arbitrary context from the same specs.
 pub fn extras() -> Vec<ModelGraph> {
     vec![
         extra::vgg16(224),
@@ -34,6 +37,10 @@ pub fn extras() -> Vec<ModelGraph> {
         extra::gpt2("GPT2-small", 12, 768, 12, 128),
         extra::bert_large(384),
         extra::vit_base(16, 224),
+        extra::DecoderSpec::gpt2_small().prefill(128),
+        extra::DecoderSpec::gpt2_small().decode(128),
+        extra::DecoderSpec::llama7b().prefill(512),
+        extra::DecoderSpec::llama7b().decode(512),
     ]
 }
 
@@ -116,15 +123,20 @@ mod tests {
         assert!(by_name("vgg").is_some());
         assert!(by_name("mobilenet").is_some());
         assert!(by_name("gpt2").is_some());
+        // Autoregressive phase graphs resolve by prefix too.
+        assert_eq!(by_name("gpt2-prefill").unwrap().name, "GPT2-prefill-c128");
+        assert_eq!(by_name("gpt2-decode").unwrap().name, "GPT2-decode-c128");
+        assert_eq!(by_name("llama7b-prefill").unwrap().name, "Llama7B-prefill-c512");
+        assert_eq!(by_name("llama7b-decode").unwrap().name, "Llama7B-decode-c512");
         let all = extended();
-        assert_eq!(all.len(), 15);
+        assert_eq!(all.len(), 19);
         for m in &all {
             m.validate().unwrap();
         }
         let mut names: Vec<String> = all.iter().map(|m| m.name.clone()).collect();
         names.sort_unstable();
         names.dedup();
-        assert_eq!(names.len(), 15, "extended names must stay unique");
+        assert_eq!(names.len(), 19, "extended names must stay unique");
     }
 
     #[test]

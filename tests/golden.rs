@@ -621,3 +621,115 @@ fn flight_recorder_artifacts_match_golden() {
     golden_check("trace_latency_quick.csv", &a.latency);
     golden_check("trace_metrics_quick.txt", &a.metrics);
 }
+
+/// The autoregressive quick fixture shared by the decode-sweep golden
+/// and the continuous-vs-static pinned comparison: a tiny decoder on a
+/// 16×16/16-pod node (fast enough for CI, big enough that batching
+/// policy matters).
+mod autoreg_fixture {
+    use sosa::arch::{ArchConfig, ArrayDims};
+    use sosa::serve::{AutoregConfig, AutoregPolicy};
+    use sosa::sim::SimOptions;
+    use sosa::workloads::extra::DecoderSpec;
+
+    pub fn cfg() -> ArchConfig {
+        ArchConfig::with_array(ArrayDims::new(16, 16), 16)
+    }
+
+    pub fn spec() -> DecoderSpec {
+        DecoderSpec {
+            name: "Tiny".to_string(),
+            layers: 2,
+            hidden: 64,
+            heads: 4,
+            ffn: 128,
+            gated_ffn: false,
+        }
+    }
+
+    pub fn acfg(policy: AutoregPolicy) -> AutoregConfig {
+        AutoregConfig {
+            policy,
+            max_batch: 4,
+            ctx_bucket: 32,
+            sim: SimOptions { memory_model: false, ..Default::default() },
+            ..Default::default()
+        }
+    }
+}
+
+#[test]
+fn decode_sweep_matches_golden_and_is_thread_invariant() {
+    // The `serve --autoreg --sweep` CSV, byte-pinned.  All values are
+    // sim-time, so the snapshot is stable across machines; the
+    // 1-thread vs 4-thread runs must already be bit-identical before
+    // pinning.
+    use sosa::serve::{autoreg, decode_sweep, AutoregPolicy, DecodeSweepOptions};
+    let (cfg, spec) = (autoreg_fixture::cfg(), autoreg_fixture::spec());
+    let acfg = autoreg_fixture::acfg(AutoregPolicy::Continuous);
+    let mk = |threads| DecodeSweepOptions {
+        qps: vec![200.0, 800.0],
+        duration_s: 0.02,
+        seed: 11,
+        prefill: (8, 32),
+        decode: (2, 26),
+        ttft_deadline_s: 0.05,
+        tpot_deadline_s: 0.01,
+        threads: Some(threads),
+    };
+    let seq = decode_sweep(&cfg, &spec, &acfg, &mk(1));
+    let par = decode_sweep(&cfg, &spec, &acfg, &mk(4));
+    assert_eq!(seq, par, "decode sweep must be bit-identical at any thread count");
+    let mut produced = autoreg::DECODE_SWEEP_COLUMNS.join(",") + "\n";
+    for p in &seq {
+        produced.push_str(&autoreg::decode_sweep_row(p).join(","));
+        produced.push('\n');
+    }
+    golden_check("decode_sweep_quick.csv", &produced);
+}
+
+#[test]
+fn continuous_batching_beats_static_goodput_on_pinned_trace() {
+    // The tentpole claim, pinned: at equal offered (over)load on one
+    // seeded trace, iteration-level join/leave completes the same
+    // requests sooner than slot-holding static batches, so goodput
+    // (completions per second of span) is strictly higher and TTFT is
+    // strictly lower.
+    use sosa::serve::{
+        analyze_autoreg, generate_decode, AutoregEngine, AutoregPolicy, DecodeTrafficSpec,
+    };
+    let (cfg, spec) = (autoreg_fixture::cfg(), autoreg_fixture::spec());
+    let traffic = DecodeTrafficSpec {
+        qps: 2000.0,
+        duration_s: 0.02,
+        seed: 11,
+        prefill: (8, 32),
+        decode: (2, 26),
+    };
+    let requests = generate_decode(&traffic);
+    assert!(requests.len() >= 20, "overload trace expected, got {}", requests.len());
+    let run = |policy| {
+        let mut engine =
+            AutoregEngine::new(&cfg, &spec, autoreg_fixture::acfg(policy));
+        let rep = engine.run(&requests);
+        // Generous deadlines: goodput == completions / span, isolating
+        // the batching policy's effect on makespan.
+        analyze_autoreg(&rep, traffic.duration_s, 10.0, 10.0)
+    };
+    let cont = run(AutoregPolicy::Continuous);
+    let stat = run(AutoregPolicy::Static);
+    assert_eq!(cont.completed, requests.len() as u64, "no KV pressure — all must finish");
+    assert_eq!(stat.completed, requests.len() as u64);
+    assert!(
+        cont.goodput_qps > stat.goodput_qps,
+        "continuous {} req/s must beat static {} req/s",
+        cont.goodput_qps,
+        stat.goodput_qps
+    );
+    assert!(
+        cont.ttft.p50 < stat.ttft.p50,
+        "continuous TTFT p50 {} must beat static {}",
+        cont.ttft.p50,
+        stat.ttft.p50
+    );
+}
