@@ -1,0 +1,285 @@
+//! Fault injection and elasticity for the fleet: scheduled node
+//! crash/restart windows, straggler nodes with a degraded clock, a
+//! health-check lag for re-dispatching stranded requests, and a
+//! queue-depth-driven autoscaler.
+//!
+//! Everything here is *scheduled at construction*: a [`ChaosSchedule`]
+//! is a pure data object the sequential dispatch pass consults, so a
+//! chaotic fleet run stays a deterministic function of
+//! (arrivals, schedule, policy) — same seed + `SOSA_THREADS`
+//! bit-identical, exactly like the healthy path.
+//!
+//! The schedule grammar (CLI `--chaos`):
+//!
+//! ```text
+//! down:NODE@T1..T2      node NODE is dead for sim time [T1, T2) seconds
+//! straggle:NODE@FACTOR  node NODE runs FACTOR× slower (clock degraded)
+//! health:SECONDS        crash-detection lag charged to re-dispatches
+//! ```
+//!
+//! clauses comma-separated, e.g.
+//! `down:1@0.02..0.05,straggle:2@2.0,health:0.002`.
+
+use crate::error::{Error, Result};
+
+/// One scheduled node outage: the node serves nothing in
+/// `[down_t, up_t)` and requests estimated to still be on it at
+/// `down_t` are stranded (re-dispatched after the health-check lag).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CrashWindow {
+    /// Fleet node index.
+    pub node: usize,
+    /// Crash time, seconds of sim time (inclusive).
+    pub down_t: f64,
+    /// Restart time, seconds of sim time (exclusive).
+    pub up_t: f64,
+}
+
+/// Deterministic fault-injection schedule for one fleet run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChaosSchedule {
+    /// Scheduled outages (any order; may target the same node).
+    pub crashes: Vec<CrashWindow>,
+    /// `(node, factor)` stragglers: the node's clock runs `factor`×
+    /// slower (`factor ≥ 1`), degrading both the router's `unit_s`
+    /// estimates and the node's simulated engine costs.
+    pub stragglers: Vec<(usize, f64)>,
+    /// Seconds between a crash and the router noticing: a stranded
+    /// request re-enters dispatch at `down_t + health_check_s`, and the
+    /// detour is charged to its latency (its original arrival time is
+    /// what the SLO accounting sees).
+    pub health_check_s: f64,
+}
+
+impl Default for ChaosSchedule {
+    fn default() -> Self {
+        ChaosSchedule { crashes: vec![], stragglers: vec![], health_check_s: 1e-3 }
+    }
+}
+
+impl ChaosSchedule {
+    /// True when the schedule injects nothing (healthy fleet).
+    pub fn is_empty(&self) -> bool {
+        self.crashes.is_empty() && self.stragglers.is_empty()
+    }
+
+    /// Is `node` serving at sim time `t`?
+    pub fn live(&self, node: usize, t: f64) -> bool {
+        !self.crashes.iter().any(|w| w.node == node && w.down_t <= t && t < w.up_t)
+    }
+
+    /// The node's next crash strictly after `t` (earliest `down_t`),
+    /// if any — what the dispatch pass checks to decide whether a
+    /// request's estimated completion would be stranded.
+    pub fn next_crash_after(&self, node: usize, t: f64) -> Option<CrashWindow> {
+        self.crashes
+            .iter()
+            .filter(|w| w.node == node && w.down_t > t)
+            .min_by(|a, b| a.down_t.total_cmp(&b.down_t))
+            .copied()
+    }
+
+    /// Clock-degradation multiplier for `node` (product of its
+    /// straggler factors; `1.0` for a healthy node).
+    pub fn slowdown(&self, node: usize) -> f64 {
+        self.stragglers
+            .iter()
+            .filter(|(n, _)| *n == node)
+            .map(|(_, f)| *f)
+            .product()
+    }
+
+    /// Parse the `--chaos` grammar (module docs).  Structural errors
+    /// (bad syntax, unparseable numbers) are rejected here; semantic
+    /// problems (node index out of range, inverted windows) are the
+    /// verifier's job ([`crate::verify::Verifier::check_chaos`]).
+    pub fn parse(s: &str) -> Result<ChaosSchedule> {
+        let mut sched = ChaosSchedule::default();
+        for clause in s.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let (kind, body) = clause.split_once(':').ok_or_else(|| {
+                Error::config(format!("chaos clause `{clause}`: expected KIND:BODY"))
+            })?;
+            match kind {
+                "down" => {
+                    let (node, span) = body.split_once('@').ok_or_else(|| {
+                        Error::config(format!("chaos clause `{clause}`: expected down:NODE@T1..T2"))
+                    })?;
+                    let (t1, t2) = span.split_once("..").ok_or_else(|| {
+                        Error::config(format!("chaos clause `{clause}`: expected T1..T2"))
+                    })?;
+                    sched.crashes.push(CrashWindow {
+                        node: parse_num(node, clause)?,
+                        down_t: parse_num(t1, clause)?,
+                        up_t: parse_num(t2, clause)?,
+                    });
+                }
+                "straggle" => {
+                    let (node, factor) = body.split_once('@').ok_or_else(|| {
+                        Error::config(format!(
+                            "chaos clause `{clause}`: expected straggle:NODE@FACTOR"
+                        ))
+                    })?;
+                    sched.stragglers.push((parse_num(node, clause)?, parse_num(factor, clause)?));
+                }
+                "health" => sched.health_check_s = parse_num(body, clause)?,
+                other => {
+                    return Err(Error::config(format!(
+                        "chaos clause `{clause}`: unknown kind `{other}` (down|straggle|health)"
+                    )))
+                }
+            }
+        }
+        Ok(sched)
+    }
+}
+
+fn parse_num<T: std::str::FromStr>(s: &str, clause: &str) -> Result<T> {
+    s.trim()
+        .parse::<T>()
+        .map_err(|_| Error::config(format!("chaos clause `{clause}`: bad number `{s}`")))
+}
+
+/// Queue-depth-driven autoscaler over the fleet's node pool.
+///
+/// The fleet is provisioned with N nodes; the autoscaler decides how
+/// many are *active*.  At every `check_interval_s` boundary of the
+/// dispatch pass it inspects the router's estimated in-flight depth
+/// averaged over the active live nodes: above `scale_up_depth` it
+/// activates the lowest-index idle node (serving traffic only after
+/// `warmup_s` — the warm-up is charged as unavailability, exactly like
+/// a restart), below `scale_down_depth` it drains the highest-index
+/// active node (in-flight work completes; new arrivals skip it).
+/// Deterministic: decisions depend only on the dispatch-time queue
+/// view.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AutoscalerConfig {
+    /// Seconds between autoscaler evaluations.
+    pub check_interval_s: f64,
+    /// Seconds between a scale-up decision and the node taking traffic.
+    pub warmup_s: f64,
+    /// Average estimated in-flight per active node above which the
+    /// fleet scales up.
+    pub scale_up_depth: f64,
+    /// Average estimated in-flight per active node below which the
+    /// fleet scales down.
+    pub scale_down_depth: f64,
+    /// Never drain below this many active nodes.
+    pub min_nodes: usize,
+    /// Never activate beyond this many nodes (clamped to fleet size).
+    pub max_nodes: usize,
+}
+
+impl Default for AutoscalerConfig {
+    fn default() -> Self {
+        AutoscalerConfig {
+            check_interval_s: 0.01,
+            warmup_s: 0.005,
+            scale_up_depth: 8.0,
+            scale_down_depth: 1.0,
+            min_nodes: 1,
+            max_nodes: usize::MAX,
+        }
+    }
+}
+
+impl AutoscalerConfig {
+    /// Parse comma-separated `key:value` knobs over the defaults:
+    /// `interval:S`, `warmup:S`, `hi:DEPTH`, `lo:DEPTH`, `min:N`,
+    /// `max:N` — e.g. `hi:12,min:2`.
+    pub fn parse(s: &str) -> Result<AutoscalerConfig> {
+        let mut cfg = AutoscalerConfig::default();
+        for clause in s.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let (key, val) = clause.split_once(':').ok_or_else(|| {
+                Error::config(format!("autoscale clause `{clause}`: expected KEY:VALUE"))
+            })?;
+            match key {
+                "interval" => cfg.check_interval_s = parse_num(val, clause)?,
+                "warmup" => cfg.warmup_s = parse_num(val, clause)?,
+                "hi" => cfg.scale_up_depth = parse_num(val, clause)?,
+                "lo" => cfg.scale_down_depth = parse_num(val, clause)?,
+                "min" => cfg.min_nodes = parse_num(val, clause)?,
+                "max" => cfg.max_nodes = parse_num(val, clause)?,
+                other => {
+                    return Err(Error::config(format!(
+                        "autoscale clause `{clause}`: unknown key `{other}` \
+                         (interval|warmup|hi|lo|min|max)"
+                    )))
+                }
+            }
+        }
+        if !(cfg.check_interval_s.is_finite() && cfg.check_interval_s > 0.0) {
+            return Err(Error::config("autoscale interval must be a finite positive duration"));
+        }
+        if !(cfg.warmup_s.is_finite() && cfg.warmup_s >= 0.0) {
+            return Err(Error::config("autoscale warmup must be finite and non-negative"));
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let s = ChaosSchedule::parse("down:1@0.02..0.05, straggle:2@2.0, health:0.002").unwrap();
+        assert_eq!(s.crashes, vec![CrashWindow { node: 1, down_t: 0.02, up_t: 0.05 }]);
+        assert_eq!(s.stragglers, vec![(2, 2.0)]);
+        assert_eq!(s.health_check_s, 0.002);
+        assert!(!s.is_empty());
+        assert!(ChaosSchedule::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_clauses() {
+        for bad in [
+            "down:1",
+            "down:1@0.02",
+            "down:x@0..1",
+            "straggle:0",
+            "straggle:0@fast",
+            "health:soon",
+            "explode:3@1..2",
+            "noseparator",
+        ] {
+            assert!(ChaosSchedule::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn liveness_follows_windows() {
+        let s = ChaosSchedule::parse("down:0@0.1..0.2,down:0@0.4..0.5").unwrap();
+        assert!(s.live(0, 0.0));
+        assert!(!s.live(0, 0.1), "down_t inclusive");
+        assert!(!s.live(0, 0.15));
+        assert!(s.live(0, 0.2), "up_t exclusive");
+        assert!(!s.live(0, 0.45));
+        assert!(s.live(1, 0.15), "other nodes unaffected");
+        let next = s.next_crash_after(0, 0.25).unwrap();
+        assert_eq!(next.down_t, 0.4);
+        assert!(s.next_crash_after(0, 0.6).is_none());
+        assert!(s.next_crash_after(1, 0.0).is_none());
+    }
+
+    #[test]
+    fn slowdown_multiplies_factors() {
+        let s = ChaosSchedule::parse("straggle:1@2.0,straggle:1@1.5").unwrap();
+        assert_eq!(s.slowdown(1), 3.0);
+        assert_eq!(s.slowdown(0), 1.0);
+    }
+
+    #[test]
+    fn autoscaler_parse_overrides_defaults() {
+        let d = AutoscalerConfig::default();
+        let c = AutoscalerConfig::parse("hi:12,min:2,warmup:0.001").unwrap();
+        assert_eq!(c.scale_up_depth, 12.0);
+        assert_eq!(c.min_nodes, 2);
+        assert_eq!(c.warmup_s, 0.001);
+        assert_eq!(c.check_interval_s, d.check_interval_s, "untouched knobs keep defaults");
+        assert_eq!(AutoscalerConfig::parse("").unwrap(), d);
+        assert!(AutoscalerConfig::parse("interval:0").is_err());
+        assert!(AutoscalerConfig::parse("warmup:-1").is_err());
+        assert!(AutoscalerConfig::parse("depth:3").is_err());
+    }
+}

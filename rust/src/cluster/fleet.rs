@@ -33,6 +33,7 @@ use crate::serve::{
 use crate::sim::SweepExecutor;
 use crate::workloads::extra::DecoderSpec;
 
+use super::chaos::{AutoscalerConfig, ChaosSchedule};
 use super::router::{Policy, Router};
 
 /// One accelerator in the fleet.
@@ -113,6 +114,17 @@ pub struct NodeReport {
 pub struct FleetReport {
     pub nodes: Vec<NodeReport>,
     pub report: EngineReport,
+    /// Requests that found no live, active hosting node — parked and
+    /// ultimately rejected at fleet level (never reached an engine, so
+    /// they are *not* in `report.rejected`).  Always 0 on the healthy
+    /// path.
+    pub unroutable: u64,
+    /// Strand-and-retry detours: a request estimated to still be on a
+    /// node when that node crashes re-enters dispatch after the
+    /// health-check lag (one request stranded twice counts twice).
+    /// The retried request keeps its original arrival time for latency
+    /// accounting, so the detour is fully charged to its SLO.
+    pub redispatched: u64,
 }
 
 /// A fleet of SOSA accelerator nodes with a dispatch policy.
@@ -287,9 +299,14 @@ impl Fleet {
         let mut per_node: Vec<Vec<Arrival>> = vec![vec![]; self.nodes.len()];
         for a in arrivals {
             assert!(a.tenant < tenants.len(), "arrival tenant out of range");
+            // On the healthy path every tenant is placed on ≥ 1 node,
+            // so dispatch cannot come back empty-handed; the chaos path
+            // (`dispatch_chaos`) is where `None` is a real outcome.
             let node = match events.as_deref_mut() {
                 Some(log) => {
-                    let (node, view) = router.dispatch_explained(a, &hosts[a.tenant]);
+                    let (node, view) = router
+                        .dispatch_explained(a, &hosts[a.tenant])
+                        .expect("placement hosts every tenant");
                     log.push(Event::Dispatch {
                         id: a.id,
                         tenant: a.tenant as u32,
@@ -299,7 +316,9 @@ impl Fleet {
                     });
                     node
                 }
-                None => router.dispatch(a, &hosts[a.tenant]),
+                None => router
+                    .dispatch(a, &hosts[a.tenant])
+                    .expect("placement hosts every tenant"),
             };
             let local = hosted[node]
                 .binary_search(&a.tenant)
@@ -522,7 +541,372 @@ impl Fleet {
         merged
             .completed
             .sort_by(|a, b| a.t_end.total_cmp(&b.t_end).then(a.id.cmp(&b.id)));
-        FleetReport { nodes, report: merged }
+        FleetReport { nodes, report: merged, unroutable: 0, redispatched: 0 }
+    }
+}
+
+/// Bookkeeping from one chaos-aware dispatch pass.
+struct ChaosOutcome {
+    unroutable: u64,
+    redispatched: u64,
+    /// `id → original arrival time` for every request that was ever
+    /// stranded: the merged completions restore `t_arrival` from here
+    /// so the health-check lag and requeue are charged to latency.
+    original_t: std::collections::HashMap<u64, f64>,
+}
+
+/// Autoscaler runtime state over the fleet's node pool.
+struct Scaler {
+    cfg: AutoscalerConfig,
+    min: usize,
+    max: usize,
+    active: Vec<bool>,
+    /// `(activate_t, node)` scale-ups still warming up.
+    pending: Vec<(f64, usize)>,
+    next_check: f64,
+}
+
+impl Scaler {
+    fn new(cfg: &AutoscalerConfig, n: usize) -> Scaler {
+        let max = cfg.max_nodes.min(n).max(1);
+        let min = cfg.min_nodes.clamp(1, max);
+        Scaler {
+            cfg: *cfg,
+            min,
+            max,
+            active: (0..n).map(|i| i < min).collect(),
+            pending: vec![],
+            next_check: cfg.check_interval_s,
+        }
+    }
+
+    /// Promote warm-ups whose activation time has passed.
+    fn promote(&mut self, t: f64) {
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.pending[i].0 <= t {
+                let (_, node) = self.pending.remove(i);
+                self.active[node] = true;
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    fn active_count(&self) -> usize {
+        self.active.iter().filter(|&&b| b).count()
+    }
+}
+
+impl Fleet {
+    /// The fleet with straggler degradation applied: each straggler
+    /// node's clock is divided by its slowdown factor, which scales
+    /// both the router's `unit_s` estimates and the node's simulated
+    /// engine costs through the ordinary cost model — the straggler is
+    /// slower everywhere, consistently.
+    fn degraded(&self, chaos: &ChaosSchedule) -> Fleet {
+        let nodes = self
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let f = chaos.slowdown(i);
+                let mut cfg = s.cfg.clone();
+                if f > 1.0 {
+                    cfg.freq_ghz /= f;
+                }
+                NodeSpec { name: s.name.clone(), cfg }
+            })
+            .collect();
+        Fleet { nodes, fcfg: self.fcfg.clone() }
+    }
+
+    /// Serve under a fault-injection schedule (and optionally an
+    /// autoscaler): crashed nodes take no traffic, requests estimated
+    /// to be stranded by an upcoming crash are re-dispatched after the
+    /// health-check lag with the detour charged to their latency, and
+    /// arrivals with no live active hosting node are counted as
+    /// [`FleetReport::unroutable`] instead of aborting the run.
+    /// Deterministic for any `threads` — all chaos decisions live in
+    /// the sequential dispatch pass.
+    pub fn serve_chaos(
+        &self,
+        tenants: &[Tenant],
+        arrivals: &[Arrival],
+        chaos: &ChaosSchedule,
+        autoscale: Option<&AutoscalerConfig>,
+        threads: Option<usize>,
+    ) -> Result<FleetReport> {
+        self.serve_chaos_inner(tenants, arrivals, chaos, autoscale, threads, None)
+    }
+
+    /// As [`Fleet::serve_chaos`] with the flight recorder on: the
+    /// returned stream carries every NodeDown/NodeUp window, each
+    /// Dispatch with its queue view, each Redispatch detour, the
+    /// autoscaler's ScaleUp/ScaleDrain decisions, and the per-node
+    /// engine events — identical for any worker count.
+    pub fn serve_chaos_traced(
+        &self,
+        tenants: &[Tenant],
+        arrivals: &[Arrival],
+        chaos: &ChaosSchedule,
+        autoscale: Option<&AutoscalerConfig>,
+        threads: Option<usize>,
+    ) -> Result<(FleetReport, Vec<Event>)> {
+        let mut events = Vec::new();
+        let rep = self
+            .serve_chaos_inner(tenants, arrivals, chaos, autoscale, threads, Some(&mut events))?;
+        Ok((rep, events))
+    }
+
+    fn serve_chaos_inner(
+        &self,
+        tenants: &[Tenant],
+        arrivals: &[Arrival],
+        chaos: &ChaosSchedule,
+        autoscale: Option<&AutoscalerConfig>,
+        threads: Option<usize>,
+        mut events: Option<&mut Vec<Event>>,
+    ) -> Result<FleetReport> {
+        if tenants.is_empty() {
+            return Err(Error::config("fleet serving needs at least one tenant"));
+        }
+        let findings = crate::verify::Verifier::new().check_chaos(chaos, self.nodes.len());
+        if let Some(d) = findings.first_error() {
+            return Err(Error::config(d.render()));
+        }
+        let fleet = self.degraded(chaos);
+        let hosts = fleet.place(tenants);
+        let hosted = fleet.hosted_tenants(&hosts);
+        if let Some(log) = events.as_deref_mut() {
+            for w in &chaos.crashes {
+                log.push(Event::NodeDown { node: w.node as u32, t: w.down_t });
+                log.push(Event::NodeUp { node: w.node as u32, t: w.up_t });
+            }
+        }
+        let (per_node, outcome) = fleet.dispatch_chaos(
+            tenants,
+            arrivals,
+            &hosts,
+            &hosted,
+            chaos,
+            autoscale,
+            events.as_deref_mut(),
+        );
+        let ex = match threads {
+            Some(n) => SweepExecutor::with_threads(n),
+            None => SweepExecutor::new(),
+        };
+        let idx: Vec<usize> = (0..fleet.nodes.len()).collect();
+        let want_trace = events.is_some();
+        let node_runs: Vec<(EngineReport, Vec<Event>)> = ex.run(&idx, |_, &ni| {
+            if hosted[ni].is_empty() || per_node[ni].is_empty() {
+                return (
+                    EngineReport {
+                        rejected_by_tenant: vec![0; hosted[ni].len()],
+                        ..Default::default()
+                    },
+                    Vec::new(),
+                );
+            }
+            let local: Vec<Tenant> = hosted[ni].iter().map(|&k| tenants[k].clone()).collect();
+            let mut engine =
+                Engine::new(fleet.nodes[ni].cfg.clone(), &local, fleet.fcfg.engine.clone());
+            if want_trace {
+                let mut rec = Recorder::new();
+                let rep = engine.run_traced(&per_node[ni], &mut rec);
+                (rep, rec.into_events())
+            } else {
+                (engine.run(&per_node[ni]), Vec::new())
+            }
+        });
+        let mut reports = Vec::with_capacity(node_runs.len());
+        for (ni, (rep, node_events)) in node_runs.into_iter().enumerate() {
+            reports.push(rep);
+            if let Some(log) = events.as_deref_mut() {
+                let global = |local: u32| hosted[ni][local as usize] as u32;
+                log.extend(node_events.into_iter().map(|ev| match ev {
+                    Event::RequestArrive { id, tenant, t } => {
+                        Event::RequestArrive { id, tenant: global(tenant), t }
+                    }
+                    Event::RequestReject { id, tenant, t } => {
+                        Event::RequestReject { id, tenant: global(tenant), t }
+                    }
+                    Event::RequestServed { id, tenant, t_arrival, t_mfree, t_start, t_end } => {
+                        Event::RequestServed {
+                            id,
+                            tenant: global(tenant),
+                            t_arrival,
+                            t_mfree,
+                            t_start,
+                            t_end,
+                        }
+                    }
+                    other => other,
+                }));
+            }
+        }
+        let mut frep = fleet.merge(tenants.len(), &hosted, &per_node, reports);
+        // Re-dispatched requests entered their final node at the retry
+        // time; SLO accounting must see the *original* arrival so the
+        // crash detour (health-check lag + requeue) shows up as
+        // latency.  (t_end, id) ordering is unaffected.
+        for r in &mut frep.report.completed {
+            if let Some(&t0) = outcome.original_t.get(&r.id) {
+                r.t_arrival = t0;
+            }
+        }
+        frep.unroutable = outcome.unroutable;
+        frep.redispatched = outcome.redispatched;
+        Ok(frep)
+    }
+
+    /// The chaos-aware dispatch pass: one sequential sweep over the
+    /// time-merged stream of fresh arrivals and stranded retries,
+    /// applying liveness filtering, strand detection, and the
+    /// autoscaler — all before any node simulates, preserving the
+    /// dispatch-then-simulate thread invariance.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_chaos(
+        &self,
+        tenants: &[Tenant],
+        arrivals: &[Arrival],
+        hosts: &[Vec<usize>],
+        hosted: &[Vec<usize>],
+        chaos: &ChaosSchedule,
+        autoscale: Option<&AutoscalerConfig>,
+        mut events: Option<&mut Vec<Event>>,
+    ) -> (Vec<Vec<Arrival>>, ChaosOutcome) {
+        debug_assert!(arrivals.windows(2).all(|w| w[0].t <= w[1].t));
+        let n = self.nodes.len();
+        let unit_s = self.unit_estimates(tenants, hosted);
+        let mut router = Router::new(self.fcfg.policy.clone(), unit_s);
+        let mut per_node: Vec<Vec<Arrival>> = vec![vec![]; n];
+        let mut outcome = ChaosOutcome {
+            unroutable: 0,
+            redispatched: 0,
+            original_t: std::collections::HashMap::new(),
+        };
+        let mut scaler = autoscale.map(|cfg| Scaler::new(cfg, n));
+        // Stranded retries, kept sorted by (t, id); ties against fresh
+        // arrivals resolve retry-first (both orders are deterministic —
+        // this one lets a retried request reclaim queue position).
+        let mut retries: Vec<Arrival> = Vec::new();
+        let mut ai = 0usize;
+        loop {
+            let take_retry = match (retries.first(), arrivals.get(ai)) {
+                (Some(r), Some(a)) => r.t <= a.t,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => break,
+            };
+            let (a, is_retry) = if take_retry {
+                (retries.remove(0), true)
+            } else {
+                let a = arrivals[ai];
+                ai += 1;
+                (a, false)
+            };
+            assert!(a.tenant < tenants.len(), "arrival tenant out of range");
+            // Autoscaler checks strictly precede this arrival.
+            if let Some(st) = scaler.as_mut() {
+                while st.next_check <= a.t {
+                    let c = st.next_check;
+                    st.next_check += st.cfg.check_interval_s;
+                    st.promote(c);
+                    router.drain_to(c);
+                    let live_active: Vec<usize> =
+                        (0..n).filter(|&i| st.active[i] && chaos.live(i, c)).collect();
+                    if live_active.is_empty() {
+                        continue;
+                    }
+                    let depth: usize = live_active.iter().map(|&i| router.queue_len(i)).sum();
+                    let avg = depth as f64 / live_active.len() as f64;
+                    if avg > st.cfg.scale_up_depth
+                        && st.active_count() + st.pending.len() < st.max
+                    {
+                        let idle = (0..n).find(|&i| {
+                            !st.active[i] && !st.pending.iter().any(|&(_, p)| p == i)
+                        });
+                        if let Some(node) = idle {
+                            let at = c + st.cfg.warmup_s;
+                            st.pending.push((at, node));
+                            if let Some(log) = events.as_deref_mut() {
+                                log.push(Event::ScaleUp { node: node as u32, t: at });
+                            }
+                        }
+                    } else if avg < st.cfg.scale_down_depth && st.active_count() > st.min {
+                        let drained = (0..n).rev().find(|&i| st.active[i]);
+                        if let Some(node) = drained {
+                            st.active[node] = false;
+                            if let Some(log) = events.as_deref_mut() {
+                                log.push(Event::ScaleDrain { node: node as u32, t: c });
+                            }
+                        }
+                    }
+                }
+                st.promote(a.t);
+            }
+            let candidates: Vec<usize> = hosts[a.tenant]
+                .iter()
+                .copied()
+                .filter(|&i| {
+                    chaos.live(i, a.t) && scaler.as_ref().is_none_or(|st| st.active[i])
+                })
+                .collect();
+            let planned = router.plan(&a, &candidates);
+            let (pick, view) = match planned {
+                Some(pv) => pv,
+                None => {
+                    // Every hosting node is down or drained: a fleet-
+                    // level rejection, not a panic (the pre-fix router
+                    // aborted the whole sim here).
+                    outcome.unroutable += 1;
+                    continue;
+                }
+            };
+            // Strand check: would this node crash before the request's
+            // estimated completion?  The estimate is the router's own
+            // queue model — the same lens every policy decision uses —
+            // so strand decisions are deterministic and auditable.
+            if let Some(w) = chaos.next_crash_after(pick, a.t) {
+                if router.est_completion(&a, pick) > w.down_t {
+                    let retry_t = w.down_t + chaos.health_check_s;
+                    outcome.redispatched += 1;
+                    if !is_retry {
+                        outcome.original_t.insert(a.id, a.t);
+                    }
+                    let retry = Arrival { t: retry_t, ..a };
+                    let at = retries
+                        .partition_point(|r| (r.t, r.id) <= (retry.t, retry.id));
+                    retries.insert(at, retry);
+                    if let Some(log) = events.as_deref_mut() {
+                        log.push(Event::Redispatch {
+                            id: a.id,
+                            tenant: a.tenant as u32,
+                            node: pick as u32,
+                            t: retry_t,
+                        });
+                    }
+                    continue;
+                }
+            }
+            router.commit(&a, pick);
+            if let Some(log) = events.as_deref_mut() {
+                log.push(Event::Dispatch {
+                    id: a.id,
+                    tenant: a.tenant as u32,
+                    node: pick as u32,
+                    t: a.t,
+                    queue_view: view,
+                });
+            }
+            let local = hosted[pick]
+                .binary_search(&a.tenant)
+                .expect("dispatch picked a hosting node");
+            per_node[pick].push(Arrival { tenant: local, ..a });
+        }
+        (per_node, outcome)
     }
 }
 
@@ -712,6 +1096,7 @@ impl Fleet {
 mod tests {
     use super::*;
     use crate::arch::{ArchConfig, ArrayDims};
+    use crate::cluster::CrashWindow;
     use crate::serve::{generate, BatchPolicy, TrafficSpec};
     use crate::sim::SimOptions;
     use crate::workloads::ModelGraph;
@@ -1014,5 +1399,117 @@ mod tests {
             rep.nodes
         );
         assert_eq!(rep.report.completed.len(), 9);
+    }
+
+    #[test]
+    fn chaos_all_hosting_nodes_down_parks_instead_of_panicking() {
+        // Regression for the router's empty-candidate panic: a window
+        // with every hosting node dark used to abort the whole run via
+        // `assert!(!candidates.is_empty())`; it must now count the
+        // arrivals as fleet-level unroutable rejections.
+        let tenants = vec![tenant("a", 1.0)];
+        let f = Fleet::homogeneous(1, node_cfg(8), fast_fcfg(Policy::JoinShortestQueue))
+            .unwrap();
+        let arrivals = trace(8, &tenants); // all at t = 0
+        let chaos = ChaosSchedule {
+            crashes: vec![CrashWindow { node: 0, down_t: 0.0, up_t: 1.0 }],
+            ..Default::default()
+        };
+        let rep = f.serve_chaos(&tenants, &arrivals, &chaos, None, Some(1)).unwrap();
+        assert_eq!(rep.unroutable, 8, "every arrival found no live node");
+        assert!(rep.report.completed.is_empty());
+        assert_eq!(rep.report.rejected, 0, "never reached an engine");
+        assert_eq!(rep.redispatched, 0, "parked, not strand-retried");
+    }
+
+    #[test]
+    fn stranded_requests_redispatch_and_keep_original_arrival() {
+        // Crash node 0 an instant after a burst lands on it: every
+        // request planned onto node 0 is stranded (estimated completion
+        // exceeds the crash time), retries after the health-check lag,
+        // and lands on a surviving node — with the completion's
+        // `t_arrival` restored to the *original* arrival so the detour
+        // is charged to latency.
+        let tenants = vec![tenant("a", 1.0)];
+        let f = Fleet::homogeneous(3, node_cfg(8), fast_fcfg(Policy::JoinShortestQueue))
+            .unwrap();
+        let arrivals = trace(30, &tenants); // all at t = 0
+        let chaos = ChaosSchedule {
+            crashes: vec![CrashWindow { node: 0, down_t: 1e-9, up_t: 0.05 }],
+            health_check_s: 1e-6,
+            ..Default::default()
+        };
+        let rep = f.serve_chaos(&tenants, &arrivals, &chaos, None, Some(1)).unwrap();
+        assert!(rep.redispatched > 0, "node-0 picks must strand");
+        assert_eq!(rep.nodes[0].assigned, 0, "nothing commits to the doomed node");
+        assert_eq!(rep.report.completed.len(), 30, "survivors absorb the trace");
+        assert_eq!(rep.unroutable, 0);
+        assert!(
+            rep.report.completed.iter().all(|r| r.t_arrival == 0.0),
+            "completions must report the original arrival, not the retry time"
+        );
+        // Conservation: arrivals = completed + rejected + unroutable.
+        assert_eq!(
+            rep.report.completed.len() as u64 + rep.report.rejected + rep.unroutable,
+            arrivals.len() as u64
+        );
+    }
+
+    #[test]
+    fn autoscaler_recruits_nodes_under_load_and_holds_when_lazy() {
+        let tenants = vec![tenant("a", 1.0)];
+        let f = Fleet::homogeneous(4, node_cfg(4), fast_fcfg(Policy::JoinShortestQueue))
+            .unwrap();
+        // 2× the whole fleet's estimated capacity = 8× the single
+        // initially-active node: queues build immediately.
+        let cap = f.capacity_qps(&tenants);
+        assert!(cap > 0.0);
+        let offered = 2.0 * cap;
+        let duration = 200.0 / offered;
+        let arrivals = generate(&TrafficSpec::poisson(offered, duration, 13), &tenants);
+        let healthy = ChaosSchedule::default();
+        let eager = AutoscalerConfig {
+            check_interval_s: duration / 20.0,
+            warmup_s: duration / 40.0,
+            scale_up_depth: 0.5,
+            scale_down_depth: 0.0,
+            min_nodes: 1,
+            max_nodes: 4,
+        };
+        let rep = f.serve_chaos(&tenants, &arrivals, &healthy, Some(&eager), Some(1)).unwrap();
+        assert!(
+            rep.nodes.iter().filter(|n| n.assigned > 0).count() > 1,
+            "overload must recruit idle nodes: {:?}",
+            rep.nodes.iter().map(|n| n.assigned).collect::<Vec<_>>()
+        );
+        assert_eq!(rep.unroutable, 0, "node 0 never drains below min_nodes");
+        assert_eq!(
+            rep.report.completed.len() as u64 + rep.report.rejected + rep.unroutable,
+            arrivals.len() as u64
+        );
+        // An autoscaler that never triggers keeps the min pool: every
+        // request lands on node 0.
+        let lazy = AutoscalerConfig { scale_up_depth: f64::MAX, ..eager };
+        let rep = f.serve_chaos(&tenants, &arrivals, &healthy, Some(&lazy), Some(2)).unwrap();
+        assert_eq!(rep.nodes[0].assigned, arrivals.len() as u64);
+        assert!(rep.nodes[1..].iter().all(|n| n.assigned == 0));
+    }
+
+    #[test]
+    fn chaos_rejects_invalid_schedules_up_front() {
+        let tenants = vec![tenant("a", 1.0)];
+        let f = Fleet::homogeneous(2, node_cfg(8), fast_fcfg(Policy::RoundRobin)).unwrap();
+        // Node index out of range.
+        let bad = ChaosSchedule {
+            crashes: vec![CrashWindow { node: 9, down_t: 0.0, up_t: 1.0 }],
+            ..Default::default()
+        };
+        assert!(f.serve_chaos(&tenants, &[], &bad, None, None).is_err());
+        // Inverted window.
+        let bad = ChaosSchedule {
+            crashes: vec![CrashWindow { node: 0, down_t: 1.0, up_t: 0.5 }],
+            ..Default::default()
+        };
+        assert!(f.serve_chaos(&tenants, &[], &bad, None, None).is_err());
     }
 }

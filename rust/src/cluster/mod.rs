@@ -41,6 +41,16 @@
 //!    fleet-scale metrics; [`fleet_load_sweep`] probes offered rates
 //!    for the saturation knee and max sustainable QPS.
 //!
+//! Fleet dynamics live in [`chaos`]: a [`ChaosSchedule`] injects node
+//! crash/restart windows and straggler clock degradation, an
+//! [`AutoscalerConfig`] drives queue-depth elasticity, and
+//! [`Fleet::serve_chaos`] runs the same dispatch-then-simulate
+//! pipeline under failure — health-aware routing, stranded-request
+//! re-dispatch with the health-check lag charged to latency, and
+//! fleet-level `unroutable` accounting when every hosting node is
+//! down.  All decisions happen in the sequential dispatch pass, so a
+//! chaotic run is as thread-invariant as a healthy one.
+//!
 //! ```no_run
 //! use sosa::arch::ArchConfig;
 //! use sosa::cluster::{analyze_fleet, Fleet, FleetConfig, Policy};
@@ -58,10 +68,12 @@
 //! println!("{}", analyze_fleet(&fleet, &rep, 1.0, 5e-3));
 //! ```
 
+pub mod chaos;
 pub mod fleet;
 pub mod router;
 pub mod slo;
 
+pub use chaos::{AutoscalerConfig, ChaosSchedule, CrashWindow};
 pub use fleet::{
     AutoregNodeReport, Fleet, FleetAutoregReport, FleetConfig, FleetReport, NodeReport, NodeSpec,
     Placement,

@@ -115,23 +115,42 @@ impl Router {
     /// Pick a node for `a` among `candidates` (node indices, ascending)
     /// and commit the estimated cost to its queue view.  Arrivals must
     /// be fed in non-decreasing time order.
-    pub fn dispatch(&mut self, a: &Arrival, candidates: &[usize]) -> usize {
+    ///
+    /// Returns `None` when `candidates` is empty — every node hosting
+    /// the tenant is down/draining.  The caller decides what that
+    /// means (reject, or park for re-dispatch after a health check);
+    /// the router view is unchanged so the outcome is not charged
+    /// anywhere.  This used to `assert!`, so one all-nodes-down window
+    /// aborted the whole fleet sim.
+    pub fn dispatch(&mut self, a: &Arrival, candidates: &[usize]) -> Option<usize> {
         self.drain_to(a.t);
-        let pick = self.pick(a, candidates);
+        let pick = self.pick(a, candidates)?;
         self.commit(a, pick);
-        pick
+        Some(pick)
     }
 
     /// [`Router::dispatch`] plus the evidence: the post-drain
     /// per-candidate `(node, estimated in-flight)` snapshot the policy
     /// decided on — what a dispatch trace event records so routing
     /// decisions are auditable after the fact.  Same state transition
-    /// as `dispatch`.
+    /// as `dispatch`; `None` likewise means no candidate exists.
     pub fn dispatch_explained(
         &mut self,
         a: &Arrival,
         candidates: &[usize],
-    ) -> (usize, Vec<(u32, u32)>) {
+    ) -> Option<(usize, Vec<(u32, u32)>)> {
+        let (pick, view) = self.plan(a, candidates)?;
+        self.commit(a, pick);
+        Some((pick, view))
+    }
+
+    /// The decision without the commitment: drain the view to `a.t`,
+    /// snapshot the candidate queues, and apply the policy — but leave
+    /// the picked node's queue untouched.  The chaos-aware dispatch
+    /// loop uses this to test whether the pick would be stranded by a
+    /// scheduled crash before charging it; follow with
+    /// [`Router::commit`] to complete a normal dispatch.
+    pub fn plan(&mut self, a: &Arrival, candidates: &[usize]) -> Option<(usize, Vec<(u32, u32)>)> {
         self.drain_to(a.t);
         let view: Vec<(u32, u32)> = candidates
             .iter()
@@ -139,15 +158,24 @@ impl Router {
             // is bounded by the arrival count.
             .map(|&n| (n as u32, self.inflight[n].len() as u32))
             .collect();
-        let pick = self.pick(a, candidates);
-        self.commit(a, pick);
-        (pick, view)
+        let pick = self.pick(a, candidates)?;
+        Some((pick, view))
+    }
+
+    /// Estimated completion time if `a` were dispatched to `node` now
+    /// (queue drain + the request's own estimated service).  Used by
+    /// the chaos-aware dispatch loop to decide whether a request would
+    /// be stranded by a scheduled crash.
+    pub fn est_completion(&self, a: &Arrival, node: usize) -> f64 {
+        let units = a.batch.max(1) as f64;
+        self.est_free[node].max(a.t) + units * self.unit_s[node][a.tenant]
     }
 
     /// Drain estimated completions up to `t` on every node (not just
     /// candidates: the view must not depend on which tenants arrived
-    /// in between).
-    fn drain_to(&mut self, t: f64) {
+    /// in between).  Idempotent and monotonic; exposed so the
+    /// autoscaler can read a drained queue view at its check times.
+    pub fn drain_to(&mut self, t: f64) {
         for q in &mut self.inflight {
             while q.front().map(|&e| e <= t).unwrap_or(false) {
                 q.pop_front();
@@ -155,10 +183,15 @@ impl Router {
         }
     }
 
-    /// Apply the policy against the current (drained) view.
-    fn pick(&mut self, a: &Arrival, candidates: &[usize]) -> usize {
-        assert!(!candidates.is_empty(), "no candidate node hosts tenant {}", a.tenant);
-        match &self.policy {
+    /// Apply the policy against the current (drained) view.  `None`
+    /// when the candidate set is empty (all hosting nodes down) — the
+    /// policy state (round-robin cursor, p2c RNG) is left untouched so
+    /// an unroutable window cannot perturb later decisions.
+    fn pick(&mut self, a: &Arrival, candidates: &[usize]) -> Option<usize> {
+        if candidates.is_empty() {
+            return None;
+        }
+        Some(match &self.policy {
             Policy::RoundRobin => {
                 let i = self.rr_next % candidates.len();
                 self.rr_next = self.rr_next.wrapping_add(1);
@@ -179,21 +212,21 @@ impl Router {
                 }
             }
             Policy::DeadlineAware => {
-                let units = a.batch.max(1) as f64;
                 *candidates
                     .iter()
                     .min_by(|&&x, &&y| {
-                        let ex = self.est_free[x].max(a.t) + units * self.unit_s[x][a.tenant];
-                        let ey = self.est_free[y].max(a.t) + units * self.unit_s[y][a.tenant];
+                        let ex = self.est_completion(a, x);
+                        let ey = self.est_completion(a, y);
                         ex.total_cmp(&ey).then(x.cmp(&y))
                     })
-                    .expect("candidates non-empty")
+                    .expect("candidates checked non-empty above")
             }
-        }
+        })
     }
 
-    /// Charge the request's estimated cost to the picked node.
-    fn commit(&mut self, a: &Arrival, pick: usize) {
+    /// Charge the request's estimated cost to the picked node —
+    /// completes a [`Router::plan`] decision.
+    pub fn commit(&mut self, a: &Arrival, pick: usize) {
         let units = a.batch.max(1) as f64;
         let end = self.est_free[pick].max(a.t) + units * self.unit_s[pick][a.tenant];
         self.est_free[pick] = end;
@@ -206,7 +239,7 @@ impl Router {
         *candidates
             .iter()
             .min_by_key(|&&n| (self.inflight[n].len(), n))
-            .expect("candidates non-empty")
+            .expect("candidates checked non-empty by pick")
     }
 }
 
@@ -244,7 +277,7 @@ mod tests {
     fn round_robin_cycles() {
         let mut r = flat_router(Policy::RoundRobin);
         let picks: Vec<usize> = (0..4)
-            .map(|i| r.dispatch(&arrival(0.0, 0, i), &[0, 1]))
+            .map(|i| r.dispatch(&arrival(0.0, 0, i), &[0, 1]).unwrap())
             .collect();
         assert_eq!(picks, vec![0, 1, 0, 1]);
     }
@@ -252,9 +285,9 @@ mod tests {
     #[test]
     fn jsq_prefers_emptier_node_and_low_index_on_ties() {
         let mut r = flat_router(Policy::JoinShortestQueue);
-        assert_eq!(r.dispatch(&arrival(0.0, 0, 0), &[0, 1]), 0, "tie → node 0");
-        assert_eq!(r.dispatch(&arrival(0.0, 0, 1), &[0, 1]), 1, "node 0 busier");
-        assert_eq!(r.dispatch(&arrival(0.0, 0, 2), &[0, 1]), 0, "tie again");
+        assert_eq!(r.dispatch(&arrival(0.0, 0, 0), &[0, 1]), Some(0), "tie → node 0");
+        assert_eq!(r.dispatch(&arrival(0.0, 0, 1), &[0, 1]), Some(1), "node 0 busier");
+        assert_eq!(r.dispatch(&arrival(0.0, 0, 2), &[0, 1]), Some(0), "tie again");
         assert_eq!(r.queue_len(0), 2);
         assert_eq!(r.queue_len(1), 1);
     }
@@ -275,13 +308,13 @@ mod tests {
     fn deadline_aware_prefers_faster_node() {
         // Node 1 is 4× faster; an empty-queue dispatch goes there.
         let mut r = Router::new(Policy::DeadlineAware, vec![vec![4e-3], vec![1e-3]]);
-        assert_eq!(r.dispatch(&arrival(0.0, 0, 0), &[0, 1]), 1);
+        assert_eq!(r.dispatch(&arrival(0.0, 0, 0), &[0, 1]), Some(1));
         // Pile work on node 1 until the slow node wins on drain time.
         for i in 1..8 {
             r.dispatch(&arrival(0.0, 0, i), &[0, 1]);
         }
         let slow_picked = (8..16)
-            .map(|i| r.dispatch(&arrival(0.0, 0, i), &[0, 1]))
+            .filter_map(|i| r.dispatch(&arrival(0.0, 0, i), &[0, 1]))
             .filter(|&n| n == 0)
             .count();
         assert!(slow_picked > 0, "backlog eventually overflows to the slow node");
@@ -295,15 +328,15 @@ mod tests {
                 vec![vec![1e-3]; 4],
             );
             (0..32)
-                .map(|i| r.dispatch(&arrival(0.0, 0, i), &[0, 1, 2, 3]))
+                .map(|i| r.dispatch(&arrival(0.0, 0, i), &[0, 1, 2, 3]).unwrap())
                 .collect::<Vec<usize>>()
         };
         assert_eq!(run(3), run(3));
         assert_ne!(run(3), run(4), "different seeds sample differently");
         // With ≤2 candidates p2c degenerates to jsq (no RNG draw).
         let mut r = flat_router(Policy::PowerOfTwoChoices { seed: 1 });
-        assert_eq!(r.dispatch(&arrival(0.0, 0, 0), &[0, 1]), 0);
-        assert_eq!(r.dispatch(&arrival(0.0, 0, 1), &[0, 1]), 1);
+        assert_eq!(r.dispatch(&arrival(0.0, 0, 0), &[0, 1]), Some(0));
+        assert_eq!(r.dispatch(&arrival(0.0, 0, 1), &[0, 1]), Some(1));
     }
 
     #[test]
@@ -313,14 +346,14 @@ mod tests {
         let mut explained = flat_router(Policy::JoinShortestQueue);
         for i in 0..6 {
             let arr = arrival(0.0, 0, i);
-            let (pick, view) = explained.dispatch_explained(&arr, &[0, 1]);
-            assert_eq!(pick, plain.dispatch(&arr, &[0, 1]));
+            let (pick, view) = explained.dispatch_explained(&arr, &[0, 1]).unwrap();
+            assert_eq!(pick, plain.dispatch(&arr, &[0, 1]).unwrap());
             assert_eq!(view.len(), 2);
         }
         let mut r = flat_router(Policy::JoinShortestQueue);
-        let (_, view) = r.dispatch_explained(&arrival(0.0, 0, 0), &[0, 1]);
+        let (_, view) = r.dispatch_explained(&arrival(0.0, 0, 0), &[0, 1]).unwrap();
         assert_eq!(view, vec![(0, 0), (1, 0)], "first dispatch sees empty queues");
-        let (_, view) = r.dispatch_explained(&arrival(0.0, 0, 1), &[0, 1]);
+        let (_, view) = r.dispatch_explained(&arrival(0.0, 0, 1), &[0, 1]).unwrap();
         assert_eq!(view, vec![(0, 1), (1, 0)], "second sees the first in flight");
     }
 
@@ -334,8 +367,31 @@ mod tests {
         ] {
             let mut r = flat_router(policy);
             for i in 0..3 {
-                assert_eq!(r.dispatch(&arrival(0.0, 0, i), &[1]), 1);
+                assert_eq!(r.dispatch(&arrival(0.0, 0, i), &[1]), Some(1));
             }
+        }
+    }
+
+    #[test]
+    fn empty_candidate_set_returns_none_instead_of_panicking() {
+        // Regression: every node hosting a tenant can be down at once
+        // under fault injection; dispatch used to assert and abort the
+        // whole fleet sim.  Now it reports "unroutable" and leaves the
+        // router state untouched.
+        for policy in [
+            Policy::RoundRobin,
+            Policy::JoinShortestQueue,
+            Policy::PowerOfTwoChoices { seed: 9 },
+            Policy::DeadlineAware,
+        ] {
+            let name = policy.name();
+            let mut r = flat_router(policy);
+            assert_eq!(r.dispatch(&arrival(0.0, 0, 0), &[]), None, "{name}");
+            assert_eq!(r.dispatch_explained(&arrival(0.0, 0, 1), &[]), None, "{name}");
+            assert_eq!(r.queue_len(0) + r.queue_len(1), 0, "{name}: nothing charged");
+            // The failed dispatch must not advance policy state: the
+            // next routable arrival behaves as if it were the first.
+            assert_eq!(r.dispatch(&arrival(0.0, 0, 2), &[0, 1]), Some(0), "{name}");
         }
     }
 }

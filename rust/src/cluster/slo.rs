@@ -37,6 +37,13 @@ pub struct FleetSlo {
     pub eff_tops: f64,
     /// Achieved fleet TOps/s per Watt of aggregate peak power.
     pub eff_tops_per_w: f64,
+    /// Requests rejected at fleet level because no live, active node
+    /// hosted their tenant (fault injection / autoscaler drain) — not
+    /// part of `slo.rejected`, which counts per-node admission sheds.
+    pub unroutable: u64,
+    /// Strand-and-retry detours charged by the chaos path (see
+    /// [`super::FleetReport::redispatched`]).
+    pub redispatched: u64,
 }
 
 /// Compute the fleet SLO report for a run.  `horizon_s` is the offered
@@ -66,6 +73,8 @@ pub fn analyze_fleet(
         fleet_peak_w,
         eff_tops,
         eff_tops_per_w: if fleet_peak_w > 0.0 { eff_tops / fleet_peak_w } else { 0.0 },
+        unroutable: rep.unroutable,
+        redispatched: rep.redispatched,
         slo,
     }
 }
@@ -158,6 +167,13 @@ impl std::fmt::Display for FleetSlo {
             "fleet    : {} nodes, peak {:.1} W, {:.2} TOps/s achieved ({:.4} TOps/s/W)",
             self.node_count, self.fleet_peak_w, self.eff_tops, self.eff_tops_per_w
         )?;
+        if self.unroutable > 0 || self.redispatched > 0 {
+            writeln!(
+                f,
+                "chaos    : {} unroutable, {} re-dispatched",
+                self.unroutable, self.redispatched
+            )?;
+        }
         write!(f, "dispatch :")?;
         for (i, (d, b)) in self.dispatched.iter().zip(&self.node_busy).enumerate() {
             write!(f, " node{i} {d} ({:.0}% busy)", 100.0 * b)?;

@@ -19,10 +19,11 @@
 //!
 //! Beyond the paper: `perlayer` — per-layer tiling-strategy selection
 //! (analytic + exhaustive, via the compile pipeline) vs the best
-//! global strategy, `ablation` — scheduler design ablations, and
-//! `fleet` — goodput-vs-node-count scaling of a multi-accelerator
-//! cluster under round-robin vs join-shortest-queue dispatch
-//! ([`crate::cluster`]).
+//! global strategy, `ablation` — scheduler design ablations, `fleet`
+//! — goodput-vs-node-count scaling of a multi-accelerator cluster
+//! under round-robin vs join-shortest-queue dispatch
+//! ([`crate::cluster`]), and `chaos` — goodput retained under one
+//! node loss at peak load ([`crate::cluster::chaos`]).
 //!
 //! The sweep-shaped experiments (table1/table2/fig9/fig10/fig12a/
 //! fig12b) are *declarative*: each builds a
@@ -34,6 +35,7 @@
 //! registry.
 
 pub mod ablation;
+pub mod chaos_exp;
 pub mod fleet_exp;
 pub mod granularity;
 pub mod interconnect_exp;
@@ -77,6 +79,7 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<()> {
         "ablation" => ablation::ablation(opts),
         "perlayer" => tiling_exp::perlayer(opts),
         "fleet" => fleet_exp::fleet(opts),
+        "chaos" => chaos_exp::chaos(opts),
         other => Err(crate::Error::config(format!("unknown experiment {other}"))),
     }
 }
@@ -84,7 +87,7 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<()> {
 /// All experiment ids, in paper order (paper-beyond experiments last).
 pub const ALL: &[&str] = &[
     "fig4", "fig5", "table1", "table2", "fig9", "fig10", "fig11", "fig12a",
-    "fig12b", "fig13", "table3", "ablation", "perlayer", "fleet",
+    "fig12b", "fig13", "table3", "ablation", "perlayer", "fleet", "chaos",
 ];
 
 /// Run the full suite.

@@ -88,6 +88,12 @@ pub struct EvalRecord {
     /// this is the ceiling the [`crate::cluster`] simulation (which
     /// pays dispatch imbalance and queueing) measures against.
     pub fleet_tops: f64,
+    /// Fleet resilience: fraction of the linear-scaling throughput
+    /// bound retained when one node is lost, `(nodes - 1) / nodes`.
+    /// Single-node designs score 0 — losing the only node loses
+    /// everything — so [`Objective::Resilience`] trades directly
+    /// against per-node efficiency in granularity sweeps.
+    pub resilience: f64,
     /// Scheduler-trace digest for the point — `Some` only when the
     /// explorer ran with [`Explorer::traced`] (full event streams
     /// would dwarf the records, so sweeps keep the compact summary).
@@ -108,6 +114,8 @@ impl EvalRecord {
         let nodes = point.nodes.max(1);
         let (fleet_peak_w, fleet_tops) =
             crate::cluster::slo::linear_fleet(peak_power_w, raw_tops, nodes);
+        let resilience =
+            if nodes > 1 { (nodes - 1) as f64 / nodes as f64 } else { 0.0 };
         let step = point.workload.decode_step();
         let est = crate::analytic::estimate(cfg, &step, crate::tiling::Strategy::RxR);
         let tpot_s = est.cycles / (cfg.freq_ghz * 1e9);
@@ -125,6 +133,7 @@ impl EvalRecord {
             nodes,
             fleet_peak_w,
             fleet_tops,
+            resilience,
             trace: None,
             tier: Tier::Simulated,
             stats,
@@ -396,6 +405,11 @@ mod tests {
         assert!(!Objective::Ttft.maximize() && !Objective::Tpot.maximize());
         assert_eq!(Objective::parse("ttft"), Some(Objective::Ttft));
         assert_eq!(Objective::parse("tpot"), Some(Objective::Tpot));
+        // Single-node points have nothing left after losing their node.
+        assert_eq!(rec.nodes, 1);
+        assert_eq!(rec.resilience, 0.0);
+        assert_eq!(Objective::Resilience.raw(rec), 0.0);
+        assert_eq!(Objective::parse("resilience"), Some(Objective::Resilience));
     }
 
     #[test]

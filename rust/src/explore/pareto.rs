@@ -32,6 +32,11 @@ pub enum Objective {
     /// Time-per-output-token bound in seconds (minimize) — the
     /// decode-step latency ([`EvalRecord::tpot_s`]).
     Tpot,
+    /// Fleet resilience: fraction of throughput retained under one
+    /// node loss, `(nodes - 1) / nodes` (maximize) — single-node
+    /// designs score 0 because losing their only node loses
+    /// everything.
+    Resilience,
 }
 
 impl Objective {
@@ -48,6 +53,7 @@ impl Objective {
         Objective::FleetPeakPower,
         Objective::Ttft,
         Objective::Tpot,
+        Objective::Resilience,
     ];
 
     /// Stable CLI/report name.
@@ -64,6 +70,7 @@ impl Objective {
             Objective::FleetPeakPower => "fleet_peak_w",
             Objective::Ttft => "ttft",
             Objective::Tpot => "tpot",
+            Objective::Resilience => "resilience",
         }
     }
 
@@ -86,6 +93,7 @@ impl Objective {
             Objective::FleetPeakPower => r.fleet_peak_w,
             Objective::Ttft => r.ttft_s,
             Objective::Tpot => r.tpot_s,
+            Objective::Resilience => r.resilience,
         }
     }
 
@@ -188,6 +196,7 @@ mod tests {
     fn minimizing_objectives_negate() {
         assert!(!Objective::Latency.maximize());
         assert!(Objective::EffTopsPerWatt.maximize());
+        assert!(Objective::Resilience.maximize(), "more retained goodput is better");
     }
 
     #[test]

@@ -25,7 +25,8 @@ pub struct Report<'a> {
 pub const CSV_HEADER: &[&str] = &[
     "array", "pods", "interconnect", "tiling", "workload", "batch", "cycles",
     "latency_ms", "util", "raw_tops", "peak_w", "eff_tops", "eff_tops_per_w",
-    "nodes", "fleet_peak_w", "fleet_tops", "ttft_ms", "tpot_ms", "tier", "pareto",
+    "nodes", "fleet_peak_w", "fleet_tops", "ttft_ms", "tpot_ms", "resilience",
+    "tier", "pareto",
 ];
 
 impl<'a> Report<'a> {
@@ -72,6 +73,7 @@ impl<'a> Report<'a> {
             f(r.fleet_tops, 1),
             f(r.ttft_s * 1e3, 3),
             f(r.tpot_s * 1e3, 3),
+            f(r.resilience, 3),
             r.tier.name().into(),
             if on_front { "1".into() } else { "0".into() },
         ]
@@ -114,6 +116,7 @@ impl<'a> Report<'a> {
                         ("fleet_tops", Json::Num(r.fleet_tops)),
                         ("ttft_ms", Json::Num(r.ttft_s * 1e3)),
                         ("tpot_ms", Json::Num(r.tpot_s * 1e3)),
+                        ("resilience", Json::Num(r.resilience)),
                         ("tier", Json::str(r.tier.name())),
                     ];
                     if let Some(fr) = self.frontier {

@@ -881,6 +881,23 @@ fn cmd_cluster(args: &Args) {
         fleet.peak_power_w()
     );
 
+    // Fleet dynamics: a chaos schedule (crash windows, stragglers,
+    // health-check lag) and/or a queue-depth autoscaler.  Either one
+    // routes the run through Fleet::serve_chaos.
+    let chaos = args
+        .get("chaos")
+        .map(|s| sosa::cluster::ChaosSchedule::parse(s).expect("invalid --chaos spec"));
+    let autoscale = if args.flag("autoscale") {
+        Some(match args.get("autoscale") {
+            Some(s) => {
+                sosa::cluster::AutoscalerConfig::parse(s).expect("invalid --autoscale spec")
+            }
+            None => sosa::cluster::AutoscalerConfig::default(),
+        })
+    } else {
+        None
+    };
+
     if args.flag("sweep") {
         assert!(
             args.get("trace").is_none() && args.get("timeline").is_none(),
@@ -890,6 +907,10 @@ fn cmd_cluster(args: &Args) {
             args.get("burst-qps").is_none(),
             "--sweep probes Poisson rates only; bursty flags (--burst-qps, \
              --mean-burst-ms, --mean-quiet-ms) apply to single runs"
+        );
+        assert!(
+            chaos.is_none() && autoscale.is_none(),
+            "--sweep probes the healthy fleet; --chaos/--autoscale apply to single runs"
         );
         let ladder: Vec<f64> = SWEEP_LADDER.iter().map(|&x| x * qps).collect();
         let sweep = SweepOptions {
@@ -920,23 +941,63 @@ fn cmd_cluster(args: &Args) {
         return;
     }
 
-    let spec = match args.get_parse::<f64>("burst-qps") {
-        Some(burst) => TrafficSpec::bursty(
+    let spec = if args.flag("diurnal") {
+        TrafficSpec::diurnal(
             qps,
-            burst,
-            args.get_parse::<f64>("mean-burst-ms").unwrap_or(50.0) * 1e-3,
-            args.get_parse::<f64>("mean-quiet-ms").unwrap_or(200.0) * 1e-3,
+            args.get_parse::<f64>("amplitude").unwrap_or(0.8),
+            args.get_parse::<f64>("period").unwrap_or(duration_s),
             duration_s,
             seed,
-        ),
-        None => TrafficSpec::poisson(qps, duration_s, seed),
+        )
+    } else if args.flag("flash") {
+        TrafficSpec::flash_crowd(
+            qps,
+            args.get_parse::<f64>("spike-qps").unwrap_or(3.0 * qps),
+            args.get_parse::<f64>("spike-at").unwrap_or(duration_s / 3.0),
+            args.get_parse::<f64>("spike-s").unwrap_or(duration_s / 6.0),
+            duration_s,
+            seed,
+        )
+    } else {
+        match args.get_parse::<f64>("burst-qps") {
+            Some(burst) => TrafficSpec::bursty(
+                qps,
+                burst,
+                args.get_parse::<f64>("mean-burst-ms").unwrap_or(50.0) * 1e-3,
+                args.get_parse::<f64>("mean-quiet-ms").unwrap_or(200.0) * 1e-3,
+                duration_s,
+                seed,
+            ),
+            None => TrafficSpec::poisson(qps, duration_s, seed),
+        }
     };
     let arrivals = generate(&spec, &tenants);
     println!("traffic  : {} arrivals over {duration_s:.2} s, seed {seed}", arrivals.len());
+    if let Some(ch) = &chaos {
+        println!(
+            "chaos    : {} crash windows, {} stragglers, health-check lag {:.1} ms",
+            ch.crashes.len(),
+            ch.stragglers.len(),
+            ch.health_check_s * 1e3
+        );
+    }
     let trace = args.get("trace");
     let tl = args.get("timeline");
     let threads = args.get_parse::<usize>("threads");
-    let (rep, events) = if trace.is_some() || tl.is_some() {
+    let dynamics = chaos.is_some() || autoscale.is_some();
+    let (rep, events) = if dynamics {
+        let ch = chaos.unwrap_or_default();
+        if trace.is_some() || tl.is_some() {
+            fleet
+                .serve_chaos_traced(&tenants, &arrivals, &ch, autoscale.as_ref(), threads)
+                .expect("fleet serve (chaos)")
+        } else {
+            let r = fleet
+                .serve_chaos(&tenants, &arrivals, &ch, autoscale.as_ref(), threads)
+                .expect("fleet serve (chaos)");
+            (r, Vec::new())
+        }
+    } else if trace.is_some() || tl.is_some() {
         fleet.serve_traced(&tenants, &arrivals, threads).expect("fleet serve")
     } else {
         (fleet.serve_threads(&tenants, &arrivals, threads).expect("fleet serve"), Vec::new())
@@ -1113,6 +1174,10 @@ fn main() {
             eprintln!("           [--autoreg [--model gpt2|llama7b] [--static]]");
             eprintln!("           [--placement replicate|partition] [--qps Q]");
             eprintln!("           [--burst-qps Q --mean-burst-ms MS --mean-quiet-ms MS]");
+            eprintln!("           [--diurnal [--amplitude A] [--period S]]");
+            eprintln!("           [--flash [--spike-qps Q] [--spike-at S] [--spike-s S]]");
+            eprintln!("           [--chaos down:N@T1..T2,straggle:N@F,health:S]");
+            eprintln!("           [--autoscale [interval:S,warmup:S,hi:D,lo:D,min:N,max:N]]");
             eprintln!("           [--duration S] [--seed S] [--max-batch N]");
             eprintln!("           [--deadline-ms MS] [--sweep] [--threads N]");
             eprintln!("           [--out DIR] [--quick]");

@@ -182,6 +182,11 @@ impl Metrics {
                 Event::RequestJoin { .. } => m.inc("autoreg.joins", 1),
                 Event::RequestLeave { .. } => m.inc("autoreg.leaves", 1),
                 Event::KvEvict { .. } => m.inc("autoreg.kv_evictions", 1),
+                Event::NodeDown { .. } => m.inc("cluster.node_down", 1),
+                Event::NodeUp { .. } => m.inc("cluster.node_up", 1),
+                Event::Redispatch { .. } => m.inc("cluster.redispatches", 1),
+                Event::ScaleUp { .. } => m.inc("cluster.scale_up", 1),
+                Event::ScaleDrain { .. } => m.inc("cluster.scale_drain", 1),
             }
         }
         m

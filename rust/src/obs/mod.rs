@@ -114,6 +114,21 @@ pub enum Event {
     /// its `kv_bytes` of cache state no longer fit beside the rest of
     /// the batch — and went back to the queue for a fresh prefill.
     KvEvict { id: u64, t: f64, kv_bytes: u64 },
+    /// Cluster chaos: `node` crashed at sim time `t` (start of a
+    /// scheduled outage window).
+    NodeDown { node: u32, t: f64 },
+    /// Cluster chaos: `node` restarted at sim time `t` (end of its
+    /// outage window).
+    NodeUp { node: u32, t: f64 },
+    /// Cluster chaos: request `id` was stranded on crashed `node` and
+    /// re-entered dispatch at `t` (crash time + health-check lag).
+    Redispatch { id: u64, tenant: u32, node: u32, t: f64 },
+    /// Cluster autoscaler: `node` starts taking traffic at `t` (the
+    /// scale-up decision plus warm-up).
+    ScaleUp { node: u32, t: f64 },
+    /// Cluster autoscaler: `node` stops taking new traffic at `t`
+    /// (in-flight work completes; the drain is immediate for routing).
+    ScaleDrain { node: u32, t: f64 },
 }
 
 /// Destination for trace events.

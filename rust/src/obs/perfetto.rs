@@ -14,7 +14,9 @@
 //!   queue/batch/service split in the end event's args), rejections
 //!   as instants;
 //! * **pid 3 "cluster-router"** — dispatch decisions as instants on
-//!   the chosen node's thread, with the queue view in args;
+//!   the chosen node's thread, with the queue view in args; chaos
+//!   (NodeDown/NodeUp/Redispatch) and autoscaler (ScaleUp/ScaleDrain)
+//!   events as instants on the affected node's thread;
 //! * **pid 4 "batches"** — batch launches as `"X"` spans.
 //!
 //! Timestamps are **simulated** microseconds (`ts`/`dur` are µs in the
@@ -163,6 +165,52 @@ pub fn trace_json(events: &[Event], slice_us: f64) -> Json {
                 ("ts", Json::Num(t * 1e6)),
                 ("args", Json::obj(vec![("kv_bytes", Json::int(*kv_bytes))])),
             ])),
+            Event::NodeDown { node, t } => te.push(Json::obj(vec![
+                ("name", Json::str(format!("node {node} DOWN"))),
+                ("cat", Json::str("chaos")),
+                ("ph", Json::str("i")),
+                ("s", Json::str("p")),
+                ("pid", Json::int(3)),
+                ("tid", Json::int(*node as u64)),
+                ("ts", Json::Num(t * 1e6)),
+            ])),
+            Event::NodeUp { node, t } => te.push(Json::obj(vec![
+                ("name", Json::str(format!("node {node} UP"))),
+                ("cat", Json::str("chaos")),
+                ("ph", Json::str("i")),
+                ("s", Json::str("p")),
+                ("pid", Json::int(3)),
+                ("tid", Json::int(*node as u64)),
+                ("ts", Json::Num(t * 1e6)),
+            ])),
+            Event::Redispatch { id, tenant, node, t } => te.push(Json::obj(vec![
+                ("name", Json::str(format!("redispatch {id} ⟲ n{node}"))),
+                ("cat", Json::str("chaos")),
+                ("ph", Json::str("i")),
+                ("s", Json::str("t")),
+                ("pid", Json::int(3)),
+                ("tid", Json::int(*node as u64)),
+                ("ts", Json::Num(t * 1e6)),
+                ("args", Json::obj(vec![("tenant", Json::int(*tenant as u64))])),
+            ])),
+            Event::ScaleUp { node, t } => te.push(Json::obj(vec![
+                ("name", Json::str(format!("scale-up n{node}"))),
+                ("cat", Json::str("autoscale")),
+                ("ph", Json::str("i")),
+                ("s", Json::str("p")),
+                ("pid", Json::int(3)),
+                ("tid", Json::int(*node as u64)),
+                ("ts", Json::Num(t * 1e6)),
+            ])),
+            Event::ScaleDrain { node, t } => te.push(Json::obj(vec![
+                ("name", Json::str(format!("scale-drain n{node}"))),
+                ("cat", Json::str("autoscale")),
+                ("ph", Json::str("i")),
+                ("s", Json::str("p")),
+                ("pid", Json::int(3)),
+                ("tid", Json::int(*node as u64)),
+                ("ts", Json::Num(t * 1e6)),
+            ])),
             Event::Dispatch { id, tenant, node, t, queue_view } => {
                 let view: Vec<Json> = queue_view
                     .iter()
@@ -257,6 +305,28 @@ mod tests {
         let a = trace_json(&sample_events(), 0.5).render();
         let b = trace_json(&sample_events(), 0.5).render();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn chaos_and_autoscale_events_render_on_the_router_track() {
+        let events = vec![
+            Event::NodeDown { node: 1, t: 0.02 },
+            Event::NodeUp { node: 1, t: 0.05 },
+            Event::Redispatch { id: 9, tenant: 0, node: 1, t: 0.022 },
+            Event::ScaleUp { node: 2, t: 0.03 },
+            Event::ScaleDrain { node: 2, t: 0.08 },
+        ];
+        let doc = trace_json(&events, 0.5);
+        let text = doc.render();
+        assert!(Json::parse(&text).is_ok(), "chaos trace must stay valid JSON");
+        for needle in
+            ["node 1 DOWN", "node 1 UP", "redispatch 9", "scale-up n2", "scale-drain n2"]
+        {
+            assert!(text.contains(needle), "missing `{needle}` in {text}");
+        }
+        // All five live on the cluster-router process (pid 3): its
+        // process_name metadata row plus one instant per event.
+        assert_eq!(text.matches("\"pid\":3").count(), 6);
     }
 
     #[test]

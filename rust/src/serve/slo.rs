@@ -14,6 +14,14 @@ use super::partition::serve_partitioned_cached;
 use super::traffic::{generate, Tenant, TrafficSpec};
 
 /// Percentile summary of a sample set (seconds).
+///
+/// An **empty** sample set is represented explicitly: `n = 0` with
+/// every statistic `NaN` (rendered as `NaN` in reports and CSVs).  It
+/// used to summarize as all-zeros — a window that served nothing
+/// reported p99 = 0 ms, indistinguishable from perfect latency.  NaN
+/// also fails every `<=` deadline comparison, so empty windows cannot
+/// sneak through SLO gates.  Check `n == 0` (or `served()`) before
+/// comparing two summaries with `==`: NaN never equals NaN.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct LatencyStats {
     pub n: usize,
@@ -28,9 +36,17 @@ pub use crate::stats::percentile;
 
 impl LatencyStats {
     /// Summarize a sample set (sorts a copy; callers keep their order).
+    /// Empty input → `n = 0` and NaN statistics (see the type docs).
     pub fn from_samples(samples: &[f64]) -> LatencyStats {
         if samples.is_empty() {
-            return LatencyStats::default();
+            return LatencyStats {
+                n: 0,
+                mean: f64::NAN,
+                p50: f64::NAN,
+                p95: f64::NAN,
+                p99: f64::NAN,
+                max: f64::NAN,
+            };
         }
         let mut sorted = samples.to_vec();
         sorted.sort_by(f64::total_cmp);
@@ -42,6 +58,11 @@ impl LatencyStats {
             p99: percentile(&sorted, 99.0),
             max: *sorted.last().expect("non-empty"),
         }
+    }
+
+    /// Whether any sample was observed (`n > 0`).
+    pub fn served(&self) -> bool {
+        self.n > 0
     }
 }
 
@@ -476,8 +497,10 @@ mod tests {
 
     #[test]
     fn percentile_empty_and_single() {
-        assert_eq!(percentile(&[], 50.0), 0.0);
-        assert_eq!(percentile(&[], 99.0), 0.0);
+        // Regression: empty samples used to summarize as all-zeros —
+        // a served=0 window looked like perfect latency.
+        assert!(percentile(&[], 50.0).is_nan());
+        assert!(percentile(&[], 99.0).is_nan());
         let one = [0.25];
         assert_eq!(percentile(&one, 0.0), 0.25);
         assert_eq!(percentile(&one, 50.0), 0.25);
@@ -485,7 +508,28 @@ mod tests {
         assert_eq!(percentile(&one, 100.0), 0.25);
         let s = LatencyStats::from_samples(&one);
         assert_eq!((s.p50, s.p95, s.p99, s.max), (0.25, 0.25, 0.25, 0.25));
-        assert_eq!(LatencyStats::from_samples(&[]), LatencyStats::default());
+        assert!(s.served());
+        let empty = LatencyStats::from_samples(&[]);
+        assert_eq!(empty.n, 0);
+        assert!(!empty.served());
+        for v in [empty.mean, empty.p50, empty.p95, empty.p99, empty.max] {
+            assert!(v.is_nan(), "empty stats must be NaN, got {v}");
+        }
+        assert!(!(empty.p99 <= 1e9), "NaN must fail any deadline gate");
+    }
+
+    #[test]
+    fn zero_request_window_reports_nan_not_zero_latency() {
+        // The full analyze() path on an engine report that served
+        // nothing: served=0 is explicit (n = 0, NaN percentiles), and
+        // goodput/throughput stay 0 — not "p99 = 0 ms".
+        let slo = analyze(&EngineReport::default(), 1.0, 0.01);
+        assert_eq!(slo.completed, 0);
+        assert_eq!(slo.latency.n, 0);
+        assert!(slo.latency.p50.is_nan() && slo.latency.p99.is_nan());
+        assert_eq!(slo.goodput_qps, 0.0);
+        let text = format!("{slo}");
+        assert!(text.contains("NaN"), "empty window must render NaN: {text}");
     }
 
     #[test]

@@ -1,7 +1,16 @@
 //! Open-loop arrival generation for the serving engine: Poisson,
-//! bursty (two-state Markov-modulated Poisson) and trace replay, all
-//! driven by a seeded [`XorShift`] so a `(spec, tenants)` pair always
-//! produces the same request stream.
+//! bursty (two-state Markov-modulated Poisson), non-stationary
+//! diurnal/flash-crowd shapes (Lewis–Shedler thinning over a
+//! time-varying rate) and trace replay, all driven by a seeded
+//! [`XorShift`] so a `(spec, tenants)` pair always produces the same
+//! request stream.
+//!
+//! Rate semantics: a rate of **zero is valid everywhere** and simply
+//! emits no arrivals (a diurnal trough, a drained autoscaler segment);
+//! negative or non-finite rates are rejected at spec validation.  The
+//! spec constructors validate eagerly, and [`generate`] re-validates,
+//! so literally-constructed specs cannot smuggle a division by zero
+//! into [`exp_variate`].
 
 use crate::testutil::XorShift;
 use crate::workloads::ModelGraph;
@@ -58,9 +67,45 @@ pub enum ArrivalProcess {
         /// Mean quiet-period duration in seconds.
         mean_quiet_s: f64,
     },
+    /// Diurnal sinusoid: a Poisson process whose rate is modulated as
+    /// `base_qps · (1 + amplitude · sin(2π·t / period_s))` — the
+    /// day/night cycle scaled into simulation time.  `amplitude` in
+    /// `[0, 1]`; at amplitude 1 the trough rate is exactly zero and
+    /// emits no arrivals.
+    Diurnal {
+        /// Mean offered rate (requests/s) — the sinusoid's midline.
+        base_qps: f64,
+        /// Relative swing in `[0, 1]` (0 degenerates to Poisson).
+        amplitude: f64,
+        /// Full cycle length in seconds.
+        period_s: f64,
+    },
+    /// Flash crowd: a constant `base_qps` Poisson floor plus an
+    /// additive `spike_qps` rectangle over `[t_spike, t_spike +
+    /// spike_s)` — a news event landing on a steady fleet.
+    FlashCrowd {
+        /// Steady background rate (requests/s); 0 = spike only.
+        base_qps: f64,
+        /// Additional rate during the spike window (requests/s).
+        spike_qps: f64,
+        /// Spike start time in seconds.
+        t_spike: f64,
+        /// Spike width in seconds.
+        spike_s: f64,
+    },
     /// Replay an explicit trace (clamped to the spec duration; ids are
     /// reassigned sequentially).
     Trace(Vec<Arrival>),
+}
+
+/// Assert `v` is a finite, non-negative rate (requests/s).  Zero is
+/// legal — it means "no arrivals" — but negative and non-finite rates
+/// would turn [`exp_variate`] into NaN/∞ timestamps.
+fn assert_rate(v: f64, what: &str) {
+    assert!(
+        v.is_finite() && v >= 0.0,
+        "{what} must be a finite rate >= 0 (got {v})"
+    );
 }
 
 /// A complete traffic specification.
@@ -74,12 +119,14 @@ pub struct TrafficSpec {
 }
 
 impl TrafficSpec {
-    /// Poisson spec shorthand.
+    /// Poisson spec shorthand (validated; `qps` 0 emits no arrivals).
     pub fn poisson(qps: f64, duration_s: f64, seed: u64) -> Self {
-        TrafficSpec { process: ArrivalProcess::Poisson { qps }, duration_s, seed }
+        let spec = TrafficSpec { process: ArrivalProcess::Poisson { qps }, duration_s, seed };
+        spec.validate();
+        spec
     }
 
-    /// Bursty spec shorthand.
+    /// Bursty spec shorthand (validated).
     pub fn bursty(
         base_qps: f64,
         burst_qps: f64,
@@ -88,17 +135,111 @@ impl TrafficSpec {
         duration_s: f64,
         seed: u64,
     ) -> Self {
-        TrafficSpec {
+        let spec = TrafficSpec {
             process: ArrivalProcess::Bursty { base_qps, burst_qps, mean_burst_s, mean_quiet_s },
             duration_s,
             seed,
+        };
+        spec.validate();
+        spec
+    }
+
+    /// Diurnal sinusoid spec shorthand (validated).
+    pub fn diurnal(
+        base_qps: f64,
+        amplitude: f64,
+        period_s: f64,
+        duration_s: f64,
+        seed: u64,
+    ) -> Self {
+        let spec = TrafficSpec {
+            process: ArrivalProcess::Diurnal { base_qps, amplitude, period_s },
+            duration_s,
+            seed,
+        };
+        spec.validate();
+        spec
+    }
+
+    /// Flash-crowd spec shorthand (validated).
+    pub fn flash_crowd(
+        base_qps: f64,
+        spike_qps: f64,
+        t_spike: f64,
+        spike_s: f64,
+        duration_s: f64,
+        seed: u64,
+    ) -> Self {
+        let spec = TrafficSpec {
+            process: ArrivalProcess::FlashCrowd { base_qps, spike_qps, t_spike, spike_s },
+            duration_s,
+            seed,
+        };
+        spec.validate();
+        spec
+    }
+
+    /// Panic (with a precise message) on any parameter that would
+    /// corrupt generation: negative/non-finite rates, non-positive
+    /// state/period durations, out-of-range diurnal amplitude.  Called
+    /// by every constructor *and* by [`generate`], so specs built as
+    /// struct literals are checked too.  Zero rates are valid (they
+    /// emit no arrivals) — the bug this guards against is release-mode
+    /// `exp_variate(rate = 0)` silently producing ∞ timestamps.
+    pub fn validate(&self) {
+        assert!(
+            self.duration_s.is_finite() && self.duration_s >= 0.0,
+            "duration_s must be finite and >= 0 (got {})",
+            self.duration_s
+        );
+        match &self.process {
+            ArrivalProcess::Poisson { qps } => assert_rate(*qps, "Poisson qps"),
+            ArrivalProcess::Bursty { base_qps, burst_qps, mean_burst_s, mean_quiet_s } => {
+                assert_rate(*base_qps, "Bursty base_qps");
+                assert_rate(*burst_qps, "Bursty burst_qps");
+                assert!(
+                    mean_burst_s.is_finite() && *mean_burst_s > 0.0,
+                    "mean_burst_s must be finite and > 0 (got {mean_burst_s})"
+                );
+                assert!(
+                    mean_quiet_s.is_finite() && *mean_quiet_s > 0.0,
+                    "mean_quiet_s must be finite and > 0 (got {mean_quiet_s})"
+                );
+            }
+            ArrivalProcess::Diurnal { base_qps, amplitude, period_s } => {
+                assert_rate(*base_qps, "Diurnal base_qps");
+                assert!(
+                    (0.0..=1.0).contains(amplitude),
+                    "Diurnal amplitude must lie in [0, 1] (got {amplitude})"
+                );
+                assert!(
+                    period_s.is_finite() && *period_s > 0.0,
+                    "Diurnal period_s must be finite and > 0 (got {period_s})"
+                );
+            }
+            ArrivalProcess::FlashCrowd { base_qps, spike_qps, t_spike, spike_s } => {
+                assert_rate(*base_qps, "FlashCrowd base_qps");
+                assert_rate(*spike_qps, "FlashCrowd spike_qps");
+                assert!(
+                    t_spike.is_finite() && *t_spike >= 0.0,
+                    "FlashCrowd t_spike must be finite and >= 0 (got {t_spike})"
+                );
+                assert!(
+                    spike_s.is_finite() && *spike_s >= 0.0,
+                    "FlashCrowd spike_s must be finite and >= 0 (got {spike_s})"
+                );
+            }
+            ArrivalProcess::Trace(_) => {}
         }
     }
 }
 
-/// Exponential variate with the given rate (events/s).
+/// Exponential variate with the given rate (events/s).  Callers must
+/// guard rate 0 (skip the segment) — this holds in release too, not
+/// just under `debug_assert`: a zero rate here would silently yield an
+/// ∞ timestamp and corrupt the stream.
 fn exp_variate(rng: &mut XorShift, rate: f64) -> f64 {
-    debug_assert!(rate > 0.0);
+    assert!(rate > 0.0 && rate.is_finite(), "exp_variate rate {rate}");
     // 1 - U lies in (0, 1], so ln() is finite and the variate >= 0.
     -(1.0 - rng.f64()).ln() / rate
 }
@@ -110,10 +251,41 @@ fn sample_tenant(rng: &mut XorShift, cum_weights: &[f64]) -> usize {
     cum_weights.iter().position(|&c| r < c).unwrap_or(cum_weights.len() - 1)
 }
 
+/// Lewis–Shedler thinning: draw candidate arrivals from a homogeneous
+/// Poisson process at `rate_max`, accept each at probability
+/// `rate_at(t) / rate_max`.  Exact for any bounded time-varying rate;
+/// a zero `rate_max` (rate identically zero) emits nothing.
+fn thinned(
+    rng: &mut XorShift,
+    rate_max: f64,
+    rate_at: impl Fn(f64) -> f64,
+    duration_s: f64,
+    cum: &[f64],
+    out: &mut Vec<Arrival>,
+) {
+    if rate_max <= 0.0 {
+        return;
+    }
+    let mut t = exp_variate(rng, rate_max);
+    while t < duration_s {
+        // Fixed draw order (accept, then tenant) keeps streams
+        // seed-deterministic regardless of the acceptance outcome's
+        // data dependence.
+        let accept = rng.f64() * rate_max < rate_at(t);
+        let tenant = sample_tenant(rng, cum);
+        if accept {
+            out.push(Arrival { t, tenant, id: out.len() as u64, batch: 1 });
+        }
+        t += exp_variate(rng, rate_max);
+    }
+}
+
 /// Generate the arrival stream for a spec over a tenant set, sorted by
-/// time with sequential ids.
+/// time with sequential ids.  Panics (via [`TrafficSpec::validate`])
+/// on malformed specs; zero-rate processes/segments yield no arrivals.
 pub fn generate(spec: &TrafficSpec, tenants: &[Tenant]) -> Vec<Arrival> {
     assert!(!tenants.is_empty(), "traffic needs at least one tenant");
+    spec.validate();
     let mut rng = XorShift::new(spec.seed);
     let cum: Vec<f64> = tenants
         .iter()
@@ -125,23 +297,24 @@ pub fn generate(spec: &TrafficSpec, tenants: &[Tenant]) -> Vec<Arrival> {
     let mut out = Vec::new();
     match &spec.process {
         ArrivalProcess::Poisson { qps } => {
-            assert!(*qps > 0.0, "Poisson qps must be positive");
-            let mut t = exp_variate(&mut rng, *qps);
-            while t < spec.duration_s {
-                let tenant = sample_tenant(&mut rng, &cum);
-                out.push(Arrival { t, tenant, id: out.len() as u64, batch: 1 });
-                t += exp_variate(&mut rng, *qps);
+            if *qps > 0.0 {
+                let mut t = exp_variate(&mut rng, *qps);
+                while t < spec.duration_s {
+                    let tenant = sample_tenant(&mut rng, &cum);
+                    out.push(Arrival { t, tenant, id: out.len() as u64, batch: 1 });
+                    t += exp_variate(&mut rng, *qps);
+                }
             }
         }
         ArrivalProcess::Bursty { base_qps, burst_qps, mean_burst_s, mean_quiet_s } => {
-            assert!(*base_qps > 0.0 && *burst_qps > 0.0);
-            assert!(*mean_burst_s > 0.0 && *mean_quiet_s > 0.0);
             let mut in_burst = false;
             let mut t = 0.0f64;
             let mut state_end = exp_variate(&mut rng, 1.0 / mean_quiet_s);
             while t < spec.duration_s {
                 let rate = if in_burst { *burst_qps } else { *base_qps };
-                let dt = exp_variate(&mut rng, rate);
+                // A zero-rate state emits nothing: skip straight to the
+                // state boundary (previously ∞ via exp_variate(0)).
+                let dt = if rate > 0.0 { exp_variate(&mut rng, rate) } else { f64::INFINITY };
                 if t + dt >= state_end {
                     // The exponential is memoryless: jumping to the state
                     // boundary and redrawing preserves the process law.
@@ -158,6 +331,28 @@ pub fn generate(spec: &TrafficSpec, tenants: &[Tenant]) -> Vec<Arrival> {
                 let tenant = sample_tenant(&mut rng, &cum);
                 out.push(Arrival { t, tenant, id: out.len() as u64, batch: 1 });
             }
+        }
+        ArrivalProcess::Diurnal { base_qps, amplitude, period_s } => {
+            let (base, amp, period) = (*base_qps, *amplitude, *period_s);
+            thinned(
+                &mut rng,
+                base * (1.0 + amp),
+                |t| base * (1.0 + amp * (std::f64::consts::TAU * t / period).sin()),
+                spec.duration_s,
+                &cum,
+                &mut out,
+            );
+        }
+        ArrivalProcess::FlashCrowd { base_qps, spike_qps, t_spike, spike_s } => {
+            let (base, spike, t0, width) = (*base_qps, *spike_qps, *t_spike, *spike_s);
+            thinned(
+                &mut rng,
+                base + spike,
+                |t| if t >= t0 && t < t0 + width { base + spike } else { base },
+                spec.duration_s,
+                &cum,
+                &mut out,
+            );
         }
         ArrivalProcess::Trace(trace) => {
             let mut sorted: Vec<Arrival> = trace
@@ -342,6 +537,8 @@ mod tests {
         };
         check(&|s| TrafficSpec::poisson(800.0, 0.5, s));
         check(&|s| TrafficSpec::bursty(200.0, 2000.0, 0.02, 0.1, 0.5, s));
+        check(&|s| TrafficSpec::diurnal(1500.0, 0.9, 0.25, 0.5, s));
+        check(&|s| TrafficSpec::flash_crowd(400.0, 4000.0, 0.2, 0.1, 0.5, s));
         // Trace replay is seed-independent by construction.
         let base = generate(&TrafficSpec::poisson(800.0, 0.5, 5), &tenants);
         let t1 = generate(
@@ -361,6 +558,93 @@ mod tests {
             &tenants,
         );
         assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn rate_zero_specs_emit_no_arrivals_in_any_profile() {
+        // Regression: `poisson(0.0, ..)` used to abort at generation
+        // (and, without that assert, exp_variate would divide by zero
+        // to ∞ timestamps in release).  A zero rate now means "no
+        // traffic" — required for diurnal troughs and drained
+        // autoscaler segments.  This test runs in both debug and
+        // release CI profiles.
+        let tenants = toy_tenants(1);
+        assert!(generate(&TrafficSpec::poisson(0.0, 1.0, 3), &tenants).is_empty());
+        assert!(
+            generate(&TrafficSpec::diurnal(0.0, 1.0, 0.5, 1.0, 3), &tenants).is_empty()
+        );
+        assert!(
+            generate(&TrafficSpec::flash_crowd(0.0, 0.0, 0.1, 0.2, 1.0, 3), &tenants)
+                .is_empty()
+        );
+        // A zero-rate *segment*: bursty with a silent quiet state still
+        // produces finite, in-horizon timestamps from the burst state.
+        let a = generate(&TrafficSpec::bursty(0.0, 2000.0, 0.05, 0.05, 1.0, 3), &tenants);
+        assert!(!a.is_empty(), "burst state must still emit");
+        assert!(a.iter().all(|x| x.t.is_finite() && x.t < 1.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "finite rate >= 0")]
+    fn negative_rate_rejected_at_construction() {
+        TrafficSpec::poisson(-1.0, 1.0, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite rate >= 0")]
+    fn non_finite_rate_rejected_even_as_struct_literal() {
+        // generate() re-validates, so literal construction cannot
+        // bypass the constructor checks.
+        let spec = TrafficSpec {
+            process: ArrivalProcess::Poisson { qps: f64::INFINITY },
+            duration_s: 1.0,
+            seed: 0,
+        };
+        generate(&spec, &toy_tenants(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "amplitude must lie in [0, 1]")]
+    fn diurnal_amplitude_out_of_range_rejected() {
+        TrafficSpec::diurnal(100.0, 1.5, 1.0, 1.0, 0);
+    }
+
+    #[test]
+    fn diurnal_peak_density_exceeds_trough() {
+        // One full cycle at amplitude 0.9: the quarter-cycle around the
+        // sinusoid peak must carry far more arrivals than the one
+        // around the trough (rate ratio 19:1).
+        let tenants = toy_tenants(1);
+        let period = 4.0;
+        let a = generate(&TrafficSpec::diurnal(2000.0, 0.9, period, period, 29), &tenants);
+        assert!(a.len() > 2000, "got {}", a.len());
+        // Peak at t = period/4, trough at t = 3·period/4.
+        let around = |center: f64| {
+            a.iter()
+                .filter(|x| (x.t - center).abs() < period / 8.0)
+                .count() as f64
+        };
+        let (peak, trough) = (around(period / 4.0), around(3.0 * period / 4.0));
+        assert!(
+            peak > 4.0 * (trough + 1.0),
+            "peak bin {peak} vs trough bin {trough}"
+        );
+    }
+
+    #[test]
+    fn flash_crowd_spikes_only_inside_the_window() {
+        let tenants = toy_tenants(1);
+        let a = generate(
+            &TrafficSpec::flash_crowd(500.0, 9500.0, 0.4, 0.2, 1.0, 31),
+            &tenants,
+        );
+        let inside = a.iter().filter(|x| x.t >= 0.4 && x.t < 0.6).count() as f64;
+        let outside = a.len() as f64 - inside;
+        // 20× the rate over 20% of the horizon: the window holds the
+        // clear majority of arrivals.
+        assert!(inside > 2.0 * outside, "inside {inside} outside {outside}");
+        // Outside density stays near the 500 req/s floor.
+        assert!(outside > 100.0 && outside < 800.0, "outside {outside}");
     }
 
     #[test]

@@ -6,7 +6,11 @@ use crate::arch::ArchConfig;
 use crate::power;
 
 /// Nearest-rank percentile of a **sorted** sample slice; `q` in
-/// `[0, 100]`.  Empty input yields 0 (there is no latency to report).
+/// `[0, 100]`.  Empty input yields `NaN` — "no latency was observed"
+/// must never render as a perfect 0 ms (an empty sweep window used to
+/// report p99 = 0, indistinguishable from genuinely instant service;
+/// downstream comparisons like `p99 <= deadline` are `false` for NaN,
+/// so an empty window can never pass an SLO gate by accident).
 ///
 /// Nearest-rank semantics: the result is always an element of the
 /// input (no interpolation) — the smallest sample such that at least
@@ -17,7 +21,7 @@ use crate::power;
 /// never drift.
 pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     if sorted.is_empty() {
-        return 0.0;
+        return f64::NAN;
     }
     let n = sorted.len();
     let rank = (q / 100.0 * n as f64).ceil() as usize;
@@ -197,8 +201,19 @@ mod tests {
         assert_eq!(percentile(&s, 75.0), 3.0);
         assert_eq!(percentile(&s, 95.0), 4.0);
         assert_eq!(percentile(&s, 99.0), 4.0);
-        assert_eq!(percentile(&[], 50.0), 0.0);
         assert_eq!(percentile(&[7.5], 99.0), 7.5);
+    }
+
+    #[test]
+    fn percentile_of_empty_sample_is_nan_not_zero() {
+        // Regression: an empty window used to report 0.0 — a perfect
+        // latency — for every percentile.  NaN is the explicit "no
+        // samples" value, and NaN <= deadline is false, so empty
+        // windows can never satisfy an SLO comparison.
+        for q in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert!(percentile(&[], q).is_nan(), "q={q}");
+        }
+        assert!(!(percentile(&[], 99.0) <= 1.0), "NaN must fail SLO gates");
     }
 
     #[test]

@@ -935,6 +935,90 @@ impl Verifier {
         f
     }
 
+    /// Check a fault-injection schedule against a fleet of `n_nodes`:
+    /// out-of-range node indices and inverted/non-finite windows are
+    /// errors (the run would be meaningless), overlapping windows on
+    /// one node and sub-unity straggler factors are warnings (legal
+    /// but probably not what was meant — a factor below 1 *speeds the
+    /// node up* and is ignored by the degradation pass).
+    pub fn check_chaos(
+        &self,
+        chaos: &crate::cluster::chaos::ChaosSchedule,
+        n_nodes: usize,
+    ) -> Findings {
+        let mut f = Findings::default();
+        let node_loc = |i: usize| Location::node(format!("node{i}"));
+        for (k, w) in chaos.crashes.iter().enumerate() {
+            if w.node >= n_nodes {
+                f.error(
+                    Code::NodeSpec,
+                    node_loc(w.node),
+                    format!("crash window {k} targets node {} of a {n_nodes}-node fleet", w.node),
+                    "chaos node indices are 0-based fleet positions",
+                );
+            }
+            if !(w.down_t.is_finite() && w.up_t.is_finite() && w.down_t >= 0.0) {
+                f.error(
+                    Code::Config,
+                    node_loc(w.node),
+                    format!("crash window {k} times [{}, {}) are not finite sim seconds", w.down_t, w.up_t),
+                    "down/up times are non-negative finite seconds",
+                );
+            } else if w.down_t >= w.up_t {
+                f.error(
+                    Code::Config,
+                    node_loc(w.node),
+                    format!("crash window {k} is inverted: down {} >= up {}", w.down_t, w.up_t),
+                    "a node must crash before it restarts",
+                );
+            }
+            for (j, v) in chaos.crashes[..k].iter().enumerate() {
+                if v.node == w.node && w.down_t < v.up_t && v.down_t < w.up_t {
+                    f.warning(
+                        Code::Config,
+                        node_loc(w.node),
+                        format!("crash windows {j} and {k} overlap on node {}", w.node),
+                        "overlapping outages merge; split or join them for clarity",
+                    );
+                }
+            }
+        }
+        for &(node, factor) in &chaos.stragglers {
+            if node >= n_nodes {
+                f.error(
+                    Code::NodeSpec,
+                    node_loc(node),
+                    format!("straggler targets node {node} of a {n_nodes}-node fleet"),
+                    "chaos node indices are 0-based fleet positions",
+                );
+            }
+            if !(factor.is_finite() && factor > 0.0) {
+                f.error(
+                    Code::Config,
+                    node_loc(node),
+                    format!("straggler factor {factor} is not a positive finite slowdown"),
+                    "factors are clock-degradation multipliers, e.g. 2.0 for half speed",
+                );
+            } else if factor < 1.0 {
+                f.warning(
+                    Code::Config,
+                    node_loc(node),
+                    format!("straggler factor {factor} < 1 would speed the node up; ignored"),
+                    "use a factor >= 1; overclocking is not a failure mode",
+                );
+            }
+        }
+        if !(chaos.health_check_s.is_finite() && chaos.health_check_s >= 0.0) {
+            f.error(
+                Code::Config,
+                Location::none(),
+                format!("health-check lag {} s is not finite and non-negative", chaos.health_check_s),
+                "the lag is charged to stranded requests' latency; 0 is legal",
+            );
+        }
+        f
+    }
+
     /// Check a partition plan against the machine it splits: share
     /// sanity plus per-partition sub-configuration findings (tagged
     /// `tenant{k}`).
@@ -1262,5 +1346,61 @@ mod tests {
         // The code renders with its stable short name.
         assert_eq!(Code::KvCapacity.as_str(), "KV");
         assert_eq!(Code::ALL.len(), 15);
+    }
+
+    #[test]
+    fn chaos_schedule_diagnostics_fire() {
+        use crate::cluster::chaos::{ChaosSchedule, CrashWindow};
+        let v = Verifier::new();
+        // Clean schedule: no findings at all.
+        let ok = ChaosSchedule {
+            crashes: vec![CrashWindow { node: 1, down_t: 0.02, up_t: 0.05 }],
+            stragglers: vec![(0, 2.0)],
+            health_check_s: 1e-3,
+        };
+        assert!(v.check_chaos(&ok, 2).is_clean(), "{}", v.check_chaos(&ok, 2).render_text());
+        // Node index out of range: NodeSpec error (crash and straggler).
+        let bad = ChaosSchedule {
+            crashes: vec![CrashWindow { node: 4, down_t: 0.0, up_t: 1.0 }],
+            stragglers: vec![(7, 2.0)],
+            ..Default::default()
+        };
+        let f = v.check_chaos(&bad, 2);
+        assert!(!f.ok());
+        assert!(f.has(Code::NodeSpec), "{}", f.render_text());
+        assert_eq!(f.num_errors(), 2);
+        // Inverted window: Config error.
+        let inv = ChaosSchedule {
+            crashes: vec![CrashWindow { node: 0, down_t: 0.5, up_t: 0.2 }],
+            ..Default::default()
+        };
+        assert!(v.check_chaos(&inv, 2).has(Code::Config));
+        assert!(!v.check_chaos(&inv, 2).ok());
+        // Non-finite times: Config error.
+        let nan = ChaosSchedule {
+            crashes: vec![CrashWindow { node: 0, down_t: f64::NAN, up_t: 1.0 }],
+            ..Default::default()
+        };
+        assert!(!v.check_chaos(&nan, 2).ok());
+        // Overlapping windows on one node: warning, still ok().
+        let overlap = ChaosSchedule {
+            crashes: vec![
+                CrashWindow { node: 0, down_t: 0.1, up_t: 0.3 },
+                CrashWindow { node: 0, down_t: 0.2, up_t: 0.4 },
+            ],
+            ..Default::default()
+        };
+        let f = v.check_chaos(&overlap, 2);
+        assert!(f.ok(), "{}", f.render_text());
+        assert!(f.num_warnings() >= 1);
+        // Sub-unity straggler: warning; non-positive factor: error.
+        let slow = ChaosSchedule { stragglers: vec![(0, 0.5)], ..Default::default() };
+        assert!(v.check_chaos(&slow, 2).ok());
+        assert!(v.check_chaos(&slow, 2).num_warnings() >= 1);
+        let neg = ChaosSchedule { stragglers: vec![(0, -2.0)], ..Default::default() };
+        assert!(!v.check_chaos(&neg, 2).ok());
+        // Negative health-check lag: error.
+        let lag = ChaosSchedule { health_check_s: -1.0, ..Default::default() };
+        assert!(!v.check_chaos(&lag, 2).ok());
     }
 }

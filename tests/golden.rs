@@ -558,6 +558,45 @@ fn fleet_matches_reference_and_golden() {
     golden_check("fleet_quick.csv", &produced);
 }
 
+#[test]
+fn chaos_empty_schedule_is_transparent_and_golden() {
+    use sosa::cluster::{ChaosSchedule, Fleet, FleetConfig, Policy};
+    use sosa::serve::{generate, Tenant, TrafficSpec};
+    use sosa::workloads::bert::bert_named;
+    // Reference check: with an empty schedule and no autoscaler,
+    // `serve_chaos` must reproduce `Fleet::serve` exactly — the
+    // healthy row of the chaos experiment is literally the healthy
+    // dispatch path, completion for completion.
+    let tenants = vec![
+        Tenant::new(bert_named("mini", 100), 1.0),
+        Tenant::new(bert_named("small", 100), 1.0),
+    ];
+    let fleet = Fleet::homogeneous(
+        4,
+        ArchConfig::with_array(ArrayDims::new(16, 16), 16),
+        FleetConfig { policy: Policy::JoinShortestQueue, ..Default::default() },
+    )
+    .unwrap();
+    let offered = 0.9 * fleet.capacity_qps(&tenants);
+    let arrivals = generate(&TrafficSpec::poisson(offered, 0.05, 42), &tenants);
+    let healthy = fleet.serve(&tenants, &arrivals).unwrap();
+    let chaotic = fleet
+        .serve_chaos(&tenants, &arrivals, &ChaosSchedule::default(), None, None)
+        .unwrap();
+    assert_eq!(
+        chaotic.report.completed, healthy.report.completed,
+        "empty chaos schedule must be transparent over the healthy path"
+    );
+    assert_eq!(chaotic.unroutable, 0);
+    assert_eq!(chaotic.redispatched, 0);
+    for (a, b) in chaotic.nodes.iter().zip(&healthy.nodes) {
+        assert_eq!(a.assigned, b.assigned, "node {} assignment drifted", a.node);
+    }
+
+    let produced = run_quick("chaos", "chaos.csv");
+    golden_check("chaos_quick.csv", &produced);
+}
+
 /// Byte-for-byte reconstruction of the `sosa check --format json`
 /// document (`cmd_check` in `rust/src/main.rs`) for a list of
 /// verified points — keep the two in sync.

@@ -494,6 +494,165 @@ fn jsq_beats_round_robin_p99_under_bursty_mmpp() {
     );
 }
 
+/// The chaos tests' shared fixture: 3 JSQ nodes, the quick BERT pair,
+/// 2× overload (queues stay deep, so a mid-trace crash is guaranteed
+/// to strand in-flight work), one node dark for the middle half of the
+/// run plus a 2× straggler.
+fn chaos_fixture() -> (
+    Vec<Tenant>,
+    sosa::cluster::Fleet,
+    Vec<sosa::serve::Arrival>,
+    sosa::cluster::ChaosSchedule,
+    f64,
+) {
+    use sosa::cluster::{ChaosSchedule, CrashWindow, Fleet, FleetConfig, Policy};
+    use sosa::workloads::bert::bert_named;
+    let tenants = vec![
+        Tenant::new(bert_named("mini", 100), 1.0),
+        Tenant::new(bert_named("small", 100), 1.0),
+    ];
+    let fleet = Fleet::homogeneous(
+        3,
+        ArchConfig::with_array(ArrayDims::new(16, 16), 16),
+        FleetConfig {
+            policy: Policy::JoinShortestQueue,
+            engine: EngineConfig {
+                policy: BatchPolicy { max_batch: 4, max_wait_s: 1e-3 },
+                sim: SimOptions { memory_model: false, ..Default::default() },
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let cap = fleet.capacity_qps(&tenants);
+    assert!(cap > 0.0);
+    let offered = 2.0 * cap;
+    let duration = 150.0 / offered;
+    let arrivals = generate(&TrafficSpec::poisson(offered, duration, 29), &tenants);
+    let chaos = ChaosSchedule {
+        crashes: vec![CrashWindow {
+            node: 1,
+            down_t: 0.25 * duration,
+            up_t: 0.75 * duration,
+        }],
+        stragglers: vec![(2, 2.0)],
+        ..Default::default()
+    };
+    (tenants, fleet, arrivals, chaos, duration)
+}
+
+#[test]
+fn chaos_fleet_conserves_requests_and_redispatches_strands() {
+    // Every arrival must end up in exactly one bucket — completed,
+    // engine-rejected, or fleet-unroutable — no matter how many times
+    // the crash window bounces it between nodes.
+    let (tenants, fleet, arrivals, chaos, _) = chaos_fixture();
+    let rep = fleet.serve_chaos(&tenants, &arrivals, &chaos, None, None).unwrap();
+    assert_eq!(
+        rep.report.completed.len() as u64 + rep.report.rejected + rep.unroutable,
+        arrivals.len() as u64,
+        "request conservation under chaos"
+    );
+    assert!(
+        rep.redispatched > 0,
+        "a mid-trace crash under 2x overload must strand queued work"
+    );
+    let ids: std::collections::HashSet<u64> =
+        rep.report.completed.iter().map(|r| r.id).collect();
+    assert_eq!(
+        ids.len(),
+        rep.report.completed.len(),
+        "a redispatched request must complete at most once"
+    );
+    // The straggler keeps serving — degraded, not dead.
+    assert!(rep.nodes[2].assigned > 0, "straggler still takes traffic");
+}
+
+#[test]
+fn chaos_serve_bit_identical_across_thread_counts() {
+    // The fleet-dynamics determinism contract: chaos injection,
+    // re-dispatch, and autoscaling all happen in the sequential
+    // dispatch pass, so SOSA_THREADS must not change a single bit —
+    // traced or untraced.
+    use sosa::cluster::{analyze_fleet, AutoscalerConfig};
+    let (tenants, fleet, arrivals, chaos, duration) = chaos_fixture();
+    let autoscale = AutoscalerConfig {
+        check_interval_s: duration / 10.0,
+        warmup_s: duration / 20.0,
+        ..Default::default()
+    };
+    let runs: Vec<String> = [1usize, 2, 8]
+        .iter()
+        .map(|&threads| {
+            let rep = fleet
+                .serve_chaos(&tenants, &arrivals, &chaos, Some(&autoscale), Some(threads))
+                .unwrap();
+            let (trep, events) = fleet
+                .serve_chaos_traced(&tenants, &arrivals, &chaos, Some(&autoscale), Some(threads))
+                .unwrap();
+            assert_eq!(
+                trep.report.completed, rep.report.completed,
+                "tracing must not perturb the chaos schedule"
+            );
+            format!(
+                "{}\n{:?}\n{} events",
+                analyze_fleet(&fleet, &rep, duration, 5e-3),
+                rep.report.completed,
+                events.len()
+            )
+        })
+        .collect();
+    assert_eq!(runs[0], runs[1], "1 vs 2 workers");
+    assert_eq!(runs[0], runs[2], "1 vs 8 workers");
+}
+
+#[test]
+fn straggler_gets_proportionally_fewer_jsq_dispatches() {
+    // Health-aware JSQ sees the straggler's degraded service rate
+    // through its inflated queue estimates: a node at half clock
+    // should converge to roughly a third of the dispatches (service
+    // rates 2:1), where the healthy fleet splits evenly.
+    use sosa::cluster::{ChaosSchedule, Fleet, FleetConfig, Policy};
+    use sosa::workloads::bert::bert_named;
+    let tenants = vec![Tenant::new(bert_named("mini", 100), 1.0)];
+    let fleet = Fleet::homogeneous(
+        2,
+        ArchConfig::with_array(ArrayDims::new(16, 16), 16),
+        FleetConfig {
+            policy: Policy::JoinShortestQueue,
+            engine: EngineConfig {
+                policy: BatchPolicy { max_batch: 4, max_wait_s: 1e-3 },
+                sim: SimOptions { memory_model: false, ..Default::default() },
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let cap = fleet.capacity_qps(&tenants);
+    assert!(cap > 0.0);
+    let offered = 1.5 * cap; // sustained overload: JSQ tracks service rates
+    let duration = 160.0 / offered;
+    let arrivals = generate(&TrafficSpec::poisson(offered, duration, 23), &tenants);
+    let healthy = fleet.serve(&tenants, &arrivals).unwrap();
+    let total = arrivals.len() as u64;
+    let min_healthy = healthy.nodes.iter().map(|n| n.assigned).min().unwrap();
+    assert!(
+        min_healthy * 5 >= total * 2,
+        "healthy twin nodes should split near-evenly: {:?}",
+        healthy.nodes.iter().map(|n| n.assigned).collect::<Vec<_>>()
+    );
+    let chaos = ChaosSchedule { stragglers: vec![(1, 2.0)], ..Default::default() };
+    let rep = fleet.serve_chaos(&tenants, &arrivals, &chaos, None, None).unwrap();
+    let (fast, slow) = (rep.nodes[0].assigned, rep.nodes[1].assigned);
+    assert!(slow > 0, "straggler serves, just less");
+    assert!(
+        fast * 10 >= slow * 14,
+        "2x straggler must get proportionally fewer JSQ dispatches: fast {fast} vs slow {slow}"
+    );
+}
+
 #[test]
 fn runtime_path_when_artifacts_present() {
     use sosa::runtime::{Mat, PjrtRuntime};
